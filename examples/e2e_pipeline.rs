@@ -1,0 +1,107 @@
+//! End-to-end driver — proves all three layers compose on a real
+//! workload (the EXPERIMENTS.md headline run).
+//!
+//! Pipeline: synthesize a SIFT-shaped corpus -> exact ground truth ->
+//! GNND build over the **PJRT engine** (the AOT-compiled XLA artifact
+//! with the Pallas cross-matching kernels inside; requires
+//! `make artifacts`, falls back to the native engine with a warning) ->
+//! recall@10 + wall time vs single-thread classic NN-Descent and the
+//! exact brute-force reference — the paper's Fig.-6 protocol on one
+//! dataset.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! GNND_E2E_N=60000 cargo run --release --example e2e_pipeline   # bigger corpus
+//! ```
+
+use gnnd::baselines::nn_descent::{self, NnDescentParams};
+use gnnd::config::EngineKind;
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::{build_with_stats, GnndParams};
+use gnnd::metrics::{recall_at, Report, Row};
+use gnnd::runtime;
+use gnnd::util::timer::Timer;
+
+fn main() -> gnnd::Result<()> {
+    let n: usize = std::env::var("GNND_E2E_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+    let ds = synth::sift_like(n, 0xE2E);
+    println!("workload: {} ({} x {})", ds.name, ds.len(), ds.d);
+
+    let t = Timer::start();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 1000, 10, 0xE7A1);
+    println!("ground truth (1000 sampled objects) in {:.1}s", t.secs());
+
+    let mut report = Report::new("E2E pipeline (paper Fig. 6 protocol, sift-like)")
+        .meta("n", ds.len())
+        .meta("d", ds.d);
+
+    // --- GNND over the PJRT artifact (the paper's on-device path) ---
+    let engine_kind = if runtime::artifacts_available("artifacts") {
+        EngineKind::Pjrt
+    } else {
+        eprintln!("WARNING: artifacts/ missing — run `make artifacts`; using native engine");
+        EngineKind::Native
+    };
+    let params = GnndParams::default()
+        .with_k(32)
+        .with_p(16)
+        .with_iters(10)
+        .with_engine(engine_kind);
+    let t = Timer::start();
+    let out = build_with_stats(&ds, &params)?;
+    let gnnd_secs = t.secs();
+    let gnnd_recall = recall_at(&out.graph, &truth, Some(&ids), 10);
+    println!(
+        "gnnd[{}]: {:.2}s, recall@10 {:.4}, {} iters",
+        out.stats.engine, gnnd_secs, gnnd_recall, out.stats.iters
+    );
+    for (phase, secs) in &out.stats.phases {
+        println!("   {phase:<14} {secs:>9.3}s");
+    }
+    report.push(
+        Row::new(format!("gnnd ({})", out.stats.engine))
+            .col("time_s", gnnd_secs)
+            .col("recall@10", gnnd_recall),
+    );
+
+    // --- native engine point for the same parameters (oracle parity) ---
+    if engine_kind == EngineKind::Pjrt {
+        let t = Timer::start();
+        let native = build_with_stats(&ds, &params.clone().with_engine(EngineKind::Native))?;
+        let r = recall_at(&native.graph, &truth, Some(&ids), 10);
+        println!("gnnd[native]: {:.2}s, recall@10 {:.4}", t.secs(), r);
+        report.push(Row::new("gnnd (native)").col("time_s", t.secs()).col("recall@10", r));
+        assert!(
+            (r - gnnd_recall).abs() < 0.05,
+            "engines disagree: pjrt {gnnd_recall} vs native {r}"
+        );
+    }
+
+    // --- classic single-thread NN-Descent (the paper's 100-250x baseline) ---
+    let t = Timer::start();
+    let (g_nd, nd_stats) = nn_descent::build(
+        &ds,
+        &NnDescentParams { k: 20, max_iter: 10, threads: 1, ..Default::default() },
+    );
+    let nd_secs = t.secs();
+    let nd_recall = recall_at(&g_nd, &truth, Some(&ids), 10);
+    println!(
+        "nn-descent[1t]: {:.2}s, recall@10 {:.4} ({} iters, {:.1}M dist evals)",
+        nd_secs,
+        nd_recall,
+        nd_stats.iters,
+        nd_stats.distance_evals as f64 / 1e6
+    );
+    report.push(Row::new("nn-descent (1 thread)").col("time_s", nd_secs).col("recall@10", nd_recall));
+
+    // --- headline ---
+    let speedup = nd_secs / gnnd_secs;
+    println!("\nheadline: GNND reaches recall@10 {gnnd_recall:.3} with {speedup:.1}x speedup over 1-thread NN-Descent");
+    report.push(Row::new("speedup vs 1-thread").col("x", speedup));
+    report.save_json("results")?;
+    println!("{}", report.render());
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Incremental construction demo (paper §5.1): data arrives in batches;
+//! each batch gets a GNND sub-graph which GGM folds into the running
+//! graph — "as the new data come in, GNND is called to build a
+//! sub-graph on the first hand. Thereafter, GGM is called to join this
+//! new sub-graph into the existing k-NN graph."
+//!
+//! ```bash
+//! cargo run --release --example incremental
+//! ```
+
+use gnnd::dataset::{groundtruth, synth, Dataset};
+use gnnd::gnnd::{build, GnndParams, NativeEngine};
+use gnnd::merge::incremental_add;
+use gnnd::metrics::recall_at;
+use gnnd::util::timer::Timer;
+
+fn main() -> gnnd::Result<()> {
+    let total_n = 20_000;
+    let batches = 4;
+    let full = synth::sift_like(total_n, 0x1AC);
+    let params = GnndParams::default().with_k(20).with_p(10).with_iters(8);
+
+    // first batch: plain GNND build
+    let step = total_n / (batches + 1);
+    let ids0: Vec<usize> = (0..step).collect();
+    let first = full.select(&ids0, "stream[0]");
+    let t = Timer::start();
+    let mut graph = build(&first, &params)?;
+    println!("batch 0: built {} objects in {:.2}s", step, t.secs());
+
+    let mut have = step;
+    for b in 1..=batches {
+        let upto = ((b + 1) * step).min(total_n);
+        let ids: Vec<usize> = (0..upto).collect();
+        let current: Dataset = full.select(&ids, format!("stream[0..{b}]"));
+        let t = Timer::start();
+        let (g, stats) = incremental_add(&current, have, &graph, &params, &NativeEngine)?;
+        graph = g;
+        have = upto;
+        // quality so far
+        let (qids, truth) = groundtruth::sampled_truth(&current, 500, 10, b as u64);
+        let r = recall_at(&graph, &truth, Some(&qids), 10);
+        println!(
+            "batch {b}: +{} objects in {:.2}s ({} refine iters) -> total {}, recall@10 {:.4}",
+            upto - (b * step).min(total_n),
+            t.secs(),
+            stats.iters,
+            have,
+            r
+        );
+    }
+
+    // compare the final incremental graph against a from-scratch build
+    let (qids, truth) = groundtruth::sampled_truth(&full, 800, 10, 99);
+    let r_inc = recall_at(&graph, &truth, Some(&qids), 10);
+    let t = Timer::start();
+    let scratch = build(&full, &params)?;
+    let r_scr = recall_at(&scratch, &truth, Some(&qids), 10);
+    println!(
+        "\nfinal: incremental recall@10 {r_inc:.4} vs from-scratch {r_scr:.4} ({:.2}s rebuild)",
+        t.secs()
+    );
+    Ok(())
+}

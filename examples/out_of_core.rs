@@ -1,0 +1,61 @@
+//! Out-of-core construction demo (paper §5, Table-2 pipeline): the
+//! dataset is partitioned into shards spilled to disk, GNND builds each
+//! sub-graph, and GGM pairwise-merges them with overlapped disk I/O —
+//! at no point is more than a couple of shards memory-resident.
+//!
+//! ```bash
+//! cargo run --release --example out_of_core
+//! GNND_OOC_N=100000 GNND_OOC_SHARDS=16 cargo run --release --example out_of_core
+//! ```
+
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::{build, GnndParams, NativeEngine};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
+use gnnd::metrics::recall_at;
+use gnnd::util::timer::Timer;
+
+fn env_or(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> gnnd::Result<()> {
+    let n = env_or("GNND_OOC_N", 24_000);
+    let shards = env_or("GNND_OOC_SHARDS", 8);
+    let workers = env_or("GNND_OOC_WORKERS", 2);
+    let ds = synth::deep_like(n, 0x00C);
+    println!(
+        "out-of-core build: {} ({} x {}), {shards} shards, {workers} merge workers",
+        ds.name,
+        ds.len(),
+        ds.d
+    );
+
+    let params = GnndParams::default().with_k(20).with_p(10).with_iters(8);
+    let cfg = OutOfCoreConfig { shards, workers, params: params.clone() };
+    let dir = std::env::temp_dir().join(format!("gnnd-ooc-example-{}", std::process::id()));
+
+    let t = Timer::start();
+    let (graph, stats) = build_out_of_core(&ds, &dir, &cfg, &NativeEngine)?;
+    let total = t.secs();
+    println!(
+        "done in {total:.2}s: shard spill+builds {:.2}s, {} pairwise merges over {} rounds {:.2}s",
+        stats.build_secs, stats.merges, stats.rounds, stats.merge_secs
+    );
+
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 800, 10, 2);
+    let r_ooc = recall_at(&graph, &truth, Some(&ids), 10);
+    println!("recall@10 (out-of-core)  = {r_ooc:.4}");
+
+    // reference: the same parameters fully in memory
+    let t = Timer::start();
+    let g_mem = build(&ds, &params)?;
+    let r_mem = recall_at(&g_mem, &truth, Some(&ids), 10);
+    println!("recall@10 (in-memory)    = {r_mem:.4}  ({:.2}s)", t.secs());
+    println!(
+        "quality gap: {:.3} — the paper's claim is that sharded GGM construction \
+         approaches in-memory quality while never holding the dataset",
+        r_mem - r_ooc
+    );
+    std::fs::remove_dir_all(dir).ok();
+    Ok(())
+}

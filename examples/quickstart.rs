@@ -1,0 +1,49 @@
+//! Quickstart: build an approximate k-NN graph in a few lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::{build_with_stats, GnndParams};
+use gnnd::metrics::recall_at;
+use gnnd::util::timer::Timer;
+
+fn main() -> gnnd::Result<()> {
+    // 1. a dataset: 10k SIFT-shaped vectors (or load your own fvecs/dsb
+    //    via gnnd::dataset::io)
+    let ds = synth::sift_like(10_000, 0xC0FFEE);
+    println!("dataset: {} ({} x {}, metric {})", ds.name, ds.len(), ds.d, ds.metric);
+
+    // 2. build the graph (paper Algorithm 1; defaults: k=32, p=16,
+    //    selective update + multiple spinlocks)
+    let params = GnndParams::default();
+    let t = Timer::start();
+    let out = build_with_stats(&ds, &params)?;
+    println!(
+        "built k={} graph in {:.2}s ({} iterations, engine={})",
+        out.graph.k(),
+        t.secs(),
+        out.stats.iters,
+        out.stats.engine,
+    );
+    for (phase, secs) in &out.stats.phases {
+        println!("   {phase:<14} {secs:>8.3}s");
+    }
+
+    // 3. evaluate against exact ground truth on a 500-object sample
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 500, 10, 1);
+    let recall = recall_at(&out.graph, &truth, Some(&ids), 10);
+    println!("recall@10 = {recall:.4}   phi(G) = {:.4e}", out.graph.phi());
+
+    // 4. the neighbor list of object 0
+    let head: Vec<(u32, f32)> = out
+        .graph
+        .list(0)
+        .iter()
+        .take(5)
+        .map(|e| (e.id, e.dist))
+        .collect();
+    println!("object 0 nearest 5: {head:?}");
+    Ok(())
+}

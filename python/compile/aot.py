@@ -1,0 +1,138 @@
+"""AOT exporter: lower the L2 programs to HLO *text* + a manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per spec plus ``manifest.txt`` — a line-based
+``key=value`` format the Rust runtime parses without a JSON dependency:
+
+    kind=crossmatch name=crossmatch_s32_d128_l2 metric=l2 impl=pallas \
+        b=64 s=32 d=128 file=crossmatch_s32_d128_l2.hlo.txt
+
+The default spec set covers the synthetic benchmark suite (DESIGN.md):
+d in {32, 96, 100, 128, 960} for the sift/deep/glove/gist-shaped data,
+sample widths S in {16, 32} (= 2p for p in {8, 16}), plus ``impl=jnp``
+twins of the d=128 crossmatch for the L1 ablation bench.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+#: Batch of object locals per crossmatch call. Measured sweet spot for
+#: the CPU PJRT client (§Perf runtime iteration 4 tried 256: XLA-side
+#: cost rose to 57 us/object vs 31 us/object at 64 and serialized the
+#: worker threads — reverted). B=64 keeps per-call XLA time ~2 ms while
+#: the coordinator's worker threads dispatch concurrently.
+CROSSMATCH_B = 64
+
+#: Brute-force block shape (queries x base rows) and top-k width.
+BF_Q, BF_N, BF_K = 256, 2048, 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def crossmatch_spec(s: int, d: int, metric: str, impl: str, b: int = CROSSMATCH_B):
+    name = f"crossmatch_s{s}_d{d}_{metric}" + ("" if impl == "pallas" else f"_{impl}")
+    fn = functools.partial(model.crossmatch, metric=metric, impl=impl)
+    args = (
+        jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+    )
+    meta = dict(kind="crossmatch", name=name, metric=metric, impl=impl, b=b, s=s, d=d)
+    return name, fn, args, meta
+
+
+def bruteforce_spec(d: int, metric: str, impl: str = "pallas",
+                    q: int = BF_Q, n: int = BF_N, k: int = BF_K):
+    name = f"bruteforce_d{d}_{metric}" + ("" if impl == "pallas" else f"_{impl}")
+    fn = functools.partial(model.bruteforce, k=k, metric=metric, impl=impl)
+    args = (
+        jax.ShapeDtypeStruct((q, d), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    meta = dict(kind="bruteforce", name=name, metric=metric, impl=impl,
+                q=q, n=n, d=d, k=k)
+    return name, fn, args, meta
+
+
+def default_specs():
+    specs = []
+    for s in (16, 32):
+        for d in (32, 96, 128):
+            specs.append(crossmatch_spec(s, d, "l2", "pallas"))
+        specs.append(crossmatch_spec(s, 100, "ip", "pallas"))
+        specs.append(crossmatch_spec(s, 960, "l2", "pallas"))
+    # jnp twins for the L1 pallas-vs-plain-XLA ablation (bench: micro).
+    specs.append(crossmatch_spec(32, 128, "l2", "jnp"))
+    for d in (32, 96, 128, 960):
+        specs.append(bruteforce_spec(d, "l2"))
+    specs.append(bruteforce_spec(100, "ip"))
+    return specs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to build")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    specs = default_specs()
+    if args.only:
+        keys = args.only.split(",")
+        specs = [sp for sp in specs if any(k in sp[0] for k in keys)]
+
+    manifest_lines = []
+    for name, fn, shapes, meta in specs:
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        meta["file"] = fname
+        line = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest_lines.append(line)
+        print(f"wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    if args.only and os.path.exists(manifest_path):
+        # partial rebuild: merge with existing entries (rebuilt names win)
+        rebuilt = {line.split("name=")[1].split()[0] for line in manifest_lines}
+        with open(manifest_path) as f:
+            kept = [
+                line.strip()
+                for line in f
+                if line.strip()
+                and line.split("name=")[1].split()[0] not in rebuilt
+            ]
+        manifest_lines = kept + manifest_lines
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

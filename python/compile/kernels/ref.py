@@ -1,0 +1,26 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the "obviously right" dense formulations the kernels are tested
+against (pytest + hypothesis sweeps in python/tests/). They are also
+lowered as the ``impl=jnp`` artifact variants so the Rust benches can
+ablate Pallas-tiled vs plain-XLA distance evaluation.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_ref(x, y, metric: str = "l2"):
+    """x[..., S, D], y[..., T, D] -> [..., S, T] distances (f32).
+
+    ``l2`` is the *squared* euclidean distance computed the naive way
+    (explicit difference), deliberately different from the kernel's
+    matmul expansion so the test catches algebra mistakes.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if metric == "l2":
+        diff = x[..., :, None, :] - y[..., None, :, :]
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "ip":
+        return -jnp.einsum("...sd,...td->...st", x, y)
+    raise ValueError(f"unknown metric {metric!r}")

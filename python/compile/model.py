@@ -1,0 +1,129 @@
+"""L2 — the jax compute graphs GNND executes on-device.
+
+Two programs are AOT-lowered (python/compile/aot.py) and executed from the
+Rust coordinator through PJRT; Python is never on the construction path.
+
+``crossmatch``
+    One GNND cross-matching step (paper §4.2 + Algorithm 2) for a batch of
+    B object locals. Inputs are the gathered NEW / OLD sample vectors and
+    their *group ids*; outputs are the Algorithm-2 nearest-object
+    reductions the selective update consumes (paper §4.3). The group-id
+    masking makes one artifact serve both modes:
+
+    * normal construction — ids are global object ids: a pair is masked
+      iff a slot is empty (id < 0) or both slots hold the same object
+      (self-pairs, duplicate samples);
+    * GGM merge (paper §5.1) — ids are *subset* ids: same-subset pairs
+      are masked, so only cross-subgraph distances are computed, exactly
+      the paper's restricted refinement.
+
+``bruteforce``
+    A (Q, N) exact distance block + top-k: the FAISS-BF baseline and the
+    ground-truth generator.
+
+Both call the L1 Pallas kernels; ``impl="jnp"`` swaps in the pure-jnp
+reference (ref.py) so benches can ablate the tiled kernel against plain
+XLA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.pairwise import pairwise_batched, pairwise_tiled
+from compile.kernels.ref import pairwise_ref
+
+#: Finite "infinity" used for masked pairs. Keeping it finite (rather than
+#: jnp.inf) means every lane stays well-defined under min/argmin on all
+#: backends, and the Rust side can test `dist >= MASKED / 2` portably.
+MASKED = jnp.float32(3.0e38)
+
+
+def _pairwise(x, y, metric: str, impl: str):
+    if impl == "pallas":
+        return pairwise_batched(x, y, metric=metric)
+    if impl == "jnp":
+        return pairwise_ref(x, y, metric=metric)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _best(d, axis):
+    """Masked argmin: returns (idx i32, dist f32), idx = -1 if no valid pair.
+
+    One reduction (argmin) + a gather for the value — measurably cheaper
+    on the CPU backend than separate min+argmin reductions (§Perf L2
+    iteration 6).
+    """
+    bi = jnp.argmin(d, axis=axis).astype(jnp.int32)
+    bd = jnp.take_along_axis(d, jnp.expand_dims(bi, axis), axis=axis).squeeze(axis)
+    bi = jnp.where(bd < MASKED / 2, bi, jnp.int32(-1))
+    return bi, bd
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "impl"))
+def crossmatch(new_vecs, new_ids, old_vecs, old_ids, *, metric="l2", impl="pallas"):
+    """One cross-matching step over a batch of B object locals.
+
+    Args:
+      new_vecs: f32[B, S, D] gathered NEW sample vectors.
+      new_ids:  i32[B, S] group ids (object ids, or subset ids in merge
+                mode); id < 0 marks an empty slot.
+      old_vecs: f32[B, S, D] gathered OLD sample vectors.
+      old_ids:  i32[B, S] likewise.
+
+    Returns (all [B, S]):
+      nn_idx, nn_dist — per NEW sample: nearest *other* NEW sample
+                        (local column index into the NEW axis; -1 = none).
+      no_idx, no_dist — per NEW sample: nearest OLD sample.
+      on_idx, on_dist — per OLD sample: nearest NEW sample.
+    """
+    d_nn = _pairwise(new_vecs, new_vecs, metric, impl)
+    d_no = _pairwise(new_vecs, old_vecs, metric, impl)
+
+    valid_n = new_ids >= 0
+    valid_o = old_ids >= 0
+    ok_nn = (
+        valid_n[:, :, None]
+        & valid_n[:, None, :]
+        & (new_ids[:, :, None] != new_ids[:, None, :])
+    )
+    ok_no = (
+        valid_n[:, :, None]
+        & valid_o[:, None, :]
+        & (new_ids[:, :, None] != old_ids[:, None, :])
+    )
+    d_nn = jnp.where(ok_nn, d_nn, MASKED)
+    d_no = jnp.where(ok_no, d_no, MASKED)
+
+    nn_idx, nn_dist = _best(d_nn, 2)
+    no_idx, no_dist = _best(d_no, 2)
+    on_idx, on_dist = _best(d_no, 1)
+    return nn_idx, nn_dist, no_idx, no_dist, on_idx, on_dist
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "impl"))
+def bruteforce(queries, base, base_valid, *, k=64, metric="l2", impl="pallas"):
+    """Exact top-k of a (Q, N) block: the FAISS-BF / ground-truth program.
+
+    Args:
+      queries:    f32[Q, D].
+      base:       f32[N, D].
+      base_valid: f32[N], 1.0 for live rows, 0.0 for padding.
+
+    Returns:
+      idx  i32[Q, k] — base-row indices, -1 where fewer than k live rows.
+      dist f32[Q, k] — ascending distances.
+    """
+    if impl == "pallas":
+        d = pairwise_tiled(queries, base, metric=metric)
+    else:
+        d = pairwise_ref(queries, base, metric=metric)
+    d = jnp.where(base_valid[None, :] > 0.5, d, MASKED)
+    # NOTE: jax.lax.top_k lowers to an HLO `topk(..., largest=true)`
+    # attribute that xla_extension 0.5.1's text parser rejects; a full
+    # argsort lowers to the classic `sort` op, which round-trips.
+    order = jnp.argsort(d, axis=-1)[:, :k].astype(jnp.int32)
+    dist = jnp.take_along_axis(d, order, axis=-1)
+    idx = jnp.where(dist < MASKED / 2, order, jnp.int32(-1))
+    return idx, dist

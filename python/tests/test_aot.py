@@ -1,0 +1,59 @@
+"""AOT exporter: manifest format + HLO text round-trip sanity.
+
+The Rust runtime's manifest parser is unit-tested against the same
+format on its side (rust/src/runtime/manifest.rs); this test pins the
+producer: every emitted line must carry the keys Rust requires, and the
+HLO text must be non-trivial and name the entry computation.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # small artifacts only, to keep the test fast
+    from compile import aot
+
+    aot.main(["--out-dir", str(out), "--only", "crossmatch_s16_d32_l2,bruteforce_d32_l2"])
+    return out
+
+
+def test_manifest_lines_have_required_keys(built):
+    text = (built / "manifest.txt").read_text().strip()
+    lines = [l for l in text.splitlines() if l.strip()]
+    assert len(lines) == 2
+    for line in lines:
+        kv = dict(tok.split("=", 1) for tok in line.split())
+        assert kv["kind"] in ("crossmatch", "bruteforce")
+        for key in ("name", "metric", "impl", "file", "d"):
+            assert key in kv, f"missing {key} in {line}"
+        assert (built / kv["file"]).exists()
+        if kv["kind"] == "crossmatch":
+            assert int(kv["b"]) > 0 and int(kv["s"]) > 0
+        else:
+            assert int(kv["q"]) > 0 and int(kv["n"]) > 0 and int(kv["k"]) > 0
+
+
+def test_hlo_text_is_parseable_shape(built):
+    hlo = (built / "crossmatch_s16_d32_l2.hlo.txt").read_text()
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    # the crossmatch program returns a 6-tuple
+    assert hlo.count("s32[") > 0 and hlo.count("f32[") > 0
+
+
+def test_only_filter_selects_subset(built):
+    files = sorted(os.listdir(built))
+    assert files == [
+        "bruteforce_d32_l2.hlo.txt",
+        "crossmatch_s16_d32_l2.hlo.txt",
+        "manifest.txt",
+    ]

@@ -1,0 +1,170 @@
+"""L2 semantics: crossmatch / bruteforce vs a numpy oracle.
+
+The oracle re-implements the paper's Algorithm-2 selection rules (masked
+nearest-object reductions) with plain numpy loops, so these tests pin the
+*semantics* the Rust coordinator depends on: id masking, merge-mode subset
+masking, -1 sentinels, ascending top-k, and padded-base masking.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+settings.register_profile("model", deadline=None, max_examples=20)
+settings.load_profile("model")
+
+BIG = float(model.MASKED)
+
+
+def _oracle_crossmatch(nv, ni, ov, oi, metric="l2"):
+    b, s, _ = nv.shape
+
+    def dist(u, v):
+        if metric == "l2":
+            return float(np.sum((u - v) ** 2))
+        return float(-np.dot(u, v))
+
+    nn_i = -np.ones((b, s), np.int32)
+    nn_d = np.full((b, s), BIG, np.float32)
+    no_i = -np.ones((b, s), np.int32)
+    no_d = np.full((b, s), BIG, np.float32)
+    on_i = -np.ones((b, s), np.int32)
+    on_d = np.full((b, s), BIG, np.float32)
+    for bb in range(b):
+        for i in range(s):
+            if ni[bb, i] < 0:
+                continue
+            for j in range(s):
+                if ni[bb, j] < 0 or ni[bb, i] == ni[bb, j]:
+                    continue
+                d = dist(nv[bb, i], nv[bb, j])
+                if d < nn_d[bb, i]:
+                    nn_d[bb, i], nn_i[bb, i] = d, j
+            for j in range(s):
+                if oi[bb, j] < 0 or ni[bb, i] == oi[bb, j]:
+                    continue
+                d = dist(nv[bb, i], ov[bb, j])
+                if d < no_d[bb, i]:
+                    no_d[bb, i], no_i[bb, i] = d, j
+                if d < on_d[bb, j]:
+                    on_d[bb, j], on_i[bb, j] = d, i
+    return nn_i, nn_d, no_i, no_d, on_i, on_d
+
+
+def _check_against_oracle(nv, ni, ov, oi, metric):
+    got = [np.asarray(o) for o in model.crossmatch(nv, ni, ov, oi, metric=metric)]
+    want = _oracle_crossmatch(nv, ni, ov, oi, metric=metric)
+    for g_idx, g_d, w_idx, w_d, tag in (
+        (got[0], got[1], want[0], want[1], "nn"),
+        (got[2], got[3], want[2], want[3], "no"),
+        (got[4], got[5], want[4], want[5], "on"),
+    ):
+        # Index ties can differ; distances must match, sentinels must match.
+        np.testing.assert_array_equal(g_idx < 0, w_idx < 0, err_msg=tag)
+        live = w_idx >= 0
+        np.testing.assert_allclose(
+            g_d[live], w_d[live], rtol=1e-3, atol=1e-2, err_msg=tag
+        )
+
+
+@given(
+    b=st.integers(1, 4),
+    s=st.integers(1, 12),
+    d=st.integers(2, 80),
+    metric=st.sampled_from(["l2", "ip"]),
+    id_hi=st.sampled_from([3, 50, 10**6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_crossmatch_matches_oracle(b, s, d, metric, id_hi, seed):
+    rng = np.random.default_rng(seed)
+    nv = rng.normal(size=(b, s, d)).astype(np.float32)
+    ov = rng.normal(size=(b, s, d)).astype(np.float32)
+    # small id_hi forces many duplicate-id masks; occasional -1 slots.
+    ni = rng.integers(-1, id_hi, size=(b, s)).astype(np.int32)
+    oi = rng.integers(-1, id_hi, size=(b, s)).astype(np.int32)
+    _check_against_oracle(nv, ni, ov, oi, metric)
+
+
+def test_crossmatch_merge_mode_masks_same_subset():
+    """ids = subset labels: same-subset pairs must never be selected."""
+    rng = np.random.default_rng(3)
+    b, s, d = 2, 8, 16
+    nv = rng.normal(size=(b, s, d)).astype(np.float32)
+    ov = rng.normal(size=(b, s, d)).astype(np.float32)
+    ni = np.tile(np.array([0, 0, 0, 0, 1, 1, 1, 1], np.int32), (b, 1))
+    oi = np.tile(np.array([0, 0, 1, 1, 0, 0, 1, 1], np.int32), (b, 1))
+    nn_i, nn_d, no_i, no_d, on_i, on_d = [
+        np.asarray(o) for o in model.crossmatch(nv, ni, ov, oi)
+    ]
+    for bb in range(b):
+        for i in range(s):
+            if nn_i[bb, i] >= 0:
+                assert ni[bb, nn_i[bb, i]] != ni[bb, i]
+            if no_i[bb, i] >= 0:
+                assert oi[bb, no_i[bb, i]] != ni[bb, i]
+            if on_i[bb, i] >= 0:
+                assert ni[bb, on_i[bb, i]] != oi[bb, i]
+
+
+def test_crossmatch_all_invalid_returns_sentinels():
+    b, s, d = 1, 4, 8
+    nv = np.zeros((b, s, d), np.float32)
+    ni = -np.ones((b, s), np.int32)
+    out = [np.asarray(o) for o in model.crossmatch(nv, ni, nv, ni)]
+    assert (out[0] == -1).all() and (out[2] == -1).all() and (out[4] == -1).all()
+    assert (out[1] >= BIG / 2).all()
+
+
+def test_crossmatch_single_new_sample_has_no_nn():
+    """With one NEW sample there is no *other* NEW sample."""
+    rng = np.random.default_rng(4)
+    nv = rng.normal(size=(1, 1, 8)).astype(np.float32)
+    ni = np.array([[5]], np.int32)
+    out = [np.asarray(o) for o in model.crossmatch(nv, ni, nv, ni)]
+    assert out[0][0, 0] == -1  # nn
+    # old list holds the same object id -> also masked.
+    assert out[2][0, 0] == -1  # no
+
+
+@given(
+    q=st.integers(1, 20),
+    n=st.integers(1, 100),
+    d=st.integers(2, 64),
+    k=st.sampled_from([1, 5, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bruteforce_topk_matches_numpy(q, n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(size=(q, d)).astype(np.float32)
+    base = rng.normal(size=(n, d)).astype(np.float32)
+    valid = np.ones(n, np.float32)
+    idx, dist = [np.asarray(o) for o in model.bruteforce(qs, base, valid, k=k)]
+    full = np.sum((qs[:, None, :] - base[None, :, :]) ** 2, axis=-1)
+    for i in range(q):
+        order = np.argsort(full[i], kind="stable")[:k]
+        live = min(k, n)
+        np.testing.assert_allclose(
+            dist[i, :live], np.sort(full[i])[:live], rtol=1e-3, atol=1e-2
+        )
+        assert (idx[i, live:] == -1).all()
+        # ascending
+        assert (np.diff(dist[i, :live]) >= -1e-4).all()
+        # set equality modulo distance ties
+        got_d = np.sort(full[i][idx[i, :live]])
+        np.testing.assert_allclose(got_d, np.sort(full[i])[:live], rtol=1e-3, atol=1e-2)
+        del order
+
+
+def test_bruteforce_padding_masked():
+    """Padded (valid=0) base rows must never appear in the top-k."""
+    rng = np.random.default_rng(5)
+    qs = rng.normal(size=(3, 16)).astype(np.float32)
+    base = np.zeros((10, 16), np.float32)  # zero rows would win unmasked
+    base[:4] = rng.normal(size=(4, 16)) * 10.0
+    valid = np.zeros(10, np.float32)
+    valid[:4] = 1.0
+    idx, dist = [np.asarray(o) for o in model.bruteforce(qs, base, valid, k=8)]
+    assert ((idx < 4) | (idx == -1)).all()
+    assert (idx[:, :4] >= 0).all() and (idx[:, 4:] == -1).all()

@@ -1,0 +1,8 @@
+//! Bench harness regenerating the paper's fig5 (see
+//! `rust/src/experiments/fig5.rs` for the claims checked and
+//! DESIGN.md for the experiment index). Scale via GNND_SCALE=quick|standard|full.
+fn main() {
+    let scale = gnnd::experiments::Scale::from_env();
+    eprintln!("running fig5 at {scale:?} scale (GNND_SCALE to change)");
+    gnnd::experiments::fig5::run(scale);
+}

@@ -1,0 +1,8 @@
+//! Bench harness regenerating the paper's fig6 (see
+//! `rust/src/experiments/fig6.rs` for the claims checked and
+//! DESIGN.md for the experiment index). Scale via GNND_SCALE=quick|standard|full.
+fn main() {
+    let scale = gnnd::experiments::Scale::from_env();
+    eprintln!("running fig6 at {scale:?} scale (GNND_SCALE to change)");
+    gnnd::experiments::fig6::run(scale);
+}

@@ -1,0 +1,143 @@
+//! Micro benchmarks of the hot paths (the §Perf instrumentation):
+//!
+//! * native distance kernels (L2 / IP throughput);
+//! * one cross-matching batch: native vs PJRT-pallas vs PJRT-jnp — the
+//!   L1 ablation (tiled Pallas kernel vs plain-XLA reference inside the
+//!   same artifact shape) plus host-oracle reference;
+//! * sampling and selective-update phases in isolation;
+//! * end-to-end per-iteration cost at a fixed n.
+//!
+//! Criterion is not in the vendored dependency set, so this is a plain
+//! harness: warmup + timed reps, median-of-batches ns/op.
+
+use gnnd::config::Metric;
+use gnnd::dataset::synth;
+use gnnd::gnnd::engine::{Batch, CrossmatchEngine, NativeEngine};
+use gnnd::gnnd::sample::parallel_sample;
+use gnnd::gnnd::GnndParams;
+use gnnd::graph::{concurrent::ConcurrentGraph, KnnGraph, EMPTY};
+use gnnd::runtime::{artifacts_available, Manifest, PjrtEngine};
+use gnnd::util::rng::Rng;
+use gnnd::util::timer::Timer;
+
+fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..reps.div_ceil(10).max(1) {
+        f();
+    }
+    let mut times = Vec::new();
+    for _ in 0..5 {
+        let t = Timer::start();
+        for _ in 0..reps {
+            f();
+        }
+        times.push(t.secs() / reps as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[times.len() / 2];
+    let (val, unit) = if med < 1e-6 {
+        (med * 1e9, "ns")
+    } else if med < 1e-3 {
+        (med * 1e6, "us")
+    } else if med < 1.0 {
+        (med * 1e3, "ms")
+    } else {
+        (med, "s ")
+    };
+    println!("{name:<46} {val:>9.2} {unit}/op");
+    med
+}
+
+fn mk_batch(ds: &gnnd::Dataset, rows: usize, s: usize, seed: u64) -> (Vec<u32>, Vec<u32>, Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let mut new_ids = Vec::with_capacity(rows * s);
+    let mut old_ids = Vec::with_capacity(rows * s);
+    for _ in 0..rows * s {
+        new_ids.push(rng.below(ds.len()) as u32);
+        old_ids.push(rng.below(ds.len()) as u32);
+    }
+    let gn: Vec<i32> = new_ids.iter().map(|&x| if x == EMPTY { -1 } else { x as i32 }).collect();
+    let go: Vec<i32> = old_ids.iter().map(|&x| if x == EMPTY { -1 } else { x as i32 }).collect();
+    (new_ids, old_ids, gn, go)
+}
+
+fn main() {
+    println!("== micro benches (hot paths) ==");
+    let ds = synth::sift_like(20_000, 0xBEEF);
+
+    // ---- L3 native distance kernels ----
+    {
+        let a = ds.vec(0).to_vec();
+        let b = ds.vec(1).to_vec();
+        let mut acc = 0f32;
+        bench("distance: l2_sq d=128", 100_000, || {
+            acc += gnnd::distance::l2_sq(&a, &b);
+        });
+        bench("distance: dot d=128", 100_000, || {
+            acc += gnnd::distance::dot(&a, &b);
+        });
+        std::hint::black_box(acc);
+    }
+
+    // ---- one crossmatch batch (B=64, S=32, d=128) ----
+    let rows = 64;
+    let s = 32;
+    let (new_ids, old_ids, gn, go) = mk_batch(&ds, rows, s, 1);
+    let batch = Batch { s, rows, new_ids: &new_ids, old_ids: &old_ids, groups_new: &gn, groups_old: &go };
+    bench("crossmatch: native (64x32, d=128)", 50, || {
+        std::hint::black_box(NativeEngine.crossmatch(&ds, &batch).unwrap());
+    });
+
+    if artifacts_available("artifacts") {
+        let pjrt = PjrtEngine::load("artifacts", s, ds.d, Metric::L2).expect("pjrt engine");
+        println!("   [pjrt artifact: {}]", pjrt.artifact().name);
+        bench("crossmatch: pjrt pallas (64x32, d=128)", 10, || {
+            std::hint::black_box(pjrt.crossmatch(&ds, &batch).unwrap());
+        });
+        // jnp twin — the L1 Pallas-vs-plain-XLA ablation
+        if let Ok(manifest) = Manifest::load("artifacts") {
+            if let Ok(meta) = manifest.by_name("crossmatch_s32_d128_l2_jnp") {
+                let jnp = PjrtEngine::load_artifact("artifacts", meta).expect("jnp engine");
+                bench("crossmatch: pjrt jnp-ref (64x32, d=128)", 10, || {
+                    std::hint::black_box(jnp.crossmatch(&ds, &batch).unwrap());
+                });
+            }
+        }
+    } else {
+        println!("crossmatch: pjrt SKIPPED (run `make artifacts`)");
+    }
+
+    // ---- sampling phase ----
+    {
+        let mut rng = Rng::new(3);
+        let mut g = KnnGraph::random_init(&ds, 32, &mut rng);
+        bench("sampling: parallel_sample n=20k k=32 p=16", 5, || {
+            std::hint::black_box(parallel_sample(&mut g, 16, gnnd::util::num_threads()));
+        });
+    }
+
+    // ---- selective update (segmented vs single-lock) ----
+    for (name, width) in [("update: segmented insert", 32usize), ("update: single-lock insert", usize::MAX)] {
+        let mut g = KnnGraph::empty(20_000, 64);
+        let mut rng = Rng::new(4);
+        let pairs: Vec<(usize, u32, f32)> = (0..10_000)
+            .map(|_| (rng.below(1_000), rng.below(20_000) as u32, rng.f32()))
+            .collect();
+        let cg = ConcurrentGraph::new(&mut g, width);
+        let mut i = 0;
+        bench(name, 20_000, || {
+            let (u, v, d) = pairs[i % pairs.len()];
+            i += 1;
+            cg.insert(u, v, d);
+        });
+    }
+
+    // ---- one full GNND iteration at n=20k ----
+    {
+        let params = GnndParams::default().with_k(32).with_p(16).with_iters(1);
+        bench("gnnd: full iteration n=20k k=32 p=16 (native)", 1, || {
+            std::hint::black_box(gnnd::gnnd::build(&ds, &params).unwrap());
+        });
+    }
+    println!("== done ==");
+}

@@ -1,0 +1,8 @@
+//! Bench harness regenerating the paper's table2 (see
+//! `rust/src/experiments/table2.rs` for the claims checked and
+//! DESIGN.md for the experiment index). Scale via GNND_SCALE=quick|standard|full.
+fn main() {
+    let scale = gnnd::experiments::Scale::from_env();
+    eprintln!("running table2 at {scale:?} scale (GNND_SCALE to change)");
+    gnnd::experiments::table2::run(scale);
+}

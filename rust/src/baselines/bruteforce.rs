@@ -1,0 +1,68 @@
+//! Exhaustive k-NN graph construction — the FAISS-BF analog.
+//!
+//! Exact by construction: every object is compared against the whole
+//! dataset. Used (a) as the Fig.-6 exact-quality/time reference point,
+//! (b) as the ground-truth generator, and (c) inside GGNN's bottom-layer
+//! block graphs. Two execution paths: native threads, or the PJRT
+//! `bruteforce` artifact (tiled Pallas distance kernel + on-device
+//! top-k) via [`crate::runtime::BruteforceExec`].
+
+use crate::dataset::{groundtruth, Dataset};
+use crate::graph::KnnGraph;
+use crate::runtime::BruteforceExec;
+
+/// Build the exact k-NN graph natively (parallel over objects).
+pub fn build_native(ds: &Dataset, k: usize) -> KnnGraph {
+    let truth = groundtruth::exact_topk(ds, k.min(ds.len() - 1));
+    graph_from_rows(ds, &truth, k)
+}
+
+/// Build the exact k-NN graph through the PJRT bruteforce artifact.
+pub fn build_pjrt(ds: &Dataset, k: usize, exec: &BruteforceExec) -> crate::Result<KnnGraph> {
+    let ids: Vec<usize> = (0..ds.len()).collect();
+    let rows = exec.topk(ds, &ids, k.min(ds.len() - 1))?;
+    Ok(graph_from_rows(ds, &rows, k))
+}
+
+/// Assemble a graph from per-object neighbor id rows.
+pub fn graph_from_rows(ds: &Dataset, rows: &[Vec<u32>], k: usize) -> KnnGraph {
+    let mut g = KnnGraph::empty(ds.len(), k.min(ds.len() - 1));
+    for (u, row) in rows.iter().enumerate() {
+        let list = g.list_mut(u);
+        for (slot, &v) in row.iter().take(list.len()).enumerate() {
+            list[slot] = crate::graph::Neighbor {
+                id: v,
+                dist: ds.dist(u, v as usize),
+                new: false,
+            };
+        }
+        // rows arrive ascending already; normalize defensively
+        g.normalize_list(u);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{groundtruth, synth};
+    use crate::metrics::recall_at;
+
+    #[test]
+    fn native_bruteforce_is_exact() {
+        let ds = synth::uniform(120, 6, 51);
+        let g = build_native(&ds, 10);
+        g.check_invariants().unwrap();
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let r = recall_at(&g, &truth, None, 10);
+        assert!((r - 1.0).abs() < 1e-9, "bruteforce recall {r} != 1");
+    }
+
+    #[test]
+    fn handles_k_bigger_than_n() {
+        let ds = synth::uniform(6, 3, 52);
+        let g = build_native(&ds, 32);
+        assert_eq!(g.k(), 5);
+        g.check_invariants().unwrap();
+    }
+}

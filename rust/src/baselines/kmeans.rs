@@ -1,0 +1,198 @@
+//! Lloyd's k-means with k-means++ seeding — the clustering substrate of
+//! the IVF-PQ baseline (coarse quantizer + per-subspace codebooks).
+
+use crate::config::Metric;
+use crate::util::{rng::Rng, split_ranges};
+
+/// A trained codebook: `k` centroids of dimension `d` (row-major).
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub k: usize,
+    pub d: usize,
+    pub centroids: Vec<f32>,
+}
+
+impl Codebook {
+    #[inline]
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.d..(c + 1) * self.d]
+    }
+
+    /// Index of the nearest centroid to `v` (squared L2).
+    pub fn assign(&self, v: &[f32]) -> usize {
+        let mut best = (f32::INFINITY, 0usize);
+        for c in 0..self.k {
+            let d = crate::distance::l2_sq(v, self.centroid(c));
+            if d < best.0 {
+                best = (d, c);
+            }
+        }
+        best.1
+    }
+}
+
+/// Train k-means on `data` (`n` rows x `d`), `iters` Lloyd rounds.
+///
+/// Seeding is k-means++ on a bounded sample for O(k * sample) cost.
+/// Assignment is always squared-L2 (quantization error), independent of
+/// the search metric (as in FAISS); `_metric` is kept in the signature
+/// to document that choice at call sites.
+pub fn train(
+    data: &[f32],
+    d: usize,
+    k: usize,
+    iters: usize,
+    _metric: Metric,
+    seed: u64,
+    threads: usize,
+) -> Codebook {
+    let n = data.len() / d;
+    assert!(n > 0 && k > 0);
+    let k = k.min(n);
+    let mut rng = Rng::new(seed ^ 0x6B6D);
+    let row = |i: usize| &data[i * d..(i + 1) * d];
+
+    // ---- k-means++ seeding on a sample ----
+    let sample_n = n.min(k * 16).max(k);
+    let sample_ids = rng.distinct(n, sample_n);
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = sample_ids[rng.below(sample_n)];
+    centroids.extend_from_slice(row(first));
+    let mut d2: Vec<f32> = sample_ids
+        .iter()
+        .map(|&i| crate::distance::l2_sq(row(i), &centroids[..d]))
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            sample_ids[rng.below(sample_n)]
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = sample_ids[sample_n - 1];
+            for (j, &i) in sample_ids.iter().enumerate() {
+                target -= d2[j] as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centroids.extend_from_slice(row(pick));
+        let newc = &centroids[c * d..(c + 1) * d];
+        for (j, &i) in sample_ids.iter().enumerate() {
+            let nd = crate::distance::l2_sq(row(i), newc);
+            if nd < d2[j] {
+                d2[j] = nd;
+            }
+        }
+    }
+    let mut book = Codebook { k, d, centroids };
+
+    // ---- Lloyd iterations (parallel assignment) ----
+    let threads = threads.max(1);
+    let mut assign = vec![0u32; n];
+    for _ in 0..iters {
+        let ranges = split_ranges(n, threads);
+        {
+            let book = &book;
+            let chunks: Vec<&mut [u32]> = {
+                let mut rest = assign.as_mut_slice();
+                let mut out = Vec::new();
+                for r in &ranges {
+                    let (a, b) = rest.split_at_mut(r.len());
+                    out.push(a);
+                    rest = b;
+                }
+                out
+            };
+            crossbeam_utils::thread::scope(|s| {
+                for (r, chunk) in ranges.iter().zip(chunks) {
+                    let r = r.clone();
+                    s.spawn(move |_| {
+                        for (slot, i) in r.enumerate() {
+                            chunk[slot] = book.assign(row(i)) as u32;
+                        }
+                    });
+                }
+            })
+            .unwrap();
+        }
+        // recompute centroids
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            let v = row(i);
+            for j in 0..d {
+                sums[c * d + j] += v[j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster from a random point
+                let i = rng.below(n);
+                book.centroids[c * d..(c + 1) * d].copy_from_slice(row(i));
+            } else {
+                for j in 0..d {
+                    book.centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    book
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        // 3 well-separated blobs -> 3 centroids land near blob means
+        let mut rng = Rng::new(61);
+        let d = 4;
+        let mut data = Vec::new();
+        let means = [[0.0f32; 4], [20.0; 4], [-20.0; 4]];
+        for i in 0..300 {
+            let m = &means[i % 3];
+            for j in 0..d {
+                data.push(m[j] + rng.normal_f32() * 0.3);
+            }
+        }
+        let book = train(&data, d, 3, 10, Metric::L2, 1, 2);
+        for m in &means {
+            let best = (0..3)
+                .map(|c| crate::distance::l2_sq(m, book.centroid(c)))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 1.0, "no centroid near {m:?} (best {best})");
+        }
+    }
+
+    #[test]
+    fn quantization_error_decreases_with_k() {
+        let ds = synth::clustered(400, 8, 62);
+        let err = |k: usize| -> f64 {
+            let book = train(ds.raw(), ds.d, k, 6, Metric::L2, 2, 2);
+            (0..ds.len())
+                .map(|i| {
+                    let c = book.assign(ds.vec(i));
+                    crate::distance::l2_sq(ds.vec(i), book.centroid(c)) as f64
+                })
+                .sum()
+        };
+        let e4 = err(4);
+        let e32 = err(32);
+        assert!(e32 < e4, "e32={e32} !< e4={e4}");
+    }
+
+    #[test]
+    fn assignment_is_nearest() {
+        let book = Codebook { k: 3, d: 2, centroids: vec![0.0, 0.0, 10.0, 0.0, 0.0, 10.0] };
+        assert_eq!(book.assign(&[1.0, 1.0]), 0);
+        assert_eq!(book.assign(&[9.0, 1.0]), 1);
+        assert_eq!(book.assign(&[1.0, 9.0]), 2);
+    }
+}

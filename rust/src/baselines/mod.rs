@@ -1,0 +1,18 @@
+//! Comparison baselines — every system the paper evaluates against,
+//! implemented from scratch (DESIGN.md "Substitutions"):
+//!
+//! * [`nn_descent`] — classic CPU NN-Descent (Dong et al., WWW'11), the
+//!   paper's primary baseline (single- and multi-thread).
+//! * [`bruteforce`] — exhaustive construction (FAISS-BF analog), native
+//!   or through the PJRT `bruteforce` artifact.
+//! * [`ggnn`] — hierarchical GPU-style graph build + best-first search
+//!   (GGNN analog); its search doubles as the Fig.-7 merge comparator.
+//! * [`ivfpq`] — inverted-file product quantization (FAISS-IVFPQ
+//!   analog) for the Table-2 billion-scale comparison.
+//! * [`kmeans`] — the shared clustering substrate for IVF-PQ.
+
+pub mod bruteforce;
+pub mod ggnn;
+pub mod ivfpq;
+pub mod kmeans;
+pub mod nn_descent;

@@ -1,0 +1,352 @@
+//! Configuration system: typed parameter structs, a `key=value` config
+//! file format, and CLI-style overrides.
+//!
+//! Experiments are fully described by a [`RunConfig`]; the `gnnd` binary
+//! builds one from `--config file` plus `--set key=value` overrides, so
+//! every paper experiment is reproducible from a single flat config.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, Context};
+
+/// Distance metric. The paper stresses NN-Descent's *genericness*; we
+/// keep that by supporting the metrics its benchmarks use: squared L2
+/// (SIFT/DEEP/GIST) and cosine (GloVe). Cosine is implemented as
+/// "l2-normalize once, then negated inner product", which is a monotone
+/// transform of cosine distance and MXU-friendly (see DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Squared euclidean distance.
+    L2,
+    /// Negated inner product (smaller = closer).
+    Ip,
+    /// Cosine distance via normalization + `Ip`.
+    Cosine,
+}
+
+impl Metric {
+    /// The metric the compute kernels see (Cosine lowers to Ip).
+    pub fn kernel_metric(self) -> Metric {
+        match self {
+            Metric::Cosine => Metric::Ip,
+            m => m,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Metric::L2 => "l2",
+            Metric::Ip => "ip",
+            Metric::Cosine => "cosine",
+        }
+    }
+}
+
+impl FromStr for Metric {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "l2" => Ok(Metric::L2),
+            "ip" => Ok(Metric::Ip),
+            "cosine" | "cos" => Ok(Metric::Cosine),
+            _ => bail!("unknown metric {s:?} (expected l2|ip|cosine)"),
+        }
+    }
+}
+
+impl fmt::Display for Metric {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Which engine evaluates the cross-matching step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT-compiled XLA executable on the PJRT CPU client (the paper's
+    /// "on-device" path; requires `make artifacts`).
+    Pjrt,
+    /// Bit-compatible native Rust implementation (oracle + fallback).
+    Native,
+}
+
+impl FromStr for EngineKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pjrt" => Ok(EngineKind::Pjrt),
+            "native" => Ok(EngineKind::Native),
+            _ => bail!("unknown engine {s:?} (expected pjrt|native)"),
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::Native => "native",
+        })
+    }
+}
+
+/// The update strategy ablated in the paper's Fig. 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateStrategy {
+    /// GNND-r1: every produced neighbor pair updates the graph
+    /// (classic NN-Descent semantics, sort-merge insertion).
+    InsertAll,
+    /// GNND-r2: selective update (Algorithm 2 winners only), one lock
+    /// per k-NN list.
+    SelectiveSingleLock,
+    /// Full GNND: selective update + multiple spinlocks on list
+    /// segments (parallel insertion within one list).
+    SelectiveSegmented,
+}
+
+impl FromStr for UpdateStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "r1" | "insert-all" => Ok(UpdateStrategy::InsertAll),
+            "r2" | "selective" => Ok(UpdateStrategy::SelectiveSingleLock),
+            "full" | "segmented" => Ok(UpdateStrategy::SelectiveSegmented),
+            _ => bail!("unknown update strategy {s:?} (expected r1|r2|full)"),
+        }
+    }
+}
+
+impl fmt::Display for UpdateStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            UpdateStrategy::InsertAll => "r1",
+            UpdateStrategy::SelectiveSingleLock => "r2",
+            UpdateStrategy::SelectiveSegmented => "full",
+        })
+    }
+}
+
+/// A flat `key=value` config file / override map.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigMap(pub BTreeMap<String, String>);
+
+impl ConfigMap {
+    /// Parse from file: one `key = value` per line, `#` comments.
+    pub fn from_file(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_str_contents(&text)
+    }
+
+    pub fn from_str_contents(text: &str) -> crate::Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key=value", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(ConfigMap(map))
+    }
+
+    /// Apply `key=value` override strings (CLI `--set`).
+    pub fn apply_overrides<'a>(
+        &mut self,
+        overrides: impl IntoIterator<Item = &'a str>,
+    ) -> crate::Result<()> {
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .with_context(|| format!("override {ov:?}: expected key=value"))?;
+            self.0.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    pub fn get_parse<T: FromStr>(&self, key: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("config key {key}={v:?}: {e}")),
+        }
+    }
+}
+
+/// Parameters of one GNND build (paper Algorithm 1 + §4.3 knobs).
+#[derive(Clone, Debug)]
+pub struct GnndParams {
+    /// Graph degree k (paper: tuned per dataset; 10–64 typical).
+    pub k: usize,
+    /// Sample count p (< k): NEW/OLD samples taken per list; sampled
+    /// adjacency lists are capped at 2p after reverse append (§4.1).
+    pub p: usize,
+    /// Maximum NN-Descent iterations.
+    pub max_iter: usize,
+    /// Early-termination threshold: stop when the fraction of accepted
+    /// updates per (n*k) drops below this (classic NN-Descent `delta`).
+    pub delta: f64,
+    /// Update strategy (Fig. 5 ablation).
+    pub update: UpdateStrategy,
+    /// Segment width for the multiple-spinlock scheme. The paper guards
+    /// warp-sized (32) segments because one warp performs one insertion;
+    /// on CPU threads there is no warp, so the default is narrower (8)
+    /// to give `k/8` lock segments at the default k=32 — the same
+    /// contention-reduction idea at CPU granularity (DESIGN.md
+    /// §Hardware-Adaptation).
+    pub segment_width: usize,
+    /// Cross-matching engine.
+    pub engine: EngineKind,
+    /// Directory holding the AOT artifacts (PJRT engine only).
+    pub artifacts_dir: String,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Batch of object locals per engine call (matched to the artifact's
+    /// leading dimension for the PJRT engine).
+    pub batch: usize,
+    /// RNG seed (graph init + sampling tie-breaks).
+    pub seed: u64,
+    /// Record phi(G) after every iteration (Fig. 4 traces).
+    pub trace_phi: bool,
+}
+
+impl Default for GnndParams {
+    fn default() -> Self {
+        GnndParams {
+            k: 32,
+            p: 16,
+            max_iter: 12,
+            delta: 0.001,
+            update: UpdateStrategy::SelectiveSegmented,
+            segment_width: 8,
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".to_string(),
+            threads: 0,
+            batch: 64,
+            seed: 0x6E6E64, // "nnd"
+            trace_phi: false,
+        }
+    }
+}
+
+impl GnndParams {
+    pub fn from_config(cfg: &ConfigMap) -> crate::Result<Self> {
+        let d = GnndParams::default();
+        let p = GnndParams {
+            k: cfg.get_parse("k", d.k)?,
+            p: cfg.get_parse("p", d.p)?,
+            max_iter: cfg.get_parse("max_iter", d.max_iter)?,
+            delta: cfg.get_parse("delta", d.delta)?,
+            update: cfg.get_parse("update", d.update)?,
+            segment_width: cfg.get_parse("segment_width", d.segment_width)?,
+            engine: cfg.get_parse("engine", d.engine)?,
+            artifacts_dir: cfg.get_parse("artifacts_dir", d.artifacts_dir.clone())?,
+            threads: cfg.get_parse("threads", d.threads)?,
+            batch: cfg.get_parse("batch", d.batch)?,
+            seed: cfg.get_parse("seed", d.seed)?,
+            trace_phi: cfg.get_parse("trace_phi", d.trace_phi)?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.k == 0 {
+            bail!("k must be > 0");
+        }
+        if self.p == 0 || self.p > self.k {
+            bail!("p must be in 1..=k (got p={}, k={})", self.p, self.k);
+        }
+        if self.batch == 0 {
+            bail!("batch must be > 0");
+        }
+        if self.segment_width == 0 {
+            bail!("segment_width must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Builder-style helpers for tests/examples.
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+    pub fn with_p(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+    pub fn with_engine(mut self, e: EngineKind) -> Self {
+        self.engine = e;
+        self
+    }
+    pub fn with_update(mut self, u: UpdateStrategy) -> Self {
+        self.update = u;
+        self
+    }
+    pub fn with_iters(mut self, it: usize) -> Self {
+        self.max_iter = it;
+        self
+    }
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_text() {
+        let cfg = ConfigMap::from_str_contents(
+            "# comment\nk = 24\np=8\nupdate = r2\nengine=native\n",
+        )
+        .unwrap();
+        let p = GnndParams::from_config(&cfg).unwrap();
+        assert_eq!(p.k, 24);
+        assert_eq!(p.p, 8);
+        assert_eq!(p.update, UpdateStrategy::SelectiveSingleLock);
+        assert_eq!(p.engine, EngineKind::Native);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = ConfigMap::from_str_contents("k=24\n").unwrap();
+        cfg.apply_overrides(["k=48", "p=12"]).unwrap();
+        let p = GnndParams::from_config(&cfg).unwrap();
+        assert_eq!(p.k, 48);
+        assert_eq!(p.p, 12);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let cfg = ConfigMap::from_str_contents("k=4\np=9\n").unwrap();
+        assert!(GnndParams::from_config(&cfg).is_err());
+        let cfg = ConfigMap::from_str_contents("metricxx=1\nk=0\n").unwrap();
+        assert!(GnndParams::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn metric_roundtrip() {
+        for m in [Metric::L2, Metric::Ip, Metric::Cosine] {
+            assert_eq!(m.as_str().parse::<Metric>().unwrap(), m);
+        }
+        assert_eq!(Metric::Cosine.kernel_metric(), Metric::Ip);
+        assert!("foo".parse::<Metric>().is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Exact k-NN ground truth (the Recall@k denominator, paper Eq. 4).
+//!
+//! Brute-force over the whole dataset, parallelized over queries. For
+//! large n the paper evaluates recall over the full graph; at repro
+//! scale we also support evaluating on a deterministic sample of objects
+//! (standard ANN-benchmark practice) to keep ground-truth costs sane.
+
+use crate::dataset::Dataset;
+use crate::util::{rng::Rng, split_ranges};
+
+/// Exact top-k neighbor ids (self excluded) for the given query ids.
+///
+/// Returns one row per query id, each row sorted by ascending distance,
+/// length `min(k, n-1)`.
+pub fn exact_topk_for(ds: &Dataset, query_ids: &[usize], k: usize) -> Vec<Vec<u32>> {
+    let n = ds.len();
+    let threads = crate::util::num_threads().min(query_ids.len().max(1));
+    let ranges = split_ranges(query_ids.len(), threads);
+    let mut out: Vec<Vec<Vec<u32>>> = Vec::new();
+    crossbeam_utils::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|r| {
+                let ids = &query_ids[r.clone()];
+                s.spawn(move |_| {
+                    let mut rows = Vec::with_capacity(ids.len());
+                    for &q in ids {
+                        rows.push(topk_one(ds, q, k, n));
+                    }
+                    rows
+                })
+            })
+            .collect();
+        for h in handles {
+            out.push(h.join().unwrap());
+        }
+    })
+    .unwrap();
+    out.into_iter().flatten().collect()
+}
+
+fn topk_one(ds: &Dataset, q: usize, k: usize, n: usize) -> Vec<u32> {
+    // bounded max-heap on (dist, id)
+    let mut heap: std::collections::BinaryHeap<(ordered::F32, u32)> =
+        std::collections::BinaryHeap::with_capacity(k + 1);
+    for j in 0..n {
+        if j == q {
+            continue;
+        }
+        let d = ds.dist(q, j);
+        if heap.len() < k {
+            heap.push((ordered::F32(d), j as u32));
+        } else if d < heap.peek().unwrap().0 .0 {
+            heap.pop();
+            heap.push((ordered::F32(d), j as u32));
+        }
+    }
+    let mut v: Vec<(ordered::F32, u32)> = heap.into_vec();
+    v.sort_unstable();
+    v.into_iter().map(|(_, id)| id).collect()
+}
+
+/// Exact top-k for all objects.
+pub fn exact_topk(ds: &Dataset, k: usize) -> Vec<Vec<u32>> {
+    let ids: Vec<usize> = (0..ds.len()).collect();
+    exact_topk_for(ds, &ids, k)
+}
+
+/// Ground truth on a deterministic sample of `m` objects.
+/// Returns (sampled ids, truth rows).
+pub fn sampled_truth(ds: &Dataset, m: usize, k: usize, seed: u64) -> (Vec<usize>, Vec<Vec<u32>>) {
+    let m = m.min(ds.len());
+    let mut rng = Rng::new(seed ^ 0x6711);
+    let ids = rng.distinct(ds.len(), m);
+    let rows = exact_topk_for(ds, &ids, k);
+    (ids, rows)
+}
+
+/// Total-orderable f32 wrapper (distances are never NaN by construction).
+pub(crate) mod ordered {
+    #[derive(Clone, Copy, PartialEq, PartialOrd)]
+    pub struct F32(pub f32);
+    impl Eq for F32 {}
+    #[allow(clippy::derive_ord_xor_partial_ord)]
+    impl Ord for F32 {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn truth_matches_naive_sort() {
+        let ds = synth::uniform(80, 4, 1);
+        let truth = exact_topk(&ds, 5);
+        for q in 0..ds.len() {
+            let mut all: Vec<(f32, u32)> = (0..ds.len())
+                .filter(|&j| j != q)
+                .map(|j| (ds.dist(q, j), j as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let want: Vec<u32> = all[..5].iter().map(|x| x.1).collect();
+            // compare distances not ids (ties)
+            let got_d: Vec<f32> = truth[q].iter().map(|&id| ds.dist(q, id as usize)).collect();
+            let want_d: Vec<f32> = want.iter().map(|&id| ds.dist(q, id as usize)).collect();
+            assert_eq!(got_d, want_d, "q={q}");
+            assert!(!truth[q].contains(&(q as u32)));
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let ds = synth::uniform(4, 3, 2);
+        let truth = exact_topk(&ds, 10);
+        for row in &truth {
+            assert_eq!(row.len(), 3);
+        }
+    }
+
+    #[test]
+    fn sampled_truth_is_deterministic() {
+        let ds = synth::uniform(50, 4, 3);
+        let (ids1, rows1) = sampled_truth(&ds, 10, 5, 7);
+        let (ids2, rows2) = sampled_truth(&ds, 10, 5, 7);
+        assert_eq!(ids1, ids2);
+        assert_eq!(rows1, rows2);
+    }
+}

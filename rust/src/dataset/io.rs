@@ -1,0 +1,235 @@
+//! Dataset and graph file I/O.
+//!
+//! * `.fvecs` / `.ivecs` — the TEXMEX interchange formats used by the
+//!   paper's benchmarks (SIFT1M etc.), so real corpora drop in when
+//!   available.
+//! * `.dsb` — our own raw binary dataset format (header + f32 rows),
+//!   used by the out-of-core shard store because it supports metric
+//!   metadata and fast bulk reads.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::config::Metric;
+
+use super::Dataset;
+
+const DSB_MAGIC: u32 = 0x4453_4231; // "DSB1"
+
+fn metric_code(m: Metric) -> u32 {
+    match m {
+        Metric::L2 => 0,
+        Metric::Ip => 1,
+        Metric::Cosine => 2,
+    }
+}
+
+fn metric_from_code(c: u32) -> crate::Result<Metric> {
+    Ok(match c {
+        0 => Metric::L2,
+        1 => Metric::Ip,
+        2 => Metric::Cosine,
+        _ => bail!("bad metric code {c}"),
+    })
+}
+
+fn read_u32(r: &mut impl Read) -> crate::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> crate::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a dataset in `.dsb` (magic, d, n, metric, then n*d f32 LE).
+pub fn write_dsb(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    w.write_all(&DSB_MAGIC.to_le_bytes())?;
+    w.write_all(&(ds.d as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&metric_code(ds.metric).to_le_bytes())?;
+    for &x in ds.raw() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a `.dsb` dataset.
+pub fn read_dsb(path: impl AsRef<Path>) -> crate::Result<Dataset> {
+    let mut r = BufReader::new(
+        File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?,
+    );
+    if read_u32(&mut r)? != DSB_MAGIC {
+        bail!("not a .dsb file: {:?}", path.as_ref());
+    }
+    let d = read_u32(&mut r)? as usize;
+    let n = read_u32(&mut r)? as usize;
+    let metric = metric_from_code(read_u32(&mut r)?)?;
+    let data = read_f32s(&mut r, n * d)?;
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dsb".into());
+    // bypass Dataset::new to avoid re-normalizing cosine data
+    Ok(Dataset { name, d, metric, data })
+}
+
+/// Read a TEXMEX `.fvecs` file (each row: i32 dim then dim f32).
+pub fn read_fvecs(path: impl AsRef<Path>, metric: Metric, limit: Option<usize>) -> crate::Result<Dataset> {
+    let mut r = BufReader::new(File::open(path.as_ref())?);
+    let mut data = Vec::new();
+    let mut d = 0usize;
+    let mut n = 0usize;
+    loop {
+        let dim = match read_u32(&mut r) {
+            Ok(v) => v as usize,
+            Err(_) => break, // EOF
+        };
+        if d == 0 {
+            d = dim;
+        } else if dim != d {
+            bail!("inconsistent fvecs dims: {d} vs {dim}");
+        }
+        data.extend(read_f32s(&mut r, d)?);
+        n += 1;
+        if let Some(l) = limit {
+            if n >= l {
+                break;
+            }
+        }
+    }
+    if n == 0 {
+        bail!("empty fvecs file {:?}", path.as_ref());
+    }
+    Ok(Dataset::new(
+        path.as_ref().file_stem().unwrap().to_string_lossy(),
+        d,
+        metric,
+        data,
+    ))
+}
+
+/// Write `.ivecs` rows (ground truth neighbor id lists).
+pub fn write_ivecs(rows: &[Vec<u32>], path: impl AsRef<Path>) -> crate::Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    for row in rows {
+        w.write_all(&(row.len() as u32).to_le_bytes())?;
+        for &x in row {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read `.ivecs` rows.
+pub fn read_ivecs(path: impl AsRef<Path>) -> crate::Result<Vec<Vec<u32>>> {
+    let mut r = BufReader::new(File::open(path.as_ref())?);
+    let mut rows = Vec::new();
+    loop {
+        let len = match read_u32(&mut r) {
+            Ok(v) => v as usize,
+            Err(_) => break,
+        };
+        let mut row = Vec::with_capacity(len);
+        for _ in 0..len {
+            row.push(read_u32(&mut r)?);
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "gnnd-io-test-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn dsb_roundtrip() {
+        let dir = tmpdir();
+        let ds = synth::clustered(37, 9, 1);
+        let p = dir.join("x.dsb");
+        write_dsb(&ds, &p).unwrap();
+        let back = read_dsb(&p).unwrap();
+        assert_eq!(back.d, ds.d);
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.metric, ds.metric);
+        assert_eq!(back.raw(), ds.raw());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn dsb_cosine_roundtrip_no_double_normalize() {
+        let dir = tmpdir();
+        let ds = synth::glove_like(20, 2);
+        let p = dir.join("g.dsb");
+        write_dsb(&ds, &p).unwrap();
+        let back = read_dsb(&p).unwrap();
+        assert_eq!(back.raw(), ds.raw());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let dir = tmpdir();
+        let rows = vec![vec![1u32, 2, 3], vec![], vec![9]];
+        let p = dir.join("gt.ivecs");
+        write_ivecs(&rows, &p).unwrap();
+        assert_eq!(read_ivecs(&p).unwrap(), rows);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fvecs_roundtrip_via_manual_write() {
+        let dir = tmpdir();
+        let p = dir.join("v.fvecs");
+        {
+            let mut w = BufWriter::new(File::create(&p).unwrap());
+            for row in [[1.0f32, 2.0], [3.0, 4.0], [5.0, 6.0]] {
+                w.write_all(&2u32.to_le_bytes()).unwrap();
+                for x in row {
+                    w.write_all(&x.to_le_bytes()).unwrap();
+                }
+            }
+        }
+        let ds = read_fvecs(&p, Metric::L2, None).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.vec(2), &[5.0, 6.0]);
+        let ds2 = read_fvecs(&p, Metric::L2, Some(2)).unwrap();
+        assert_eq!(ds2.len(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = tmpdir();
+        let p = dir.join("bad.dsb");
+        std::fs::write(&p, b"notadsbfile").unwrap();
+        assert!(read_dsb(&p).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

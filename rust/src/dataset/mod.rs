@@ -1,0 +1,145 @@
+//! Datasets: a flat row-major f32 matrix plus metric metadata.
+
+pub mod groundtruth;
+pub mod io;
+pub mod synth;
+
+use crate::config::Metric;
+use crate::distance;
+
+/// An in-memory dataset of `n` vectors of dimension `d` (row-major).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub d: usize,
+    pub metric: Metric,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, d: usize, metric: Metric, data: Vec<f32>) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(data.len() % d, 0, "data length must be a multiple of d");
+        let mut ds = Dataset { name: name.into(), d, metric, data };
+        if metric == Metric::Cosine {
+            // Cosine is served as normalize-once + negated inner product
+            // (monotone in cosine distance); mirrors the L2 model design.
+            for i in 0..ds.len() {
+                let row = &mut ds.data[i * d..(i + 1) * d];
+                distance::normalize(row);
+            }
+        }
+        ds
+    }
+
+    /// Number of vectors.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row view.
+    #[inline]
+    pub fn vec(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Raw flat storage.
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Distance between rows `i` and `j` under the dataset metric.
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f32 {
+        distance::distance(self.metric, self.vec(i), self.vec(j))
+    }
+
+    /// Distance between row `i` and an external query vector.
+    #[inline]
+    pub fn dist_to(&self, i: usize, q: &[f32]) -> f32 {
+        distance::distance(self.metric, self.vec(i), q)
+    }
+
+    /// New dataset holding the selected rows (in the given order).
+    pub fn select(&self, ids: &[usize], name: impl Into<String>) -> Dataset {
+        let mut data = Vec::with_capacity(ids.len() * self.d);
+        for &i in ids {
+            data.extend_from_slice(self.vec(i));
+        }
+        // rows are already normalized if cosine; Dataset::new would
+        // re-normalize harmlessly, but skip the cost:
+        Dataset { name: name.into(), d: self.d, metric: self.metric, data }
+    }
+
+    /// Concatenate two datasets with identical (d, metric).
+    pub fn concat(&self, other: &Dataset, name: impl Into<String>) -> Dataset {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.metric, other.metric);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Dataset { name: name.into(), d: self.d, metric: self.metric, data }
+    }
+
+    /// Split into `parts` near-equal contiguous shards.
+    pub fn split(&self, parts: usize) -> Vec<Dataset> {
+        crate::util::split_ranges(self.len(), parts)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| Dataset {
+                name: format!("{}[shard{}]", self.name, i),
+                d: self.d,
+                metric: self.metric,
+                data: self.data[r.start * self.d..r.end * self.d].to_vec(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new("t", 2, Metric::L2, vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0])
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let ds = tiny();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.vec(1), &[3.0, 4.0]);
+        assert_eq!(ds.dist(0, 1), 25.0);
+    }
+
+    #[test]
+    fn cosine_normalizes_rows() {
+        let ds = Dataset::new("c", 2, Metric::Cosine, vec![3.0, 4.0, 0.0, 5.0]);
+        let v = ds.vec(0);
+        assert!((v[0] - 0.6).abs() < 1e-6 && (v[1] - 0.8).abs() < 1e-6);
+        // self-distance is -1 (= perfectly aligned) under negated IP
+        assert!((ds.dist(0, 0) + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn select_concat_split_roundtrip() {
+        let ds = tiny();
+        let sel = ds.select(&[2, 0], "sel");
+        assert_eq!(sel.vec(0), ds.vec(2));
+        let cat = ds.concat(&sel, "cat");
+        assert_eq!(cat.len(), 5);
+        let shards = cat.split(2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].len() + shards[1].len(), 5);
+        assert_eq!(shards[1].vec(0), cat.vec(3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Dataset::new("bad", 4, Metric::L2, vec![1.0; 7]);
+    }
+}

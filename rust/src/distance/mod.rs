@@ -1,0 +1,139 @@
+//! Native distance evaluation (the CPU mirror of the L1 kernels).
+//!
+//! Used by: graph init, the native cross-matching engine (oracle for the
+//! PJRT path), the classic NN-Descent baseline, and ground-truth
+//! computation. The inner loops are written as chunked slice folds the
+//! compiler auto-vectorizes.
+
+use crate::config::Metric;
+
+/// Squared euclidean distance.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // Process in 8-lane chunks with independent accumulators so LLVM can
+    // vectorize; tail handled scalar.
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let ao = &a[c * 8..c * 8 + 8];
+        let bo = &b[c * 8..c * 8 + 8];
+        for i in 0..8 {
+            let d = ao[i] - bo[i];
+            acc[i] += d * d;
+        }
+    }
+    let mut sum: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        let d = a[i] - b[i];
+        sum += d * d;
+    }
+    sum
+}
+
+/// Inner product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let ao = &a[c * 8..c * 8 + 8];
+        let bo = &b[c * 8..c * 8 + 8];
+        for i in 0..8 {
+            acc[i] += ao[i] * bo[i];
+        }
+    }
+    let mut sum: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+/// Distance under `metric` (Cosine assumes pre-normalized inputs and is
+/// evaluated as negated inner product — see [`Metric::kernel_metric`]).
+#[inline]
+pub fn distance(metric: Metric, a: &[f32], b: &[f32]) -> f32 {
+    match metric.kernel_metric() {
+        Metric::L2 => l2_sq(a, b),
+        Metric::Ip => -dot(a, b),
+        Metric::Cosine => unreachable!("kernel_metric lowers cosine"),
+    }
+}
+
+/// L2-normalize a vector in place; zero vectors are left unchanged.
+pub fn normalize(v: &mut [f32]) {
+    let n = dot(v, v).sqrt();
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for x in v {
+            *x *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn l2_naive(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn l2_matches_naive_all_lengths() {
+        prop::check("l2-vs-naive", 200, |rng: &mut Rng| {
+            let d = rng.below(70) + 1;
+            let a: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 10.0).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 10.0).collect();
+            let got = l2_sq(&a, &b);
+            let want = l2_naive(&a, &b);
+            prop::assert_prop(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                format!("d={d} got={got} want={want}"),
+            )
+        });
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        prop::check("dot-vs-naive", 200, |rng: &mut Rng| {
+            let d = rng.below(70) + 1;
+            let a: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            prop::assert_prop(
+                (dot(&a, &b) - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "dot mismatch",
+            )
+        });
+    }
+
+    #[test]
+    fn l2_identity_and_symmetry() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let b = [9.0f32, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(l2_sq(&a, &a), 0.0);
+        assert_eq!(l2_sq(&a, &b), l2_sq(&b, &a));
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut v = vec![3.0f32, 4.0];
+        normalize(&mut v);
+        assert!((dot(&v, &v) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0f32; 5];
+        normalize(&mut z);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn cosine_lowers_to_ip() {
+        let a = [0.6f32, 0.8];
+        let b = [1.0f32, 0.0];
+        let d = distance(Metric::Cosine, &a, &b);
+        assert!((d - (-0.6)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,82 @@
+//! Figure 4 — variation trend of phi(G) (Eq. 3): GNND vs classic
+//! NN-Descent, k = 10, SIFT-like data.
+//!
+//! Paper claim: the GNND trend "largely overlaps" the NN-Descent trend —
+//! selective update does not slow convergence. The report prints one row
+//! per iteration with both phi values and their ratio; the claim holds
+//! when the ratio stays near 1.
+
+use crate::baselines::nn_descent::{self, NnDescentParams};
+use crate::dataset::synth;
+use crate::gnnd;
+use crate::metrics::{Report, Row};
+
+use super::{engine_from_env, Scale};
+
+pub fn run(scale: Scale) -> Report {
+    let ds = synth::sift_like(scale.n_base(), 0xF1604);
+    let k = 10;
+
+    let mut params = super::default_params(engine_from_env())
+        .with_k(k)
+        .with_p(5)
+        .with_iters(10);
+    params.trace_phi = true;
+    params.delta = 0.0; // run all iterations for a full trace
+    let g_out = gnnd::build_with_stats(&ds, &params).expect("gnnd build");
+
+    let nd_params = NnDescentParams {
+        k,
+        max_iter: 10,
+        delta: 0.0,
+        trace_phi: true,
+        threads: 1,
+        ..Default::default()
+    };
+    let (_, nd_stats) = nn_descent::build(&ds, &nd_params);
+
+    let mut report = Report::new("Fig 4: phi(G) per iteration (GNND vs NN-Descent)")
+        .meta("dataset", &ds.name)
+        .meta("n", ds.len())
+        .meta("k", k)
+        .meta("engine", g_out.stats.engine);
+    let iters = g_out.stats.phi_trace.len().max(nd_stats.phi_trace.len());
+    for it in 0..iters {
+        let a = g_out.stats.phi_trace.get(it).copied();
+        let b = nd_stats.phi_trace.get(it).copied();
+        let mut row = Row::new(format!("iter {it}"));
+        if let Some(a) = a {
+            row = row.col("phi_gnnd", a);
+        }
+        if let Some(b) = b {
+            row = row.col("phi_nnd", b);
+        }
+        if let (Some(a), Some(b)) = (a, b) {
+            row = row.col("ratio", if b > 0.0 { a / b } else { f64::NAN });
+        }
+        report.push(row);
+    }
+    super::finish(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trends_overlap_at_quick_scale() {
+        let report = run(Scale::Quick);
+        // both must decrease and end close together (paper: overlap)
+        let col = |row: &crate::metrics::Row, name: &str| {
+            row.cols.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+        };
+        let first = &report.rows[0];
+        let last = report.rows.last().unwrap();
+        let (g0, n0) = (col(first, "phi_gnnd").unwrap(), col(first, "phi_nnd").unwrap());
+        let (g1, n1) = (col(last, "phi_gnnd").unwrap(), col(last, "phi_nnd").unwrap());
+        assert!(g1 < g0 * 0.9, "gnnd phi barely moved");
+        assert!(n1 < n0 * 0.9, "nnd phi barely moved");
+        let ratio = col(last, "ratio").unwrap();
+        assert!((0.9..=1.15).contains(&ratio), "final phi ratio {ratio} not near 1");
+    }
+}

@@ -1,0 +1,116 @@
+//! Figure 5 — ablation over the two §4.3 schemes on SIFT-like data:
+//!
+//! * `nn-descent`  — classic CPU baseline (single thread);
+//! * `gnnd-r1`     — GNND sampling/kernels, but every produced pair is
+//!                   inserted (sort+merge, whole-list lock);
+//! * `gnnd-r2`     — + selective update (Algorithm-2 winners only);
+//! * `gnnd`        — + multiple spinlocks (segmented lists).
+//!
+//! Paper claims: r2 is >3x faster than r1; full gains a further 5-8%;
+//! r1 is >10x faster than CPU NN-Descent (on the paper's GPU — here the
+//! gap reflects the coordinator's parallelism instead; the r1->r2->full
+//! ordering is the architecture-level claim this bench checks).
+//! All runs are driven to comparable Recall@10.
+
+use crate::baselines::nn_descent::{self, NnDescentParams};
+use crate::config::UpdateStrategy;
+use crate::dataset::synth;
+use crate::gnnd;
+use crate::metrics::{recall_at, Report, Row};
+use crate::util::timer::Timer;
+
+use super::{engine_from_env, sampled_truth10, Scale};
+
+pub fn run(scale: Scale) -> Report {
+    let ds = synth::sift_like(scale.n_base(), 0xF165);
+    let (ids, truth) = sampled_truth10(&ds);
+    let k = 20;
+    let iters = 8;
+
+    let mut report = Report::new("Fig 5: ablation (selective update + multi-spinlocks)")
+        .meta("dataset", &ds.name)
+        .meta("n", ds.len())
+        .meta("k", k)
+        .meta("iters", iters)
+        .meta("engine", format!("{}", engine_from_env()));
+
+    // classic NN-Descent, single thread
+    let t = Timer::start();
+    let (g, stats) = nn_descent::build(
+        &ds,
+        &NnDescentParams { k, max_iter: iters, threads: 1, ..Default::default() },
+    );
+    report.push(
+        Row::new("nn-descent (1 thread)")
+            .col("time_s", t.secs())
+            .col("recall@10", recall_at(&g, &truth, Some(&ids), 10))
+            .col("iters", stats.iters as f64),
+    );
+
+    for (label, update) in [
+        ("gnnd-r1 (insert all)", UpdateStrategy::InsertAll),
+        ("gnnd-r2 (+selective)", UpdateStrategy::SelectiveSingleLock),
+        ("gnnd (+multi-spinlock)", UpdateStrategy::SelectiveSegmented),
+    ] {
+        // r1 needs the full distance matrices, which the selective AOT
+        // artifacts deliberately never ship to the host — r1 therefore
+        // always runs on the native oracle engine.
+        let engine = if update == UpdateStrategy::InsertAll {
+            crate::config::EngineKind::Native
+        } else {
+            engine_from_env()
+        };
+        let params = super::default_params(engine)
+            .with_k(k)
+            .with_p(10)
+            .with_iters(iters)
+            .with_update(update);
+        let t = Timer::start();
+        let out = gnnd::build_with_stats(&ds, &params).expect("gnnd build");
+        let secs = t.secs();
+        let mut row = Row::new(label)
+            .col("time_s", secs)
+            .col("recall@10", recall_at(&out.graph, &truth, Some(&ids), 10))
+            .col("iters", out.stats.iters as f64);
+        for (name, s) in &out.stats.phases {
+            if *name == "3.update" {
+                row = row.col("update_s", *s);
+            }
+        }
+        report.push(row);
+    }
+    super::finish(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_ordering_holds_at_quick_scale() {
+        let report = run(Scale::Quick);
+        let get = |label_frag: &str, col: &str| -> f64 {
+            report
+                .rows
+                .iter()
+                .find(|r| r.label.contains(label_frag))
+                .and_then(|r| r.cols.iter().find(|(n, _)| n == col))
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        // every variant reaches reasonable quality
+        for frag in ["r1", "r2", "multi-spinlock"] {
+            let r = get(frag, "recall@10");
+            assert!(r > 0.8, "{frag} recall {r}");
+        }
+        // the scheme the paper targets: selective update must shrink the
+        // *update phase* vs insert-all (total wall time is too noisy to
+        // assert in CI, especially in debug builds).
+        let u_r1 = get("r1", "update_s");
+        let u_r2 = get("r2", "update_s");
+        assert!(
+            u_r2 < u_r1,
+            "selective update phase ({u_r2}s) not below insert-all ({u_r1}s)"
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Figure 7 — merging two k-NN graphs: GGM vs GGNN-style search merge.
+//!
+//! SIFT-like data split into two halves; GNND builds each sub-graph
+//! (that cost is excluded, as in the paper); then the halves are merged
+//! by (a) GGM with increasing refinement iterations and (b) GGNN-style
+//! cross-searching with increasing slack tau. Paper claim: GGM is
+//! consistently better by ~5-10% recall@10 at comparable time, because
+//! it exploits *both* sub-graphs' neighborhoods.
+
+use crate::baselines::ggnn;
+use crate::dataset::synth;
+use crate::gnnd::{self};
+use crate::merge;
+use crate::metrics::{recall_at, Report, Row};
+use crate::util::timer::Timer;
+
+use super::{engine_from_env, sampled_truth10, Scale};
+
+pub fn run(scale: Scale) -> Report {
+    let ds = synth::sift_like(scale.n_base(), 0xF167);
+    let (ids, truth) = sampled_truth10(&ds);
+    let n1 = ds.len() / 2;
+    let k = 20;
+
+    // --- build the two sub-graphs (cost excluded, as in the paper) ---
+    let ids1: Vec<usize> = (0..n1).collect();
+    let ids2: Vec<usize> = (n1..ds.len()).collect();
+    let d1 = ds.select(&ids1, "half1");
+    let d2 = ds.select(&ids2, "half2");
+    let build_params = super::default_params(engine_from_env()).with_k(k).with_p(10);
+    let g1 = gnnd::build(&d1, &build_params).expect("g1");
+    let g2 = gnnd::build(&d2, &build_params).expect("g2");
+
+    let mut report = Report::new("Fig 7: merging two k-NN graphs (GGM vs GGNN)")
+        .meta("dataset", &ds.name)
+        .meta("n", ds.len())
+        .meta("k", k)
+        .meta("engine", format!("{}", engine_from_env()));
+
+    // naive join reference (no cross edges at all)
+    {
+        let mut g2r = g2.clone();
+        g2r.remap_ids(|id| id + n1 as u32);
+        let joined = g1.stack(&g2r);
+        report.push(
+            Row::new("naive join (no merge)")
+                .col("time_s", 0.0)
+                .col("recall@10", recall_at(&joined, &truth, Some(&ids), 10)),
+        );
+    }
+
+    // --- GGM with increasing refinement budget ---
+    for iters in [1usize, 2, 4, 6, 8, 12] {
+        let params = super::default_params(engine_from_env())
+            .with_k(k)
+            .with_p(10)
+            .with_iters(iters);
+        let t = Timer::start();
+        let (g, _) = merge::merge(&ds, n1, &g1, &g2, &params, &gnnd::NativeEngine).expect("ggm");
+        report.push(
+            Row::new(format!("ggm iters={iters}"))
+                .col("time_s", t.secs())
+                .col("recall@10", recall_at(&g, &truth, Some(&ids), 10)),
+        );
+    }
+
+    // --- GGNN-style merge with increasing slack ---
+    for tau in [0.3f64, 0.5, 1.0, 2.0] {
+        let t = Timer::start();
+        let g = ggnn::merge_by_search(&ds, n1, &g1, &g2, tau, 0);
+        report.push(
+            Row::new(format!("ggnn-search tau={tau}"))
+                .col("time_s", t.secs())
+                .col("recall@10", recall_at(&g, &truth, Some(&ids), 10)),
+        );
+    }
+    super::finish(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ggm_beats_search_merge_at_quick_scale() {
+        let report = run(Scale::Quick);
+        let best = |frag: &str| -> f64 {
+            report
+                .rows
+                .iter()
+                .filter(|r| r.label.contains(frag))
+                .map(|r| r.cols.iter().find(|(n, _)| n == "recall@10").unwrap().1)
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let ggm = best("ggm");
+        let ggnn = best("ggnn-search");
+        let naive = best("naive");
+        assert!(ggm > naive, "ggm {ggm} !> naive {naive}");
+        // at quick scale (1k per half) exhaustive-ish search merges are
+        // near-perfect; the paper's 5-10% GGM gap is the standard-scale
+        // bench claim — here we only require parity within noise.
+        assert!(ggm >= ggnn - 0.04, "ggm {ggm} not competitive with ggnn {ggnn}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Experiment harness: one function per paper table/figure, shared by
+//! the `cargo bench` harnesses (`rust/benches/`) and the CLI
+//! (`gnnd experiment <id>`). Each returns a [`Report`] whose rows mirror
+//! the series the paper plots, and saves JSON under `results/`.
+//!
+//! Scale: absolute sizes are testbed-bound (we execute XLA on a CPU
+//! PJRT client, the paper on an RTX 3090), so the reports check the
+//! paper's *relative* claims — orderings, speedup factors, crossovers.
+//! `GNND_SCALE=quick|standard|full` (default standard) controls dataset
+//! sizes.
+
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table2;
+
+use crate::config::{EngineKind, GnndParams};
+use crate::dataset::{groundtruth, synth, Dataset};
+use crate::metrics::Report;
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-fast smoke scale (CI).
+    Quick,
+    /// Default: minutes, large enough for stable orderings.
+    Standard,
+    /// The biggest this testbed sustains.
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("GNND_SCALE").as_deref() {
+            Ok("quick") => Scale::Quick,
+            Ok("full") => Scale::Full,
+            _ => Scale::Standard,
+        }
+    }
+
+    /// Base dataset size for million-scale analog experiments.
+    pub fn n_base(self) -> usize {
+        match self {
+            Scale::Quick => 2_000,
+            Scale::Standard => 20_000,
+            Scale::Full => 60_000,
+        }
+    }
+
+    /// Size for the heavy d=960 gist-like runs.
+    pub fn n_gist(self) -> usize {
+        match self {
+            Scale::Quick => 800,
+            Scale::Standard => 6_000,
+            Scale::Full => 20_000,
+        }
+    }
+
+    /// Size for the Table-2 out-of-core analog.
+    pub fn n_billion_analog(self) -> usize {
+        match self {
+            Scale::Quick => 6_000,
+            Scale::Standard => 48_000,
+            Scale::Full => 160_000,
+        }
+    }
+}
+
+/// Engine for the experiments: `GNND_ENGINE=pjrt|native` (default
+/// native — the PJRT path is exercised by `examples/e2e_pipeline` and
+/// the micro bench; interpret-mode Pallas on a CPU client is far slower
+/// than the native oracle, so the fig benches default to native to keep
+/// the paper-shape comparisons practical).
+pub fn engine_from_env() -> EngineKind {
+    match std::env::var("GNND_ENGINE").as_deref() {
+        Ok("pjrt") => EngineKind::Pjrt,
+        _ => EngineKind::Native,
+    }
+}
+
+/// Ground truth on min(n, 1000) sampled objects at k=10 (Recall@10 is
+/// the paper's quality protocol).
+pub fn sampled_truth10(ds: &Dataset) -> (Vec<usize>, Vec<Vec<u32>>) {
+    groundtruth::sampled_truth(ds, 1000, 10, 0xE7A1)
+}
+
+/// The benchmark datasets of Table 1 at repro scale.
+pub fn benchmark_suite(scale: Scale) -> Vec<Dataset> {
+    vec![
+        synth::sift_like(scale.n_base(), 1),
+        synth::deep_like(scale.n_base(), 2),
+        synth::gist_like(scale.n_gist(), 3),
+        synth::glove_like(scale.n_base(), 4),
+    ]
+}
+
+/// Default GNND parameters used across experiments.
+pub fn default_params(engine: EngineKind) -> GnndParams {
+    GnndParams::default().with_engine(engine)
+}
+
+/// Save + print a report.
+pub fn finish(report: Report) -> Report {
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    report
+}
+
+/// Named experiment dispatch (CLI).
+pub fn run_by_name(name: &str, scale: Scale) -> crate::Result<Report> {
+    Ok(match name {
+        "fig4" => fig4::run(scale),
+        "fig5" => fig5::run(scale),
+        "fig6" => fig6::run(scale),
+        "fig7" => fig7::run(scale),
+        "table2" => table2::run(scale),
+        "all" => {
+            fig4::run(scale);
+            fig5::run(scale);
+            fig6::run(scale);
+            fig7::run(scale);
+            return Ok(table2::run(scale));
+        }
+        _ => anyhow::bail!("unknown experiment {name:?} (fig4|fig5|fig6|fig7|table2|all)"),
+    })
+}

@@ -1,0 +1,338 @@
+//! The GNND iteration loop (paper Algorithm 1).
+//!
+//! Each iteration: fixed-size sampling (§4.1) -> batched cross-matching
+//! through an engine (§4.2, the AOT artifact or the native oracle) ->
+//! graph update under the configured Fig.-5 strategy (§4.3) ->
+//! end-of-iteration segment merge. Worker threads pull batches of object
+//! locals from an atomic cursor, so the engine evaluates many locals per
+//! dispatch (the paper launches all objects in one kernel; the batch
+//! dimension of the artifact plays that role here).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::config::{GnndParams, UpdateStrategy};
+use crate::dataset::Dataset;
+use crate::graph::{concurrent::ConcurrentGraph, KnnGraph, EMPTY};
+use crate::util::timer::{PhaseTimers, Timer};
+
+use super::engine::{Batch, CrossmatchEngine};
+use super::sample::{parallel_sample, SampledLists};
+
+/// Statistics of one build/refinement run.
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    pub iters: usize,
+    /// Accepted insertions per iteration.
+    pub updates: Vec<usize>,
+    /// phi(G) after each iteration (only when `trace_phi`).
+    pub phi_trace: Vec<f64>,
+    /// Total wall-clock seconds.
+    pub seconds: f64,
+    /// Per-phase seconds (sample / crossmatch / update / normalize).
+    pub phases: Vec<(&'static str, f64)>,
+    pub engine: &'static str,
+}
+
+/// Refine `graph` in place by GNND iterations.
+///
+/// `group_fn` maps an object id to the masking group the engines
+/// compare: `None` uses the object id itself (normal construction);
+/// GGM merge passes the subset label so same-subgraph pairs are skipped
+/// (paper §5.1).
+pub fn refine(
+    ds: &Dataset,
+    graph: &mut KnnGraph,
+    engine: &dyn CrossmatchEngine,
+    params: &GnndParams,
+    group_fn: Option<&(dyn Fn(u32) -> i32 + Sync)>,
+) -> crate::Result<BuildStats> {
+    params.validate()?;
+    let total = Timer::start();
+    let timers = PhaseTimers::new();
+    let n = graph.n();
+    let threads = if params.threads == 0 {
+        crate::util::num_threads()
+    } else {
+        params.threads
+    };
+    let mut stats = BuildStats { engine: engine.name(), ..Default::default() };
+
+    // Dispatch in the engine's preferred batch (the AOT artifact's
+    // leading dimension) when it is larger than the configured one:
+    // sub-artifact batches waste the padded compute anyway.
+    let batch = params.batch.max(engine.preferred_batch().unwrap_or(0));
+
+    let seg_width = match params.update {
+        // r1/r2 use a single whole-list lock.
+        UpdateStrategy::InsertAll | UpdateStrategy::SelectiveSingleLock => graph.k(),
+        UpdateStrategy::SelectiveSegmented => params.segment_width,
+    };
+
+    if params.trace_phi {
+        stats.phi_trace.push(graph.phi());
+    }
+
+    for _iter in 0..params.max_iter {
+        // ---- sampling ----
+        let lists = timers.scope("1.sample", || parallel_sample(graph, params.p, threads));
+
+        // ---- cross-matching + update ----
+        let iter_updates;
+        {
+            let cg = ConcurrentGraph::new(graph, seg_width);
+            let cursor = AtomicUsize::new(0);
+            let nbatches = crate::util::ceil_div(n, batch);
+            let err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+            crossbeam_utils::thread::scope(|scope| {
+                for _ in 0..threads {
+                    let cg = &cg;
+                    let cursor = &cursor;
+                    let lists = &lists;
+                    let timers = &timers;
+                    let err = &err;
+                    scope.spawn(move |_| loop {
+                        let b = cursor.fetch_add(1, Ordering::Relaxed);
+                        if b >= nbatches || err.lock().unwrap().is_some() {
+                            return;
+                        }
+                        let start = b * batch;
+                        let end = (start + batch).min(n);
+                        if let Err(e) =
+                            process_batch(ds, cg, lists, start, end, engine, params, group_fn, timers)
+                        {
+                            *err.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    });
+                }
+            })
+            .unwrap();
+            if let Some(e) = err.into_inner().unwrap() {
+                return Err(e);
+            }
+            iter_updates = cg.updates();
+        }
+
+        // ---- end-of-iteration segment merge ----
+        timers.scope("4.normalize", || graph.normalize_all(threads));
+
+        stats.iters += 1;
+        stats.updates.push(iter_updates);
+        if params.trace_phi {
+            stats.phi_trace.push(graph.phi());
+        }
+        // classic NN-Descent early termination
+        if (iter_updates as f64) < params.delta * (n * graph.k()) as f64 {
+            break;
+        }
+    }
+
+    stats.seconds = total.secs();
+    stats.phases = timers.snapshot();
+    Ok(stats)
+}
+
+/// Evaluate + apply one batch of object locals.
+#[allow(clippy::too_many_arguments)]
+fn process_batch(
+    ds: &Dataset,
+    cg: &ConcurrentGraph,
+    lists: &SampledLists,
+    start: usize,
+    end: usize,
+    engine: &dyn CrossmatchEngine,
+    params: &GnndParams,
+    group_fn: Option<&(dyn Fn(u32) -> i32 + Sync)>,
+    timers: &PhaseTimers,
+) -> crate::Result<()> {
+    let s = lists.cap;
+    let rows = end - start;
+    let new_ids = &lists.new_ids[start * s..end * s];
+    let old_ids = &lists.old_ids[start * s..end * s];
+    let to_group = |id: u32| -> i32 {
+        if id == EMPTY {
+            -1
+        } else {
+            match group_fn {
+                Some(f) => f(id),
+                None => id as i32,
+            }
+        }
+    };
+    let groups_new: Vec<i32> = new_ids.iter().map(|&id| to_group(id)).collect();
+    let groups_old: Vec<i32> = old_ids.iter().map(|&id| to_group(id)).collect();
+    let batch = Batch { s, rows, new_ids, old_ids, groups_new: &groups_new, groups_old: &groups_old };
+
+    match params.update {
+        UpdateStrategy::InsertAll => {
+            // GNND-r1: full distance matrices, every produced pair
+            // updates the graph in both directions (classic semantics).
+            let t = Timer::start();
+            let full = engine.crossmatch_full(ds, &batch)?;
+            timers.add("2.crossmatch", t.secs());
+            let t = Timer::start();
+            for r in 0..rows {
+                let base = r * s;
+                for i in 0..s {
+                    let u = new_ids[base + i];
+                    if u == EMPTY {
+                        continue;
+                    }
+                    for j in (i + 1)..s {
+                        let d = full.nn[(r * s + i) * s + j];
+                        if d.is_finite() {
+                            let v = new_ids[base + j];
+                            cg.insert(u as usize, v, d);
+                            cg.insert(v as usize, u, d);
+                        }
+                    }
+                    for j in 0..s {
+                        let d = full.no[(r * s + i) * s + j];
+                        if d.is_finite() {
+                            let v = old_ids[base + j];
+                            cg.insert(u as usize, v, d);
+                            cg.insert(v as usize, u, d);
+                        }
+                    }
+                }
+            }
+            timers.add("3.update", t.secs());
+        }
+        UpdateStrategy::SelectiveSingleLock | UpdateStrategy::SelectiveSegmented => {
+            // Selective update (paper §4.3): only the Algorithm-2
+            // winners are inserted.
+            let t = Timer::start();
+            let out = engine.crossmatch(ds, &batch)?;
+            timers.add("2.crossmatch", t.secs());
+            let t = Timer::start();
+            for r in 0..rows {
+                let base = r * s;
+                for i in 0..s {
+                    let u = new_ids[base + i];
+                    if u != EMPTY {
+                        let li = base + i;
+                        if out.nn_idx[li] >= 0 {
+                            let v = new_ids[base + out.nn_idx[li] as usize];
+                            cg.insert(u as usize, v, out.nn_dist[li]);
+                        }
+                        if out.no_idx[li] >= 0 {
+                            let v = old_ids[base + out.no_idx[li] as usize];
+                            cg.insert(u as usize, v, out.no_dist[li]);
+                        }
+                    }
+                    let uo = old_ids[base + i];
+                    if uo != EMPTY {
+                        let li = base + i;
+                        if out.on_idx[li] >= 0 {
+                            let v = new_ids[base + out.on_idx[li] as usize];
+                            cg.insert(uo as usize, v, out.on_dist[li]);
+                        }
+                    }
+                }
+            }
+            timers.add("3.update", t.secs());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{groundtruth, synth};
+    use crate::gnnd::engine::NativeEngine;
+    use crate::metrics::recall_at;
+    use crate::util::rng::Rng;
+
+    fn build_with(params: &GnndParams, ds: &Dataset) -> (KnnGraph, BuildStats) {
+        let mut rng = Rng::new(params.seed);
+        let mut g = KnnGraph::random_init(ds, params.k, &mut rng);
+        let stats = refine(ds, &mut g, &NativeEngine, params, None).unwrap();
+        (g, stats)
+    }
+
+    #[test]
+    fn converges_to_high_recall_on_clustered_data() {
+        let ds = synth::clustered(600, 8, 1);
+        let params = GnndParams::default().with_k(10).with_p(5).with_iters(10);
+        let (g, stats) = build_with(&params, &ds);
+        g.check_invariants().unwrap();
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let r = recall_at(&g, &truth, None, 10);
+        assert!(r > 0.90, "recall {r} too low (stats {stats:?})");
+    }
+
+    #[test]
+    fn all_strategies_reach_similar_quality() {
+        let ds = synth::clustered(400, 8, 2);
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let mut recalls = Vec::new();
+        for update in [
+            UpdateStrategy::InsertAll,
+            UpdateStrategy::SelectiveSingleLock,
+            UpdateStrategy::SelectiveSegmented,
+        ] {
+            let params = GnndParams::default()
+                .with_k(16)
+                .with_p(8)
+                .with_iters(8)
+                .with_update(update);
+            let (g, _) = build_with(&params, &ds);
+            g.check_invariants().unwrap();
+            recalls.push(recall_at(&g, &truth, None, 10));
+        }
+        for (i, r) in recalls.iter().enumerate() {
+            assert!(*r > 0.85, "strategy {i} recall {r}");
+        }
+    }
+
+    #[test]
+    fn phi_is_monotone_nonincreasing() {
+        let ds = synth::clustered(300, 6, 3);
+        let mut params = GnndParams::default().with_k(8).with_p(4).with_iters(6);
+        params.trace_phi = true;
+        let mut rng = Rng::new(9);
+        let mut g = KnnGraph::random_init(&ds, params.k, &mut rng);
+        let stats = refine(&ds, &mut g, &NativeEngine, &params, None).unwrap();
+        assert!(stats.phi_trace.len() >= 2);
+        for w in stats.phi_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "phi increased: {:?}", stats.phi_trace);
+        }
+    }
+
+    #[test]
+    fn early_termination_on_convergence() {
+        let ds = synth::clustered(200, 4, 4);
+        let params = GnndParams::default().with_k(8).with_p(4).with_iters(50);
+        let (_, stats) = build_with(&params, &ds);
+        assert!(stats.iters < 50, "did not early-terminate: {}", stats.iters);
+    }
+
+    #[test]
+    fn single_thread_matches_quality_of_multi() {
+        let ds = synth::clustered(300, 6, 5);
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let p1 = GnndParams::default().with_k(12).with_p(6).with_threads(1);
+        let p4 = GnndParams::default().with_k(12).with_p(6).with_threads(4);
+        let (g1, _) = build_with(&p1, &ds);
+        let (g4, _) = build_with(&p4, &ds);
+        let r1 = recall_at(&g1, &truth, None, 10);
+        let r4 = recall_at(&g4, &truth, None, 10);
+        assert!((r1 - r4).abs() < 0.08, "r1={r1} r4={r4}");
+    }
+
+    #[test]
+    fn merge_mode_group_fn_restricts_pairs() {
+        // With all objects in ONE group, every pair is masked: the graph
+        // must not change at all.
+        let ds = synth::clustered(120, 4, 6);
+        let params = GnndParams::default().with_k(6).with_p(3).with_iters(2);
+        let mut rng = Rng::new(11);
+        let mut g = KnnGraph::random_init(&ds, params.k, &mut rng);
+        let before = g.phi();
+        let all_same: &(dyn Fn(u32) -> i32 + Sync) = &|_| 0;
+        let stats = refine(&ds, &mut g, &NativeEngine, &params, Some(all_same)).unwrap();
+        assert_eq!(stats.updates.iter().sum::<usize>(), 0);
+        assert!((g.phi() - before).abs() < 1e-9);
+    }
+}

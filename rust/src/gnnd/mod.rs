@@ -1,0 +1,129 @@
+//! GNND — the GPU-architecture redesign of NN-Descent (paper §4),
+//! executed by the Rust coordinator over AOT-compiled XLA artifacts.
+//!
+//! Public API:
+//!
+//! ```no_run
+//! use gnnd::dataset::synth;
+//! use gnnd::gnnd::{build, build_with_stats, GnndParams};
+//!
+//! let ds = synth::sift_like(50_000, 7);
+//! let params = GnndParams::default().with_k(32).with_p(16);
+//! let out = build_with_stats(&ds, &params).unwrap();
+//! println!("{} iterations, phi={}", out.stats.iters, out.graph.phi());
+//! ```
+
+pub mod descent;
+pub mod engine;
+pub mod sample;
+
+pub use crate::config::{EngineKind, GnndParams, UpdateStrategy};
+pub use descent::{refine, BuildStats};
+pub use engine::{Batch, CrossmatchEngine, CrossmatchResult, NativeEngine};
+
+use crate::dataset::Dataset;
+use crate::graph::KnnGraph;
+use crate::util::rng::Rng;
+
+/// A finished build: the graph plus its statistics.
+pub struct BuildOutput {
+    pub graph: KnnGraph,
+    pub stats: BuildStats,
+}
+
+/// Instantiate the engine selected by `params` for dataset shape
+/// `(s, d, metric)` where `s = 2p` is the sampled-list width.
+pub fn make_engine(
+    params: &GnndParams,
+    ds: &Dataset,
+) -> crate::Result<Box<dyn CrossmatchEngine>> {
+    match params.engine {
+        EngineKind::Native => Ok(Box::new(NativeEngine)),
+        EngineKind::Pjrt => {
+            // pool size ~ worker threads (capped: each pool slot costs
+            // one compile + one client); see PjrtEngine docs.
+            let threads = if params.threads == 0 {
+                crate::util::num_threads()
+            } else {
+                params.threads
+            };
+            let eng = crate::runtime::PjrtEngine::load_pooled(
+                &params.artifacts_dir,
+                2 * params.p,
+                ds.d,
+                ds.metric,
+                threads.min(8),
+            )?;
+            Ok(Box::new(eng))
+        }
+    }
+}
+
+/// Build a k-NN graph for `ds` (paper Algorithm 1, end to end).
+pub fn build(ds: &Dataset, params: &GnndParams) -> crate::Result<KnnGraph> {
+    Ok(build_with_stats(ds, params)?.graph)
+}
+
+/// Build, returning statistics (phi traces, per-phase timing).
+pub fn build_with_stats(ds: &Dataset, params: &GnndParams) -> crate::Result<BuildOutput> {
+    let engine = make_engine(params, ds)?;
+    build_with_engine(ds, params, engine.as_ref())
+}
+
+/// Build with a caller-provided engine (lets callers amortize PJRT
+/// compilation across many builds — shards, benches).
+pub fn build_with_engine(
+    ds: &Dataset,
+    params: &GnndParams,
+    engine: &dyn CrossmatchEngine,
+) -> crate::Result<BuildOutput> {
+    params.validate()?;
+    let mut rng = Rng::new(params.seed);
+    let mut graph = KnnGraph::random_init(ds, params.k.min(ds.len() - 1), &mut rng);
+    let stats = refine(ds, &mut graph, engine, params, None)?;
+    Ok(BuildOutput { graph, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{groundtruth, synth};
+    use crate::metrics::recall_at;
+
+    #[test]
+    fn build_end_to_end_native() {
+        let ds = synth::clustered(500, 8, 7);
+        let params = GnndParams::default().with_k(10).with_p(5);
+        let out = build_with_stats(&ds, &params).unwrap();
+        out.graph.check_invariants().unwrap();
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let r = recall_at(&out.graph, &truth, None, 10);
+        assert!(r > 0.9, "recall {r}");
+        assert!(out.stats.seconds > 0.0);
+        assert!(!out.stats.updates.is_empty());
+    }
+
+    #[test]
+    fn k_clamped_for_tiny_datasets() {
+        let ds = synth::uniform(5, 3, 8);
+        let params = GnndParams::default().with_k(32).with_p(16).with_iters(2);
+        let out = build_with_stats(&ds, &params).unwrap();
+        assert_eq!(out.graph.k(), 4);
+        out.graph.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed_single_thread() {
+        let ds = synth::clustered(200, 6, 9);
+        let params = GnndParams::default()
+            .with_k(8)
+            .with_p(4)
+            .with_threads(1)
+            .with_seed(123);
+        let a = build(&ds, &params).unwrap();
+        let b = build(&ds, &params).unwrap();
+        for u in 0..a.n() {
+            assert_eq!(a.list(u), b.list(u), "u={u}");
+        }
+    }
+}

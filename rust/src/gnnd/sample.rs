@@ -1,0 +1,322 @@
+//! Fixed-size sampling (paper §4.1 "Sampling on Close Neighbors").
+//!
+//! Per object `u` the first (= closest, lists are sorted) `p` NEW and
+//! `p` OLD neighbors are copied into two fixed-degree adjacency graphs
+//! `G_new` / `G_old`; sampled NEW entries are flipped to OLD (Alg. 1
+//! line 32). Then each forward sample `v` of `u` appends the *reverse*
+//! edge `u` into `v`'s sampled list, bounded at capacity `2p` with an
+//! atomic size counter — the paper's replacement for dynamic arrays
+//! ("the cost of maintaining n dynamic arrays is prohibitively high").
+//! Finally each list is sorted by id and deduplicated.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::graph::{KnnGraph, EMPTY};
+use crate::util::split_ranges;
+
+/// The fixed-degree sampled adjacency lists for one iteration.
+pub struct SampledLists {
+    /// Capacity per list (= 2p).
+    pub cap: usize,
+    pub n: usize,
+    /// `[n][cap]`, `EMPTY`-padded.
+    pub new_ids: Vec<u32>,
+    pub old_ids: Vec<u32>,
+}
+
+impl SampledLists {
+    #[inline]
+    pub fn new_row(&self, u: usize) -> &[u32] {
+        &self.new_ids[u * self.cap..(u + 1) * self.cap]
+    }
+
+    #[inline]
+    pub fn old_row(&self, u: usize) -> &[u32] {
+        &self.old_ids[u * self.cap..(u + 1) * self.cap]
+    }
+}
+
+/// Run the sampling phase (paper Algorithm 1 line 8, `ParallelSample`).
+pub fn parallel_sample(graph: &mut KnnGraph, p: usize, threads: usize) -> SampledLists {
+    let n = graph.n();
+    let k = graph.k();
+    let cap = 2 * p;
+    let mut new_ids = vec![EMPTY; n * cap];
+    let mut old_ids = vec![EMPTY; n * cap];
+    let new_len: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let old_len: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+
+    // Phase A: forward sampling + flag flip. Parallel over disjoint
+    // object ranges; each thread mutates only its own objects' graph
+    // lists and writes rows new_ids[u], so slices can be split safely.
+    let ranges = split_ranges(n, threads.max(1));
+    {
+        struct Ptrs {
+            lists: *mut crate::graph::Neighbor,
+            new_ids: *mut u32,
+            old_ids: *mut u32,
+        }
+        unsafe impl Send for Ptrs {}
+        unsafe impl Sync for Ptrs {}
+        let ptrs = Ptrs {
+            lists: graph.list_mut(0).as_mut_ptr(),
+            new_ids: new_ids.as_mut_ptr(),
+            old_ids: old_ids.as_mut_ptr(),
+        };
+        let (new_len, old_len) = (&new_len, &old_len);
+        crossbeam_utils::thread::scope(|s| {
+            for r in &ranges {
+                let r = r.clone();
+                let ptrs = &ptrs;
+                s.spawn(move |_| {
+                    for u in r {
+                        // SAFETY: object ranges are disjoint.
+                        let list = unsafe {
+                            std::slice::from_raw_parts_mut(ptrs.lists.add(u * k), k)
+                        };
+                        let nrow = unsafe {
+                            std::slice::from_raw_parts_mut(ptrs.new_ids.add(u * cap), cap)
+                        };
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(ptrs.old_ids.add(u * cap), cap)
+                        };
+                        let (mut nn, mut no) = (0usize, 0usize);
+                        for e in list.iter_mut() {
+                            if e.is_empty() {
+                                break;
+                            }
+                            if e.new && nn < p {
+                                nrow[nn] = e.id;
+                                nn += 1;
+                                e.new = false; // sampled -> mark OLD
+                            } else if !e.new && no < p {
+                                orow[no] = e.id;
+                                no += 1;
+                            }
+                            if nn == p && no == p {
+                                break;
+                            }
+                        }
+                        new_len[u].store(nn as u32, Ordering::Relaxed);
+                        old_len[u].store(no as u32, Ordering::Relaxed);
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    // Phase B: bounded reverse append (atomic slot reservation).
+    {
+        struct Ptrs {
+            new_ids: *mut u32,
+            old_ids: *mut u32,
+        }
+        unsafe impl Send for Ptrs {}
+        unsafe impl Sync for Ptrs {}
+        let ptrs = Ptrs { new_ids: new_ids.as_mut_ptr(), old_ids: old_ids.as_mut_ptr() };
+        // Snapshot forward lengths: reverse edges derive from forward
+        // samples only (G_new's own content, as in the paper).
+        let fwd_new: Vec<u32> = new_len.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let fwd_old: Vec<u32> = old_len.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let (new_len, old_len) = (&new_len, &old_len);
+        let (fwd_new, fwd_old) = (&fwd_new, &fwd_old);
+        let ranges = split_ranges(n, threads.max(1));
+        crossbeam_utils::thread::scope(|s| {
+            for r in &ranges {
+                let r = r.clone();
+                let ptrs = &ptrs;
+                s.spawn(move |_| {
+                    for u in r {
+                        for slot in 0..fwd_new[u] as usize {
+                            // SAFETY: reads of forward region [0, fwd)
+                            // are stable; appends only touch [fwd, cap).
+                            let v = unsafe { *ptrs.new_ids.add(u * cap + slot) } as usize;
+                            let pos = new_len[v].fetch_add(1, Ordering::Relaxed) as usize;
+                            if pos < cap {
+                                unsafe {
+                                    *ptrs.new_ids.add(v * cap + pos) = u as u32;
+                                }
+                            } else {
+                                new_len[v].store(cap as u32, Ordering::Relaxed);
+                            }
+                        }
+                        for slot in 0..fwd_old[u] as usize {
+                            let v = unsafe { *ptrs.old_ids.add(u * cap + slot) } as usize;
+                            let pos = old_len[v].fetch_add(1, Ordering::Relaxed) as usize;
+                            if pos < cap {
+                                unsafe {
+                                    *ptrs.old_ids.add(v * cap + pos) = u as u32;
+                                }
+                            } else {
+                                old_len[v].store(cap as u32, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    // Phase C: per-list sort + dedup (paper: a warp sorts each list).
+    let mut lists = SampledLists { cap, n, new_ids, old_ids };
+    let ranges = split_ranges(n, threads.max(1));
+    {
+        struct Ptrs {
+            new_ids: *mut u32,
+            old_ids: *mut u32,
+        }
+        unsafe impl Send for Ptrs {}
+        unsafe impl Sync for Ptrs {}
+        let ptrs = Ptrs {
+            new_ids: lists.new_ids.as_mut_ptr(),
+            old_ids: lists.old_ids.as_mut_ptr(),
+        };
+        let (new_len, old_len) = (&new_len, &old_len);
+        crossbeam_utils::thread::scope(|s| {
+            for r in &ranges {
+                let r = r.clone();
+                let ptrs = &ptrs;
+                s.spawn(move |_| {
+                    for u in r {
+                        let nl = (new_len[u].load(Ordering::Relaxed) as usize).min(cap);
+                        let ol = (old_len[u].load(Ordering::Relaxed) as usize).min(cap);
+                        unsafe {
+                            dedup_row(
+                                std::slice::from_raw_parts_mut(ptrs.new_ids.add(u * cap), cap),
+                                nl,
+                            );
+                            dedup_row(
+                                std::slice::from_raw_parts_mut(ptrs.old_ids.add(u * cap), cap),
+                                ol,
+                            );
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+    lists
+}
+
+/// Sort the first `len` ids, dedup, EMPTY-pad the tail.
+fn dedup_row(row: &mut [u32], len: usize) {
+    let live = &mut row[..len];
+    live.sort_unstable();
+    let mut w = 0;
+    for i in 0..len {
+        if i == 0 || row[i] != row[w - 1] {
+            row[w] = row[i];
+            w += 1;
+        }
+    }
+    for slot in row[w..].iter_mut() {
+        *slot = EMPTY;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+    use crate::util::{prop, rng::Rng};
+
+    fn live(row: &[u32]) -> Vec<u32> {
+        row.iter().copied().filter(|&x| x != EMPTY).collect()
+    }
+
+    #[test]
+    fn sampling_respects_bounds_and_flags() {
+        let ds = synth::uniform(100, 4, 1);
+        let mut rng = Rng::new(2);
+        let mut g = KnnGraph::random_init(&ds, 10, &mut rng);
+        let p = 4;
+        let s = parallel_sample(&mut g, p, 4);
+        assert_eq!(s.cap, 2 * p);
+        for u in 0..100 {
+            let nrow = live(s.new_row(u));
+            let orow = live(s.old_row(u));
+            assert!(nrow.len() <= s.cap);
+            assert!(orow.len() <= s.cap);
+            // dedup: no repeated ids
+            let set: std::collections::HashSet<_> = nrow.iter().collect();
+            assert_eq!(set.len(), nrow.len(), "u={u} has dup new samples");
+        }
+        // after the first sampling pass, each list has exactly
+        // min(p, live) entries flipped to OLD.
+        for u in 0..100 {
+            let old_cnt = g.list(u).iter().filter(|e| !e.is_empty() && !e.new).count();
+            assert_eq!(old_cnt, p.min(g.len_of(u)), "u={u}");
+        }
+        // second sampling pass: OLD entries now exist and get sampled.
+        let s2 = parallel_sample(&mut g, p, 4);
+        let some_old = (0..100).any(|u| !live(s2.old_row(u)).is_empty());
+        assert!(some_old);
+    }
+
+    #[test]
+    fn reverse_edges_present() {
+        // With p >= k and a tiny graph every neighbor is sampled, so if
+        // v in G[u], then u must appear in v's sampled new row (cap
+        // permitting). Use n small enough that caps don't overflow.
+        let ds = synth::uniform(10, 3, 3);
+        let mut rng = Rng::new(4);
+        let mut g = KnnGraph::random_init(&ds, 3, &mut rng);
+        let fwd: Vec<Vec<u32>> = (0..10).map(|u| g.ids(u).collect()).collect();
+        let s = parallel_sample(&mut g, 3, 2);
+        let mut found_reverse = 0;
+        for u in 0..10 {
+            for &v in &fwd[u] {
+                if live(s.new_row(v as usize)).contains(&(u as u32)) {
+                    found_reverse += 1;
+                }
+            }
+        }
+        assert!(found_reverse > 0, "no reverse edges appended");
+    }
+
+    #[test]
+    fn sampled_ids_are_graph_or_reverse_edges() {
+        prop::check("sample-provenance", 10, |rng| {
+            let n = 40 + rng.below(40);
+            let ds = synth::uniform(n, 4, rng.next_u64());
+            let mut g = KnnGraph::random_init(&ds, 6, &mut Rng::new(rng.next_u64()));
+            let fwd: Vec<Vec<u32>> = (0..n).map(|u| g.ids(u).collect()).collect();
+            let s = parallel_sample(&mut g, 3, 3);
+            for u in 0..n {
+                for &v in &live(s.new_row(u)) {
+                    let forward = fwd[u].contains(&v);
+                    let reverse = fwd[v as usize].contains(&(u as u32));
+                    prop::assert_prop(
+                        forward || reverse,
+                        format!("sample {v} of {u} is neither forward nor reverse"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_same_graph_single_thread() {
+        let ds = synth::uniform(50, 4, 5);
+        let mut rng = Rng::new(6);
+        let g0 = KnnGraph::random_init(&ds, 8, &mut rng);
+        let mut g1 = g0.clone();
+        let mut g2 = g0.clone();
+        let s1 = parallel_sample(&mut g1, 4, 1);
+        let s2 = parallel_sample(&mut g2, 4, 1);
+        assert_eq!(s1.new_ids, s2.new_ids);
+        assert_eq!(s1.old_ids, s2.old_ids);
+    }
+
+    #[test]
+    fn dedup_row_works() {
+        let mut row = [5u32, 1, 5, 3, 1, EMPTY, EMPTY, EMPTY];
+        dedup_row(&mut row, 5);
+        assert_eq!(&row[..3], &[1, 3, 5]);
+        assert!(row[3..].iter().all(|&x| x == EMPTY));
+    }
+}

@@ -1,0 +1,389 @@
+//! Concurrent graph update — the paper's *multiple spinlocks* scheme
+//! (§4.3) adapted from CUDA warps to CPU worker threads.
+//!
+//! A k-NN list is divided into `nseg` positional segments. A produced
+//! neighbor `v` is inserted into segment `v % nseg`, guarded by that
+//! segment's spinlock only, so several threads can update one list in
+//! parallel and each insertion touches a single warp-sized slot range
+//! (the paper inserts with one warp per 32-wide segment). When an
+//! iteration completes, [`KnnGraph::normalize_list`] merges the segments
+//! back into one sorted, deduplicated list — exactly the paper's
+//! "as the iteration is completed, all the segments of one k-NN list
+//! will be merged into one".
+//!
+//! `nseg = 1` degenerates to one spinlock per list — the GNND-r2
+//! configuration of the Fig. 5 ablation.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+use super::{KnnGraph, Neighbor, EMPTY};
+
+/// A borrow of a [`KnnGraph`] that allows locked concurrent insertion.
+pub struct ConcurrentGraph<'g> {
+    ptr: *mut Neighbor,
+    n: usize,
+    k: usize,
+    nseg: usize,
+    locks: Vec<AtomicU32>,
+    updates: AtomicUsize,
+    _marker: PhantomData<&'g mut KnnGraph>,
+}
+
+// SAFETY: every access to the slot range of segment (u, s) happens while
+// holding `locks[u * nseg + s]`; segments partition the storage.
+unsafe impl Sync for ConcurrentGraph<'_> {}
+unsafe impl Send for ConcurrentGraph<'_> {}
+
+impl<'g> ConcurrentGraph<'g> {
+    /// Wrap a graph for concurrent updates with `nseg` segments per list
+    /// of width `>= segment_width` (the last segment absorbs the
+    /// remainder). `nseg` is derived as `max(1, k / segment_width)`.
+    pub fn new(graph: &'g mut KnnGraph, segment_width: usize) -> Self {
+        let n = graph.n();
+        let k = graph.k();
+        let nseg = (k / segment_width.max(1)).max(1);
+        let locks = (0..n * nseg).map(|_| AtomicU32::new(0)).collect();
+        ConcurrentGraph {
+            ptr: graph.list_mut(0).as_mut_ptr(),
+            n,
+            k,
+            nseg,
+            locks,
+            updates: AtomicUsize::new(0),
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn nseg(&self) -> usize {
+        self.nseg
+    }
+
+    /// Number of accepted insertions since construction (the NN-Descent
+    /// convergence counter).
+    pub fn updates(&self) -> usize {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Slot range `[start, end)` of segment `s` within a list.
+    #[inline]
+    fn seg_range(&self, s: usize) -> (usize, usize) {
+        let w = self.k / self.nseg;
+        let start = s * w;
+        let end = if s + 1 == self.nseg { self.k } else { start + w };
+        (start, end)
+    }
+
+    #[inline]
+    fn lock(&self, u: usize, s: usize) {
+        let l = &self.locks[u * self.nseg + s];
+        while l
+            .compare_exchange_weak(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[inline]
+    fn unlock(&self, u: usize, s: usize) {
+        self.locks[u * self.nseg + s].store(0, Ordering::Release);
+    }
+
+    /// Selective insertion of `(id, dist)` into `u`'s list (marked NEW).
+    ///
+    /// The candidate is routed to segment `id % nseg` (paper: "The
+    /// object v will be inserted into the v%(k/32)-th segment"), and
+    /// only that segment is locked. Within the segment the entries stay
+    /// sorted; the segment-worst entry is evicted. Returns true if
+    /// inserted.
+    pub fn insert(&self, u: usize, id: u32, dist: f32) -> bool {
+        debug_assert!(u < self.n && id != EMPTY);
+        if id as usize == u {
+            return false;
+        }
+        let s = (id as usize) % self.nseg;
+        let (start, end) = self.seg_range(s);
+        self.lock(u, s);
+        // SAFETY: slots [u*k+start, u*k+end) are exclusively ours while
+        // the segment lock is held.
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.add(u * self.k + start), end - start)
+        };
+        let inserted = insert_sorted_segment(seg, id, dist);
+        self.unlock(u, s);
+        if inserted {
+            self.updates.fetch_add(1, Ordering::Relaxed);
+        }
+        inserted
+    }
+
+    /// Insert a *batch* of produced neighbor pairs into `u`'s list under
+    /// a whole-list lock — the GNND-r1 path (classic "insert everything"
+    /// semantics; the paper's r1 run sorts candidates with a bitonic
+    /// network and merges, which is what `sort + merge` mirrors here).
+    ///
+    /// Requires `nseg == 1` (r1 is only meaningful without segmenting).
+    pub fn insert_batch(&self, u: usize, cands: &mut Vec<(u32, f32)>) -> usize {
+        assert_eq!(self.nseg, 1, "insert_batch requires an unsegmented list");
+        if cands.is_empty() {
+            return 0;
+        }
+        cands.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        self.lock(u, 0);
+        let seg =
+            unsafe { std::slice::from_raw_parts_mut(self.ptr.add(u * self.k), self.k) };
+        let mut accepted = 0;
+        for &(id, dist) in cands.iter() {
+            if id as usize == u {
+                continue;
+            }
+            if insert_sorted_segment(seg, id, dist) {
+                accepted += 1;
+            }
+        }
+        self.unlock(u, 0);
+        if accepted > 0 {
+            self.updates.fetch_add(accepted, Ordering::Relaxed);
+        }
+        accepted
+    }
+}
+
+/// Sorted insertion into one segment slice: duplicate ids rejected,
+/// worst entry evicted, ascending order maintained. Marked NEW.
+fn insert_sorted_segment(seg: &mut [Neighbor], id: u32, dist: f32) -> bool {
+    let len = seg.len();
+    if dist >= seg[len - 1].dist && !seg[len - 1].is_empty() {
+        return false;
+    }
+    let mut pos = len;
+    for (i, e) in seg.iter().enumerate() {
+        if e.id == id {
+            return false;
+        }
+        if pos == len && (e.is_empty() || dist < e.dist) {
+            pos = i;
+        }
+    }
+    if pos == len {
+        return false;
+    }
+    if seg[pos..].iter().take_while(|e| !e.is_empty()).any(|e| e.id == id) {
+        return false;
+    }
+    seg[pos..].rotate_right(1);
+    seg[pos] = Neighbor { id, dist, new: true };
+    true
+}
+
+impl KnnGraph {
+    /// Merge the segments of `u`'s list back into a single sorted,
+    /// deduplicated list (paper §4.3, end-of-iteration merge).
+    pub fn normalize_list(&mut self, u: usize) {
+        let list = self.list_mut(u);
+        list.sort_unstable_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        // drop duplicate ids (keep the best-distance copy = first seen)
+        let k = list.len();
+        let mut seen = std::collections::HashSet::with_capacity(k);
+        let mut w = 0;
+        for i in 0..k {
+            let e = list[i];
+            if e.is_empty() {
+                break;
+            }
+            if seen.insert(e.id) {
+                list[w] = e;
+                w += 1;
+            }
+        }
+        for slot in list[w..].iter_mut() {
+            *slot = Neighbor::empty();
+        }
+    }
+
+    /// Normalize every list, in parallel partitions.
+    pub fn normalize_all(&mut self, threads: usize) {
+        let n = self.n();
+        let k = self.k();
+        let ranges = crate::util::split_ranges(n, threads.max(1));
+        let lists = self.list_mut(0).as_mut_ptr();
+        struct SendPtr(*mut Neighbor);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let sp = SendPtr(lists);
+        crossbeam_utils::thread::scope(|s| {
+            for r in &ranges {
+                let r = r.clone();
+                let sp = &sp;
+                s.spawn(move |_| {
+                    for u in r {
+                        // SAFETY: object ranges are disjoint across threads.
+                        let list = unsafe {
+                            std::slice::from_raw_parts_mut(sp.0.add(u * k), k)
+                        };
+                        normalize_slice(list);
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+}
+
+/// Free-function list normalization over a raw slice (used by the
+/// parallel path; same semantics as [`KnnGraph::normalize_list`]).
+pub(crate) fn normalize_slice(list: &mut [Neighbor]) {
+    list.sort_unstable_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+    let k = list.len();
+    let mut seen = std::collections::HashSet::with_capacity(k);
+    let mut w = 0;
+    for i in 0..k {
+        let e = list[i];
+        if e.is_empty() {
+            break;
+        }
+        if seen.insert(e.id) {
+            list[w] = e;
+            w += 1;
+        }
+    }
+    for slot in list[w..].iter_mut() {
+        *slot = Neighbor::empty();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn segmented_insert_respects_segments() {
+        let mut g = KnnGraph::empty(8, 8);
+        {
+            let cg = ConcurrentGraph::new(&mut g, 4); // nseg = 2
+            assert_eq!(cg.nseg(), 2);
+            assert!(cg.insert(0, 2, 1.0)); // 2 % 2 = 0 -> segment 0
+            assert!(cg.insert(0, 3, 0.5)); // segment 1
+            assert!(cg.insert(0, 5, 0.1)); // segment 1
+            assert!(!cg.insert(0, 3, 0.01)); // dup within segment
+            assert_eq!(cg.updates(), 3);
+        }
+        // segment 0 = slots 0..4, segment 1 = slots 4..8
+        assert_eq!(g.list(0)[0].id, 2);
+        let seg1: Vec<u32> = g.list(0)[4..].iter().filter(|e| !e.is_empty()).map(|e| e.id).collect();
+        assert_eq!(seg1, vec![5, 3]);
+        g.normalize_list(0);
+        g.check_invariants().unwrap();
+        assert_eq!(g.ids(0).collect::<Vec<_>>(), vec![5, 3, 2]);
+    }
+
+    #[test]
+    fn concurrent_inserts_lose_nothing_single_segment() {
+        // With nseg=1 the list behaves like a locked top-k: after many
+        // concurrent offers, the resident worst must be <= the k-th best
+        // distinct offer overall.
+        prop::check("concurrent-topk", 12, |rng: &mut Rng| {
+            let k = 8;
+            let n_threads = 4;
+            let per = 200;
+            // ids live in [1, 10_000]; size the graph to keep the
+            // id-range invariant while only list 0 is exercised.
+            let mut g = KnnGraph::empty(10_001, k);
+            let mut offers: Vec<Vec<(u32, f32)>> = Vec::new();
+            let mut all: Vec<(u32, f32)> = Vec::new();
+            for _ in 0..n_threads {
+                let mut v = Vec::new();
+                for _ in 0..per {
+                    let id = 1 + rng.below(10_000) as u32;
+                    let dist = rng.f32() * 100.0;
+                    v.push((id, dist));
+                    all.push((id, dist));
+                }
+                offers.push(v);
+            }
+            {
+                let cg = ConcurrentGraph::new(&mut g, k); // nseg = 1
+                crossbeam_utils::thread::scope(|s| {
+                    for t in 0..n_threads {
+                        let cg = &cg;
+                        let offers = &offers[t];
+                        s.spawn(move |_| {
+                            for &(id, d) in offers {
+                                cg.insert(0, id, d);
+                            }
+                        });
+                    }
+                })
+                .unwrap();
+            }
+            g.normalize_list(0);
+            g.check_invariants().map_err(|e| e.to_string())?;
+            let mut best: std::collections::HashMap<u32, f32> = Default::default();
+            for &(id, d) in &all {
+                let e = best.entry(id).or_insert(d);
+                if d < *e {
+                    *e = d;
+                }
+            }
+            let mut bests: Vec<f32> = best.values().copied().collect();
+            bests.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let live = g.len_of(0);
+            prop::assert_prop(live == k.min(bests.len()), format!("live={live}"))?;
+            let worst = g.list(0)[live - 1].dist;
+            // A locked sequential top-k would end at bests[live-1]; the
+            // concurrent version may keep slightly worse entries only if
+            // duplicates raced, but never better than physically possible.
+            prop::assert_prop(worst + 1e-6 >= bests[live - 1], "impossible best")
+        });
+    }
+
+    #[test]
+    fn concurrent_segmented_stress_keeps_invariants() {
+        prop::check("segmented-stress", 6, |rng: &mut Rng| {
+            let n = 32;
+            let k = 16;
+            let mut g = KnnGraph::empty(n, k);
+            let mut jobs: Vec<Vec<(usize, u32, f32)>> = vec![Vec::new(); 4];
+            for t in 0..4 {
+                for _ in 0..500 {
+                    let u = rng.below(n);
+                    let id = rng.below(n) as u32;
+                    jobs[t].push((u, id, rng.f32() * 10.0));
+                }
+            }
+            {
+                let cg = ConcurrentGraph::new(&mut g, 4); // nseg = 4
+                crossbeam_utils::thread::scope(|s| {
+                    for t in 0..4 {
+                        let cg = &cg;
+                        let job = &jobs[t];
+                        s.spawn(move |_| {
+                            for &(u, id, d) in job {
+                                if id as usize != u {
+                                    cg.insert(u, id, d);
+                                }
+                            }
+                        });
+                    }
+                })
+                .unwrap();
+            }
+            g.normalize_all(2);
+            g.check_invariants().map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn insert_batch_matches_sequential() {
+        let mut g = KnnGraph::empty(6, 4);
+        {
+            let cg = ConcurrentGraph::new(&mut g, 64); // nseg = 1
+            let mut cands = vec![(3u32, 3.0f32), (1, 1.0), (2, 2.0), (1, 0.5), (4, 4.0), (5, 0.1)];
+            cg.insert_batch(0, &mut cands);
+        }
+        g.normalize_list(0);
+        assert_eq!(g.ids(0).collect::<Vec<_>>(), vec![5, 1, 2, 3]);
+    }
+}

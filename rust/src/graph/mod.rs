@@ -1,0 +1,407 @@
+//! The fixed-degree k-NN graph (paper §4): `n` lists of `k` neighbors,
+//! each sorted ascending by distance, each entry carrying the NEW/OLD
+//! flag that drives NN-Descent sampling.
+
+pub mod concurrent;
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Sentinel id for an empty slot.
+pub const EMPTY: u32 = u32::MAX;
+
+/// Flag bit stored in the serialized id (ids stay < 2^31; the paper's
+/// largest benchmark is 1e9 < 2^31).
+const FLAG_BIT: u32 = 1 << 31;
+
+/// One k-NN list entry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub dist: f32,
+    /// True if inserted during the current iteration (paper's NEW mark).
+    pub new: bool,
+}
+
+impl Neighbor {
+    pub const fn empty() -> Neighbor {
+        Neighbor { id: EMPTY, dist: f32::INFINITY, new: false }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.id == EMPTY
+    }
+}
+
+/// A fixed-degree approximate k-NN graph.
+#[derive(Clone, Debug)]
+pub struct KnnGraph {
+    n: usize,
+    k: usize,
+    lists: Vec<Neighbor>,
+}
+
+impl KnnGraph {
+    /// All-empty graph.
+    pub fn empty(n: usize, k: usize) -> Self {
+        assert!(n > 0 && k > 0);
+        KnnGraph { n, k, lists: vec![Neighbor::empty(); n * k] }
+    }
+
+    /// Paper Algorithm 1 lines 1–5: k random distinct neighbors per
+    /// object with computed distances, sorted ascending, all marked NEW.
+    pub fn random_init(ds: &Dataset, k: usize, rng: &mut Rng) -> Self {
+        let n = ds.len();
+        let mut g = KnnGraph::empty(n, k);
+        let kk = k.min(n - 1);
+        for u in 0..n {
+            let mut picked = Vec::with_capacity(kk);
+            let mut guard = 0;
+            while picked.len() < kk && guard < 100 * kk {
+                guard += 1;
+                let v = rng.below(n);
+                if v != u && !picked.contains(&(v as u32)) {
+                    picked.push(v as u32);
+                }
+            }
+            let list = g.list_mut(u);
+            for (slot, &v) in picked.iter().enumerate() {
+                list[slot] = Neighbor { id: v, dist: ds.dist(u, v as usize), new: true };
+            }
+            list[..picked.len()]
+                .sort_unstable_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        }
+        g
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The (sorted) neighbor list of `u`, including empty tail slots.
+    #[inline]
+    pub fn list(&self, u: usize) -> &[Neighbor] {
+        &self.lists[u * self.k..(u + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn list_mut(&mut self, u: usize) -> &mut [Neighbor] {
+        &mut self.lists[u * self.k..(u + 1) * self.k]
+    }
+
+    /// Number of live entries in `u`'s list.
+    pub fn len_of(&self, u: usize) -> usize {
+        self.list(u).iter().take_while(|e| !e.is_empty()).count()
+    }
+
+    /// Neighbor ids of `u` (live entries only, ascending distance).
+    pub fn ids(&self, u: usize) -> impl Iterator<Item = u32> + '_ {
+        self.list(u).iter().take_while(|e| !e.is_empty()).map(|e| e.id)
+    }
+
+    /// Sorted-insert `(<id>, dist)` into `u`'s list if it improves it.
+    /// Rejects duplicates and self-edges. Returns true if inserted.
+    /// (Single-threaded path; the concurrent paths live in
+    /// [`concurrent::ConcurrentGraph`].)
+    pub fn insert(&mut self, u: usize, id: u32, dist: f32, new: bool) -> bool {
+        debug_assert!(id != EMPTY);
+        if id as usize == u {
+            return false;
+        }
+        let k = self.k;
+        let list = self.list_mut(u);
+        if dist >= list[k - 1].dist {
+            return false; // worse than current worst (or list full of better)
+        }
+        // duplicate check + insertion point in one pass
+        let mut pos = k;
+        for (i, e) in list.iter().enumerate() {
+            if e.id == id {
+                return false;
+            }
+            if pos == k && dist < e.dist {
+                pos = i;
+            }
+            if e.is_empty() {
+                break;
+            }
+        }
+        if pos == k {
+            return false;
+        }
+        // check tail after pos for duplicate before shifting
+        if list[pos..].iter().take_while(|e| !e.is_empty()).any(|e| e.id == id) {
+            return false;
+        }
+        list[pos..].rotate_right(1);
+        list[pos] = Neighbor { id, dist, new };
+        true
+    }
+
+    /// φ(G) — Eq. 3: the sum of all neighbor distances. Monotonically
+    /// non-increasing across NN-Descent iterations (Fig. 4 traces).
+    pub fn phi(&self) -> f64 {
+        self.lists
+            .iter()
+            .filter(|e| !e.is_empty())
+            .map(|e| e.dist as f64)
+            .sum()
+    }
+
+    /// Verify structural invariants (used by tests / debug assertions):
+    /// sorted ascending, no duplicate ids, no self-edges, live prefix.
+    pub fn check_invariants(&self) -> crate::Result<()> {
+        for u in 0..self.n {
+            let list = self.list(u);
+            let mut seen = std::collections::HashSet::new();
+            let mut prev = f32::NEG_INFINITY;
+            let mut tail = false;
+            for e in list {
+                if e.is_empty() {
+                    tail = true;
+                    continue;
+                }
+                if tail {
+                    bail!("u={u}: live entry after empty slot");
+                }
+                if e.id as usize == u {
+                    bail!("u={u}: self edge");
+                }
+                if e.id as usize >= self.n {
+                    bail!("u={u}: id {} out of range", e.id);
+                }
+                if !seen.insert(e.id) {
+                    bail!("u={u}: duplicate id {}", e.id);
+                }
+                if e.dist < prev {
+                    bail!("u={u}: not sorted ({} < {prev})", e.dist);
+                }
+                prev = e.dist;
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract plain id rows (for recall evaluation / serialization).
+    pub fn id_rows(&self) -> Vec<Vec<u32>> {
+        (0..self.n).map(|u| self.ids(u).collect()).collect()
+    }
+
+    /// Remap all neighbor ids through `f` (GGM id-space stitching).
+    pub fn remap_ids(&mut self, f: impl Fn(u32) -> u32) {
+        for e in self.lists.iter_mut() {
+            if !e.is_empty() {
+                e.id = f(e.id);
+            }
+        }
+    }
+
+    /// Append the lists of `other` (over a disjoint id space) after ours;
+    /// ids are taken as-is. Used by GGM to join two sub-graphs.
+    pub fn stack(&self, other: &KnnGraph) -> KnnGraph {
+        assert_eq!(self.k, other.k);
+        let mut lists = self.lists.clone();
+        lists.extend_from_slice(&other.lists);
+        KnnGraph { n: self.n + other.n, k: self.k, lists }
+    }
+
+    /// Serialize (binary: magic, n, k, then n*k (id_with_flag, dist)).
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let mut w = BufWriter::new(File::create(path.as_ref())?);
+        w.write_all(&0x4B4E_4731u32.to_le_bytes())?; // "KNG1"
+        w.write_all(&(self.n as u32).to_le_bytes())?;
+        w.write_all(&(self.k as u32).to_le_bytes())?;
+        for e in &self.lists {
+            let id = if e.is_empty() {
+                EMPTY
+            } else {
+                e.id | if e.new { FLAG_BIT } else { 0 }
+            };
+            w.write_all(&id.to_le_bytes())?;
+            w.write_all(&e.dist.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<KnnGraph> {
+        let mut r = BufReader::new(
+            File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?,
+        );
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != 0x4B4E_4731 {
+            bail!("not a knn-graph file: {:?}", path.as_ref());
+        }
+        r.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        r.read_exact(&mut b4)?;
+        let k = u32::from_le_bytes(b4) as usize;
+        let mut lists = Vec::with_capacity(n * k);
+        for _ in 0..n * k {
+            r.read_exact(&mut b4)?;
+            let raw = u32::from_le_bytes(b4);
+            r.read_exact(&mut b4)?;
+            let dist = f32::from_le_bytes(b4);
+            if raw == EMPTY {
+                lists.push(Neighbor::empty());
+            } else {
+                lists.push(Neighbor {
+                    id: raw & !FLAG_BIT,
+                    dist,
+                    new: raw & FLAG_BIT != 0,
+                });
+            }
+        }
+        Ok(KnnGraph { n, k, lists })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+    use crate::util::prop;
+
+    #[test]
+    fn random_init_valid() {
+        let ds = synth::uniform(60, 4, 1);
+        let mut rng = Rng::new(5);
+        let g = KnnGraph::random_init(&ds, 8, &mut rng);
+        g.check_invariants().unwrap();
+        for u in 0..g.n() {
+            assert_eq!(g.len_of(u), 8);
+            assert!(g.list(u).iter().all(|e| e.new || e.is_empty()));
+        }
+    }
+
+    #[test]
+    fn insert_keeps_sorted_and_dedups() {
+        let ds = synth::uniform(30, 4, 2);
+        let mut rng = Rng::new(6);
+        let mut g = KnnGraph::random_init(&ds, 5, &mut rng);
+        prop::check("insert-invariants", 300, |rng| {
+            let u = rng.below(30);
+            let v = rng.below(30) as u32;
+            if v as usize != u {
+                let d = ds.dist(u, v as usize);
+                g.insert(u, v, d, true);
+            }
+            prop::assert_prop(g.check_invariants().is_ok(), "invariants broken")
+        });
+    }
+
+    #[test]
+    fn insert_against_sort_oracle() {
+        // The list after arbitrary inserts must equal: all offered
+        // candidates + initials, dedup by id (best dist), sorted, top-k.
+        prop::check("insert-vs-oracle", 50, |rng| {
+            let k = 1 + rng.below(8);
+            let mut g = KnnGraph::empty(21, k); // ids drawn from [1, 20]
+            let mut offered: Vec<(u32, f32)> = Vec::new();
+            for _ in 0..rng.below(60) {
+                let id = 1 + rng.below(20) as u32; // avoid self (u=0)
+                let dist = (rng.below(1000) as f32) / 10.0;
+                offered.push((id, dist));
+                g.insert(0, id, dist, true);
+            }
+            // oracle: first-offered wins on duplicate id (insert rejects
+            // duplicates regardless of distance), then stable sort by
+            // dist, top-k... but rejection only happens while the old
+            // entry is still resident; evicted ids can re-enter. The
+            // robust invariant: resulting list is sorted, dedup, and its
+            // worst distance <= the (k)th best of the distinct-best offers.
+            g.check_invariants().unwrap();
+            let mut best: std::collections::HashMap<u32, f32> = Default::default();
+            for &(id, d) in &offered {
+                let e = best.entry(id).or_insert(d);
+                if d < *e {
+                    *e = d;
+                }
+            }
+            let mut bests: Vec<f32> = best.values().copied().collect();
+            bests.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let live = g.len_of(0);
+            prop::assert_prop(
+                live == bests.len().min(k),
+                format!("live={live} want={}", bests.len().min(k)),
+            )?;
+            // each resident distance is at least as good as the worst
+            // of the top-live best offers
+            if live > 0 {
+                let worst = g.list(0)[live - 1].dist;
+                prop::assert_prop(
+                    worst >= bests[live - 1] - 1e-6,
+                    "list better than physically possible",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn insert_rejects_self_dup_worse() {
+        let mut g = KnnGraph::empty(2, 2);
+        assert!(!g.insert(0, 0, 0.0, true)); // self
+        assert!(g.insert(0, 1, 5.0, true));
+        assert!(!g.insert(0, 1, 1.0, true)); // dup id
+        let mut g2 = KnnGraph::empty(5, 2);
+        assert!(g2.insert(0, 1, 1.0, true));
+        assert!(g2.insert(0, 2, 2.0, true));
+        assert!(!g2.insert(0, 3, 3.0, true)); // worse than worst, full
+        assert!(g2.insert(0, 4, 0.5, true)); // evicts 2
+        assert_eq!(g2.ids(0).collect::<Vec<_>>(), vec![4, 1]);
+    }
+
+    #[test]
+    fn phi_decreases_with_better_neighbors() {
+        let mut g = KnnGraph::empty(4, 2);
+        g.insert(0, 1, 10.0, true);
+        g.insert(0, 2, 8.0, true);
+        let before = g.phi();
+        g.insert(0, 3, 1.0, true);
+        assert!(g.phi() < before);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = synth::uniform(20, 4, 3);
+        let mut rng = Rng::new(7);
+        let g = KnnGraph::random_init(&ds, 4, &mut rng);
+        let dir = std::env::temp_dir().join(format!("gnnd-graph-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.knng");
+        g.save(&p).unwrap();
+        let back = KnnGraph::load(&p).unwrap();
+        assert_eq!(back.n(), g.n());
+        assert_eq!(back.k(), g.k());
+        for u in 0..g.n() {
+            assert_eq!(back.list(u), g.list(u));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stack_and_remap() {
+        let ds = synth::uniform(10, 4, 4);
+        let mut rng = Rng::new(8);
+        let g1 = KnnGraph::random_init(&ds, 3, &mut rng);
+        let mut g2 = KnnGraph::random_init(&ds, 3, &mut rng);
+        g2.remap_ids(|id| id + 10);
+        let g = g1.stack(&g2);
+        assert_eq!(g.n(), 20);
+        for u in 10..20 {
+            assert!(g.ids(u).all(|id| (10..20).contains(&(id as usize))));
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! # GNND — Large-Scale Approximate k-NN Graph Construction
+//!
+//! A reproduction of *"Large-Scale Approximate k-NN Graph Construction on
+//! GPU"* (Wang, Zhao, Zeng — CS.DC 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2** (build-time Python, `python/compile/`): the paper's
+//!   distance-evaluation hot spot — tiled pairwise-distance Pallas
+//!   kernels wrapped by the `crossmatch` / `bruteforce` jax programs —
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **L3** (this crate): the coordination contribution — fixed-size
+//!   sampling, batch assembly, selective update with segmented
+//!   spinlocks, the GGM merge primitive, and the out-of-core sharded
+//!   construction pipeline. The hot loop executes the AOT artifacts via
+//!   the PJRT CPU client (see [`runtime`]); a bit-exact native engine
+//!   ([`gnnd::engine`]) serves as fallback and oracle.
+//!
+//! Python is never on the construction path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gnnd::dataset::synth;
+//! use gnnd::gnnd::{GnndParams, build};
+//!
+//! let data = synth::sift_like(10_000, 0xC0FFEE);
+//! let graph = build(&data, &GnndParams::default()).unwrap();
+//! println!("phi(G) = {}", graph.phi());
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod dataset;
+pub mod distance;
+pub mod experiments;
+pub mod gnnd;
+pub mod graph;
+pub mod merge;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use config::{EngineKind, Metric};
+pub use dataset::Dataset;
+pub use graph::KnnGraph;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,226 @@
+//! `gnnd` — the command-line launcher for the GNND k-NN graph
+//! construction system.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! gnnd gen-data     --name sift --n 20000 --out data.dsb [--seed S]
+//! gnnd ground-truth --data data.dsb --k 10 --out gt.ivecs [--sample M]
+//! gnnd build        --data data.dsb --out graph.knng [--config cfg] [--set k=v ...]
+//! gnnd merge        --data data.dsb --n1 N --g1 a.knng --g2 b.knng --out graph.knng
+//! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
+//! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
+//! gnnd experiment   fig4|fig5|fig6|fig7|table2|all [--scale quick|standard|full]
+//! ```
+//!
+//! Flat `key=value` config files (see `configs/`) plus `--set` overrides
+//! configure every GnndParams knob; `--set engine=pjrt` switches the
+//! cross-matching hot path onto the AOT artifacts (`make artifacts`).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context};
+
+use gnnd::config::{ConfigMap, GnndParams};
+use gnnd::dataset::{groundtruth, io, synth};
+use gnnd::experiments::{self, Scale};
+use gnnd::graph::KnnGraph;
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
+use gnnd::metrics::recall_at;
+use gnnd::util::timer::Timer;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, Vec<String>>,
+}
+
+fn parse_args(mut argv: VecDeque<String>) -> Args {
+    let mut positional = Vec::new();
+    let mut flags: std::collections::BTreeMap<String, Vec<String>> = Default::default();
+    while let Some(a) = argv.pop_front() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = argv.pop_front().unwrap_or_default();
+            flags.entry(name.to_string()).or_default().push(val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn req(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name).with_context(|| format!("missing required --{name}"))
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    fn params(&self) -> anyhow::Result<GnndParams> {
+        let mut cfg = match self.get("config") {
+            Some(path) => ConfigMap::from_file(path)?,
+            None => ConfigMap::default(),
+        };
+        if let Some(sets) = self.flags.get("set") {
+            cfg.apply_overrides(sets.iter().map(|s| s.as_str()))?;
+        }
+        GnndParams::from_config(&cfg)
+    }
+}
+
+fn main() {
+    let argv: VecDeque<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "gnnd — GPU-architecture NN-Descent on a Rust+XLA stack\n\
+         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|eval|experiment> [flags]\n\
+         see rust/src/main.rs header or README.md for full flag reference"
+    );
+}
+
+fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
+    let cmd = argv.pop_front().unwrap();
+    let args = parse_args(argv);
+    match cmd.as_str() {
+        "gen-data" => {
+            let name = args.req("name")?;
+            let n: usize = args.req("n")?.parse()?;
+            let seed: u64 = args.parse_or("seed", 42u64)?;
+            let out = args.req("out")?;
+            let ds = synth::by_name(name, n, seed)?;
+            io::write_dsb(&ds, out)?;
+            println!("wrote {out}: {} x {} ({})", ds.len(), ds.d, ds.metric);
+        }
+        "ground-truth" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let k: usize = args.parse_or("k", 10usize)?;
+            let out = args.req("out")?;
+            let t = Timer::start();
+            let rows = match args.get("sample") {
+                Some(m) => {
+                    let m: usize = m.parse()?;
+                    let (ids, rows) = groundtruth::sampled_truth(&ds, m, k, 0xE7A1);
+                    let idpath = format!("{out}.ids");
+                    io::write_ivecs(
+                        &[ids.iter().map(|&i| i as u32).collect::<Vec<_>>()],
+                        &idpath,
+                    )?;
+                    println!("sampled ids -> {idpath}");
+                    rows
+                }
+                None => groundtruth::exact_topk(&ds, k),
+            };
+            io::write_ivecs(&rows, out)?;
+            println!("ground truth ({} rows, k={k}) in {:.2}s -> {out}", rows.len(), t.secs());
+        }
+        "build" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let params = args.params()?;
+            let t = Timer::start();
+            let out = gnnd::gnnd::build_with_stats(&ds, &params)?;
+            println!(
+                "built {} x k={} in {:.2}s ({} iters, engine={}, phases: {:?})",
+                out.graph.n(),
+                out.graph.k(),
+                t.secs(),
+                out.stats.iters,
+                out.stats.engine,
+                out.stats.phases
+            );
+            out.graph.save(args.req("out")?)?;
+        }
+        "merge" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let n1: usize = args.req("n1")?.parse()?;
+            let g1 = KnnGraph::load(args.req("g1")?)?;
+            let g2 = KnnGraph::load(args.req("g2")?)?;
+            let params = args.params()?;
+            let engine = gnnd::gnnd::make_engine(&params, &ds)?;
+            let t = Timer::start();
+            let (g, stats) = gnnd::merge::merge(&ds, n1, &g1, &g2, &params, engine.as_ref())?;
+            println!("merged in {:.2}s ({} refinement iters)", t.secs(), stats.iters);
+            g.save(args.req("out")?)?;
+        }
+        "ooc-build" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let params = args.params()?;
+            let cfg = OutOfCoreConfig {
+                shards: args.parse_or("shards", 4usize)?,
+                workers: args.parse_or("workers", 1usize)?,
+                params: params.clone(),
+            };
+            let engine = gnnd::gnnd::make_engine(&params, &ds)?;
+            let t = Timer::start();
+            let (g, stats) =
+                build_out_of_core(&ds, args.req("dir")?, &cfg, engine.as_ref())?;
+            println!(
+                "out-of-core build in {:.2}s (shard builds {:.2}s, {} merges over {} rounds in {:.2}s)",
+                t.secs(),
+                stats.build_secs,
+                stats.merges,
+                stats.rounds,
+                stats.merge_secs
+            );
+            g.save(args.req("out")?)?;
+        }
+        "eval" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let g = KnnGraph::load(args.req("graph")?)?;
+            let truth = io::read_ivecs(args.req("truth")?)?;
+            let at: usize = args.parse_or("at", 10usize)?;
+            let ids: Option<Vec<usize>> = match args.get("truth-ids") {
+                Some(p) => Some(
+                    io::read_ivecs(p)?
+                        .first()
+                        .map(|r| r.iter().map(|&x| x as usize).collect())
+                        .unwrap_or_default(),
+                ),
+                None => None,
+            };
+            let r = recall_at(&g, &truth, ids.as_deref(), at);
+            println!("recall@{at} = {r:.4}   phi(G) = {:.4e}", g.phi());
+            let _ = ds;
+        }
+        "experiment" => {
+            let name = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .context("experiment name required (fig4|fig5|fig6|fig7|table2|all)")?;
+            let scale = match args.get("scale") {
+                Some("quick") => Scale::Quick,
+                Some("full") => Scale::Full,
+                Some("standard") | None => Scale::from_env(),
+                Some(other) => bail!("unknown scale {other:?}"),
+            };
+            experiments::run_by_name(name, scale)?;
+        }
+        "help" | "--help" | "-h" => print_usage(),
+        other => {
+            print_usage();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+    Ok(())
+}

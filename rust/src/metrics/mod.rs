@@ -1,0 +1,231 @@
+//! Evaluation metrics and experiment reports.
+//!
+//! * [`recall_at`] — the paper's Eq. 4 Recall@k against exact truth.
+//! * [`Report`] — structured experiment output (rows -> aligned text
+//!   table + JSON file), used by every fig/table bench harness.
+
+use std::path::Path;
+
+use crate::graph::KnnGraph;
+use crate::util::json::Json;
+
+/// Recall@k over the evaluated objects (paper Eq. 4):
+/// `sum_i |top-k(G, i) ∩ truth_k(i)| / (n * k)`.
+///
+/// `truth` rows must be ascending-by-distance ground truth of length
+/// >= k for the objects in `ids` (or for `0..n` when `ids` is None).
+pub fn recall_at(graph: &KnnGraph, truth: &[Vec<u32>], ids: Option<&[usize]>, k: usize) -> f64 {
+    let eval: Vec<usize> = match ids {
+        Some(ids) => ids.to_vec(),
+        None => (0..graph.n()).collect(),
+    };
+    assert_eq!(eval.len(), truth.len(), "truth rows must match evaluated ids");
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (row, &u) in truth.iter().zip(&eval) {
+        let t = k.min(row.len());
+        if t == 0 {
+            continue;
+        }
+        let truth_set: std::collections::HashSet<u32> = row[..t].iter().copied().collect();
+        hit += graph.ids(u).take(k).filter(|id| truth_set.contains(id)).count();
+        total += t;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+/// One experiment row: label + named numeric columns.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cols: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>) -> Self {
+        Row { label: label.into(), cols: Vec::new() }
+    }
+
+    pub fn col(mut self, name: &str, value: f64) -> Self {
+        self.cols.push((name.to_string(), value));
+        self
+    }
+}
+
+/// An experiment report: header metadata + rows, printable as an aligned
+/// table (the "same rows the paper reports") and saved as JSON.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub meta: Vec<(String, String)>,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), meta: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn meta(mut self, key: &str, value: impl ToString) -> Self {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        for (k, v) in &self.meta {
+            out.push_str(&format!("   {k}: {v}\n"));
+        }
+        if self.rows.is_empty() {
+            return out;
+        }
+        // column set = union over rows, in first-seen order
+        let mut names: Vec<String> = Vec::new();
+        for row in &self.rows {
+            for (name, _) in &row.cols {
+                if !names.contains(name) {
+                    names.push(name.clone());
+                }
+            }
+        }
+        let label_w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        let mut header = format!("{:<label_w$}", "run");
+        for n in &names {
+            header.push_str(&format!("  {:>12}", n));
+        }
+        out.push_str(&header);
+        out.push('\n');
+        for row in &self.rows {
+            let mut line = format!("{:<label_w$}", row.label);
+            for n in &names {
+                match row.cols.iter().find(|(cn, _)| cn == n) {
+                    Some((_, v)) => line.push_str(&format!("  {:>12}", fmt_num(*v))),
+                    None => line.push_str(&format!("  {:>12}", "-")),
+                }
+            }
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Save as JSON under `dir/<slug>.json`.
+    pub fn save_json(&self, dir: impl AsRef<Path>) -> crate::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta = meta.set(k, v.as_str());
+        }
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj().set("label", r.label.as_str());
+                for (name, v) in &r.cols {
+                    o = o.set(name, *v);
+                }
+                o
+            })
+            .collect();
+        let j = Json::obj()
+            .set("title", self.title.as_str())
+            .set("meta", meta)
+            .set("rows", Json::Arr(rows));
+        let path = dir.as_ref().join(format!("{slug}.json"));
+        std::fs::write(&path, j.to_string())?;
+        Ok(path)
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || (v.abs() < 0.01) {
+        format!("{v:.3e}")
+    } else if v == v.trunc() {
+        format!("{v}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{groundtruth, synth};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recall_of_exact_graph_is_one() {
+        let ds = synth::uniform(50, 4, 1);
+        let truth = groundtruth::exact_topk(&ds, 5);
+        let mut g = KnnGraph::empty(50, 5);
+        for (u, row) in truth.iter().enumerate() {
+            for &v in row {
+                g.insert(u, v, ds.dist(u, v as usize), true);
+            }
+        }
+        let r = recall_at(&g, &truth, None, 5);
+        assert!((r - 1.0).abs() < 1e-9, "recall={r}");
+    }
+
+    #[test]
+    fn recall_of_random_graph_is_low() {
+        let ds = synth::uniform(300, 8, 2);
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let mut rng = Rng::new(3);
+        let g = KnnGraph::random_init(&ds, 10, &mut rng);
+        let r = recall_at(&g, &truth, None, 10);
+        assert!(r < 0.3, "random graph recall suspiciously high: {r}");
+    }
+
+    #[test]
+    fn recall_with_sampled_ids() {
+        let ds = synth::uniform(40, 4, 3);
+        let (ids, truth) = groundtruth::sampled_truth(&ds, 10, 5, 9);
+        let mut g = KnnGraph::empty(40, 5);
+        for (row, &u) in truth.iter().zip(&ids) {
+            for &v in row {
+                g.insert(u, v, ds.dist(u, v as usize), true);
+            }
+        }
+        assert!((recall_at(&g, &truth, Some(&ids), 5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_renders_and_saves() {
+        let mut rep = Report::new("Fig. X test").meta("dataset", "uniform");
+        rep.push(Row::new("gnnd").col("time_s", 1.5).col("recall@10", 0.99));
+        rep.push(Row::new("nnd").col("time_s", 100.0));
+        let txt = rep.render();
+        assert!(txt.contains("Fig. X test"));
+        assert!(txt.contains("recall@10"));
+        assert!(txt.contains("gnnd"));
+        let dir = std::env::temp_dir().join(format!("gnnd-rep-{}", std::process::id()));
+        let path = rep.save_json(&dir).unwrap();
+        let s = std::fs::read_to_string(path).unwrap();
+        assert!(s.contains("\"recall@10\":0.99"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

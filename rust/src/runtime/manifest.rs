@@ -1,0 +1,201 @@
+//! `artifacts/manifest.txt` parser + artifact selection.
+//!
+//! The manifest is a line-based `key=value` format emitted by
+//! `python/compile/aot.py`, one artifact per line, e.g.:
+//!
+//! ```text
+//! kind=crossmatch name=crossmatch_s32_d128_l2 metric=l2 impl=pallas b=64 s=32 d=128 file=crossmatch_s32_d128_l2.hlo.txt
+//! kind=bruteforce name=bruteforce_d128_l2 metric=l2 impl=pallas q=256 n=2048 d=128 k=64 file=bruteforce_d128_l2.hlo.txt
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::config::Metric;
+
+/// Kind of AOT program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Crossmatch,
+    Bruteforce,
+}
+
+/// Metadata of one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub name: String,
+    /// Kernel metric string ("l2" | "ip").
+    pub metric: String,
+    /// "pallas" or "jnp" (reference twin for ablation).
+    pub impl_: String,
+    pub file: String,
+    // crossmatch dims
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    // bruteforce dims
+    pub q: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// All artifacts listed in a manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> crate::Result<Self> {
+        let path = Path::new(dir).join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kind = None;
+            let mut name = String::new();
+            let mut metric = String::new();
+            let mut impl_ = String::from("pallas");
+            let mut file = String::new();
+            let mut dims = [0usize; 6]; // b s d q n k
+            for tok in line.split_whitespace() {
+                let (key, val) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                match key {
+                    "kind" => {
+                        kind = Some(match val {
+                            "crossmatch" => ArtifactKind::Crossmatch,
+                            "bruteforce" => ArtifactKind::Bruteforce,
+                            _ => bail!("unknown artifact kind {val:?}"),
+                        })
+                    }
+                    "name" => name = val.to_string(),
+                    "metric" => metric = val.to_string(),
+                    "impl" => impl_ = val.to_string(),
+                    "file" => file = val.to_string(),
+                    "b" => dims[0] = val.parse()?,
+                    "s" => dims[1] = val.parse()?,
+                    "d" => dims[2] = val.parse()?,
+                    "q" => dims[3] = val.parse()?,
+                    "n" => dims[4] = val.parse()?,
+                    "k" => dims[5] = val.parse()?,
+                    _ => {} // forward compatible
+                }
+            }
+            let kind = kind.with_context(|| format!("manifest line {}: no kind", lineno + 1))?;
+            if name.is_empty() || file.is_empty() || metric.is_empty() {
+                bail!("manifest line {}: missing name/file/metric", lineno + 1);
+            }
+            artifacts.push(ArtifactMeta {
+                kind,
+                name,
+                metric,
+                impl_,
+                file,
+                b: dims[0],
+                s: dims[1],
+                d: dims[2],
+                q: dims[3],
+                n: dims[4],
+                k: dims[5],
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Smallest pallas crossmatch artifact covering `(s, d, metric)`.
+    pub fn select_crossmatch(&self, s: usize, d: usize, metric: Metric) -> crate::Result<ArtifactMeta> {
+        let want = metric.kernel_metric().as_str();
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Crossmatch
+                    && a.impl_ == "pallas"
+                    && a.metric == want
+                    && a.s >= s
+                    && a.d >= d
+            })
+            .min_by_key(|a| (a.s, a.d))
+            .cloned()
+            .with_context(|| {
+                format!(
+                    "no crossmatch artifact for s>={s} d>={d} metric={want}; \
+                     regenerate with `make artifacts` or adjust aot.py specs"
+                )
+            })
+    }
+
+    /// Smallest bruteforce artifact covering `(d, metric)`.
+    pub fn select_bruteforce(&self, d: usize, metric: Metric) -> crate::Result<ArtifactMeta> {
+        let want = metric.kernel_metric().as_str();
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Bruteforce && a.metric == want && a.d >= d)
+            .min_by_key(|a| a.d)
+            .cloned()
+            .with_context(|| format!("no bruteforce artifact for d>={d} metric={want}"))
+    }
+
+    /// Find an artifact by exact name (benches pin specific variants).
+    pub fn by_name(&self, name: &str) -> crate::Result<ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .cloned()
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+kind=crossmatch name=cm_s16_d32 metric=l2 impl=pallas b=64 s=16 d=32 file=a.hlo.txt
+kind=crossmatch name=cm_s32_d128 metric=l2 impl=pallas b=64 s=32 d=128 file=b.hlo.txt
+kind=crossmatch name=cm_s32_d128_jnp metric=l2 impl=jnp b=64 s=32 d=128 file=c.hlo.txt
+kind=crossmatch name=cm_s32_d100_ip metric=ip impl=pallas b=64 s=32 d=100 file=d.hlo.txt
+kind=bruteforce name=bf_d128 metric=l2 impl=pallas q=256 n=2048 d=128 k=64 file=e.hlo.txt
+";
+
+    #[test]
+    fn parses_and_selects_smallest_cover() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 5);
+        let a = m.select_crossmatch(10, 30, Metric::L2).unwrap();
+        assert_eq!(a.name, "cm_s16_d32");
+        let a = m.select_crossmatch(20, 30, Metric::L2).unwrap();
+        assert_eq!(a.name, "cm_s32_d128");
+        // cosine lowers to ip
+        let a = m.select_crossmatch(32, 100, Metric::Cosine).unwrap();
+        assert_eq!(a.name, "cm_s32_d100_ip");
+        // jnp twins are never auto-selected
+        assert!(m.select_crossmatch(32, 129, Metric::L2).is_err());
+        let b = m.select_bruteforce(96, Metric::L2).unwrap();
+        assert_eq!(b.name, "bf_d128");
+        assert_eq!(b.k, 64);
+    }
+
+    #[test]
+    fn by_name_and_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.by_name("cm_s32_d128_jnp").unwrap().impl_, "jnp");
+        assert!(m.by_name("nope").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("kind=bogus name=x metric=l2 file=f").is_err());
+    }
+}

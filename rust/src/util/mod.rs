@@ -1,0 +1,85 @@
+//! Small self-contained utilities.
+//!
+//! The execution environment is offline with only the `xla` dependency
+//! closure vendored, so the crate hand-rolls the few pieces that would
+//! normally come from crates.io: a counter-free PRNG ([`rng::Rng`]),
+//! wall-clock timers ([`timer`]), a minimal JSON writer ([`json`]), and a
+//! tiny property-testing harness ([`prop`]) used across the test suite.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Ceil division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to a multiple of `m`.
+#[inline]
+pub fn ceil_to(a: usize, m: usize) -> usize {
+    ceil_div(a, m) * m
+}
+
+/// Split `0..n` into at most `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            break;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Number of worker threads to use: `GNND_THREADS` env override, else
+/// available parallelism, else 4.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("GNND_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_helpers() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_to(10, 8), 16);
+        assert_eq!(ceil_to(16, 8), 16);
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 64, 100] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let rs = split_ranges(n, parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n, "n={n} parts={parts}");
+                let mut prev = 0;
+                for r in &rs {
+                    assert_eq!(r.start, prev);
+                    assert!(!r.is_empty());
+                    prev = r.end;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! A tiny property-testing harness (proptest is not in the vendored
+//! dependency closure). Runs a predicate over many seeded random cases
+//! and reports the failing seed so the case replays deterministically:
+//!
+//! ```
+//! use gnnd::util::{prop, rng::Rng};
+//! prop::check("sorted-after-sort", 64, |rng: &mut Rng| {
+//!     let mut v: Vec<u32> = (0..rng.below(100)).map(|_| rng.next_u64() as u32).collect();
+//!     v.sort_unstable();
+//!     prop::assert_prop(v.windows(2).all(|w| w[0] <= w[1]), "not sorted")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Helper: turn a boolean into a `CaseResult` with a message.
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` seeded cases of property `f`; panic with the seed on the
+/// first failure. The base seed can be overridden with `GNND_PROP_SEED`
+/// to replay a specific failure.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng) -> CaseResult) {
+    let base: u64 = std::env::var("GNND_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed}): {msg}\n\
+                 replay with GNND_PROP_SEED={seed} and cases=1"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 10, |rng| {
+            assert_prop(rng.below(10) < 10, "below out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_panics_with_seed() {
+        check("falsum", 3, |_| assert_prop(false, "nope"));
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock timing + per-phase accounting.
+//!
+//! The §Perf pass (EXPERIMENTS.md) relies on [`PhaseTimers`] to attribute
+//! construction time to the paper's phases (sampling / cross-matching /
+//! update / runtime-marshalling), mirroring the paper's observation that
+//! >90% of NN-Descent time is distance evaluation.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Thread-safe accumulator of named phase durations.
+#[derive(Default)]
+pub struct PhaseTimers {
+    phases: Mutex<BTreeMap<&'static str, f64>>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to phase `name`.
+    pub fn add(&self, name: &'static str, secs: f64) {
+        *self.phases.lock().unwrap().entry(name).or_insert(0.0) += secs;
+    }
+
+    /// Time a closure and attribute it to `name`.
+    pub fn scope<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.secs());
+        out
+    }
+
+    /// Snapshot of (phase, seconds), sorted by name.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64)> {
+        self.phases
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, *v))
+            .collect()
+    }
+
+    /// Human-readable one-line summary with percentages.
+    pub fn summary(&self) -> String {
+        let snap = self.snapshot();
+        let total: f64 = snap.iter().map(|(_, s)| s).sum();
+        let mut parts = Vec::new();
+        for (name, secs) in &snap {
+            let pct = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            parts.push(format!("{name}={secs:.3}s ({pct:.1}%)"));
+        }
+        parts.join("  ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let p = PhaseTimers::new();
+        p.add("a", 1.0);
+        p.add("a", 0.5);
+        p.add("b", 2.0);
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a");
+        assert!((snap[0].1 - 1.5).abs() < 1e-12);
+        assert!(p.summary().contains("a=1.500s"));
+    }
+
+    #[test]
+    fn scope_returns_value() {
+        let p = PhaseTimers::new();
+        let v = p.scope("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(p.snapshot().len(), 1);
+    }
+}

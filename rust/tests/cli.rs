@@ -1,0 +1,104 @@
+//! Integration: the `gnnd` binary end to end — gen-data -> ground-truth
+//! -> build -> eval -> ooc-build, through the real CLI surface.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gnnd")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin()).args(args).output().expect("spawn gnnd");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+fn tmpdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-cli-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn full_cli_pipeline() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let gt = dir.join("gt.ivecs").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "800", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+
+    let (ok, out) = run(&["ground-truth", "--data", &data, "--k", "10", "--out", &gt]);
+    assert!(ok, "ground-truth failed: {out}");
+
+    let (ok, out) = run(&[
+        "build", "--data", &data, "--out", &graph, "--set", "k=12", "--set", "p=6",
+        "--set", "max_iter=6",
+    ]);
+    assert!(ok, "build failed: {out}");
+    assert!(out.contains("built 800"), "unexpected build output: {out}");
+
+    let (ok, out) = run(&["eval", "--data", &data, "--graph", &graph, "--truth", &gt]);
+    assert!(ok, "eval failed: {out}");
+    let recall: f64 = out
+        .split("recall@10 = ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("cannot parse eval output: {out}"));
+    assert!(recall > 0.85, "cli pipeline recall {recall}: {out}");
+
+    // out-of-core through the CLI
+    let shard_dir = dir.join("shards").to_string_lossy().into_owned();
+    let graph2 = dir.join("g2.knng").to_string_lossy().into_owned();
+    let (ok, out) = run(&[
+        "ooc-build", "--data", &data, "--dir", &shard_dir, "--shards", "3",
+        "--workers", "2", "--out", &graph2, "--set", "k=12", "--set", "p=6",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "ooc-build failed: {out}");
+    let (ok, out) = run(&["eval", "--data", &data, "--graph", &graph2, "--truth", &gt]);
+    assert!(ok, "eval-2 failed: {out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_rejects_bad_input() {
+    let (ok, _) = run(&["bogus-subcommand"]);
+    assert!(!ok);
+    let (ok, out) = run(&["build", "--data", "/nonexistent.dsb", "--out", "/tmp/x.knng"]);
+    assert!(!ok);
+    assert!(out.contains("error"), "no error message: {out}");
+    let (ok, _) = run(&["gen-data", "--name", "nope", "--n", "10", "--out", "/tmp/x.dsb"]);
+    assert!(!ok);
+}
+
+#[test]
+fn cli_config_file_plus_overrides() {
+    let dir = tmpdir();
+    let cfg = dir.join("c.cfg");
+    std::fs::write(&cfg, "k = 10\np = 5\nmax_iter = 4\n").unwrap();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let (ok, _) = run(&["gen-data", "--name", "uniform", "--n", "300", "--out", &data]);
+    assert!(ok);
+    let (ok, out) = run(&[
+        "build", "--data", &data, "--out", &graph,
+        "--config", &cfg.to_string_lossy(), "--set", "k=14",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("k=14"), "override not applied: {out}");
+    std::fs::remove_dir_all(dir).ok();
+}

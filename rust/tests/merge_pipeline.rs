@@ -1,0 +1,98 @@
+//! Integration: GGM merge, incremental ingestion and the out-of-core
+//! pipeline at medium scale with concurrent merge workers.
+
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::{build, GnndParams, NativeEngine};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
+use gnnd::merge::{incremental_add, merge};
+use gnnd::metrics::recall_at;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-it-{tag}-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn ggm_merge_beats_padded_halves_on_sift_like() {
+    let ds = synth::sift_like(2_000, 31);
+    let n1 = 1_000;
+    let params = GnndParams::default().with_k(16).with_p(8).with_iters(8);
+    let ids1: Vec<usize> = (0..n1).collect();
+    let ids2: Vec<usize> = (n1..2_000).collect();
+    let g1 = build(&ds.select(&ids1, "h1"), &params).unwrap();
+    let g2 = build(&ds.select(&ids2, "h2"), &params).unwrap();
+    let (g, _) = merge(&ds, n1, &g1, &g2, &params, &NativeEngine).unwrap();
+    g.check_invariants().unwrap();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 500, 10, 8);
+    let r = recall_at(&g, &truth, Some(&ids), 10);
+    let mut g2r = g2.clone();
+    g2r.remap_ids(|id| id + n1 as u32);
+    let naive = g1.stack(&g2r);
+    let rn = recall_at(&naive, &truth, Some(&ids), 10);
+    assert!(r > 0.85, "merged recall {r}");
+    // the paper's Fig. 7 gap (GGM regains the cross-subset neighbors)
+    assert!(r > rn + 0.1, "merge gain too small: {r} vs naive {rn}");
+}
+
+#[test]
+fn out_of_core_with_workers_and_odd_shards() {
+    let ds = synth::clustered(1_500, 8, 32);
+    let params = GnndParams::default().with_k(12).with_p(6).with_iters(6);
+    // odd shard count exercises the tournament bye slot
+    let cfg = OutOfCoreConfig { shards: 5, workers: 3, params: params.clone() };
+    let dir = tmpdir("odd");
+    let (g, stats) = build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(g.n(), 1_500);
+    g.check_invariants().unwrap();
+    assert_eq!(stats.merges, 10); // C(5,2)
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 400, 10, 9);
+    let r = recall_at(&g, &truth, Some(&ids), 10);
+    assert!(r > 0.85, "odd-shard out-of-core recall {r}");
+}
+
+#[test]
+fn incremental_ingestion_stays_healthy_over_batches() {
+    let full = synth::clustered(1_200, 8, 33);
+    let params = GnndParams::default().with_k(12).with_p(6).with_iters(6);
+    let step = 400;
+    let ids0: Vec<usize> = (0..step).collect();
+    let mut graph = build(&full.select(&ids0, "b0"), &params).unwrap();
+    let mut have = step;
+    while have < full.len() {
+        let upto = (have + step).min(full.len());
+        let ids: Vec<usize> = (0..upto).collect();
+        let cur = full.select(&ids, "cur");
+        let (g, _) = incremental_add(&cur, have, &graph, &params, &NativeEngine).unwrap();
+        graph = g;
+        graph.check_invariants().unwrap();
+        have = upto;
+    }
+    let (ids, truth) = groundtruth::sampled_truth(&full, 400, 10, 10);
+    let r = recall_at(&graph, &truth, Some(&ids), 10);
+    assert!(r > 0.85, "incremental final recall {r}");
+}
+
+#[test]
+fn merge_preserves_within_subset_quality() {
+    // objects whose true neighbors are all within their own subset must
+    // not lose them during merge
+    let ds = synth::clustered(800, 6, 34);
+    let n1 = 400;
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let ids1: Vec<usize> = (0..n1).collect();
+    let ids2: Vec<usize> = (n1..800).collect();
+    let g1 = build(&ds.select(&ids1, "h1"), &params).unwrap();
+    let g2 = build(&ds.select(&ids2, "h2"), &params).unwrap();
+    let phi_before = g1.phi() + g2.phi();
+    let (g, _) = merge(&ds, n1, &g1, &g2, &params, &NativeEngine).unwrap();
+    assert!(g.phi() <= phi_before + 1e-6, "merge made lists worse overall");
+}

@@ -1,0 +1,96 @@
+//! Integration: the full native construction pipeline across modules —
+//! dataset -> GNND (all update strategies) -> recall/phi evaluation.
+
+use gnnd::config::UpdateStrategy;
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::{build, build_with_stats, GnndParams};
+use gnnd::metrics::recall_at;
+
+#[test]
+fn sift_like_reaches_high_recall() {
+    let ds = synth::sift_like(3_000, 11);
+    let params = GnndParams::default().with_k(20).with_p(10).with_iters(10);
+    let out = build_with_stats(&ds, &params).unwrap();
+    out.graph.check_invariants().unwrap();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 500, 10, 1);
+    let r = recall_at(&out.graph, &truth, Some(&ids), 10);
+    assert!(r > 0.95, "sift-like recall@10 = {r}");
+    // distance evaluation must dominate the coordinator phases (the
+    // paper: >90% of NN-Descent time is distance calculation; we accept
+    // a softer 50% for the native engine with all coordinator overheads)
+    let phases = &out.stats.phases;
+    let total: f64 = phases.iter().map(|(_, s)| s).sum();
+    let xmatch: f64 = phases
+        .iter()
+        .filter(|(n, _)| *n == "2.crossmatch")
+        .map(|(_, s)| s)
+        .sum();
+    assert!(
+        xmatch / total > 0.5,
+        "crossmatch share {:.2} too low ({phases:?})",
+        xmatch / total
+    );
+}
+
+#[test]
+fn glove_cosine_works_end_to_end() {
+    let ds = synth::glove_like(2_000, 12);
+    let params = GnndParams::default().with_k(16).with_p(8).with_iters(10);
+    let g = build(&ds, &params).unwrap();
+    g.check_invariants().unwrap();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 400, 10, 2);
+    let r = recall_at(&g, &truth, Some(&ids), 10);
+    assert!(r > 0.8, "glove-like cosine recall@10 = {r}");
+}
+
+#[test]
+fn gist_like_high_dim_works() {
+    let ds = synth::gist_like(800, 13);
+    let params = GnndParams::default().with_k(16).with_p(8).with_iters(8);
+    let g = build(&ds, &params).unwrap();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 300, 10, 3);
+    let r = recall_at(&g, &truth, Some(&ids), 10);
+    assert!(r > 0.8, "gist-like recall@10 = {r} (d=960, low intrinsic dim)");
+}
+
+#[test]
+fn strategies_agree_on_quality_but_segment_correctly() {
+    let ds = synth::clustered(1_500, 8, 14);
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 400, 10, 4);
+    let mut recalls = Vec::new();
+    for update in [
+        UpdateStrategy::InsertAll,
+        UpdateStrategy::SelectiveSingleLock,
+        UpdateStrategy::SelectiveSegmented,
+    ] {
+        let params = GnndParams::default()
+            .with_k(32)
+            .with_p(16)
+            .with_iters(8)
+            .with_update(update);
+        let g = build(&ds, &params).unwrap();
+        g.check_invariants().unwrap();
+        recalls.push((update, recall_at(&g, &truth, Some(&ids), 10)));
+    }
+    for (u, r) in &recalls {
+        assert!(*r > 0.9, "{u:?}: recall {r}");
+    }
+    // selective update must not lose meaningful quality vs insert-all
+    let r1 = recalls[0].1;
+    let full = recalls[2].1;
+    assert!(full > r1 - 0.05, "selective lost too much: {full} vs {r1}");
+}
+
+#[test]
+fn updates_decay_across_iterations() {
+    let ds = synth::clustered(1_000, 8, 15);
+    let params = GnndParams::default().with_k(16).with_p(8).with_iters(12);
+    let out = build_with_stats(&ds, &params).unwrap();
+    let u = &out.stats.updates;
+    assert!(u.len() >= 3, "terminated too early: {u:?}");
+    // the hill-climb must slow down monotonically-ish: last < first/4
+    assert!(
+        *u.last().unwrap() < u[0] / 4,
+        "updates did not decay: {u:?}"
+    );
+}

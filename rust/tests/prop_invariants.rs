@@ -1,0 +1,168 @@
+//! Cross-module property tests (the DESIGN.md invariant list), using
+//! the crate's seeded mini-prop harness (`gnnd::util::prop`).
+
+use gnnd::config::{GnndParams, UpdateStrategy};
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::engine::{Batch, CrossmatchEngine, NativeEngine};
+use gnnd::gnnd::{build_with_stats, sample::parallel_sample};
+use gnnd::graph::{KnnGraph, EMPTY};
+use gnnd::metrics::recall_at;
+use gnnd::util::{prop, rng::Rng};
+
+#[test]
+fn prop_recall_bounded_and_exact_graph_is_one() {
+    prop::check("recall-bounds", 8, |rng| {
+        let n = 60 + rng.below(60);
+        let ds = synth::uniform(n, 4, rng.next_u64());
+        let k = 3 + rng.below(5);
+        let truth = groundtruth::exact_topk(&ds, k);
+        let g = crate_build_exact(&ds, &truth, k);
+        let r = recall_at(&g, &truth, None, k);
+        prop::assert_prop((r - 1.0).abs() < 1e-9, format!("exact graph recall {r}"))?;
+        let mut rng2 = Rng::new(rng.next_u64());
+        let rand_g = KnnGraph::random_init(&ds, k, &mut rng2);
+        let rr = recall_at(&rand_g, &truth, None, k);
+        prop::assert_prop((0.0..=1.0).contains(&rr), format!("recall out of bounds {rr}"))
+    });
+}
+
+fn crate_build_exact(ds: &gnnd::Dataset, truth: &[Vec<u32>], k: usize) -> KnnGraph {
+    let mut g = KnnGraph::empty(ds.len(), k);
+    for (u, row) in truth.iter().enumerate() {
+        for &v in row.iter().take(k) {
+            g.insert(u, v, ds.dist(u, v as usize), false);
+        }
+    }
+    g
+}
+
+#[test]
+fn prop_phi_never_increases_under_any_strategy() {
+    prop::check("phi-monotone", 6, |rng| {
+        let n = 150 + rng.below(150);
+        let ds = synth::clustered(n, 6, rng.next_u64());
+        let strat = match rng.below(3) {
+            0 => UpdateStrategy::InsertAll,
+            1 => UpdateStrategy::SelectiveSingleLock,
+            _ => UpdateStrategy::SelectiveSegmented,
+        };
+        let mut params = GnndParams::default()
+            .with_k(4 + rng.below(12))
+            .with_iters(5)
+            .with_update(strat)
+            .with_seed(rng.next_u64());
+        params.p = (params.k / 2).max(1);
+        params.trace_phi = true;
+        let out = build_with_stats(&ds, &params).map_err(|e| e.to_string())?;
+        for w in out.stats.phi_trace.windows(2) {
+            prop::assert_prop(
+                w[1] <= w[0] + 1e-6,
+                format!("phi increased under {strat:?}: {:?}", out.stats.phi_trace),
+            )?;
+        }
+        out.graph.check_invariants().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_sampling_bounds_hold_for_all_p() {
+    prop::check("sampling-bounds", 10, |rng| {
+        let n = 50 + rng.below(100);
+        let k = 4 + rng.below(12);
+        let p = 1 + rng.below(k);
+        let ds = synth::uniform(n, 4, rng.next_u64());
+        let mut g = KnnGraph::random_init(&ds, k.min(n - 1), &mut Rng::new(rng.next_u64()));
+        let lists = parallel_sample(&mut g, p, 1 + rng.below(4));
+        for u in 0..n {
+            let live_new = lists.new_row(u).iter().filter(|&&x| x != EMPTY).count();
+            let live_old = lists.old_row(u).iter().filter(|&&x| x != EMPTY).count();
+            prop::assert_prop(live_new <= 2 * p, format!("u={u} new {live_new} > 2p"))?;
+            prop::assert_prop(live_old <= 2 * p, format!("u={u} old {live_old} > 2p"))?;
+            // no duplicates, no self
+            let mut seen = std::collections::HashSet::new();
+            for &v in lists.new_row(u).iter().filter(|&&x| x != EMPTY) {
+                prop::assert_prop(v as usize != u, "self-sample")?;
+                prop::assert_prop(seen.insert(v), "duplicate sample")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crossmatch_winner_is_true_minimum() {
+    prop::check("crossmatch-argmin", 20, |rng| {
+        let n = 40 + rng.below(60);
+        let ds = synth::uniform(n, 3 + rng.below(8), rng.next_u64());
+        let s = 2 + rng.below(10);
+        let rows = 1 + rng.below(4);
+        let mut new_ids = Vec::new();
+        let mut old_ids = Vec::new();
+        for _ in 0..rows * s {
+            new_ids.push(rng.below(n) as u32);
+            old_ids.push(rng.below(n) as u32);
+        }
+        let gn: Vec<i32> = new_ids.iter().map(|&x| x as i32).collect();
+        let go: Vec<i32> = old_ids.iter().map(|&x| x as i32).collect();
+        let batch = Batch { s, rows, new_ids: &new_ids, old_ids: &old_ids, groups_new: &gn, groups_old: &go };
+        let out = NativeEngine.crossmatch(&ds, &batch).map_err(|e| e.to_string())?;
+        for r in 0..rows {
+            for i in 0..s {
+                let li = r * s + i;
+                let u = new_ids[li];
+                // check the no winner against a brute scan
+                let mut best = f32::INFINITY;
+                for j in 0..s {
+                    let v = old_ids[r * s + j];
+                    if v != u {
+                        best = best.min(ds.dist(u as usize, v as usize));
+                    }
+                }
+                if out.no_idx[li] >= 0 {
+                    prop::assert_prop(
+                        (out.no_dist[li] - best).abs() < 1e-4 * best.max(1.0),
+                        format!("no winner {} != min {best}", out.no_dist[li]),
+                    )?;
+                } else {
+                    prop::assert_prop(best.is_infinite(), "missed a valid old pair")?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_insert_never_breaks_invariants_under_concurrency() {
+    prop::check("concurrent-invariants", 4, |rng| {
+        let n = 64;
+        let k = 8 + rng.below(24);
+        let width = 1 + rng.below(k);
+        let mut g = KnnGraph::empty(n, k);
+        let jobs: Vec<Vec<(usize, u32, f32)>> = (0..4)
+            .map(|_| {
+                (0..800)
+                    .map(|_| (rng.below(n), rng.below(n) as u32, rng.f32() * 100.0))
+                    .collect()
+            })
+            .collect();
+        {
+            let cg = gnnd::graph::concurrent::ConcurrentGraph::new(&mut g, width);
+            crossbeam_utils::thread::scope(|s| {
+                for job in &jobs {
+                    let cg = &cg;
+                    s.spawn(move |_| {
+                        for &(u, v, d) in job {
+                            if u != v as usize {
+                                cg.insert(u, v, d);
+                            }
+                        }
+                    });
+                }
+            })
+            .unwrap();
+        }
+        g.normalize_all(2);
+        g.check_invariants().map_err(|e| e.to_string())
+    });
+}

@@ -1,0 +1,158 @@
+//! Integration: the PJRT runtime against the native oracle.
+//!
+//! These tests are the Rust-side half of the L1/L2 correctness story:
+//! python/tests pin kernel-vs-ref and model semantics; here the *same
+//! AOT artifacts* must agree with the bit-compatible native engine when
+//! driven by the real coordinator. Skipped (with a note) when
+//! `artifacts/` has not been built.
+
+use gnnd::config::{EngineKind, Metric};
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::engine::{Batch, CrossmatchEngine, NativeEngine};
+use gnnd::gnnd::{build_with_stats, GnndParams};
+use gnnd::graph::EMPTY;
+use gnnd::metrics::recall_at;
+use gnnd::runtime::{artifacts_available, BruteforceExec, PjrtEngine};
+use gnnd::util::rng::Rng;
+
+const DIR: &str = "artifacts";
+
+fn need_artifacts() -> bool {
+    if artifacts_available(DIR) {
+        true
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn pjrt_crossmatch_matches_native_oracle() {
+    if !need_artifacts() {
+        return;
+    }
+    let ds = synth::sift_like(500, 21);
+    let engine = PjrtEngine::load(DIR, 32, ds.d, Metric::L2).unwrap();
+    let mut rng = Rng::new(7);
+    let rows = 20;
+    let s = 32;
+    let mut new_ids = Vec::new();
+    let mut old_ids = Vec::new();
+    for _ in 0..rows * s {
+        // include empty slots
+        let a = rng.below(ds.len() + 50);
+        new_ids.push(if a >= ds.len() { EMPTY } else { a as u32 });
+        let b = rng.below(ds.len() + 50);
+        old_ids.push(if b >= ds.len() { EMPTY } else { b as u32 });
+    }
+    let to_g = |v: &Vec<u32>| -> Vec<i32> {
+        v.iter().map(|&x| if x == EMPTY { -1 } else { x as i32 }).collect()
+    };
+    let (gn, go) = (to_g(&new_ids), to_g(&old_ids));
+    let batch = Batch { s, rows, new_ids: &new_ids, old_ids: &old_ids, groups_new: &gn, groups_old: &go };
+    let a = engine.crossmatch(&ds, &batch).unwrap();
+    let b = NativeEngine.crossmatch(&ds, &batch).unwrap();
+    let mut checked = 0;
+    for i in 0..rows * s {
+        // sentinels must agree exactly
+        assert_eq!(a.nn_idx[i] < 0, b.nn_idx[i] < 0, "nn sentinel i={i}");
+        assert_eq!(a.no_idx[i] < 0, b.no_idx[i] < 0, "no sentinel i={i}");
+        assert_eq!(a.on_idx[i] < 0, b.on_idx[i] < 0, "on sentinel i={i}");
+        // distances must agree to f32 tolerance (winner ids may differ
+        // on near-ties between the matmul-form and scalar distance)
+        for (da, db, tag) in [
+            (a.nn_dist[i], b.nn_dist[i], "nn"),
+            (a.no_dist[i], b.no_dist[i], "no"),
+            (a.on_dist[i], b.on_dist[i], "on"),
+        ] {
+            if da.is_finite() || db.is_finite() {
+                let tol = 1e-2 * db.abs().max(1.0);
+                assert!((da - db).abs() <= tol, "{tag} i={i}: pjrt={da} native={db}");
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > rows * s, "suspiciously few finite results ({checked})");
+}
+
+#[test]
+fn pjrt_engine_builds_a_good_graph() {
+    if !need_artifacts() {
+        return;
+    }
+    let ds = synth::sift_like(1_200, 22);
+    let params = GnndParams::default()
+        .with_k(16)
+        .with_p(8)
+        .with_iters(6)
+        .with_engine(EngineKind::Pjrt);
+    let out = build_with_stats(&ds, &params).unwrap();
+    assert_eq!(out.stats.engine, "pjrt");
+    out.graph.check_invariants().unwrap();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 300, 10, 5);
+    let r = recall_at(&out.graph, &truth, Some(&ids), 10);
+    assert!(r > 0.85, "pjrt-engine recall@10 = {r}");
+}
+
+#[test]
+fn pjrt_and_native_engines_agree_on_final_quality() {
+    if !need_artifacts() {
+        return;
+    }
+    let ds = synth::deep_like(800, 23);
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 300, 10, 6);
+    let mut rs = Vec::new();
+    for engine in [EngineKind::Native, EngineKind::Pjrt] {
+        let params = GnndParams::default()
+            .with_k(16)
+            .with_p(8)
+            .with_iters(6)
+            .with_engine(engine);
+        let out = build_with_stats(&ds, &params).unwrap();
+        rs.push(recall_at(&out.graph, &truth, Some(&ids), 10));
+    }
+    assert!(
+        (rs[0] - rs[1]).abs() < 0.06,
+        "native {} vs pjrt {} recall divergence",
+        rs[0],
+        rs[1]
+    );
+}
+
+#[test]
+fn pjrt_bruteforce_matches_exact_truth() {
+    if !need_artifacts() {
+        return;
+    }
+    let ds = synth::sift_like(700, 24);
+    let exec = BruteforceExec::load(DIR, ds.d, Metric::L2).unwrap();
+    let qids: Vec<usize> = (0..40).collect();
+    let got = exec.topk(&ds, &qids, 10).unwrap();
+    let want = groundtruth::exact_topk_for(&ds, &qids, 10);
+    for (q, (g, w)) in got.iter().zip(&want).enumerate() {
+        // compare by distances (id ties allowed)
+        let gd: Vec<f32> = g.iter().map(|&id| ds.dist(qids[q], id as usize)).collect();
+        let wd: Vec<f32> = w.iter().map(|&id| ds.dist(qids[q], id as usize)).collect();
+        assert_eq!(gd.len(), wd.len(), "q={q}");
+        for (a, b) in gd.iter().zip(&wd) {
+            assert!((a - b).abs() <= 1e-2 * b.max(1.0), "q={q}: {gd:?} vs {wd:?}");
+        }
+    }
+}
+
+#[test]
+fn cosine_metric_routes_to_ip_artifact() {
+    if !need_artifacts() {
+        return;
+    }
+    let ds = synth::glove_like(600, 25);
+    let params = GnndParams::default()
+        .with_k(12)
+        .with_p(6)
+        .with_iters(5)
+        .with_engine(EngineKind::Pjrt);
+    let out = build_with_stats(&ds, &params).unwrap();
+    let (ids, truth) = groundtruth::sampled_truth(&ds, 200, 10, 7);
+    let r = recall_at(&out.graph, &truth, Some(&ids), 10);
+    assert!(r > 0.75, "cosine via ip artifact recall {r}");
+}
