@@ -1,0 +1,82 @@
+//! Search service demo: the full serve path over a constructed graph —
+//! build once, then answer online ANN queries (single, batched, and a
+//! closed-loop recall-vs-QPS sweep). Everything after the build is the
+//! serving subsystem; the graph could equally come from `gnnd build`,
+//! a GGM merge, or the out-of-core pipeline via `KnnGraph::load`.
+//!
+//! ```bash
+//! cargo run --release --example search_service
+//! GNND_SEARCH_N=50000 cargo run --release --example search_service
+//! ```
+
+use gnnd::dataset::synth;
+use gnnd::gnnd::{build, GnndParams};
+use gnnd::search::batch::BatchExecutor;
+use gnnd::search::serve::{self, ServeConfig};
+use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
+use gnnd::util::timer::Timer;
+
+fn main() -> gnnd::Result<()> {
+    let n: usize = std::env::var("GNND_SEARCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+
+    // 1. offline: construct the k-NN graph (the index structure)
+    let ds = synth::sift_like(n, 0x5E2C);
+    let t = Timer::start();
+    let graph = build(&ds, &GnndParams::default())?;
+    println!("index built: {} objects, k={} in {:.1}s", graph.n(), graph.k(), t.secs());
+
+    // 2. online: wrap it in a SearchIndex (entry selection only — no
+    //    copies, any loaded graph serves the same way)
+    let params = SearchParams::default()
+        .with_ef(64)
+        .with_entries(EntryStrategy::KMeans, 16);
+    let index = SearchIndex::new(&ds, &graph, params)?;
+    println!("entry points: {:?}", index.entries());
+
+    // 3. a single query with a warm scratch (the zero-allocation path)
+    let mut scratch = index.make_scratch();
+    let mut hits = Vec::new();
+    let t = Timer::start();
+    index.search_into_excluding(ds.vec(0), 10, 0, &mut scratch, &mut hits);
+    println!(
+        "query 0: top-10 in {:.3} ms ({} distance evals, {} hops)",
+        t.ms(),
+        scratch.dist_evals,
+        scratch.hops
+    );
+    for (rank, (d, id)) in hits.iter().enumerate() {
+        println!("  {:>2}. id={id:<8} dist={d:.1}", rank + 1);
+    }
+
+    // 4. a batch of queries fanned across worker threads
+    let nq = 1_000.min(n);
+    let mut qbuf = Vec::with_capacity(nq * ds.d);
+    for q in 0..nq {
+        qbuf.extend_from_slice(ds.vec(q));
+    }
+    let exec = BatchExecutor::new(&index, 0);
+    let t = Timer::start();
+    let results = exec.run(&qbuf, ds.d, 10);
+    let secs = t.secs();
+    println!(
+        "batched: {} queries on {} threads in {:.2}s ({:.0} qps)",
+        results.len(),
+        exec.threads(),
+        secs,
+        results.len() as f64 / secs.max(1e-9)
+    );
+
+    // 5. the operating curve: recall vs QPS over an ef sweep
+    let cfg = ServeConfig {
+        ef_sweep: vec![8, 32, 128],
+        n_queries: 1_000.min(n),
+        distinct_queries: 500.min(n),
+        ..Default::default()
+    };
+    let report = serve::run_sweep(&ds, &graph, &cfg)?;
+    println!("{}", report.render());
+    Ok(())
+}

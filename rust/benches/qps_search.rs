@@ -1,0 +1,42 @@
+//! Serving benchmark: build a GNND graph at GNND_SCALE and sweep the
+//! search subsystem's `ef` knob, printing the recall-vs-QPS operating
+//! curve (QPS, p50/p95/p99 latency, recall@10) — the closed-loop
+//! counterpart of the construction-side fig benches.
+//!
+//! ```bash
+//! cargo bench --bench qps_search                 # standard scale
+//! GNND_SCALE=quick cargo bench --bench qps_search
+//! GNND_THREADS=8 cargo bench --bench qps_search
+//! ```
+
+use gnnd::dataset::synth;
+use gnnd::gnnd::GnndParams;
+use gnnd::search::serve::{self, ServeConfig};
+use gnnd::search::{EntryStrategy, SearchParams};
+use gnnd::util::timer::Timer;
+
+fn main() {
+    let scale = gnnd::experiments::Scale::from_env();
+    let n = scale.n_base();
+    eprintln!("running qps_search at {scale:?} scale (GNND_SCALE to change): n={n}");
+
+    let ds = synth::sift_like(n, 0x5EBE);
+    let t = Timer::start();
+    let graph = gnnd::gnnd::build(&ds, &GnndParams::default()).expect("gnnd build");
+    eprintln!("graph built in {:.1}s (k={})", t.secs(), graph.k());
+
+    let cfg = ServeConfig {
+        k: 10,
+        ef_sweep: vec![8, 16, 32, 64, 128, 256],
+        n_queries: 2_000.min(n),
+        distinct_queries: 1_000.min(n),
+        threads: 0,
+        params: SearchParams::default().with_entries(EntryStrategy::KMeans, 16),
+        ..Default::default()
+    };
+    let report = serve::run_sweep(&ds, &graph, &cfg).expect("serve sweep");
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+}

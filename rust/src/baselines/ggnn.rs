@@ -18,8 +18,8 @@
 //! measures that gap on this implementation.
 
 use crate::dataset::Dataset;
-use crate::dataset::groundtruth::ordered::F32;
 use crate::graph::{KnnGraph, Neighbor};
+use crate::search::{beam_search, QuerySpec, SearchScratch};
 use crate::util::{rng::Rng, split_ranges};
 
 /// GGNN build parameters.
@@ -56,6 +56,12 @@ pub struct GgnnIndex {
 /// Best-first search over `graph` (ids of `subset`, which indexes `ds`)
 /// for query vector `q`: returns up to `k` (dist, id) ascending.
 /// `ef = k + ceil(tau * k)` is the exploration width.
+///
+/// Thin adapter over [`crate::search::beam_search`] — the codebase's
+/// single greedy-search implementation — translating GGNN's slack
+/// factor `tau` into the `ef` exploration width. tau=0.3..0.5 are the
+/// GGNN paper's operating points; larger tau trades time for recall.
+#[allow(clippy::too_many_arguments)]
 pub fn search_graph(
     ds: &Dataset,
     graph: &KnnGraph,
@@ -66,61 +72,29 @@ pub fn search_graph(
     entries: &[u32],
     exclude: u32,
 ) -> Vec<(f32, u32)> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    // tau is GGNN's slack knob: it widens the exploration beam beyond
-    // the best-k frontier (ef-style). tau=0.3..0.5 are the paper's
-    // operating points; larger tau trades time for recall.
+    let mut scratch = SearchScratch::new();
+    search_graph_with(ds, graph, subset, q, k, tau, entries, exclude, &mut scratch)
+}
+
+/// [`search_graph`] with a caller-kept scratch — the build/merge loops
+/// below reuse one scratch per worker thread so the per-query visited
+/// set is not reallocated and re-zeroed O(n) times.
+#[allow(clippy::too_many_arguments)]
+fn search_graph_with(
+    ds: &Dataset,
+    graph: &KnnGraph,
+    subset: Option<&[u32]>,
+    q: &[f32],
+    k: usize,
+    tau: f64,
+    entries: &[u32],
+    exclude: u32,
+    scratch: &mut SearchScratch,
+) -> Vec<(f32, u32)> {
     let ef = k + ((4.0 * tau * k as f64).ceil() as usize).max(1);
-    let to_global = |local: u32| -> u32 {
-        match subset {
-            Some(map) => map[local as usize],
-            None => local,
-        }
-    };
-    let mut visited = std::collections::HashSet::new();
-    // frontier: min-heap by distance; results: max-heap of best ef
-    let mut frontier: BinaryHeap<Reverse<(F32, u32)>> = BinaryHeap::new();
-    let mut results: BinaryHeap<(F32, u32)> = BinaryHeap::new();
-    for &e in entries {
-        if visited.insert(e) {
-            let d = ds.dist_to(to_global(e) as usize, q);
-            frontier.push(Reverse((F32(d), e)));
-            if to_global(e) != exclude {
-                results.push((F32(d), e));
-            }
-        }
-    }
-    while let Some(Reverse((F32(d), u))) = frontier.pop() {
-        // backtracking bound: stop when the closest open candidate is
-        // worse than the worst retained result and results are full
-        if results.len() >= ef {
-            if let Some(&(F32(w), _)) = results.peek() {
-                if d > w {
-                    break;
-                }
-            }
-        }
-        for e in graph.list(u as usize) {
-            if e.is_empty() {
-                break;
-            }
-            if !visited.insert(e.id) {
-                continue;
-            }
-            let dv = ds.dist_to(to_global(e.id) as usize, q);
-            frontier.push(Reverse((F32(dv), e.id)));
-            if to_global(e.id) != exclude {
-                results.push((F32(dv), e.id));
-                if results.len() > ef {
-                    results.pop();
-                }
-            }
-        }
-    }
-    let mut out: Vec<(f32, u32)> = results.into_iter().map(|(F32(d), id)| (d, to_global(id))).collect();
-    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    out.truncate(k);
+    let spec = QuerySpec { q, k, ef, beam_width: 0, max_hops: 0, entries, exclude };
+    let mut out = Vec::with_capacity(k);
+    beam_search(ds, graph, subset, &spec, scratch, &mut out);
     out
 }
 
@@ -179,9 +153,23 @@ pub fn build(ds: &Dataset, params: &GgnnParams) -> GgnnIndex {
                 .map(|i| ((i * m) / m.min(8)) as u32)
                 .collect();
             let ranges = split_ranges(ln, threads);
-            let results: Vec<Vec<(f32, u32)>> = parallel_map(&ranges, |ul| {
-                let u = subset[ul] as usize;
-                search_graph(ds, ug, Some(usubset), ds.vec(u), lk, params.tau, &entries, u as u32)
+            let results: Vec<Vec<(f32, u32)>> = parallel_map(&ranges, |r| {
+                let mut scratch = SearchScratch::new();
+                r.map(|ul| {
+                    let u = subset[ul] as usize;
+                    search_graph_with(
+                        ds,
+                        ug,
+                        Some(usubset),
+                        ds.vec(u),
+                        lk,
+                        params.tau,
+                        &entries,
+                        u as u32,
+                        &mut scratch,
+                    )
+                })
+                .collect()
             });
             // usubset ids are global; map back into this layer's local
             // index space where present (sampled layers are subsets).
@@ -212,10 +200,24 @@ pub fn build(ds: &Dataset, params: &GgnnParams) -> GgnnIndex {
     for _ in 0..params.refinements {
         let ranges = split_ranges(n, threads);
         let graph_ref = &graph;
-        let found: Vec<Vec<(f32, u32)>> = parallel_map(&ranges, |u| {
-            let mut entries: Vec<u32> = graph_ref.ids(u).take(8).collect();
-            entries.extend_from_slice(&globals);
-            search_graph(ds, graph_ref, None, ds.vec(u), k, params.tau, &entries, u as u32)
+        let found: Vec<Vec<(f32, u32)>> = parallel_map(&ranges, |r| {
+            let mut scratch = SearchScratch::new();
+            r.map(|u| {
+                let mut entries: Vec<u32> = graph_ref.ids(u).take(8).collect();
+                entries.extend_from_slice(&globals);
+                search_graph_with(
+                    ds,
+                    graph_ref,
+                    None,
+                    ds.vec(u),
+                    k,
+                    params.tau,
+                    &entries,
+                    u as u32,
+                    &mut scratch,
+                )
+            })
+            .collect()
         });
         for (u, cands) in found.into_iter().enumerate() {
             for (d, v) in cands {
@@ -259,12 +261,16 @@ pub fn merge_by_search(
     let e2 = spread(n2);
     let half = (k / 2).max(1);
     let ranges = split_ranges(n, threads);
-    let found: Vec<Vec<(f32, u32)>> = parallel_map(&ranges, |u| {
-        if u < n1 {
-            search_graph(ds, g2, Some(&sub2), ds.vec(u), half, tau, &e2, u as u32)
-        } else {
-            search_graph(ds, g1, Some(&sub1), ds.vec(u), half, tau, &e1, u as u32)
-        }
+    let found: Vec<Vec<(f32, u32)>> = parallel_map(&ranges, |r| {
+        let mut scratch = SearchScratch::new();
+        r.map(|u| {
+            if u < n1 {
+                search_graph_with(ds, g2, Some(&sub2), ds.vec(u), half, tau, &e2, u as u32, &mut scratch)
+            } else {
+                search_graph_with(ds, g1, Some(&sub1), ds.vec(u), half, tau, &e1, u as u32, &mut scratch)
+            }
+        })
+        .collect()
     });
     for (u, cands) in found.into_iter().enumerate() {
         for (d, v) in cands {
@@ -274,10 +280,12 @@ pub fn merge_by_search(
     joined
 }
 
-/// Map `f` over `0..n` in parallel ranges, preserving order.
+/// Map `f` over each range on its own thread, preserving order. `f`
+/// receives the whole range so it can keep per-thread state (e.g. one
+/// search scratch) across its items.
 fn parallel_map<T: Send>(
     ranges: &[std::ops::Range<usize>],
-    f: impl Fn(usize) -> T + Sync,
+    f: impl Fn(std::ops::Range<usize>) -> Vec<T> + Sync,
 ) -> Vec<T> {
     let mut out: Vec<Vec<T>> = Vec::new();
     crossbeam_utils::thread::scope(|s| {
@@ -286,7 +294,7 @@ fn parallel_map<T: Send>(
             .map(|r| {
                 let r = r.clone();
                 let f = &f;
-                s.spawn(move |_| r.map(f).collect::<Vec<T>>())
+                s.spawn(move |_| f(r))
             })
             .collect();
         for h in handles {

@@ -12,8 +12,15 @@
 //!   sampling, batch assembly, selective update with segmented
 //!   spinlocks, the GGM merge primitive, and the out-of-core sharded
 //!   construction pipeline. The hot loop executes the AOT artifacts via
-//!   the PJRT CPU client (see [`runtime`]); a bit-exact native engine
-//!   ([`gnnd::engine`]) serves as fallback and oracle.
+//!   the PJRT CPU client (see [`runtime`]; gated behind the `pjrt`
+//!   cargo feature); a bit-exact native engine ([`gnnd::engine`])
+//!   serves as fallback and oracle.
+//! * **Serving** ([`search`]): every finished graph doubles as an ANN
+//!   index — [`search::SearchIndex`] answers online queries with
+//!   best-first beam search (zero-allocation hot path),
+//!   [`search::batch`] fans multi-query batches across worker threads,
+//!   and [`search::serve`] benchmarks the recall-vs-QPS operating
+//!   curve of a deployment.
 //!
 //! Python is never on the construction path: after `make artifacts` the
 //! binary is self-contained.
@@ -23,10 +30,17 @@
 //! ```no_run
 //! use gnnd::dataset::synth;
 //! use gnnd::gnnd::{GnndParams, build};
+//! use gnnd::search::{SearchIndex, SearchParams};
 //!
 //! let data = synth::sift_like(10_000, 0xC0FFEE);
 //! let graph = build(&data, &GnndParams::default()).unwrap();
 //! println!("phi(G) = {}", graph.phi());
+//!
+//! // serve queries from the graph (note: a dataset row used as the
+//! // query matches itself at rank 1 — `search_into_excluding` skips it)
+//! let index = SearchIndex::new(&data, &graph, SearchParams::default()).unwrap();
+//! let top10 = index.search(data.vec(0), 10);
+//! println!("nearest to object 0 (after itself): {:?}", top10.get(1));
 //! ```
 
 pub mod baselines;
@@ -39,6 +53,7 @@ pub mod graph;
 pub mod merge;
 pub mod metrics;
 pub mod runtime;
+pub mod search;
 pub mod util;
 
 pub use config::{EngineKind, Metric};

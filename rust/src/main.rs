@@ -10,12 +10,24 @@
 //! gnnd merge        --data data.dsb --n1 N --g1 a.knng --g2 b.knng --out graph.knng
 //! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
+//! gnnd search       --data data.dsb --graph graph.knng (--query-id N | --queries q.dsb [--out res.ivecs])
+//!                   [--k 10] [--ef 64] [--entries 8] [--entry-strategy random|kmeans]
+//!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
+//! gnnd serve-bench  --data data.dsb --graph graph.knng [--k 10] [--ef 8,16,32,64,128]
+//!                   [--queries 2000] [--distinct 1000] [--threads 0]
+//!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
+//!                   [--max-hops 0] [--search-seed S] [--seed S]
 //! gnnd experiment   fig4|fig5|fig6|fig7|table2|all [--scale quick|standard|full]
 //! ```
 //!
+//! `search` answers ANN queries over a finished graph (single query or
+//! a batched `.dsb` query file); `serve-bench` replays a closed-loop
+//! query stream and prints the recall-vs-QPS table over an `ef` sweep.
+//!
 //! Flat `key=value` config files (see `configs/`) plus `--set` overrides
 //! configure every GnndParams knob; `--set engine=pjrt` switches the
-//! cross-matching hot path onto the AOT artifacts (`make artifacts`).
+//! cross-matching hot path onto the AOT artifacts (`make artifacts`;
+//! requires the `pjrt` cargo feature).
 
 use std::collections::VecDeque;
 
@@ -27,6 +39,7 @@ use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
 use gnnd::metrics::recall_at;
+use gnnd::search::{batch::BatchExecutor, serve, SearchIndex, SearchParams};
 use gnnd::util::timer::Timer;
 
 struct Args {
@@ -67,6 +80,20 @@ impl Args {
         }
     }
 
+    /// Shared search knobs. `--ef` is intentionally not parsed here:
+    /// `search` takes a single value, `serve-bench` a CSV sweep.
+    fn search_params(&self) -> anyhow::Result<SearchParams> {
+        let d = SearchParams::default();
+        Ok(SearchParams {
+            ef: d.ef,
+            beam_width: self.parse_or("beam-width", d.beam_width)?,
+            max_hops: self.parse_or("max-hops", d.max_hops)?,
+            n_entry: self.parse_or("entries", d.n_entry)?,
+            entry: self.parse_or("entry-strategy", d.entry)?,
+            seed: self.parse_or("search-seed", d.seed)?,
+        })
+    }
+
     fn params(&self) -> anyhow::Result<GnndParams> {
         let mut cfg = match self.get("config") {
             Some(path) => ConfigMap::from_file(path)?,
@@ -94,7 +121,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "gnnd — GPU-architecture NN-Descent on a Rust+XLA stack\n\
-         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|eval|experiment> [flags]\n\
+         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|eval|search|serve-bench|experiment> [flags]\n\
          see rust/src/main.rs header or README.md for full flag reference"
     );
 }
@@ -201,6 +228,103 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             let r = recall_at(&g, &truth, ids.as_deref(), at);
             println!("recall@{at} = {r:.4}   phi(G) = {:.4e}", g.phi());
             let _ = ds;
+        }
+        "search" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let g = KnnGraph::load(args.req("graph")?)?;
+            let k: usize = args.parse_or("k", 10usize)?;
+            let params = args.search_params()?.with_ef(args.parse_or("ef", 64usize)?);
+            let index = SearchIndex::new(&ds, &g, params)?;
+            match (args.get("query-id"), args.get("queries")) {
+                (Some(_), Some(_)) => {
+                    bail!("--query-id and --queries are mutually exclusive")
+                }
+                (Some(qid), None) => {
+                    let q: usize = qid.parse()?;
+                    anyhow::ensure!(q < ds.len(), "--query-id {q} out of range (n={})", ds.len());
+                    let t = Timer::start();
+                    let mut scratch = index.make_scratch();
+                    let mut out = Vec::new();
+                    index.search_into_excluding(ds.vec(q), k, q as u32, &mut scratch, &mut out);
+                    println!(
+                        "query {q}: top-{k} in {:.3} ms ({} distance evals, {} hops, ef={})",
+                        t.ms(),
+                        scratch.dist_evals,
+                        scratch.hops,
+                        index.params().ef
+                    );
+                    for (rank, (d, id)) in out.iter().enumerate() {
+                        println!("  {:>3}. id={id:<10} dist={d}", rank + 1);
+                    }
+                }
+                (None, Some(qfile)) => {
+                    let qs = io::read_dsb(qfile)?;
+                    anyhow::ensure!(
+                        qs.d == ds.d,
+                        "query dim {} != dataset dim {}",
+                        qs.d,
+                        ds.d
+                    );
+                    anyhow::ensure!(
+                        qs.metric == ds.metric,
+                        "query metric {} != dataset metric {} (cosine queries must be \
+                         written with the cosine metric so rows are normalized)",
+                        qs.metric,
+                        ds.metric
+                    );
+                    let threads: usize = args.parse_or("threads", 0usize)?;
+                    let t = Timer::start();
+                    let results = BatchExecutor::new(&index, threads).run(qs.raw(), qs.d, k);
+                    let secs = t.secs();
+                    println!(
+                        "{} queries x top-{k} in {:.3}s ({:.0} qps)",
+                        qs.len(),
+                        secs,
+                        qs.len() as f64 / secs.max(1e-9)
+                    );
+                    if let Some(out_path) = args.get("out") {
+                        let rows: Vec<Vec<u32>> = results
+                            .iter()
+                            .map(|r| r.iter().map(|&(_, id)| id).collect())
+                            .collect();
+                        io::write_ivecs(&rows, out_path)?;
+                        println!("wrote {out_path}");
+                    }
+                }
+                (None, None) => bail!("search needs --query-id <id> or --queries <file.dsb>"),
+            }
+        }
+        "serve-bench" => {
+            let ds = io::read_dsb(args.req("data")?)?;
+            let g = KnnGraph::load(args.req("graph")?)?;
+            let dcfg = serve::ServeConfig::default();
+            let ef_sweep = match args.get("ef") {
+                None => dcfg.ef_sweep.clone(),
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<usize>()
+                            .map_err(|e| anyhow::anyhow!("--ef {spec:?}: {e}"))
+                    })
+                    .collect::<anyhow::Result<Vec<usize>>>()?,
+            };
+            let cfg = serve::ServeConfig {
+                k: args.parse_or("k", dcfg.k)?,
+                ef_sweep,
+                n_queries: args.parse_or("queries", dcfg.n_queries)?,
+                distinct_queries: args.parse_or("distinct", dcfg.distinct_queries)?,
+                threads: args.parse_or("threads", dcfg.threads)?,
+                params: args.search_params()?,
+                seed: args.parse_or("seed", dcfg.seed)?,
+            };
+            let t = Timer::start();
+            let report = serve::run_sweep(&ds, &g, &cfg)?;
+            println!("{}", report.render());
+            match report.save_json("results") {
+                Ok(p) => println!("[saved {} — {:.1}s total]", p.display(), t.secs()),
+                Err(e) => println!("[save failed: {e}]"),
+            }
         }
         "experiment" => {
             let name = args

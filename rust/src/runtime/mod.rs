@@ -8,378 +8,488 @@
 //! out. HLO text (not a serialized proto) is the interchange format:
 //! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids.
+//!
+//! The `xla` crate is not part of the offline dependency closure, so
+//! the execution backend is gated behind the `pjrt` cargo feature.
+//! Without it, [`PjrtEngine`] / [`BruteforceExec`] are API-compatible
+//! stubs whose constructors return a descriptive error, and
+//! [`artifacts_available`] reports `false` so benches, examples and
+//! tests skip the PJRT paths gracefully.
 
 pub mod manifest;
 
-use anyhow::{bail, Context};
-
-use crate::config::Metric;
-use crate::dataset::Dataset;
-use crate::gnnd::engine::{Batch, CrossmatchEngine, CrossmatchResult};
-use crate::graph::EMPTY;
-
 pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
 
-/// `true` if a usable manifest exists under `dir` (benches/tests skip
-/// PJRT paths gracefully when artifacts were not built).
+/// `true` if the PJRT backend is compiled in *and* a usable manifest
+/// exists under `dir` (benches/tests skip PJRT paths gracefully when
+/// artifacts were not built or the backend is unavailable).
 pub fn artifacts_available(dir: &str) -> bool {
-    Manifest::load(dir).is_ok()
+    cfg!(feature = "pjrt") && Manifest::load(dir).is_ok()
 }
 
-/// Wrapper asserting thread mobility/shareability of the PJRT handles.
-///
-/// SAFETY: the PJRT CPU client is thread-safe — XLA documents that
-/// `PjRtLoadedExecutable::Execute` may be called concurrently from
-/// multiple threads (the GPU analogy: many streams feeding one device).
-/// The `xla` crate just never added the auto traits because it wraps
-/// raw pointers. Concurrent dispatch matters: serializing executions
-/// behind a mutex makes the runtime the coordinator bottleneck
-/// (§Perf runtime iteration 2: 3.4x end-to-end).
-struct SendExec(xla::PjRtLoadedExecutable);
-unsafe impl Send for SendExec {}
-unsafe impl Sync for SendExec {}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use anyhow::{bail, Context};
 
-struct SendClient(#[allow(dead_code)] xla::PjRtClient);
-unsafe impl Send for SendClient {}
-unsafe impl Sync for SendClient {}
+    use crate::config::Metric;
+    use crate::dataset::Dataset;
+    use crate::gnnd::engine::{Batch, CrossmatchEngine, CrossmatchResult};
+    use crate::graph::EMPTY;
 
-fn f32_bytes(xs: &[f32]) -> &[u8] {
-    // SAFETY: plain-old-data reinterpretation; host is little-endian,
-    // matching the PJRT CPU client's expectations.
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
-}
+    use super::manifest::{ArtifactMeta, Manifest};
 
-fn i32_bytes(xs: &[i32]) -> &[u8] {
-    // SAFETY: as above.
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
-}
+    /// Wrapper asserting thread mobility/shareability of the PJRT handles.
+    ///
+    /// SAFETY: the PJRT CPU client is thread-safe — XLA documents that
+    /// `PjRtLoadedExecutable::Execute` may be called concurrently from
+    /// multiple threads (the GPU analogy: many streams feeding one device).
+    /// The `xla` crate just never added the auto traits because it wraps
+    /// raw pointers. Concurrent dispatch matters: serializing executions
+    /// behind a mutex makes the runtime the coordinator bottleneck
+    /// (§Perf runtime iteration 2: 3.4x end-to-end).
+    struct SendExec(xla::PjRtLoadedExecutable);
+    unsafe impl Send for SendExec {}
+    unsafe impl Sync for SendExec {}
 
-fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> crate::Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {path:?}"))
-}
+    struct SendClient(#[allow(dead_code)] xla::PjRtClient);
+    unsafe impl Send for SendClient {}
+    unsafe impl Sync for SendClient {}
 
-/// The PJRT-backed cross-matching engine (the paper's on-device path).
-///
-/// One engine owns one compiled `crossmatch` executable whose static
-/// shape `[B, S, D]` covers the requested `(s, d)`: batches are padded
-/// up (empty slots carry group `-1`, vacant vector lanes are zero —
-/// exact for both metrics) and results sliced back down.
-pub struct PjrtEngine {
-    /// Pool of independently-compiled executables, each on its own CPU
-    /// client. One TFRT CPU client serializes its executions, so a
-    /// single compiled program caps the coordinator at one in-flight
-    /// cross-matching call; a small pool restores worker-thread
-    /// concurrency (§Perf runtime iteration 7, the paper's multi-stream
-    /// analog). Executables are declared before clients so they drop
-    /// first.
-    pool: Vec<SendExec>,
-    cursor: std::sync::atomic::AtomicUsize,
-    meta: ArtifactMeta,
-    _clients: Vec<SendClient>,
-}
-
-impl PjrtEngine {
-    /// Select, load and compile the smallest pallas `crossmatch`
-    /// artifact with `S >= s`, `D >= d` and a matching kernel metric,
-    /// with a single-executable pool (tests / light use).
-    pub fn load(dir: &str, s: usize, d: usize, metric: Metric) -> crate::Result<Self> {
-        Self::load_pooled(dir, s, d, metric, 1)
+    fn f32_bytes(xs: &[f32]) -> &[u8] {
+        // SAFETY: plain-old-data reinterpretation; host is little-endian,
+        // matching the PJRT CPU client's expectations.
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
     }
 
-    /// Like [`PjrtEngine::load`] with a pool of `pool` executables for
-    /// concurrent dispatch from the coordinator's worker threads.
-    /// `GNND_PJRT_POOL` overrides the requested size.
-    pub fn load_pooled(
-        dir: &str,
-        s: usize,
-        d: usize,
-        metric: Metric,
-        pool: usize,
-    ) -> crate::Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let meta = manifest.select_crossmatch(s, d, metric)?;
-        Self::load_artifact_pooled(dir, meta, pool)
+    fn i32_bytes(xs: &[i32]) -> &[u8] {
+        // SAFETY: as above.
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
     }
 
-    /// Load a specific artifact (benches use this to pin `impl=jnp`
-    /// twins for the kernel ablation).
-    pub fn load_artifact(dir: &str, meta: ArtifactMeta) -> crate::Result<Self> {
-        Self::load_artifact_pooled(dir, meta, 1)
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &std::path::Path,
+    ) -> crate::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
     }
 
-    pub fn load_artifact_pooled(
-        dir: &str,
+    /// The PJRT-backed cross-matching engine (the paper's on-device path).
+    ///
+    /// One engine owns one compiled `crossmatch` executable whose static
+    /// shape `[B, S, D]` covers the requested `(s, d)`: batches are padded
+    /// up (empty slots carry group `-1`, vacant vector lanes are zero —
+    /// exact for both metrics) and results sliced back down.
+    pub struct PjrtEngine {
+        /// Pool of independently-compiled executables, each on its own CPU
+        /// client. One TFRT CPU client serializes its executions, so a
+        /// single compiled program caps the coordinator at one in-flight
+        /// cross-matching call; a small pool restores worker-thread
+        /// concurrency (§Perf runtime iteration 7, the paper's multi-stream
+        /// analog). Executables are declared before clients so they drop
+        /// first.
+        pool: Vec<SendExec>,
+        cursor: std::sync::atomic::AtomicUsize,
         meta: ArtifactMeta,
-        pool: usize,
-    ) -> crate::Result<Self> {
-        let pool = std::env::var("GNND_PJRT_POOL")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(pool)
-            .max(1);
-        let path = std::path::Path::new(dir).join(&meta.file);
-        let mut execs = Vec::with_capacity(pool);
-        let mut clients = Vec::with_capacity(pool);
-        for _ in 0..pool {
-            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-            execs.push(SendExec(compile(&client, &path)?));
-            clients.push(SendClient(client));
+        _clients: Vec<SendClient>,
+    }
+
+    impl PjrtEngine {
+        /// Select, load and compile the smallest pallas `crossmatch`
+        /// artifact with `S >= s`, `D >= d` and a matching kernel metric,
+        /// with a single-executable pool (tests / light use).
+        pub fn load(dir: &str, s: usize, d: usize, metric: Metric) -> crate::Result<Self> {
+            Self::load_pooled(dir, s, d, metric, 1)
         }
-        Ok(PjrtEngine {
-            pool: execs,
-            cursor: std::sync::atomic::AtomicUsize::new(0),
-            meta,
-            _clients: clients,
-        })
-    }
 
-    /// Round-robin executable selection for this call.
-    fn next_exec(&self) -> &SendExec {
-        let i = self
-            .cursor
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        &self.pool[i % self.pool.len()]
-    }
+        /// Like [`PjrtEngine::load`] with a pool of `pool` executables for
+        /// concurrent dispatch from the coordinator's worker threads.
+        /// `GNND_PJRT_POOL` overrides the requested size.
+        pub fn load_pooled(
+            dir: &str,
+            s: usize,
+            d: usize,
+            metric: Metric,
+            pool: usize,
+        ) -> crate::Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let meta = manifest.select_crossmatch(s, d, metric)?;
+            Self::load_artifact_pooled(dir, meta, pool)
+        }
 
-    pub fn artifact(&self) -> &ArtifactMeta {
-        &self.meta
-    }
+        /// Load a specific artifact (benches use this to pin `impl=jnp`
+        /// twins for the kernel ablation).
+        pub fn load_artifact(dir: &str, meta: ArtifactMeta) -> crate::Result<Self> {
+            Self::load_artifact_pooled(dir, meta, 1)
+        }
 
-    /// Gather `[rows, S, D]` vectors + `[rows, S]` group ids, padded to
-    /// the artifact's static shape.
-    fn gather(
-        &self,
-        ds: &Dataset,
-        ids: &[u32],
-        groups: &[i32],
-        rows: usize,
-        s: usize,
-    ) -> (Vec<f32>, Vec<i32>) {
-        let (ab, as_, ad) = (self.meta.b, self.meta.s, self.meta.d);
-        debug_assert!(rows <= ab && s <= as_ && ds.d <= ad);
-        let mut vecs = vec![0f32; ab * as_ * ad];
-        let mut gids = vec![-1i32; ab * as_];
-        for r in 0..rows {
-            for i in 0..s {
-                let id = ids[r * s + i];
-                if id == EMPTY {
-                    continue;
-                }
-                let src = ds.vec(id as usize);
-                let dst = &mut vecs[(r * as_ + i) * ad..(r * as_ + i) * ad + ds.d];
-                dst.copy_from_slice(src);
-                gids[r * as_ + i] = groups[r * s + i];
+        pub fn load_artifact_pooled(
+            dir: &str,
+            meta: ArtifactMeta,
+            pool: usize,
+        ) -> crate::Result<Self> {
+            let pool = std::env::var("GNND_PJRT_POOL")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(pool)
+                .max(1);
+            let path = std::path::Path::new(dir).join(&meta.file);
+            let mut execs = Vec::with_capacity(pool);
+            let mut clients = Vec::with_capacity(pool);
+            for _ in 0..pool {
+                let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+                execs.push(SendExec(compile(&client, &path)?));
+                clients.push(SendClient(client));
             }
+            Ok(PjrtEngine {
+                pool: execs,
+                cursor: std::sync::atomic::AtomicUsize::new(0),
+                meta,
+                _clients: clients,
+            })
         }
-        (vecs, gids)
-    }
-}
 
-impl CrossmatchEngine for PjrtEngine {
-    fn crossmatch(&self, ds: &Dataset, batch: &Batch) -> crate::Result<CrossmatchResult> {
-        batch.validate();
-        if ds.metric.kernel_metric().as_str() != self.meta.metric {
-            bail!(
-                "artifact metric {} does not serve dataset metric {}",
-                self.meta.metric,
-                ds.metric
-            );
+        /// Round-robin executable selection for this call.
+        fn next_exec(&self) -> &SendExec {
+            let i = self
+                .cursor
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            &self.pool[i % self.pool.len()]
         }
-        let s = batch.s;
-        if s > self.meta.s {
-            bail!("batch width {s} exceeds artifact S={}", self.meta.s);
+
+        pub fn artifact(&self) -> &ArtifactMeta {
+            &self.meta
         }
-        if ds.d > self.meta.d {
-            bail!("dataset d={} exceeds artifact D={}", ds.d, self.meta.d);
-        }
-        let mut out = CrossmatchResult {
-            nn_idx: Vec::with_capacity(batch.rows * s),
-            nn_dist: Vec::with_capacity(batch.rows * s),
-            no_idx: Vec::with_capacity(batch.rows * s),
-            no_dist: Vec::with_capacity(batch.rows * s),
-            on_idx: Vec::with_capacity(batch.rows * s),
-            on_dist: Vec::with_capacity(batch.rows * s),
-        };
-        // Chunk by the artifact's batch dimension.
-        let mut row = 0;
-        while row < batch.rows {
-            let rows = (batch.rows - row).min(self.meta.b);
-            let rng = row * s..(row + rows) * s;
-            let (nv, ng) =
-                self.gather(ds, &batch.new_ids[rng.clone()], &batch.groups_new[rng.clone()], rows, s);
-            let (ov, og) =
-                self.gather(ds, &batch.old_ids[rng.clone()], &batch.groups_old[rng], rows, s);
+
+        /// Gather `[rows, S, D]` vectors + `[rows, S]` group ids, padded to
+        /// the artifact's static shape.
+        fn gather(
+            &self,
+            ds: &Dataset,
+            ids: &[u32],
+            groups: &[i32],
+            rows: usize,
+            s: usize,
+        ) -> (Vec<f32>, Vec<i32>) {
             let (ab, as_, ad) = (self.meta.b, self.meta.s, self.meta.d);
-            let lit_nv = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &[ab, as_, ad],
-                f32_bytes(&nv),
-            )?;
-            let lit_ng = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &[ab, as_],
-                i32_bytes(&ng),
-            )?;
-            let lit_ov = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &[ab, as_, ad],
-                f32_bytes(&ov),
-            )?;
-            let lit_og = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &[ab, as_],
-                i32_bytes(&og),
-            )?;
-            let tuple = {
-                let exec = self.next_exec();
-                let res = exec.0.execute::<xla::Literal>(&[lit_nv, lit_ng, lit_ov, lit_og])?;
-                res[0][0].to_literal_sync()?
-            };
-            let parts = tuple.to_tuple()?;
-            if parts.len() != 6 {
-                bail!("crossmatch artifact returned {} outputs, expected 6", parts.len());
-            }
-            let nn_idx: Vec<i32> = parts[0].to_vec()?;
-            let nn_dist: Vec<f32> = parts[1].to_vec()?;
-            let no_idx: Vec<i32> = parts[2].to_vec()?;
-            let no_dist: Vec<f32> = parts[3].to_vec()?;
-            let on_idx: Vec<i32> = parts[4].to_vec()?;
-            let on_dist: Vec<f32> = parts[5].to_vec()?;
-            // Slice [rows, S_art] back to [rows, s]. Winners always sit
-            // in live columns (< s): padded columns carry group -1 and
-            // are masked inside the artifact.
+            debug_assert!(rows <= ab && s <= as_ && ds.d <= ad);
+            let mut vecs = vec![0f32; ab * as_ * ad];
+            let mut gids = vec![-1i32; ab * as_];
             for r in 0..rows {
                 for i in 0..s {
-                    let li = r * as_ + i;
-                    out.nn_idx.push(nn_idx[li]);
-                    out.nn_dist.push(nn_dist[li]);
-                    out.no_idx.push(no_idx[li]);
-                    out.no_dist.push(no_dist[li]);
-                    out.on_idx.push(on_idx[li]);
-                    out.on_dist.push(on_dist[li]);
+                    let id = ids[r * s + i];
+                    if id == EMPTY {
+                        continue;
+                    }
+                    let src = ds.vec(id as usize);
+                    let dst = &mut vecs[(r * as_ + i) * ad..(r * as_ + i) * ad + ds.d];
+                    dst.copy_from_slice(src);
+                    gids[r * as_ + i] = groups[r * s + i];
                 }
             }
-            row += rows;
+            (vecs, gids)
         }
-        Ok(out)
     }
 
-    fn preferred_batch(&self) -> Option<usize> {
-        Some(self.meta.b)
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-}
-
-/// PJRT-backed exact top-k scans (the FAISS-BF baseline + ground truth
-/// on-device path), using the `bruteforce` artifact.
-pub struct BruteforceExec {
-    exec: SendExec,
-    meta: ArtifactMeta,
-    _client: SendClient,
-}
-
-impl BruteforceExec {
-    pub fn load(dir: &str, d: usize, metric: Metric) -> crate::Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let meta = manifest.select_bruteforce(d, metric)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let path = std::path::Path::new(dir).join(&meta.file);
-        let exec = compile(&client, &path)?;
-        Ok(BruteforceExec {
-            exec: SendExec(exec),
-            meta,
-            _client: SendClient(client),
-        })
-    }
-
-    pub fn artifact(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    /// Exact top-k (ids ascending by distance) of each query in `qids`
-    /// against the whole dataset, self-matches excluded. `k` must be
-    /// < artifact K (one slot is reserved to absorb the self-match).
-    pub fn topk(&self, ds: &Dataset, qids: &[usize], k: usize) -> crate::Result<Vec<Vec<u32>>> {
-        let (aq, an, ad, ak) = (self.meta.q, self.meta.n, self.meta.d, self.meta.k);
-        if k >= ak {
-            bail!("k={k} must be < artifact K={ak} (self-match slot)");
-        }
-        if ds.d > ad {
-            bail!("dataset d={} exceeds artifact D={ad}", ds.d);
-        }
-        let n = ds.len();
-        // Per-query running best lists, merged across base blocks.
-        let mut best: Vec<Vec<(f32, u32)>> = vec![Vec::new(); qids.len()];
-        let mut qstart = 0;
-        while qstart < qids.len() {
-            let qrows = (qids.len() - qstart).min(aq);
-            let mut qbuf = vec![0f32; aq * ad];
-            for (r, &q) in qids[qstart..qstart + qrows].iter().enumerate() {
-                qbuf[r * ad..r * ad + ds.d].copy_from_slice(ds.vec(q));
+    impl CrossmatchEngine for PjrtEngine {
+        fn crossmatch(&self, ds: &Dataset, batch: &Batch) -> crate::Result<CrossmatchResult> {
+            batch.validate();
+            if ds.metric.kernel_metric().as_str() != self.meta.metric {
+                bail!(
+                    "artifact metric {} does not serve dataset metric {}",
+                    self.meta.metric,
+                    ds.metric
+                );
             }
-            let lit_q = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &[aq, ad],
-                f32_bytes(&qbuf),
-            )?;
-            let mut bstart = 0;
-            while bstart < n {
-                let brows = (n - bstart).min(an);
-                let mut bbuf = vec![0f32; an * ad];
-                let mut valid = vec![0f32; an];
-                for r in 0..brows {
-                    bbuf[r * ad..r * ad + ds.d].copy_from_slice(ds.vec(bstart + r));
-                    valid[r] = 1.0;
-                }
-                let lit_b = xla::Literal::create_from_shape_and_untyped_data(
+            let s = batch.s;
+            if s > self.meta.s {
+                bail!("batch width {s} exceeds artifact S={}", self.meta.s);
+            }
+            if ds.d > self.meta.d {
+                bail!("dataset d={} exceeds artifact D={}", ds.d, self.meta.d);
+            }
+            let mut out = CrossmatchResult {
+                nn_idx: Vec::with_capacity(batch.rows * s),
+                nn_dist: Vec::with_capacity(batch.rows * s),
+                no_idx: Vec::with_capacity(batch.rows * s),
+                no_dist: Vec::with_capacity(batch.rows * s),
+                on_idx: Vec::with_capacity(batch.rows * s),
+                on_dist: Vec::with_capacity(batch.rows * s),
+            };
+            // Chunk by the artifact's batch dimension.
+            let mut row = 0;
+            while row < batch.rows {
+                let rows = (batch.rows - row).min(self.meta.b);
+                let rng = row * s..(row + rows) * s;
+                let (nv, ng) = self.gather(
+                    ds,
+                    &batch.new_ids[rng.clone()],
+                    &batch.groups_new[rng.clone()],
+                    rows,
+                    s,
+                );
+                let (ov, og) =
+                    self.gather(ds, &batch.old_ids[rng.clone()], &batch.groups_old[rng], rows, s);
+                let (ab, as_, ad) = (self.meta.b, self.meta.s, self.meta.d);
+                let lit_nv = xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::F32,
-                    &[an, ad],
-                    f32_bytes(&bbuf),
+                    &[ab, as_, ad],
+                    f32_bytes(&nv),
                 )?;
-                let lit_v = xla::Literal::create_from_shape_and_untyped_data(
+                let lit_ng = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &[ab, as_],
+                    i32_bytes(&ng),
+                )?;
+                let lit_ov = xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::F32,
-                    &[an],
-                    f32_bytes(&valid),
+                    &[ab, as_, ad],
+                    f32_bytes(&ov),
+                )?;
+                let lit_og = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &[ab, as_],
+                    i32_bytes(&og),
                 )?;
                 let tuple = {
-                    let res = self.exec.0.execute::<xla::Literal>(&[lit_q.clone(), lit_b, lit_v])?;
+                    let exec = self.next_exec();
+                    let res = exec.0.execute::<xla::Literal>(&[lit_nv, lit_ng, lit_ov, lit_og])?;
                     res[0][0].to_literal_sync()?
                 };
-                let (idx_l, dist_l) = tuple.to_tuple2()?;
-                let idx: Vec<i32> = idx_l.to_vec()?;
-                let dist: Vec<f32> = dist_l.to_vec()?;
-                for r in 0..qrows {
-                    let q = qids[qstart + r];
-                    let row = &mut best[qstart + r];
-                    for j in 0..ak {
-                        let id = idx[r * ak + j];
-                        if id < 0 {
-                            break;
-                        }
-                        let gid = (bstart + id as usize) as u32;
-                        if gid as usize == q {
-                            continue; // exclude self
-                        }
-                        row.push((dist[r * ak + j], gid));
-                    }
-                    row.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                    row.truncate(k);
+                let parts = tuple.to_tuple()?;
+                if parts.len() != 6 {
+                    bail!("crossmatch artifact returned {} outputs, expected 6", parts.len());
                 }
-                bstart += brows;
+                let nn_idx: Vec<i32> = parts[0].to_vec()?;
+                let nn_dist: Vec<f32> = parts[1].to_vec()?;
+                let no_idx: Vec<i32> = parts[2].to_vec()?;
+                let no_dist: Vec<f32> = parts[3].to_vec()?;
+                let on_idx: Vec<i32> = parts[4].to_vec()?;
+                let on_dist: Vec<f32> = parts[5].to_vec()?;
+                // Slice [rows, S_art] back to [rows, s]. Winners always sit
+                // in live columns (< s): padded columns carry group -1 and
+                // are masked inside the artifact.
+                for r in 0..rows {
+                    for i in 0..s {
+                        let li = r * as_ + i;
+                        out.nn_idx.push(nn_idx[li]);
+                        out.nn_dist.push(nn_dist[li]);
+                        out.no_idx.push(no_idx[li]);
+                        out.no_dist.push(no_dist[li]);
+                        out.on_idx.push(on_idx[li]);
+                        out.on_dist.push(on_dist[li]);
+                    }
+                }
+                row += rows;
             }
-            qstart += qrows;
+            Ok(out)
         }
-        Ok(best
-            .into_iter()
-            .map(|row| row.into_iter().map(|(_, id)| id).collect())
-            .collect())
+
+        fn preferred_batch(&self) -> Option<usize> {
+            Some(self.meta.b)
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+    }
+
+    /// PJRT-backed exact top-k scans (the FAISS-BF baseline + ground truth
+    /// on-device path), using the `bruteforce` artifact.
+    pub struct BruteforceExec {
+        exec: SendExec,
+        meta: ArtifactMeta,
+        _client: SendClient,
+    }
+
+    impl BruteforceExec {
+        pub fn load(dir: &str, d: usize, metric: Metric) -> crate::Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let meta = manifest.select_bruteforce(d, metric)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let path = std::path::Path::new(dir).join(&meta.file);
+            let exec = compile(&client, &path)?;
+            Ok(BruteforceExec {
+                exec: SendExec(exec),
+                meta,
+                _client: SendClient(client),
+            })
+        }
+
+        pub fn artifact(&self) -> &ArtifactMeta {
+            &self.meta
+        }
+
+        /// Exact top-k (ids ascending by distance) of each query in `qids`
+        /// against the whole dataset, self-matches excluded. `k` must be
+        /// < artifact K (one slot is reserved to absorb the self-match).
+        pub fn topk(&self, ds: &Dataset, qids: &[usize], k: usize) -> crate::Result<Vec<Vec<u32>>> {
+            let (aq, an, ad, ak) = (self.meta.q, self.meta.n, self.meta.d, self.meta.k);
+            if k >= ak {
+                bail!("k={k} must be < artifact K={ak} (self-match slot)");
+            }
+            if ds.d > ad {
+                bail!("dataset d={} exceeds artifact D={ad}", ds.d);
+            }
+            let n = ds.len();
+            // Per-query running best lists, merged across base blocks.
+            let mut best: Vec<Vec<(f32, u32)>> = vec![Vec::new(); qids.len()];
+            let mut qstart = 0;
+            while qstart < qids.len() {
+                let qrows = (qids.len() - qstart).min(aq);
+                let mut qbuf = vec![0f32; aq * ad];
+                for (r, &q) in qids[qstart..qstart + qrows].iter().enumerate() {
+                    qbuf[r * ad..r * ad + ds.d].copy_from_slice(ds.vec(q));
+                }
+                let lit_q = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &[aq, ad],
+                    f32_bytes(&qbuf),
+                )?;
+                let mut bstart = 0;
+                while bstart < n {
+                    let brows = (n - bstart).min(an);
+                    let mut bbuf = vec![0f32; an * ad];
+                    let mut valid = vec![0f32; an];
+                    for r in 0..brows {
+                        bbuf[r * ad..r * ad + ds.d].copy_from_slice(ds.vec(bstart + r));
+                        valid[r] = 1.0;
+                    }
+                    let lit_b = xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &[an, ad],
+                        f32_bytes(&bbuf),
+                    )?;
+                    let lit_v = xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &[an],
+                        f32_bytes(&valid),
+                    )?;
+                    let tuple = {
+                        let res =
+                            self.exec.0.execute::<xla::Literal>(&[lit_q.clone(), lit_b, lit_v])?;
+                        res[0][0].to_literal_sync()?
+                    };
+                    let (idx_l, dist_l) = tuple.to_tuple2()?;
+                    let idx: Vec<i32> = idx_l.to_vec()?;
+                    let dist: Vec<f32> = dist_l.to_vec()?;
+                    for r in 0..qrows {
+                        let q = qids[qstart + r];
+                        let row = &mut best[qstart + r];
+                        for j in 0..ak {
+                            let id = idx[r * ak + j];
+                            if id < 0 {
+                                break;
+                            }
+                            let gid = (bstart + id as usize) as u32;
+                            if gid as usize == q {
+                                continue; // exclude self
+                            }
+                            row.push((dist[r * ak + j], gid));
+                        }
+                        row.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                        row.truncate(k);
+                    }
+                    bstart += brows;
+                }
+                qstart += qrows;
+            }
+            Ok(best
+                .into_iter()
+                .map(|row| row.into_iter().map(|(_, id)| id).collect())
+                .collect())
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! API-compatible stubs used when the `pjrt` feature (and thus the
+    //! `xla` crate) is not compiled in. Constructors fail with a
+    //! descriptive error; since [`super::artifacts_available`] reports
+    //! `false` in this configuration, well-behaved callers never reach
+    //! them.
+
+    use anyhow::bail;
+
+    use crate::config::Metric;
+    use crate::dataset::Dataset;
+    use crate::gnnd::engine::{Batch, CrossmatchEngine, CrossmatchResult};
+
+    use super::manifest::ArtifactMeta;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime not compiled in (build with `--features pjrt` and a vendored `xla` crate)";
+
+    /// Stub of the PJRT cross-matching engine (`pjrt` feature off).
+    pub struct PjrtEngine {
+        meta: ArtifactMeta,
+    }
+
+    impl PjrtEngine {
+        pub fn load(dir: &str, s: usize, d: usize, metric: Metric) -> crate::Result<Self> {
+            Self::load_pooled(dir, s, d, metric, 1)
+        }
+
+        pub fn load_pooled(
+            _dir: &str,
+            _s: usize,
+            _d: usize,
+            _metric: Metric,
+            _pool: usize,
+        ) -> crate::Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn load_artifact(dir: &str, meta: ArtifactMeta) -> crate::Result<Self> {
+            Self::load_artifact_pooled(dir, meta, 1)
+        }
+
+        pub fn load_artifact_pooled(
+            _dir: &str,
+            _meta: ArtifactMeta,
+            _pool: usize,
+        ) -> crate::Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn artifact(&self) -> &ArtifactMeta {
+            &self.meta
+        }
+    }
+
+    impl CrossmatchEngine for PjrtEngine {
+        fn crossmatch(&self, _ds: &Dataset, _batch: &Batch) -> crate::Result<CrossmatchResult> {
+            bail!(UNAVAILABLE)
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-unavailable"
+        }
+    }
+
+    /// Stub of the PJRT bruteforce executor (`pjrt` feature off).
+    pub struct BruteforceExec {
+        meta: ArtifactMeta,
+    }
+
+    impl BruteforceExec {
+        pub fn load(_dir: &str, _d: usize, _metric: Metric) -> crate::Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn artifact(&self) -> &ArtifactMeta {
+            &self.meta
+        }
+
+        pub fn topk(&self, _ds: &Dataset, _qids: &[usize], _k: usize) -> crate::Result<Vec<Vec<u32>>> {
+            bail!(UNAVAILABLE)
+        }
+    }
+}
+
+pub use backend::{BruteforceExec, PjrtEngine};

@@ -1,0 +1,138 @@
+//! Batched multi-query execution across worker threads.
+//!
+//! Queries are split into contiguous ranges (same idiom as the
+//! coordinator in [`crate::graph::concurrent`] / the baselines): one
+//! crossbeam scoped thread per range, one warm
+//! [`crate::search::SearchScratch`] per thread reused across all of
+//! that thread's queries, results written
+//! into disjoint output chunks. Queries are independent, so batched
+//! results are bit-identical to single-query execution regardless of
+//! the thread count.
+
+use crate::graph::EMPTY;
+use crate::util::split_ranges;
+
+use super::SearchIndex;
+
+/// Multi-query executor over a [`SearchIndex`].
+pub struct BatchExecutor<'i, 'a> {
+    index: &'i SearchIndex<'a>,
+    threads: usize,
+}
+
+impl<'i, 'a> BatchExecutor<'i, 'a> {
+    /// `threads = 0` = auto ([`crate::util::num_threads`]).
+    pub fn new(index: &'i SearchIndex<'a>, threads: usize) -> Self {
+        let threads = if threads == 0 { crate::util::num_threads() } else { threads };
+        BatchExecutor { index, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Search every row of `queries` (row-major `[nq][d]`): returns one
+    /// ascending `(dist, id)` top-`k` list per query.
+    pub fn run(&self, queries: &[f32], d: usize, k: usize) -> Vec<Vec<(f32, u32)>> {
+        self.run_excluding(queries, d, k, &[])
+    }
+
+    /// Like [`BatchExecutor::run`], excluding object `exclude[i]` from
+    /// query `i`'s results ([`EMPTY`] = none; shorter slices are
+    /// EMPTY-padded) — used when dataset objects replay as queries.
+    pub fn run_excluding(
+        &self,
+        queries: &[f32],
+        d: usize,
+        k: usize,
+        exclude: &[u32],
+    ) -> Vec<Vec<(f32, u32)>> {
+        assert!(d > 0 && queries.len() % d == 0, "queries must be [nq][{d}] row-major");
+        let nq = queries.len() / d;
+        let mut out: Vec<Vec<(f32, u32)>> = vec![Vec::new(); nq];
+        if nq == 0 {
+            return out;
+        }
+        let ranges = split_ranges(nq, self.threads);
+        let chunks = {
+            let mut rest = out.as_mut_slice();
+            let mut v = Vec::new();
+            for r in &ranges {
+                let (a, b) = rest.split_at_mut(r.len());
+                v.push(a);
+                rest = b;
+            }
+            v
+        };
+        let index = self.index;
+        crossbeam_utils::thread::scope(|s| {
+            for (r, chunk) in ranges.iter().zip(chunks) {
+                let r = r.clone();
+                s.spawn(move |_| {
+                    // per-thread scratch, warm across this range
+                    let mut scratch = index.make_scratch();
+                    for (slot, qi) in r.enumerate() {
+                        let q = &queries[qi * d..(qi + 1) * d];
+                        let ex = exclude.get(qi).copied().unwrap_or(EMPTY);
+                        index.search_into_excluding(q, k, ex, &mut scratch, &mut chunk[slot]);
+                    }
+                });
+            }
+        })
+        .unwrap();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::bruteforce;
+    use crate::dataset::synth;
+    use crate::search::SearchParams;
+
+    #[test]
+    fn batched_is_bit_identical_to_single() {
+        let ds = synth::clustered(300, 8, 101);
+        let g = bruteforce::build_native(&ds, 8);
+        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+        let nq = 40;
+        let mut qbuf = Vec::with_capacity(nq * ds.d);
+        let mut exclude = Vec::with_capacity(nq);
+        for q in 0..nq {
+            qbuf.extend_from_slice(ds.vec(q));
+            exclude.push(q as u32);
+        }
+        let batched = BatchExecutor::new(&index, 4).run_excluding(&qbuf, ds.d, 10, &exclude);
+        let mut scratch = index.make_scratch();
+        let mut single = Vec::new();
+        for q in 0..nq {
+            index.search_into_excluding(ds.vec(q), 10, q as u32, &mut scratch, &mut single);
+            assert_eq!(batched[q], single, "query {q} differs");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let ds = synth::clustered(250, 6, 102);
+        let g = bruteforce::build_native(&ds, 8);
+        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+        let nq = 30;
+        let mut qbuf = Vec::new();
+        for q in 0..nq {
+            qbuf.extend_from_slice(ds.vec(q));
+        }
+        let a = BatchExecutor::new(&index, 1).run(&qbuf, ds.d, 5);
+        let b = BatchExecutor::new(&index, 3).run(&qbuf, ds.d, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let ds = synth::uniform(60, 4, 103);
+        let g = bruteforce::build_native(&ds, 6);
+        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+        let out = BatchExecutor::new(&index, 2).run(&[], ds.d, 5);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,640 @@
+//! Online ANN query serving over a constructed k-NN graph.
+//!
+//! The construction pipeline (GNND, GGM merge, out-of-core sharding)
+//! produces a [`KnnGraph`]; this subsystem turns any such graph into a
+//! *queryable index* — the workload the ROADMAP's "serving heavy
+//! traffic" north star is about, and the same structure GGNN exploits
+//! as a search index (Groh et al., arXiv 1912.01059).
+//!
+//! Layers:
+//!
+//! * this module — [`SearchIndex`]: entry-point selection (random
+//!   medoids or k-means seeds reusing [`crate::baselines::kmeans`]) and
+//!   best-first beam search with a reusable [`SearchScratch`]
+//!   (epoch-stamped visited set + persistent heaps), so the hot path
+//!   performs **zero allocations** per query once warm;
+//! * [`batch`] — multi-query execution fanned across worker threads
+//!   (crossbeam scoped threads, per-thread scratch);
+//! * [`serve`] — a closed-loop serving harness reporting QPS, latency
+//!   percentiles and recall@k over an `ef` sweep.
+//!
+//! The free function [`beam_search`] is the single greedy-search
+//! implementation in the codebase: [`crate::baselines::ggnn`] delegates
+//! its hierarchy construction and search-based merge to it.
+//!
+//! ```no_run
+//! use gnnd::dataset::synth;
+//! use gnnd::gnnd::{build, GnndParams};
+//! use gnnd::search::{SearchIndex, SearchParams};
+//!
+//! let ds = synth::sift_like(20_000, 7);
+//! let graph = build(&ds, &GnndParams::default()).unwrap();
+//! let index = SearchIndex::new(&ds, &graph, SearchParams::default()).unwrap();
+//! // a dataset row queried as-is matches itself at rank 1; use
+//! // `search_into_excluding` to skip the query object
+//! let hits = index.search(ds.vec(0), 10);
+//! println!("top-1 of q0 is q0 itself: id={} dist={}", hits[0].1, hits[0].0);
+//! ```
+
+pub mod batch;
+pub mod serve;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::str::FromStr;
+
+use crate::baselines::kmeans;
+use crate::dataset::groundtruth::ordered::F32;
+use crate::dataset::Dataset;
+use crate::graph::{KnnGraph, EMPTY};
+use crate::util::rng::Rng;
+
+/// How the fixed entry points of a [`SearchIndex`] are chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryStrategy {
+    /// `n_entry` random medoids (distinct object ids from a seeded RNG).
+    Random,
+    /// k-means seeds: train `n_entry` centroids (bounded-sample
+    /// k-means++ from [`crate::baselines::kmeans`]) and enter from the
+    /// dataset object nearest each centroid — entries spread across the
+    /// cluster structure instead of landing in one region.
+    KMeans,
+}
+
+impl std::fmt::Display for EntryStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EntryStrategy::Random => "random",
+            EntryStrategy::KMeans => "kmeans",
+        })
+    }
+}
+
+impl FromStr for EntryStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "random" => Ok(EntryStrategy::Random),
+            "kmeans" => Ok(EntryStrategy::KMeans),
+            _ => anyhow::bail!("unknown entry strategy {s:?} (expected random|kmeans)"),
+        }
+    }
+}
+
+/// Query-time knobs of a [`SearchIndex`].
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    /// Width of the result pool kept during the walk (HNSW-style `ef`).
+    /// Clamped up to the requested `k` at query time; larger trades
+    /// time for recall — the knob the serve harness sweeps.
+    pub ef: usize,
+    /// Frontier cap: when > 0, the open-candidate heap is pruned back
+    /// to the best `beam_width` entries whenever it overflows 4x that
+    /// size. 0 = unbounded (classic best-first).
+    pub beam_width: usize,
+    /// Hard cap on node expansions per query (tail-latency bound for
+    /// serving). 0 = unbounded.
+    pub max_hops: usize,
+    /// Number of fixed entry points.
+    pub n_entry: usize,
+    /// Entry-point selection strategy.
+    pub entry: EntryStrategy,
+    /// Seed for entry selection (fixed seed => identical index).
+    pub seed: u64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams {
+            ef: 64,
+            beam_width: 0,
+            max_hops: 0,
+            n_entry: 8,
+            entry: EntryStrategy::Random,
+            seed: 0x5EA_6C4, // "sea-rch"
+        }
+    }
+}
+
+impl SearchParams {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.ef > 0, "ef must be > 0");
+        anyhow::ensure!(self.n_entry > 0, "n_entry must be > 0");
+        Ok(())
+    }
+
+    /// Builder-style helpers for tests/examples.
+    pub fn with_ef(mut self, ef: usize) -> Self {
+        self.ef = ef;
+        self
+    }
+    pub fn with_entries(mut self, strategy: EntryStrategy, n_entry: usize) -> Self {
+        self.entry = strategy;
+        self.n_entry = n_entry;
+        self
+    }
+    pub fn with_max_hops(mut self, hops: usize) -> Self {
+        self.max_hops = hops;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Epoch-stamped visited set: O(1) insert/test, O(1) reset between
+/// queries (no clearing of the backing array until the epoch wraps).
+struct VisitedSet {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl VisitedSet {
+    fn new() -> Self {
+        VisitedSet { stamp: Vec::new(), epoch: 0 }
+    }
+
+    /// Start a new query over ids `< n`.
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        if self.epoch == u32::MAX {
+            for s in self.stamp.iter_mut() {
+                *s = 0;
+            }
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Returns true if `id` was not yet visited this query.
+    #[inline]
+    fn insert(&mut self, id: u32) -> bool {
+        let s = &mut self.stamp[id as usize];
+        if *s == self.epoch {
+            false
+        } else {
+            *s = self.epoch;
+            true
+        }
+    }
+}
+
+/// Reusable per-query workspace. All containers keep their capacity
+/// between queries, so a warm scratch makes the search hot path
+/// allocation-free. One scratch per worker thread; see
+/// [`batch::BatchExecutor`].
+pub struct SearchScratch {
+    visited: VisitedSet,
+    /// Open candidates, min-heap by (dist, id).
+    frontier: BinaryHeap<Reverse<(F32, u32)>>,
+    /// Best `ef` results so far, max-heap by (dist, id).
+    results: BinaryHeap<(F32, u32)>,
+    /// Staging buffer for frontier pruning / result emission.
+    buf: Vec<(F32, u32)>,
+    /// Distance evaluations performed by the last query.
+    pub dist_evals: usize,
+    /// Node expansions performed by the last query.
+    pub hops: usize,
+}
+
+impl SearchScratch {
+    pub fn new() -> Self {
+        SearchScratch {
+            visited: VisitedSet::new(),
+            frontier: BinaryHeap::new(),
+            results: BinaryHeap::new(),
+            buf: Vec::new(),
+            dist_evals: 0,
+            hops: 0,
+        }
+    }
+}
+
+impl Default for SearchScratch {
+    fn default() -> Self {
+        SearchScratch::new()
+    }
+}
+
+/// One query against a graph: inputs to [`beam_search`].
+pub struct QuerySpec<'q> {
+    /// Query vector (dimension = dataset dimension).
+    pub q: &'q [f32],
+    /// Results requested.
+    pub k: usize,
+    /// Result-pool width (clamped up to `k` internally).
+    pub ef: usize,
+    /// Frontier cap (0 = unbounded).
+    pub beam_width: usize,
+    /// Expansion cap (0 = unbounded).
+    pub max_hops: usize,
+    /// Entry points (graph-local ids).
+    pub entries: &'q [u32],
+    /// Global object id excluded from results ([`EMPTY`] = none) —
+    /// used when a dataset object queries for its own neighbors.
+    pub exclude: u32,
+}
+
+/// Best-first beam search over `graph` for `spec.q`, writing up to
+/// `spec.k` `(dist, id)` pairs into `out`, ascending by distance.
+///
+/// `subset` maps graph-local ids to dataset ids (GGNN's layered
+/// sub-graphs search a sampled subset); `None` means the graph covers
+/// the dataset directly. Returned ids (and `spec.exclude`) are in the
+/// *dataset* id space.
+///
+/// This is the single greedy-search loop in the codebase — the
+/// [`SearchIndex`] hot path and [`crate::baselines::ggnn`] both call
+/// it. Ties on distance break by ascending id (tuple ordering), so
+/// results are deterministic for a fixed graph and entry set.
+pub fn beam_search(
+    ds: &Dataset,
+    graph: &KnnGraph,
+    subset: Option<&[u32]>,
+    spec: &QuerySpec,
+    scratch: &mut SearchScratch,
+    out: &mut Vec<(f32, u32)>,
+) {
+    let ef = spec.ef.max(spec.k).max(1);
+    let to_global = |local: u32| -> u32 {
+        match subset {
+            Some(map) => map[local as usize],
+            None => local,
+        }
+    };
+    scratch.visited.begin(graph.n());
+    scratch.frontier.clear();
+    scratch.results.clear();
+    scratch.dist_evals = 0;
+    scratch.hops = 0;
+
+    for &e in spec.entries {
+        if (e as usize) < graph.n() && scratch.visited.insert(e) {
+            let d = ds.dist_to(to_global(e) as usize, spec.q);
+            scratch.dist_evals += 1;
+            scratch.frontier.push(Reverse((F32(d), e)));
+            if to_global(e) != spec.exclude {
+                scratch.results.push((F32(d), e));
+                if scratch.results.len() > ef {
+                    scratch.results.pop();
+                }
+            }
+        }
+    }
+
+    while let Some(Reverse((F32(d), u))) = scratch.frontier.pop() {
+        // backtracking bound: stop when the closest open candidate is
+        // worse than the worst retained result and the pool is full
+        if scratch.results.len() >= ef {
+            if let Some(&(F32(w), _)) = scratch.results.peek() {
+                if d > w {
+                    break;
+                }
+            }
+        }
+        if spec.max_hops > 0 && scratch.hops >= spec.max_hops {
+            break;
+        }
+        scratch.hops += 1;
+        for e in graph.list(u as usize) {
+            if e.is_empty() {
+                break;
+            }
+            if !scratch.visited.insert(e.id) {
+                continue;
+            }
+            let dv = ds.dist_to(to_global(e.id) as usize, spec.q);
+            scratch.dist_evals += 1;
+            scratch.frontier.push(Reverse((F32(dv), e.id)));
+            if to_global(e.id) != spec.exclude {
+                scratch.results.push((F32(dv), e.id));
+                if scratch.results.len() > ef {
+                    scratch.results.pop();
+                }
+            }
+        }
+        // frontier pruning: drop hopeless far candidates once the open
+        // set overflows 4x the beam width
+        if spec.beam_width > 0 && scratch.frontier.len() > 4 * spec.beam_width {
+            scratch.buf.clear();
+            for _ in 0..spec.beam_width {
+                match scratch.frontier.pop() {
+                    Some(Reverse(x)) => scratch.buf.push(x),
+                    None => break,
+                }
+            }
+            scratch.frontier.clear();
+            for &x in &scratch.buf {
+                scratch.frontier.push(Reverse(x));
+            }
+        }
+    }
+
+    // Emit ascending by distance: the results max-heap pops worst-first.
+    scratch.buf.clear();
+    while let Some(x) = scratch.results.pop() {
+        scratch.buf.push(x);
+    }
+    out.clear();
+    for &(F32(d), id) in scratch.buf.iter().rev() {
+        if out.len() >= spec.k {
+            break;
+        }
+        out.push((d, to_global(id)));
+    }
+}
+
+/// A queryable ANN index: a finished k-NN graph + its dataset + fixed
+/// entry points. Cheap to construct (entry selection only); borrows
+/// the graph and dataset rather than owning them, so any build path
+/// (in-core, merged, out-of-core assembly) serves without copies.
+pub struct SearchIndex<'a> {
+    ds: &'a Dataset,
+    graph: &'a KnnGraph,
+    params: SearchParams,
+    entries: Vec<u32>,
+}
+
+impl<'a> SearchIndex<'a> {
+    pub fn new(ds: &'a Dataset, graph: &'a KnnGraph, params: SearchParams) -> crate::Result<Self> {
+        anyhow::ensure!(
+            graph.n() == ds.len(),
+            "graph covers {} objects but dataset has {}",
+            graph.n(),
+            ds.len()
+        );
+        anyhow::ensure!(graph.n() > 0, "empty graph");
+        params.validate()?;
+        let entries = select_entries(ds, graph, &params);
+        Ok(SearchIndex { ds, graph, params, entries })
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        self.ds
+    }
+
+    pub fn graph(&self) -> &KnnGraph {
+        self.graph
+    }
+
+    pub fn params(&self) -> &SearchParams {
+        &self.params
+    }
+
+    /// The fixed entry points (dataset object ids).
+    pub fn entries(&self) -> &[u32] {
+        &self.entries
+    }
+
+    /// The same index at a different `ef` operating point. Entry
+    /// selection is independent of `ef`, so this only clones the entry
+    /// list — the serve harness sweeps `ef` without re-selecting
+    /// (k-means) entries per point.
+    pub fn with_ef(&self, ef: usize) -> SearchIndex<'a> {
+        SearchIndex {
+            ds: self.ds,
+            graph: self.graph,
+            params: self.params.clone().with_ef(ef),
+            entries: self.entries.clone(),
+        }
+    }
+
+    /// A scratch sized for this index.
+    pub fn make_scratch(&self) -> SearchScratch {
+        let mut s = SearchScratch::new();
+        s.visited.begin(self.graph.n());
+        s
+    }
+
+    /// Convenience single query (allocates a fresh scratch; use
+    /// [`SearchIndex::search_into`] with a kept scratch on hot paths).
+    pub fn search(&self, q: &[f32], k: usize) -> Vec<(f32, u32)> {
+        let mut scratch = self.make_scratch();
+        let mut out = Vec::with_capacity(k);
+        self.search_into(q, k, &mut scratch, &mut out);
+        out
+    }
+
+    /// Zero-allocation query: results are written into `out` (cleared
+    /// first), ascending by distance.
+    pub fn search_into(
+        &self,
+        q: &[f32],
+        k: usize,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        self.search_into_excluding(q, k, EMPTY, scratch, out)
+    }
+
+    /// Like [`SearchIndex::search_into`] but excludes object `exclude`
+    /// from the results — used when replaying dataset objects as
+    /// queries (an object trivially matches itself).
+    pub fn search_into_excluding(
+        &self,
+        q: &[f32],
+        k: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let p = &self.params;
+        let spec = QuerySpec {
+            q,
+            k,
+            ef: p.ef,
+            beam_width: p.beam_width,
+            max_hops: p.max_hops,
+            entries: &self.entries,
+            exclude,
+        };
+        beam_search(self.ds, self.graph, None, &spec, scratch, out);
+    }
+}
+
+/// Pick the fixed entry points for an index.
+fn select_entries(ds: &Dataset, graph: &KnnGraph, params: &SearchParams) -> Vec<u32> {
+    let n = graph.n();
+    let m = params.n_entry.clamp(1, n);
+    match params.entry {
+        EntryStrategy::Random => {
+            let mut rng = Rng::new(params.seed ^ 0xE27_4A7);
+            rng.distinct(n, m).into_iter().map(|i| i as u32).collect()
+        }
+        EntryStrategy::KMeans => {
+            let threads = crate::util::num_threads();
+            let book = kmeans::train(ds.raw(), ds.d, m, 6, ds.metric, params.seed, threads);
+            // One parallel pass over the dataset finding the nearest
+            // object (medoid) of every centroid; per-range minima are
+            // reduced with a (dist, id) tie-break so the result is
+            // identical for any thread count.
+            let ranges = crate::util::split_ranges(n, threads);
+            let mut partials: Vec<Vec<(f32, u32)>> = Vec::new();
+            crossbeam_utils::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .map(|r| {
+                        let r = r.clone();
+                        let book = &book;
+                        s.spawn(move |_| {
+                            let mut best = vec![(f32::INFINITY, 0u32); book.k];
+                            for i in r {
+                                let v = ds.vec(i);
+                                for c in 0..book.k {
+                                    let d = crate::distance::l2_sq(v, book.centroid(c));
+                                    if d < best[c].0 {
+                                        best[c] = (d, i as u32);
+                                    }
+                                }
+                            }
+                            best
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    partials.push(h.join().unwrap());
+                }
+            })
+            .unwrap();
+            let mut out: Vec<u32> = Vec::with_capacity(m);
+            for c in 0..book.k {
+                let mut best = (f32::INFINITY, 0u32);
+                for p in &partials {
+                    if p[c].0 < best.0 || (p[c].0 == best.0 && p[c].1 < best.1) {
+                        best = p[c];
+                    }
+                }
+                if best.0.is_finite() && !out.contains(&best.1) {
+                    out.push(best.1);
+                }
+            }
+            // centroids can collapse onto the same medoid; top up with
+            // deterministic ids so the entry count stays at m
+            let mut next = 0u32;
+            while out.len() < m && (next as usize) < n {
+                if !out.contains(&next) {
+                    out.push(next);
+                }
+                next += 1;
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::bruteforce;
+    use crate::dataset::{groundtruth, synth};
+
+    #[test]
+    fn finds_exact_neighbors_on_exact_graph() {
+        // On the exact k-NN graph of easy uniform data, beam search with
+        // a generous ef must recover nearly all true neighbors.
+        let ds = synth::uniform(300, 6, 91);
+        let g = bruteforce::build_native(&ds, 10);
+        let truth = groundtruth::exact_topk(&ds, 5);
+        let index = SearchIndex::new(&ds, &g, SearchParams::default().with_ef(64)).unwrap();
+        let mut scratch = index.make_scratch();
+        let mut out = Vec::new();
+        let mut hits = 0;
+        let mut total = 0;
+        for q in (0..300).step_by(5) {
+            index.search_into_excluding(ds.vec(q), 5, q as u32, &mut scratch, &mut out);
+            let set: std::collections::HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+            hits += truth[q].iter().filter(|id| set.contains(id)).count();
+            total += truth[q].len();
+        }
+        let r = hits as f64 / total as f64;
+        assert!(r > 0.85, "search recall on exact graph {r}");
+    }
+
+    #[test]
+    fn results_sorted_dedup_and_exclude_respected() {
+        let ds = synth::clustered(200, 6, 92);
+        let g = bruteforce::build_native(&ds, 8);
+        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+        let mut scratch = index.make_scratch();
+        let mut out = Vec::new();
+        for q in 0..50 {
+            index.search_into_excluding(ds.vec(q), 10, q as u32, &mut scratch, &mut out);
+            assert!(!out.is_empty());
+            assert!(out.len() <= 10);
+            assert!(out.iter().all(|&(_, id)| id != q as u32), "self in results of {q}");
+            for w in out.windows(2) {
+                assert!(w[0].0 <= w[1].0, "unsorted results for {q}");
+            }
+            let ids: std::collections::HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+            assert_eq!(ids.len(), out.len(), "duplicate ids for {q}");
+        }
+    }
+
+    #[test]
+    fn ef_improves_recall() {
+        let ds = synth::clustered(400, 8, 93);
+        let g = bruteforce::build_native(&ds, 8);
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let recall_for = |ef: usize| -> f64 {
+            let index = SearchIndex::new(&ds, &g, SearchParams::default().with_ef(ef)).unwrap();
+            let mut scratch = index.make_scratch();
+            let mut out = Vec::new();
+            let mut hits = 0;
+            let mut total = 0;
+            for q in 0..ds.len() {
+                index.search_into_excluding(ds.vec(q), 10, q as u32, &mut scratch, &mut out);
+                let set: std::collections::HashSet<u32> =
+                    out.iter().map(|&(_, id)| id).collect();
+                hits += truth[q].iter().filter(|id| set.contains(id)).count();
+                total += truth[q].len().min(10);
+            }
+            hits as f64 / total as f64
+        };
+        let lo = recall_for(10);
+        let hi = recall_for(128);
+        assert!(hi >= lo, "ef=128 recall {hi} < ef=10 recall {lo}");
+        assert!(hi > 0.9, "ef=128 recall {hi}");
+    }
+
+    #[test]
+    fn max_hops_bounds_expansions() {
+        let ds = synth::clustered(300, 6, 94);
+        let g = bruteforce::build_native(&ds, 8);
+        let params = SearchParams::default().with_ef(64).with_max_hops(3);
+        let index = SearchIndex::new(&ds, &g, params).unwrap();
+        let mut scratch = index.make_scratch();
+        let mut out = Vec::new();
+        index.search_into(ds.vec(0), 10, &mut scratch, &mut out);
+        assert!(scratch.hops <= 3, "hops {} > max_hops 3", scratch.hops);
+        assert!(!out.is_empty());
+    }
+
+    #[test]
+    fn entry_strategies_are_deterministic_and_sized() {
+        let ds = synth::clustered(250, 6, 95);
+        let g = bruteforce::build_native(&ds, 8);
+        for strategy in [EntryStrategy::Random, EntryStrategy::KMeans] {
+            let params = SearchParams::default().with_entries(strategy, 6).with_seed(5);
+            let a = SearchIndex::new(&ds, &g, params.clone()).unwrap();
+            let b = SearchIndex::new(&ds, &g, params).unwrap();
+            assert_eq!(a.entries(), b.entries(), "{strategy} not deterministic");
+            assert_eq!(a.entries().len(), 6, "{strategy} entry count");
+            let set: std::collections::HashSet<u32> = a.entries().iter().copied().collect();
+            assert_eq!(set.len(), 6, "{strategy} duplicate entries");
+            assert!(a.entries().iter().all(|&e| (e as usize) < ds.len()));
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_graph() {
+        let ds = synth::uniform(50, 4, 96);
+        let g = crate::graph::KnnGraph::empty(40, 4);
+        assert!(SearchIndex::new(&ds, &g, SearchParams::default()).is_err());
+        let g2 = crate::graph::KnnGraph::empty(50, 4);
+        let bad = SearchParams { ef: 0, ..Default::default() };
+        assert!(SearchIndex::new(&ds, &g2, bad).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! Closed-loop serving harness: replay a query stream against a
+//! [`SearchIndex`] and measure what a serving deployment cares about —
+//! throughput (QPS), tail latency (p50/p95/p99) and quality (recall@k
+//! against exact ground truth) — across an `ef` sweep, emitting a
+//! [`Report`] of the recall-vs-QPS operating curve.
+//!
+//! Two passes per operating point:
+//! 1. a *quality* pass through [`BatchExecutor`] computing recall@k;
+//! 2. a *timing* pass where `threads` closed-loop workers pull query
+//!    indices from a shared cursor (each with its own warm scratch)
+//!    and record per-query wall latencies.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::dataset::{groundtruth, Dataset};
+use crate::graph::KnnGraph;
+use crate::metrics::{Report, Row};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+use super::batch::BatchExecutor;
+use super::{SearchIndex, SearchParams};
+
+/// Configuration of a serving benchmark.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Neighbors per query (recall is measured at this k).
+    pub k: usize,
+    /// `ef` operating points, one report row each.
+    pub ef_sweep: Vec<usize>,
+    /// Total queries replayed per operating point (closed loop).
+    pub n_queries: usize,
+    /// Distinct query vectors sampled from the dataset (ground truth is
+    /// computed for exactly these, so keep it moderate).
+    pub distinct_queries: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Base search parameters; `ef` is overridden by the sweep.
+    pub params: SearchParams,
+    /// Query-sampling seed.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            k: 10,
+            ef_sweep: vec![8, 16, 32, 64, 128],
+            n_queries: 2_000,
+            distinct_queries: 1_000,
+            threads: 0,
+            params: SearchParams::default(),
+            seed: 0x5E27E,
+        }
+    }
+}
+
+/// Measured behaviour of one operating point.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub ef: usize,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub recall: f64,
+}
+
+/// The sampled query stream: flat query matrix + the object ids the
+/// rows came from (each query excludes itself from its results) + the
+/// exact ground truth rows for recall.
+pub struct QueryStream {
+    pub d: usize,
+    pub qbuf: Vec<f32>,
+    pub qids: Vec<usize>,
+    pub truth: Vec<Vec<u32>>,
+}
+
+/// Sample `m` distinct dataset objects as queries and compute their
+/// exact top-`k` ground truth.
+pub fn sample_queries(ds: &Dataset, m: usize, k: usize, seed: u64) -> QueryStream {
+    let m = m.clamp(1, ds.len());
+    let mut rng = Rng::new(seed ^ 0x9E27);
+    let qids = rng.distinct(ds.len(), m);
+    let mut qbuf = Vec::with_capacity(m * ds.d);
+    for &q in &qids {
+        qbuf.extend_from_slice(ds.vec(q));
+    }
+    let truth = groundtruth::exact_topk_for(ds, &qids, k);
+    QueryStream { d: ds.d, qbuf, qids, truth }
+}
+
+/// Recall@k of per-query results against exact truth rows.
+pub fn recall_of(results: &[Vec<(f32, u32)>], truth: &[Vec<u32>], k: usize) -> f64 {
+    assert_eq!(results.len(), truth.len());
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (got, want) in results.iter().zip(truth) {
+        let t = k.min(want.len());
+        if t == 0 {
+            continue;
+        }
+        let want_set: std::collections::HashSet<u32> = want[..t].iter().copied().collect();
+        hit += got.iter().take(k).filter(|&&(_, id)| want_set.contains(&id)).count();
+        total += t;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_secs.len() - 1) as f64).round() as usize;
+    sorted_secs[idx.min(sorted_secs.len() - 1)] * 1e3
+}
+
+/// Measure one operating point (`ef`) of the sweep. `base` carries the
+/// already-selected entry points; only `ef` changes between points.
+pub fn run_point(
+    base: &SearchIndex,
+    stream: &QueryStream,
+    cfg: &ServeConfig,
+    ef: usize,
+) -> ServeStats {
+    let index = base.with_ef(ef);
+    let threads = if cfg.threads == 0 { crate::util::num_threads() } else { cfg.threads };
+    let exclude: Vec<u32> = stream.qids.iter().map(|&q| q as u32).collect();
+
+    // ---- quality pass ----
+    let results = BatchExecutor::new(&index, threads).run_excluding(
+        &stream.qbuf,
+        stream.d,
+        cfg.k,
+        &exclude,
+    );
+    let recall = recall_of(&results, &stream.truth, cfg.k);
+
+    // ---- closed-loop timing pass ----
+    let nq = stream.qids.len();
+    let total = cfg.n_queries.max(nq);
+    let cursor = AtomicUsize::new(0);
+    let lat = Mutex::new(Vec::with_capacity(total));
+    let d = stream.d;
+    let k = cfg.k;
+    let qbuf = stream.qbuf.as_slice();
+    let exclude_ref = exclude.as_slice();
+    let index_ref = &index;
+    let wall = Timer::start();
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..threads {
+            let cursor = &cursor;
+            let lat = &lat;
+            s.spawn(move |_| {
+                let mut scratch = index_ref.make_scratch();
+                let mut out = Vec::with_capacity(k);
+                let mut local = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let qi = i % nq;
+                    let t = Timer::start();
+                    index_ref.search_into_excluding(
+                        &qbuf[qi * d..(qi + 1) * d],
+                        k,
+                        exclude_ref[qi],
+                        &mut scratch,
+                        &mut out,
+                    );
+                    local.push(t.secs());
+                    std::hint::black_box(&out);
+                }
+                lat.lock().unwrap().extend_from_slice(&local);
+            });
+        }
+    })
+    .unwrap();
+    let wall_secs = wall.secs();
+    let mut lats = lat.into_inner().unwrap();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    ServeStats {
+        ef,
+        qps: total as f64 / wall_secs.max(1e-9),
+        p50_ms: percentile_ms(&lats, 50.0),
+        p95_ms: percentile_ms(&lats, 95.0),
+        p99_ms: percentile_ms(&lats, 99.0),
+        recall,
+    }
+}
+
+/// Run the whole `ef` sweep, returning the recall-vs-QPS table.
+pub fn run_sweep(ds: &Dataset, graph: &KnnGraph, cfg: &ServeConfig) -> crate::Result<Report> {
+    anyhow::ensure!(!cfg.ef_sweep.is_empty(), "ef_sweep is empty");
+    anyhow::ensure!(cfg.k > 0, "k must be > 0");
+    let base = SearchIndex::new(ds, graph, cfg.params.clone())?;
+    let stream = sample_queries(ds, cfg.distinct_queries, cfg.k, cfg.seed);
+    let threads = if cfg.threads == 0 { crate::util::num_threads() } else { cfg.threads };
+    let mut report = Report::new(format!("Serve bench: {}", ds.name))
+        .meta("n", ds.len())
+        .meta("d", ds.d)
+        .meta("graph_k", graph.k())
+        .meta("k", cfg.k)
+        .meta("threads", threads)
+        .meta("entry", format!("{}x{}", cfg.params.n_entry, cfg.params.entry))
+        .meta("queries", format!("{} distinct, {} replayed", stream.qids.len(), cfg.n_queries));
+    let recall_col = format!("recall@{}", cfg.k);
+    for &ef in &cfg.ef_sweep {
+        let s = run_point(&base, &stream, cfg, ef);
+        report.push(
+            Row::new(format!("ef={ef}"))
+                .col("ef", s.ef as f64)
+                .col("qps", s.qps)
+                .col("p50_ms", s.p50_ms)
+                .col("p95_ms", s.p95_ms)
+                .col("p99_ms", s.p99_ms)
+                .col(&recall_col, s.recall),
+        );
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::bruteforce;
+    use crate::dataset::synth;
+
+    #[test]
+    fn sweep_produces_rows_and_sane_numbers() {
+        let ds = synth::clustered(400, 8, 111);
+        let g = bruteforce::build_native(&ds, 8);
+        let cfg = ServeConfig {
+            ef_sweep: vec![8, 64],
+            n_queries: 100,
+            distinct_queries: 50,
+            threads: 2,
+            ..Default::default()
+        };
+        let report = run_sweep(&ds, &g, &cfg).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        for row in &report.rows {
+            let get = |name: &str| row.cols.iter().find(|(n, _)| n == name).unwrap().1;
+            assert!(get("qps") > 0.0);
+            assert!(get("p50_ms") >= 0.0);
+            assert!(get("p99_ms") >= get("p50_ms"));
+            let r = get("recall@10");
+            assert!((0.0..=1.0).contains(&r), "recall {r}");
+        }
+        // higher ef must not hurt recall on an exact graph
+        let r_of = |i: usize| {
+            report.rows[i].cols.iter().find(|(n, _)| n == "recall@10").unwrap().1
+        };
+        assert!(r_of(1) >= r_of(0) - 1e-9, "ef=64 {} < ef=8 {}", r_of(1), r_of(0));
+    }
+
+    #[test]
+    fn recall_of_exact_results_is_one() {
+        let truth = vec![vec![1u32, 2, 3], vec![4, 5, 6]];
+        let results = vec![
+            vec![(0.1f32, 1u32), (0.2, 2), (0.3, 3)],
+            vec![(0.1, 4), (0.2, 5), (0.3, 6)],
+        ];
+        assert!((recall_of(&results, &truth, 3) - 1.0).abs() < 1e-12);
+        let miss = vec![
+            vec![(0.1f32, 9u32), (0.2, 2), (0.3, 3)],
+            vec![(0.1, 4), (0.2, 5), (0.3, 6)],
+        ];
+        assert!((recall_of(&miss, &truth, 3) - 5.0 / 6.0).abs() < 1e-12);
+    }
+}

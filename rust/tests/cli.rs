@@ -75,6 +75,53 @@ fn full_cli_pipeline() {
 }
 
 #[test]
+fn cli_search_and_serve_bench() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "500", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "build", "--data", &data, "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "build failed: {out}");
+
+    // single query
+    let (ok, out) = run(&[
+        "search", "--data", &data, "--graph", &graph, "--query-id", "7", "--k", "5",
+        "--ef", "32",
+    ]);
+    assert!(ok, "search failed: {out}");
+    assert!(out.contains("top-5"), "unexpected search output: {out}");
+
+    // batched queries from a .dsb file (reuse the dataset as queries)
+    let res = dir.join("res.ivecs").to_string_lossy().into_owned();
+    let (ok, out) = run(&[
+        "search", "--data", &data, "--graph", &graph, "--queries", &data, "--k", "5",
+        "--out", &res,
+    ]);
+    assert!(ok, "batched search failed: {out}");
+    assert!(std::path::Path::new(&res).exists(), "no ivecs written: {out}");
+
+    // serve-bench: one row per ef point, recall column present
+    let (ok, out) = run(&[
+        "serve-bench", "--data", &data, "--graph", &graph, "--ef", "8,32,64",
+        "--queries", "120", "--distinct", "60", "--threads", "2",
+    ]);
+    assert!(ok, "serve-bench failed: {out}");
+    assert!(out.contains("recall@10"), "no recall column: {out}");
+    for ef in ["ef=8", "ef=32", "ef=64"] {
+        assert!(out.contains(ef), "missing row {ef}: {out}");
+    }
+
+    // missing query spec is an error
+    let (ok, _) = run(&["search", "--data", &data, "--graph", &graph]);
+    assert!(!ok);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_input() {
     let (ok, _) = run(&["bogus-subcommand"]);
     assert!(!ok);

@@ -1,0 +1,156 @@
+//! Integration: the search/serving subsystem over graphs produced by
+//! the real construction pipeline (GNND), per the subsystem contract:
+//! search beats the raw graph's neighbor lists, batching is
+//! bit-identical to single-query execution, and a fixed seed gives
+//! deterministic output.
+
+use std::collections::HashSet;
+
+use gnnd::dataset::{groundtruth, synth, Dataset};
+use gnnd::graph::KnnGraph;
+use gnnd::gnnd::{build, GnndParams};
+use gnnd::metrics::recall_at;
+use gnnd::search::{batch::BatchExecutor, serve, EntryStrategy, SearchIndex, SearchParams};
+
+fn recall_of_search(
+    ds: &Dataset,
+    index: &SearchIndex,
+    qids: &[usize],
+    truth: &[Vec<u32>],
+    k: usize,
+) -> f64 {
+    let mut scratch = index.make_scratch();
+    let mut out = Vec::new();
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (row, &q) in truth.iter().zip(qids) {
+        index.search_into_excluding(ds.vec(q), k, q as u32, &mut scratch, &mut out);
+        let set: HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+        hit += row.iter().take(k).filter(|id| set.contains(id)).count();
+        total += row.len().min(k);
+    }
+    hit as f64 / total as f64
+}
+
+#[test]
+fn search_beats_raw_graph_lists_on_sift_like() {
+    // A deliberately under-converged GNND graph: its raw top-10 lists
+    // miss true neighbors, but beam search walks the graph and recovers
+    // them — the premise of serving from the construction output.
+    let ds = synth::sift_like(2_000, 0x5EA1);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(2);
+    let g = build(&ds, &params).unwrap();
+    let (qids, truth) = groundtruth::sampled_truth(&ds, 200, 10, 3);
+    let raw = recall_at(&g, &truth, Some(&qids), 10);
+
+    let sp = SearchParams::default().with_ef(128).with_entries(EntryStrategy::Random, 16);
+    let index = SearchIndex::new(&ds, &g, sp).unwrap();
+    let searched = recall_of_search(&ds, &index, &qids, &truth, 10);
+
+    assert!(
+        searched > raw,
+        "search recall {searched} does not beat raw graph lists {raw}"
+    );
+    assert!(searched > 0.8, "search recall {searched} too low (raw {raw})");
+}
+
+#[test]
+fn serve_sweep_reaches_high_recall_on_converged_graph() {
+    // The serve-bench acceptance shape at test scale: a converged graph
+    // must reach recall@10 >= 0.95 at some ef operating point.
+    let ds = synth::sift_like(1_500, 0x5EA2);
+    let params = GnndParams::default().with_k(16).with_p(8).with_iters(8);
+    let g = build(&ds, &params).unwrap();
+    let cfg = serve::ServeConfig {
+        ef_sweep: vec![8, 32, 128],
+        n_queries: 200,
+        distinct_queries: 150,
+        threads: 2,
+        ..Default::default()
+    };
+    let report = serve::run_sweep(&ds, &g, &cfg).unwrap();
+    assert_eq!(report.rows.len(), 3);
+    let best = report
+        .rows
+        .iter()
+        .filter_map(|r| r.cols.iter().find(|(n, _)| n == "recall@10").map(|&(_, v)| v))
+        .fold(0.0f64, f64::max);
+    assert!(best >= 0.95, "no ef operating point reached recall 0.95 (best {best})");
+}
+
+#[test]
+fn batched_results_are_bit_identical_to_single_query() {
+    let ds = synth::sift_like(1_000, 0x5EA3);
+    let params = GnndParams::default().with_k(12).with_p(6).with_iters(5);
+    let g = build(&ds, &params).unwrap();
+    let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+
+    let nq = 64;
+    let mut qbuf = Vec::with_capacity(nq * ds.d);
+    let mut exclude = Vec::with_capacity(nq);
+    for q in 0..nq {
+        qbuf.extend_from_slice(ds.vec(q * 7 % ds.len()));
+        exclude.push((q * 7 % ds.len()) as u32);
+    }
+    for threads in [1usize, 4] {
+        let batched =
+            BatchExecutor::new(&index, threads).run_excluding(&qbuf, ds.d, 10, &exclude);
+        let mut scratch = index.make_scratch();
+        let mut single = Vec::new();
+        for (qi, want) in batched.iter().enumerate() {
+            index.search_into_excluding(
+                &qbuf[qi * ds.d..(qi + 1) * ds.d],
+                10,
+                exclude[qi],
+                &mut scratch,
+                &mut single,
+            );
+            assert_eq!(
+                want, &single,
+                "batched (threads={threads}) differs from single for query {qi}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_seed_gives_deterministic_output() {
+    let ds = synth::sift_like(800, 0x5EA4);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(4);
+    let g = build(&ds, &params).unwrap();
+    for strategy in [EntryStrategy::Random, EntryStrategy::KMeans] {
+        let sp = SearchParams::default().with_entries(strategy, 8).with_seed(0xD5);
+        let a = SearchIndex::new(&ds, &g, sp.clone()).unwrap();
+        let b = SearchIndex::new(&ds, &g, sp).unwrap();
+        assert_eq!(a.entries(), b.entries());
+        for q in (0..ds.len()).step_by(97) {
+            assert_eq!(
+                a.search(ds.vec(q), 10),
+                b.search(ds.vec(q), 10),
+                "nondeterministic results for {q} under {strategy}"
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_works_over_a_loaded_graph_file() {
+    // Round-trip through the on-disk format: any persisted build output
+    // (in-core, merged, out-of-core) must serve identically.
+    let ds = synth::clustered(600, 8, 0x5EA5);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let g = build(&ds, &params).unwrap();
+    let dir = std::env::temp_dir().join(format!("gnnd-search-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.knng");
+    g.save(&path).unwrap();
+    let loaded = KnnGraph::load(&path).unwrap();
+
+    let sp = SearchParams::default().with_ef(64);
+    let a = SearchIndex::new(&ds, &g, sp.clone()).unwrap();
+    let b = SearchIndex::new(&ds, &loaded, sp).unwrap();
+    for q in (0..ds.len()).step_by(53) {
+        assert_eq!(a.search(ds.vec(q), 10), b.search(ds.vec(q), 10), "q={q}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
