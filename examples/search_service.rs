@@ -69,14 +69,18 @@ fn main() -> gnnd::Result<()> {
         results.len() as f64 / secs.max(1e-9)
     );
 
-    // 5. the operating curve: recall vs QPS over an ef sweep
+    // 5. the operating curve: recall vs QPS over an ef sweep — the
+    //    harness only sees `&dyn AnnIndex`, so a sharded index (see
+    //    examples/out_of_core.rs + `gnnd serve-bench --shards`) plugs
+    //    into the same sweep
     let cfg = ServeConfig {
-        ef_sweep: vec![8, 32, 128],
+        ef_sweep: vec![16, 32, 128],
         n_queries: 1_000.min(n),
         distinct_queries: 500.min(n),
         ..Default::default()
     };
-    let report = serve::run_sweep(&ds, &graph, &cfg)?;
+    let sweep_index = SearchIndex::new(&ds, &graph, cfg.params.clone())?;
+    let report = serve::run_sweep_on(&sweep_index, &ds, &cfg)?;
     println!("{}", report.render());
     Ok(())
 }

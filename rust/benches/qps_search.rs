@@ -1,7 +1,10 @@
 //! Serving benchmark: build a GNND graph at GNND_SCALE and sweep the
 //! search subsystem's `ef` knob, printing the recall-vs-QPS operating
 //! curve (QPS, p50/p95/p99 latency, recall@10) — the closed-loop
-//! counterpart of the construction-side fig benches.
+//! counterpart of the construction-side fig benches. A second sweep
+//! serves the same corpus split into 4 shards through the out-of-core
+//! pipeline + `ShardedIndex`, so monolithic-vs-sharded QPS is tracked
+//! over time.
 //!
 //! ```bash
 //! cargo bench --bench qps_search                 # standard scale
@@ -10,9 +13,11 @@
 //! ```
 
 use gnnd::dataset::synth;
-use gnnd::gnnd::GnndParams;
+use gnnd::gnnd::{GnndParams, NativeEngine};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
 use gnnd::search::serve::{self, ServeConfig};
-use gnnd::search::{EntryStrategy, SearchParams};
+use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
 use gnnd::util::timer::Timer;
 
 fn main() {
@@ -27,16 +32,40 @@ fn main() {
 
     let cfg = ServeConfig {
         k: 10,
-        ef_sweep: vec![8, 16, 32, 64, 128, 256],
+        ef_sweep: vec![16, 32, 64, 128, 256],
         n_queries: 2_000.min(n),
         distinct_queries: 1_000.min(n),
         threads: 0,
         params: SearchParams::default().with_entries(EntryStrategy::KMeans, 16),
         ..Default::default()
     };
-    let report = serve::run_sweep(&ds, &graph, &cfg).expect("serve sweep");
+    let index = SearchIndex::new(&ds, &graph, cfg.params.clone()).expect("search index");
+    let report = serve::run_sweep_on(&index, &ds, &cfg).expect("serve sweep");
     match report.save_json("results") {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
     }
+
+    // ---- sharded variant: same corpus, 4 out-of-core shards ----
+    let dir = std::env::temp_dir().join(format!("gnnd-qps-shards-{}", std::process::id()));
+    let ooc = OutOfCoreConfig { shards: 4, workers: 2, params: GnndParams::default() };
+    let t = Timer::start();
+    let (_g, stats) = build_out_of_core(&ds, &dir, &ooc, &NativeEngine).expect("ooc build");
+    eprintln!(
+        "sharded build in {:.1}s ({} merges over {} rounds)",
+        t.secs(),
+        stats.merges,
+        stats.rounds
+    );
+    let sharded = ShardedIndex::open(&dir, cfg.params.clone(), 0).expect("sharded index");
+    // distinct corpus name => distinct report title => distinct JSON
+    // file, so the monolithic curve above is not overwritten
+    let mut ds_sharded = ds.clone();
+    ds_sharded.name = format!("{} sharded", ds.name);
+    let report = serve::run_sweep_on(&sharded, &ds_sharded, &cfg).expect("sharded sweep");
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    std::fs::remove_dir_all(dir).ok();
 }

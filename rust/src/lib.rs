@@ -16,11 +16,13 @@
 //!   cargo feature); a bit-exact native engine ([`gnnd::engine`])
 //!   serves as fallback and oracle.
 //! * **Serving** ([`search`]): every finished graph doubles as an ANN
-//!   index — [`search::SearchIndex`] answers online queries with
-//!   best-first beam search (zero-allocation hot path),
-//!   [`search::batch`] fans multi-query batches across worker threads,
-//!   and [`search::serve`] benchmarks the recall-vs-QPS operating
-//!   curve of a deployment.
+//!   index behind the [`search::AnnIndex`] abstraction —
+//!   [`search::SearchIndex`] answers online queries with best-first
+//!   beam search (zero-allocation hot path),
+//!   [`search::sharded::ShardedIndex`] scatter-gathers across the
+//!   per-shard graphs of an out-of-core build, [`search::batch`] fans
+//!   multi-query batches across worker threads, and [`search::serve`]
+//!   benchmarks the recall-vs-QPS operating curve of a deployment.
 //!
 //! Python is never on the construction path: after `make artifacts` the
 //! binary is self-contained.

@@ -10,10 +10,12 @@
 //! gnnd merge        --data data.dsb --n1 N --g1 a.knng --g2 b.knng --out graph.knng
 //! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
-//! gnnd search       --data data.dsb --graph graph.knng (--query-id N | --queries q.dsb [--out res.ivecs])
+//! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P])
+//!                   (--query-id N | --queries q.dsb [--out res.ivecs])
 //!                   [--k 10] [--ef 64] [--entries 8] [--entry-strategy random|kmeans]
 //!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
-//! gnnd serve-bench  --data data.dsb --graph graph.knng [--k 10] [--ef 8,16,32,64,128]
+//! gnnd serve-bench  (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
+//!                   [--data data.dsb]) [--k 10] [--ef 8,16,32,64,128]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
 //!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
 //!                   [--max-hops 0] [--search-seed S] [--seed S]
@@ -23,6 +25,10 @@
 //! `search` answers ANN queries over a finished graph (single query or
 //! a batched `.dsb` query file); `serve-bench` replays a closed-loop
 //! query stream and prints the recall-vs-QPS table over an `ef` sweep.
+//! Both serve either a monolithic graph (`--data` + `--graph`) or an
+//! `ooc-build` shard directory (`--shards`, scatter-gather across the
+//! per-shard graphs; `--probe-shards` limits each query to the P
+//! nearest shards by centroid).
 //!
 //! Flat `key=value` config files (see `configs/`) plus `--set` overrides
 //! configure every GnndParams knob; `--set engine=pjrt` switches the
@@ -37,9 +43,10 @@ use gnnd::config::{ConfigMap, GnndParams};
 use gnnd::dataset::{groundtruth, io, synth};
 use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
-use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, STATS_FILE};
 use gnnd::metrics::recall_at;
-use gnnd::search::{batch::BatchExecutor, serve, SearchIndex, SearchParams};
+use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::{batch::BatchExecutor, serve, AnnIndex, SearchIndex, SearchParams};
 use gnnd::util::timer::Timer;
 
 struct Args {
@@ -209,6 +216,7 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 stats.rounds,
                 stats.merge_secs
             );
+            println!("stats -> {}/{STATS_FILE}", args.req("dir")?);
             g.save(args.req("out")?)?;
         }
         "eval" => {
@@ -230,73 +238,27 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             let _ = ds;
         }
         "search" => {
-            let ds = io::read_dsb(args.req("data")?)?;
-            let g = KnnGraph::load(args.req("graph")?)?;
             let k: usize = args.parse_or("k", 10usize)?;
             let params = args.search_params()?.with_ef(args.parse_or("ef", 64usize)?);
-            let index = SearchIndex::new(&ds, &g, params)?;
-            match (args.get("query-id"), args.get("queries")) {
-                (Some(_), Some(_)) => {
-                    bail!("--query-id and --queries are mutually exclusive")
-                }
-                (Some(qid), None) => {
-                    let q: usize = qid.parse()?;
-                    anyhow::ensure!(q < ds.len(), "--query-id {q} out of range (n={})", ds.len());
-                    let t = Timer::start();
-                    let mut scratch = index.make_scratch();
-                    let mut out = Vec::new();
-                    index.search_into_excluding(ds.vec(q), k, q as u32, &mut scratch, &mut out);
-                    println!(
-                        "query {q}: top-{k} in {:.3} ms ({} distance evals, {} hops, ef={})",
-                        t.ms(),
-                        scratch.dist_evals,
-                        scratch.hops,
-                        index.params().ef
-                    );
-                    for (rank, (d, id)) in out.iter().enumerate() {
-                        println!("  {:>3}. id={id:<10} dist={d}", rank + 1);
-                    }
-                }
-                (None, Some(qfile)) => {
-                    let qs = io::read_dsb(qfile)?;
+            match args.get("shards") {
+                Some(dir) => {
                     anyhow::ensure!(
-                        qs.d == ds.d,
-                        "query dim {} != dataset dim {}",
-                        qs.d,
-                        ds.d
+                        args.get("graph").is_none(),
+                        "--graph and --shards are mutually exclusive"
                     );
-                    anyhow::ensure!(
-                        qs.metric == ds.metric,
-                        "query metric {} != dataset metric {} (cosine queries must be \
-                         written with the cosine metric so rows are normalized)",
-                        qs.metric,
-                        ds.metric
-                    );
-                    let threads: usize = args.parse_or("threads", 0usize)?;
-                    let t = Timer::start();
-                    let results = BatchExecutor::new(&index, threads).run(qs.raw(), qs.d, k);
-                    let secs = t.secs();
-                    println!(
-                        "{} queries x top-{k} in {:.3}s ({:.0} qps)",
-                        qs.len(),
-                        secs,
-                        qs.len() as f64 / secs.max(1e-9)
-                    );
-                    if let Some(out_path) = args.get("out") {
-                        let rows: Vec<Vec<u32>> = results
-                            .iter()
-                            .map(|r| r.iter().map(|&(_, id)| id).collect())
-                            .collect();
-                        io::write_ivecs(&rows, out_path)?;
-                        println!("wrote {out_path}");
-                    }
+                    let probe: usize = args.parse_or("probe-shards", 0usize)?;
+                    let index = ShardedIndex::open(dir, params, probe)?;
+                    run_search(&args, &index, k)?;
                 }
-                (None, None) => bail!("search needs --query-id <id> or --queries <file.dsb>"),
+                None => {
+                    let ds = io::read_dsb(args.req("data")?)?;
+                    let g = KnnGraph::load(args.req("graph")?)?;
+                    let index = SearchIndex::new(&ds, &g, params)?;
+                    run_search(&args, &index, k)?;
+                }
             }
         }
         "serve-bench" => {
-            let ds = io::read_dsb(args.req("data")?)?;
-            let g = KnnGraph::load(args.req("graph")?)?;
             let dcfg = serve::ServeConfig::default();
             let ef_sweep = match args.get("ef") {
                 None => dcfg.ef_sweep.clone(),
@@ -319,7 +281,30 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 seed: args.parse_or("seed", dcfg.seed)?,
             };
             let t = Timer::start();
-            let report = serve::run_sweep(&ds, &g, &cfg)?;
+            let report = match args.get("shards") {
+                Some(dir) => {
+                    anyhow::ensure!(
+                        args.get("graph").is_none(),
+                        "--graph and --shards are mutually exclusive"
+                    );
+                    let probe: usize = args.parse_or("probe-shards", 0usize)?;
+                    let index = ShardedIndex::open(dir, cfg.params.clone(), probe)?;
+                    // queries + ground truth come from the original
+                    // corpus; without --data it is re-assembled from
+                    // the shards (identical rows, identical order)
+                    let ds = match args.get("data") {
+                        Some(p) => io::read_dsb(p)?,
+                        None => index.concat_dataset(),
+                    };
+                    serve::run_sweep_on(&index, &ds, &cfg)?
+                }
+                None => {
+                    let ds = io::read_dsb(args.req("data")?)?;
+                    let g = KnnGraph::load(args.req("graph")?)?;
+                    let index = SearchIndex::new(&ds, &g, cfg.params.clone())?;
+                    serve::run_sweep_on(&index, &ds, &cfg)?
+                }
+            };
             println!("{}", report.render());
             match report.save_json("results") {
                 Ok(p) => println!("[saved {} — {:.1}s total]", p.display(), t.secs()),
@@ -345,6 +330,71 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             print_usage();
             bail!("unknown subcommand {other:?}");
         }
+    }
+    Ok(())
+}
+
+/// The `search` subcommand body, written against [`AnnIndex`] only —
+/// identical behaviour over a monolithic graph or a shard directory.
+fn run_search(args: &Args, index: &dyn AnnIndex, k: usize) -> anyhow::Result<()> {
+    match (args.get("query-id"), args.get("queries")) {
+        (Some(_), Some(_)) => {
+            bail!("--query-id and --queries are mutually exclusive")
+        }
+        (Some(qid), None) => {
+            let q: usize = qid.parse()?;
+            anyhow::ensure!(q < index.len(), "--query-id {q} out of range (n={})", index.len());
+            let t = Timer::start();
+            let mut scratch = index.make_scratch();
+            let mut out = Vec::new();
+            let qv = index.vector(q as u32);
+            index.search_ef_into_excluding(qv, k, 0, q as u32, &mut scratch, &mut out);
+            println!(
+                "query {q}: top-{k} in {:.3} ms ({} distance evals, {} hops, ef={})",
+                t.ms(),
+                scratch.dist_evals,
+                scratch.hops,
+                index.default_ef()
+            );
+            for (rank, (d, id)) in out.iter().enumerate() {
+                println!("  {:>3}. id={id:<10} dist={d}", rank + 1);
+            }
+        }
+        (None, Some(qfile)) => {
+            let qs = io::read_dsb(qfile)?;
+            anyhow::ensure!(
+                qs.d == index.dim(),
+                "query dim {} != index dim {}",
+                qs.d,
+                index.dim()
+            );
+            anyhow::ensure!(
+                qs.metric == index.metric(),
+                "query metric {} != index metric {} (cosine queries must be \
+                 written with the cosine metric so rows are normalized)",
+                qs.metric,
+                index.metric()
+            );
+            let threads: usize = args.parse_or("threads", 0usize)?;
+            let t = Timer::start();
+            let results = BatchExecutor::new(index, threads).run(qs.raw(), qs.d, k);
+            let secs = t.secs();
+            println!(
+                "{} queries x top-{k} in {:.3}s ({:.0} qps)",
+                qs.len(),
+                secs,
+                qs.len() as f64 / secs.max(1e-9)
+            );
+            if let Some(out_path) = args.get("out") {
+                let rows: Vec<Vec<u32>> = results
+                    .iter()
+                    .map(|r| r.iter().map(|&(_, id)| id).collect())
+                    .collect();
+                io::write_ivecs(&rows, out_path)?;
+                println!("wrote {out_path}");
+            }
+        }
+        (None, None) => bail!("search needs --query-id <id> or --queries <file.dsb>"),
     }
     Ok(())
 }

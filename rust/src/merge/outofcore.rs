@@ -18,13 +18,23 @@ use std::sync::mpsc;
 
 use anyhow::Context;
 
-use crate::config::GnndParams;
+use crate::config::{GnndParams, Metric};
 use crate::dataset::{io, Dataset};
 use crate::gnnd::{self, engine::CrossmatchEngine};
 use crate::graph::{KnnGraph, Neighbor};
+use crate::util::json::Json;
 use crate::util::timer::Timer;
 
-/// On-disk shard layout: `shard_<i>.dsb` + `graph_<i>.knng` under `dir`.
+/// File name of the persisted [`ShardManifest`] inside a shard dir.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// File name of the persisted [`OutOfCoreStats`] inside a shard dir.
+pub const STATS_FILE: &str = "stats.json";
+
+/// On-disk shard layout under `dir`: `shard_<i>.dsb` + `graph_<i>.knng`
+/// per shard, plus `manifest.json` (shard geometry, see
+/// [`ShardManifest`]) and `stats.json` (the last build's
+/// [`OutOfCoreStats`]).
 pub struct ShardStore {
     pub dir: PathBuf,
 }
@@ -58,6 +68,137 @@ impl ShardStore {
     pub fn load_graph(&self, i: usize) -> crate::Result<KnnGraph> {
         KnnGraph::load(self.graph_path(i))
     }
+
+    pub fn save_manifest(&self, m: &ShardManifest) -> crate::Result<()> {
+        std::fs::write(self.dir.join(MANIFEST_FILE), m.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load_manifest(&self) -> crate::Result<ShardManifest> {
+        let path = self.dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("no shard manifest at {path:?} (run ooc-build first)"))?;
+        ShardManifest::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save_stats(&self, stats: &OutOfCoreStats) -> crate::Result<()> {
+        std::fs::write(self.dir.join(STATS_FILE), stats.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Geometry of a shard directory, persisted as `manifest.json` so a
+/// sharded index can be opened from disk without re-running the build:
+/// shard count, the global-id offset of every shard (the same offsets
+/// [`build_out_of_core`] remaps the sub-graphs with), vector dims, the
+/// graph degree, and per-shard centroids (routing hints for serving
+/// with `probe_shards < shards`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub shards: usize,
+    /// Total objects across all shards (= original dataset size).
+    pub total: usize,
+    pub d: usize,
+    /// Graph degree of the per-shard `.knng` files.
+    pub k: usize,
+    pub metric: Metric,
+    /// Global id of each shard's first object, ascending.
+    pub offsets: Vec<usize>,
+    /// Per-shard mean vectors (normalized under cosine).
+    pub centroids: Vec<Vec<f32>>,
+}
+
+fn jfield<'a>(j: &'a Json, key: &str) -> crate::Result<&'a Json> {
+    j.get(key).with_context(|| format!("manifest missing field {key:?}"))
+}
+
+fn jusize(j: &Json, key: &str) -> crate::Result<usize> {
+    jfield(j, key)?
+        .as_usize()
+        .with_context(|| format!("manifest field {key:?} is not a number"))
+}
+
+impl ShardManifest {
+    pub fn to_json(&self) -> Json {
+        let offsets: Vec<Json> = self.offsets.iter().map(|&o| Json::Num(o as f64)).collect();
+        let centroids: Vec<Json> = self
+            .centroids
+            .iter()
+            .map(|c| Json::Arr(c.iter().map(|&x| Json::Num(x as f64)).collect()))
+            .collect();
+        Json::obj()
+            .set("shards", self.shards)
+            .set("total", self.total)
+            .set("d", self.d)
+            .set("k", self.k)
+            .set("metric", self.metric.as_str())
+            .set("offsets", Json::Arr(offsets))
+            .set("centroids", Json::Arr(centroids))
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ShardManifest> {
+        let metric: Metric = jfield(j, "metric")?
+            .as_str()
+            .context("manifest field \"metric\" is not a string")?
+            .parse()?;
+        let offsets = jfield(j, "offsets")?
+            .as_arr()
+            .context("manifest field \"offsets\" is not an array")?
+            .iter()
+            .map(|v| v.as_usize().context("offset is not a number"))
+            .collect::<crate::Result<Vec<usize>>>()?;
+        let centroids = jfield(j, "centroids")?
+            .as_arr()
+            .context("manifest field \"centroids\" is not an array")?
+            .iter()
+            .map(|c| {
+                let row = c.as_arr().context("centroid is not an array")?;
+                row.iter()
+                    .map(|x| {
+                        let v = x.as_f64().context("centroid component is not a number")?;
+                        Ok(v as f32)
+                    })
+                    .collect::<crate::Result<Vec<f32>>>()
+            })
+            .collect::<crate::Result<Vec<Vec<f32>>>>()?;
+        let m = ShardManifest {
+            shards: jusize(j, "shards")?,
+            total: jusize(j, "total")?,
+            d: jusize(j, "d")?,
+            k: jusize(j, "k")?,
+            metric,
+            offsets,
+            centroids,
+        };
+        anyhow::ensure!(
+            m.offsets.len() == m.shards && m.centroids.len() == m.shards,
+            "manifest lists {} offsets / {} centroids for {} shards",
+            m.offsets.len(),
+            m.centroids.len(),
+            m.shards
+        );
+        Ok(m)
+    }
+}
+
+/// Mean vector of a shard (normalized under cosine so routing compares
+/// in the same geometry as the data) — the [`ShardManifest`] routing
+/// hint used by centroid-based shard selection at serve time.
+pub fn shard_centroid(ds: &Dataset) -> Vec<f32> {
+    let mut c = vec![0.0f32; ds.d];
+    for i in 0..ds.len() {
+        for (acc, &x) in c.iter_mut().zip(ds.vec(i)) {
+            *acc += x;
+        }
+    }
+    let n = ds.len().max(1) as f32;
+    for acc in c.iter_mut() {
+        *acc /= n;
+    }
+    if ds.metric == Metric::Cosine {
+        crate::distance::normalize(&mut c);
+    }
+    c
 }
 
 /// Round-robin tournament schedule: all C(s,2) pairs in `s-1` (or `s`)
@@ -102,7 +243,9 @@ impl Default for OutOfCoreConfig {
     }
 }
 
-/// Statistics of an out-of-core build.
+/// Statistics of an out-of-core build. Persisted as `stats.json` next
+/// to the shards ([`ShardStore::save_stats`]) so bench trajectories can
+/// track merge cost per run.
 #[derive(Clone, Debug, Default)]
 pub struct OutOfCoreStats {
     pub build_secs: f64,
@@ -110,6 +253,17 @@ pub struct OutOfCoreStats {
     pub merges: usize,
     pub rounds: usize,
     pub io_secs: f64,
+}
+
+impl OutOfCoreStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("build_secs", self.build_secs)
+            .set("merge_secs", self.merge_secs)
+            .set("merges", self.merges)
+            .set("rounds", self.rounds)
+            .set("io_secs", self.io_secs)
+    }
 }
 
 /// Build the k-NN graph of `ds` out-of-core under `dir`.
@@ -127,17 +281,28 @@ pub fn build_out_of_core(
     let store = ShardStore::new(&dir)?;
     let mut stats = OutOfCoreStats::default();
 
-    // ---- partition + spill ----
+    // ---- partition + spill (+ manifest, so the dir is servable) ----
     let t = Timer::start();
     let shards = ds.split(cfg.shards);
     let mut offsets = Vec::with_capacity(cfg.shards);
+    let mut centroids = Vec::with_capacity(cfg.shards);
     let mut off = 0usize;
     for (i, sh) in shards.iter().enumerate() {
         offsets.push(off);
         off += sh.len();
+        centroids.push(shard_centroid(sh));
         store.save_shard(i, sh)?;
     }
     drop(shards); // from here on, everything is re-read from disk
+    store.save_manifest(&ShardManifest {
+        shards: cfg.shards,
+        total: ds.len(),
+        d: ds.d,
+        k: cfg.params.k,
+        metric: ds.metric,
+        offsets: offsets.clone(),
+        centroids,
+    })?;
     stats.io_secs += t.secs();
 
     // ---- per-shard GNND builds (sequential per worker budget) ----
@@ -172,6 +337,7 @@ pub fn build_out_of_core(
             Some(acc) => acc.stack(&g),
         });
     }
+    store.save_stats(&stats)?;
     Ok((final_g.unwrap(), stats))
 }
 

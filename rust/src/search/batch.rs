@@ -4,27 +4,38 @@
 //! coordinator in [`crate::graph::concurrent`] / the baselines): one
 //! crossbeam scoped thread per range, one warm
 //! [`crate::search::SearchScratch`] per thread reused across all of
-//! that thread's queries, results written
-//! into disjoint output chunks. Queries are independent, so batched
-//! results are bit-identical to single-query execution regardless of
-//! the thread count.
+//! that thread's queries, results written into disjoint output chunks.
+//! Queries are independent, so batched results are bit-identical to
+//! single-query execution regardless of the thread count.
+//!
+//! The executor is written against [`AnnIndex`] only — it fans the
+//! same way over any index layout, monolithic or sharded.
 
 use crate::graph::EMPTY;
 use crate::util::split_ranges;
 
-use super::SearchIndex;
+use super::AnnIndex;
 
-/// Multi-query executor over a [`SearchIndex`].
-pub struct BatchExecutor<'i, 'a> {
-    index: &'i SearchIndex<'a>,
+/// Multi-query executor over any [`AnnIndex`].
+pub struct BatchExecutor<'i> {
+    index: &'i dyn AnnIndex,
     threads: usize,
+    /// `ef` override applied to every query (0 = index default) — the
+    /// knob the serve harness sweeps without rebuilding indexes.
+    ef: usize,
 }
 
-impl<'i, 'a> BatchExecutor<'i, 'a> {
+impl<'i> BatchExecutor<'i> {
     /// `threads = 0` = auto ([`crate::util::num_threads`]).
-    pub fn new(index: &'i SearchIndex<'a>, threads: usize) -> Self {
+    pub fn new(index: &'i dyn AnnIndex, threads: usize) -> Self {
         let threads = if threads == 0 { crate::util::num_threads() } else { threads };
-        BatchExecutor { index, threads }
+        BatchExecutor { index, threads, ef: 0 }
+    }
+
+    /// Run every query at this `ef` operating point (0 = index default).
+    pub fn with_ef(mut self, ef: usize) -> Self {
+        self.ef = ef;
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -65,6 +76,7 @@ impl<'i, 'a> BatchExecutor<'i, 'a> {
             v
         };
         let index = self.index;
+        let ef = self.ef;
         crossbeam_utils::thread::scope(|s| {
             for (r, chunk) in ranges.iter().zip(chunks) {
                 let r = r.clone();
@@ -74,65 +86,13 @@ impl<'i, 'a> BatchExecutor<'i, 'a> {
                     for (slot, qi) in r.enumerate() {
                         let q = &queries[qi * d..(qi + 1) * d];
                         let ex = exclude.get(qi).copied().unwrap_or(EMPTY);
-                        index.search_into_excluding(q, k, ex, &mut scratch, &mut chunk[slot]);
+                        let out = &mut chunk[slot];
+                        index.search_ef_into_excluding(q, k, ef, ex, &mut scratch, out);
                     }
                 });
             }
         })
         .unwrap();
         out
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::baselines::bruteforce;
-    use crate::dataset::synth;
-    use crate::search::SearchParams;
-
-    #[test]
-    fn batched_is_bit_identical_to_single() {
-        let ds = synth::clustered(300, 8, 101);
-        let g = bruteforce::build_native(&ds, 8);
-        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
-        let nq = 40;
-        let mut qbuf = Vec::with_capacity(nq * ds.d);
-        let mut exclude = Vec::with_capacity(nq);
-        for q in 0..nq {
-            qbuf.extend_from_slice(ds.vec(q));
-            exclude.push(q as u32);
-        }
-        let batched = BatchExecutor::new(&index, 4).run_excluding(&qbuf, ds.d, 10, &exclude);
-        let mut scratch = index.make_scratch();
-        let mut single = Vec::new();
-        for q in 0..nq {
-            index.search_into_excluding(ds.vec(q), 10, q as u32, &mut scratch, &mut single);
-            assert_eq!(batched[q], single, "query {q} differs");
-        }
-    }
-
-    #[test]
-    fn thread_count_does_not_change_results() {
-        let ds = synth::clustered(250, 6, 102);
-        let g = bruteforce::build_native(&ds, 8);
-        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
-        let nq = 30;
-        let mut qbuf = Vec::new();
-        for q in 0..nq {
-            qbuf.extend_from_slice(ds.vec(q));
-        }
-        let a = BatchExecutor::new(&index, 1).run(&qbuf, ds.d, 5);
-        let b = BatchExecutor::new(&index, 3).run(&qbuf, ds.d, 5);
-        assert_eq!(a, b);
-    }
-
-    #[test]
-    fn empty_batch_is_fine() {
-        let ds = synth::uniform(60, 4, 103);
-        let g = bruteforce::build_native(&ds, 6);
-        let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
-        let out = BatchExecutor::new(&index, 2).run(&[], ds.d, 5);
-        assert!(out.is_empty());
     }
 }

@@ -8,19 +8,27 @@
 //!
 //! Layers:
 //!
-//! * this module — [`SearchIndex`]: entry-point selection (random
-//!   medoids or k-means seeds reusing [`crate::baselines::kmeans`]) and
-//!   best-first beam search with a reusable [`SearchScratch`]
-//!   (epoch-stamped visited set + persistent heaps), so the hot path
-//!   performs **zero allocations** per query once warm;
+//! * this module — the [`AnnIndex`] abstraction every consumer (batch
+//!   executor, serve harness, CLI) is written against, plus its
+//!   monolithic implementation [`SearchIndex`]: entry-point selection
+//!   (random medoids or k-means seeds reusing
+//!   [`crate::baselines::kmeans`]) and best-first beam search with a
+//!   reusable [`SearchScratch`] (epoch-stamped visited set + persistent
+//!   heaps), so the hot path performs **zero allocations** per query
+//!   once warm;
+//! * [`sharded`] — [`sharded::ShardedIndex`]: scatter-gather serving
+//!   over the per-shard graphs of the out-of-core pipeline
+//!   ([`crate::merge::outofcore`]);
 //! * [`batch`] — multi-query execution fanned across worker threads
 //!   (crossbeam scoped threads, per-thread scratch);
 //! * [`serve`] — a closed-loop serving harness reporting QPS, latency
 //!   percentiles and recall@k over an `ef` sweep.
 //!
-//! The free function [`beam_search`] is the single greedy-search
-//! implementation in the codebase: [`crate::baselines::ggnn`] delegates
-//! its hierarchy construction and search-based merge to it.
+//! The free function [`beam_search`] is the greedy-search loop of the
+//! monolithic path: [`crate::baselines::ggnn`] delegates its hierarchy
+//! construction and search-based merge to it, and the per-shard walk in
+//! [`sharded`] mirrors it (scoring, but not expanding, cross-shard
+//! edges).
 //!
 //! ```no_run
 //! use gnnd::dataset::synth;
@@ -38,6 +46,7 @@
 
 pub mod batch;
 pub mod serve;
+pub mod sharded;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -194,6 +203,11 @@ pub struct SearchScratch {
     results: BinaryHeap<(F32, u32)>,
     /// Staging buffer for frontier pruning / result emission.
     buf: Vec<(F32, u32)>,
+    /// Scatter-gather accumulator: per-shard top-k candidates awaiting
+    /// the final k-way merge ([`sharded::ShardedIndex`] only).
+    pub(crate) shard_topk: Vec<(F32, u32)>,
+    /// Shard routing order: (query-to-centroid distance, shard).
+    pub(crate) shard_rank: Vec<(F32, usize)>,
     /// Distance evaluations performed by the last query.
     pub dist_evals: usize,
     /// Node expansions performed by the last query.
@@ -207,6 +221,8 @@ impl SearchScratch {
             frontier: BinaryHeap::new(),
             results: BinaryHeap::new(),
             buf: Vec::new(),
+            shard_topk: Vec::new(),
+            shard_rank: Vec::new(),
             dist_evals: 0,
             hops: 0,
         }
@@ -246,10 +262,12 @@ pub struct QuerySpec<'q> {
 /// the dataset directly. Returned ids (and `spec.exclude`) are in the
 /// *dataset* id space.
 ///
-/// This is the single greedy-search loop in the codebase — the
+/// This is the greedy-search loop of the monolithic path — the
 /// [`SearchIndex`] hot path and [`crate::baselines::ggnn`] both call
-/// it. Ties on distance break by ascending id (tuple ordering), so
-/// results are deterministic for a fixed graph and entry set.
+/// it. ([`sharded`] mirrors this loop with one twist: cross-shard
+/// edges are scored but never expanded; keep the two in sync.) Ties on
+/// distance break by ascending id (tuple ordering), so results are
+/// deterministic for a fixed graph and entry set.
 pub fn beam_search(
     ds: &Dataset,
     graph: &KnnGraph,
@@ -344,6 +362,77 @@ pub fn beam_search(
             break;
         }
         out.push((d, to_global(id)));
+    }
+}
+
+/// An object-safe ANN index: the seam between query *execution*
+/// ([`batch::BatchExecutor`], [`serve`], the CLI) and index *layout*
+/// (monolithic [`SearchIndex`] vs scatter-gather
+/// [`sharded::ShardedIndex`]). Executors hold `&dyn AnnIndex` and never
+/// learn whether the data behind it is one in-memory graph or a
+/// directory of out-of-core shards.
+///
+/// Ids are always in the index's **global** object id space (for a
+/// sharded index: the id space of the original, un-split dataset).
+pub trait AnnIndex: Sync {
+    /// Number of indexed objects.
+    fn len(&self) -> usize;
+
+    /// Vector dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Distance metric of the indexed data.
+    fn metric(&self) -> crate::config::Metric;
+
+    /// The indexed vector with (global) object id `id`.
+    fn vector(&self, id: u32) -> &[f32];
+
+    /// The index's configured `ef` (used when a query passes `ef = 0`).
+    fn default_ef(&self) -> usize;
+
+    /// One-line description for reports (`monolithic(...)`,
+    /// `sharded(...)`).
+    fn describe(&self) -> String;
+
+    /// A scratch pre-sized for this index.
+    fn make_scratch(&self) -> SearchScratch;
+
+    /// Core query entry point: top-`k` neighbors of `q` written into
+    /// `out` (cleared first), ascending by distance. `ef = 0` uses the
+    /// index default; `exclude` drops one object id from the results
+    /// ([`EMPTY`] = none). Implementations must leave
+    /// `scratch.dist_evals` / `scratch.hops` describing the query.
+    fn search_ef_into_excluding(
+        &self,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    );
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Zero-allocation query at the index's default `ef`.
+    fn search_into(
+        &self,
+        q: &[f32],
+        k: usize,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        self.search_ef_into_excluding(q, k, 0, EMPTY, scratch, out)
+    }
+
+    /// Convenience single query (allocates a fresh scratch).
+    fn search(&self, q: &[f32], k: usize) -> Vec<(f32, u32)> {
+        let mut scratch = self.make_scratch();
+        let mut out = Vec::with_capacity(k);
+        self.search_ef_into_excluding(q, k, 0, EMPTY, &mut scratch, &mut out);
+        out
     }
 }
 
@@ -446,6 +535,58 @@ impl<'a> SearchIndex<'a> {
             q,
             k,
             ef: p.ef,
+            beam_width: p.beam_width,
+            max_hops: p.max_hops,
+            entries: &self.entries,
+            exclude,
+        };
+        beam_search(self.ds, self.graph, None, &spec, scratch, out);
+    }
+}
+
+impl<'a> AnnIndex for SearchIndex<'a> {
+    fn len(&self) -> usize {
+        self.graph.n()
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.d
+    }
+
+    fn metric(&self) -> crate::config::Metric {
+        self.ds.metric
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        self.ds.vec(id as usize)
+    }
+
+    fn default_ef(&self) -> usize {
+        self.params.ef
+    }
+
+    fn describe(&self) -> String {
+        format!("monolithic(n={}, graph_k={})", self.graph.n(), self.graph.k())
+    }
+
+    fn make_scratch(&self) -> SearchScratch {
+        SearchIndex::make_scratch(self)
+    }
+
+    fn search_ef_into_excluding(
+        &self,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let p = &self.params;
+        let spec = QuerySpec {
+            q,
+            k,
+            ef: if ef == 0 { p.ef } else { ef },
             beam_width: p.beam_width,
             max_hops: p.max_hops,
             entries: &self.entries,

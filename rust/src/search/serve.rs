@@ -1,33 +1,40 @@
-//! Closed-loop serving harness: replay a query stream against a
-//! [`SearchIndex`] and measure what a serving deployment cares about —
+//! Closed-loop serving harness: replay a query stream against any
+//! [`AnnIndex`] and measure what a serving deployment cares about —
 //! throughput (QPS), tail latency (p50/p95/p99) and quality (recall@k
 //! against exact ground truth) — across an `ef` sweep, emitting a
-//! [`Report`] of the recall-vs-QPS operating curve.
+//! [`Report`] of the recall-vs-QPS operating curve. The harness never
+//! sees the index layout, so the same sweep produces the
+//! monolithic-vs-sharded operating curves.
 //!
 //! Two passes per operating point:
 //! 1. a *quality* pass through [`BatchExecutor`] computing recall@k;
 //! 2. a *timing* pass where `threads` closed-loop workers pull query
 //!    indices from a shared cursor (each with its own warm scratch)
 //!    and record per-query wall latencies.
+//!
+//! Operating points with `ef < k` are clamped up to `k` (with a printed
+//! warning): beam search caps the result pool at `max(ef, k)` anyway,
+//! so a sub-`k` point would silently run — and be reported — at a
+//! different `ef` than its label claims.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::dataset::{groundtruth, Dataset};
-use crate::graph::KnnGraph;
 use crate::metrics::{Report, Row};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 use super::batch::BatchExecutor;
-use super::{SearchIndex, SearchParams};
+use super::{AnnIndex, SearchParams};
 
 /// Configuration of a serving benchmark.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Neighbors per query (recall is measured at this k).
     pub k: usize,
-    /// `ef` operating points, one report row each.
+    /// `ef` operating points, one report row each (points below `k`
+    /// clamp to `k`, see [`clamp_ef`]).
     pub ef_sweep: Vec<usize>,
     /// Total queries replayed per operating point (closed loop).
     pub n_queries: usize,
@@ -56,7 +63,8 @@ impl Default for ServeConfig {
     }
 }
 
-/// Measured behaviour of one operating point.
+/// Measured behaviour of one operating point. `ef` is the *effective*
+/// width the point ran at (requested, clamped up to `k`).
 #[derive(Clone, Debug)]
 pub struct ServeStats {
     pub ef: usize,
@@ -112,6 +120,30 @@ pub fn recall_of(results: &[Vec<(f32, u32)>], truth: &[Vec<u32>], k: usize) -> f
     }
 }
 
+/// `ef < k` silently caps the result pool at `k` inside beam search, so
+/// a sub-`k` operating point would be mislabeled. Returns the effective
+/// `ef` and whether clamping happened.
+pub fn clamp_ef(ef: usize, k: usize) -> (usize, bool) {
+    if ef < k {
+        (k, true)
+    } else {
+        (ef, false)
+    }
+}
+
+/// [`clamp_ef`] plus the operator-facing warning — the single place the
+/// clamp message lives (used by both [`run_point`] and the sweep).
+fn clamp_ef_warn(ef: usize, k: usize) -> usize {
+    let (eff, clamped) = clamp_ef(ef, k);
+    if clamped {
+        eprintln!(
+            "[serve] warning: ef={ef} < k={k}; clamped to ef={eff} \
+             (ef below k silently caps the result pool and recall)"
+        );
+    }
+    eff
+}
+
 fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
     if sorted_secs.is_empty() {
         return 0.0;
@@ -120,20 +152,19 @@ fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
     sorted_secs[idx.min(sorted_secs.len() - 1)] * 1e3
 }
 
-/// Measure one operating point (`ef`) of the sweep. `base` carries the
-/// already-selected entry points; only `ef` changes between points.
+/// Measure one operating point (`ef`) of the sweep against any index.
 pub fn run_point(
-    base: &SearchIndex,
+    index: &dyn AnnIndex,
     stream: &QueryStream,
     cfg: &ServeConfig,
     ef: usize,
 ) -> ServeStats {
-    let index = base.with_ef(ef);
+    let ef = clamp_ef_warn(ef, cfg.k);
     let threads = if cfg.threads == 0 { crate::util::num_threads() } else { cfg.threads };
     let exclude: Vec<u32> = stream.qids.iter().map(|&q| q as u32).collect();
 
     // ---- quality pass ----
-    let results = BatchExecutor::new(&index, threads).run_excluding(
+    let results = BatchExecutor::new(index, threads).with_ef(ef).run_excluding(
         &stream.qbuf,
         stream.d,
         cfg.k,
@@ -150,14 +181,13 @@ pub fn run_point(
     let k = cfg.k;
     let qbuf = stream.qbuf.as_slice();
     let exclude_ref = exclude.as_slice();
-    let index_ref = &index;
     let wall = Timer::start();
     crossbeam_utils::thread::scope(|s| {
         for _ in 0..threads {
             let cursor = &cursor;
             let lat = &lat;
             s.spawn(move |_| {
-                let mut scratch = index_ref.make_scratch();
+                let mut scratch = index.make_scratch();
                 let mut out = Vec::with_capacity(k);
                 let mut local = Vec::new();
                 loop {
@@ -167,9 +197,10 @@ pub fn run_point(
                     }
                     let qi = i % nq;
                     let t = Timer::start();
-                    index_ref.search_into_excluding(
+                    index.search_ef_into_excluding(
                         &qbuf[qi * d..(qi + 1) * d],
                         k,
+                        ef,
                         exclude_ref[qi],
                         &mut scratch,
                         &mut out,
@@ -196,26 +227,59 @@ pub fn run_point(
     }
 }
 
-/// Run the whole `ef` sweep, returning the recall-vs-QPS table.
-pub fn run_sweep(ds: &Dataset, graph: &KnnGraph, cfg: &ServeConfig) -> crate::Result<Report> {
+/// Run the whole `ef` sweep against an already-constructed index,
+/// returning the recall-vs-QPS table. `ds` supplies the query stream
+/// (sampled objects + exact ground truth) and must be the corpus the
+/// index serves — for a sharded index, the un-split original dataset.
+pub fn run_sweep_on(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    cfg: &ServeConfig,
+) -> crate::Result<Report> {
     anyhow::ensure!(!cfg.ef_sweep.is_empty(), "ef_sweep is empty");
     anyhow::ensure!(cfg.k > 0, "k must be > 0");
-    let base = SearchIndex::new(ds, graph, cfg.params.clone())?;
+    anyhow::ensure!(
+        index.len() == ds.len(),
+        "index covers {} objects but query corpus has {}",
+        index.len(),
+        ds.len()
+    );
+    anyhow::ensure!(
+        index.dim() == ds.d,
+        "index dim {} != query corpus dim {}",
+        index.dim(),
+        ds.d
+    );
+    anyhow::ensure!(
+        index.metric() == ds.metric,
+        "index metric {} != query corpus metric {}",
+        index.metric(),
+        ds.metric
+    );
     let stream = sample_queries(ds, cfg.distinct_queries, cfg.k, cfg.seed);
     let threads = if cfg.threads == 0 { crate::util::num_threads() } else { cfg.threads };
     let mut report = Report::new(format!("Serve bench: {}", ds.name))
+        .meta("index", index.describe())
         .meta("n", ds.len())
         .meta("d", ds.d)
-        .meta("graph_k", graph.k())
         .meta("k", cfg.k)
         .meta("threads", threads)
         .meta("entry", format!("{}x{}", cfg.params.n_entry, cfg.params.entry))
         .meta("queries", format!("{} distinct, {} replayed", stream.qids.len(), cfg.n_queries));
     let recall_col = format!("recall@{}", cfg.k);
+    // clamp sub-k points up front and dedupe: ef=2,4,8 at k=10 are all
+    // the same operating point — measure (and report) it once
+    let mut sweep: Vec<usize> = Vec::with_capacity(cfg.ef_sweep.len());
     for &ef in &cfg.ef_sweep {
-        let s = run_point(&base, &stream, cfg, ef);
+        let eff = clamp_ef_warn(ef, cfg.k);
+        if !sweep.contains(&eff) {
+            sweep.push(eff);
+        }
+    }
+    for &ef in &sweep {
+        let s = run_point(index, &stream, cfg, ef);
         report.push(
-            Row::new(format!("ef={ef}"))
+            Row::new(format!("ef={}", s.ef))
                 .col("ef", s.ef as f64)
                 .col("qps", s.qps)
                 .col("p50_ms", s.p50_ms)
@@ -230,35 +294,62 @@ pub fn run_sweep(ds: &Dataset, graph: &KnnGraph, cfg: &ServeConfig) -> crate::Re
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::bruteforce;
     use crate::dataset::synth;
+    use crate::search::SearchScratch;
 
-    #[test]
-    fn sweep_produces_rows_and_sane_numbers() {
-        let ds = synth::clustered(400, 8, 111);
-        let g = bruteforce::build_native(&ds, 8);
-        let cfg = ServeConfig {
-            ef_sweep: vec![8, 64],
-            n_queries: 100,
-            distinct_queries: 50,
-            threads: 2,
-            ..Default::default()
-        };
-        let report = run_sweep(&ds, &g, &cfg).unwrap();
-        assert_eq!(report.rows.len(), 2);
-        for row in &report.rows {
-            let get = |name: &str| row.cols.iter().find(|(n, _)| n == name).unwrap().1;
-            assert!(get("qps") > 0.0);
-            assert!(get("p50_ms") >= 0.0);
-            assert!(get("p99_ms") >= get("p50_ms"));
-            let r = get("recall@10");
-            assert!((0.0..=1.0).contains(&r), "recall {r}");
+    /// A trait-only exact-scan index: serve.rs is written against
+    /// [`AnnIndex`] alone, so its tests exercise the harness through a
+    /// layout the module never heard of.
+    struct Flat {
+        ds: Dataset,
+    }
+
+    impl AnnIndex for Flat {
+        fn len(&self) -> usize {
+            self.ds.len()
         }
-        // higher ef must not hurt recall on an exact graph
-        let r_of = |i: usize| {
-            report.rows[i].cols.iter().find(|(n, _)| n == "recall@10").unwrap().1
-        };
-        assert!(r_of(1) >= r_of(0) - 1e-9, "ef=64 {} < ef=8 {}", r_of(1), r_of(0));
+
+        fn dim(&self) -> usize {
+            self.ds.d
+        }
+
+        fn metric(&self) -> crate::config::Metric {
+            self.ds.metric
+        }
+
+        fn vector(&self, id: u32) -> &[f32] {
+            self.ds.vec(id as usize)
+        }
+
+        fn default_ef(&self) -> usize {
+            10
+        }
+
+        fn describe(&self) -> String {
+            "flat".into()
+        }
+
+        fn make_scratch(&self) -> SearchScratch {
+            SearchScratch::new()
+        }
+
+        fn search_ef_into_excluding(
+            &self,
+            q: &[f32],
+            k: usize,
+            _ef: usize,
+            exclude: u32,
+            _scratch: &mut SearchScratch,
+            out: &mut Vec<(f32, u32)>,
+        ) {
+            let mut all: Vec<(f32, u32)> = (0..self.ds.len() as u32)
+                .filter(|&i| i != exclude)
+                .map(|i| (self.ds.dist_to(i as usize, q), i))
+                .collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            out.clear();
+            out.extend(all.into_iter().take(k));
+        }
     }
 
     #[test]
@@ -274,5 +365,52 @@ mod tests {
             vec![(0.1, 4), (0.2, 5), (0.3, 6)],
         ];
         assert!((recall_of(&miss, &truth, 3) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ef_below_k_is_clamped() {
+        assert_eq!(clamp_ef(4, 10), (10, true));
+        assert_eq!(clamp_ef(10, 10), (10, false));
+        assert_eq!(clamp_ef(64, 10), (64, false));
+        let ds = synth::uniform(80, 4, 7);
+        let flat = Flat { ds };
+        let stream = sample_queries(&flat.ds, 20, 10, 3);
+        let cfg = ServeConfig {
+            n_queries: 20,
+            distinct_queries: 20,
+            threads: 1,
+            ..Default::default()
+        };
+        let s = run_point(&flat, &stream, &cfg, 4);
+        assert_eq!(s.ef, 10, "ef < k must run (and report) at ef = k");
+        assert!(s.recall > 0.999, "exact scan recall {}", s.recall);
+    }
+
+    #[test]
+    fn sweep_rows_report_effective_ef() {
+        let ds = synth::uniform(60, 4, 8);
+        let corpus = ds.clone();
+        let flat = Flat { ds };
+        let cfg = ServeConfig {
+            // 2 and 4 both clamp to k=10 -> one deduped ef=10 row
+            ef_sweep: vec![2, 4, 16],
+            n_queries: 10,
+            distinct_queries: 10,
+            threads: 1,
+            ..Default::default()
+        };
+        let report = run_sweep_on(&flat, &corpus, &cfg).unwrap();
+        assert_eq!(report.rows.len(), 2, "clamped duplicates must dedupe");
+        assert_eq!(report.rows[0].label, "ef=10");
+        assert_eq!(report.rows[1].label, "ef=16");
+        let ef_of = |i: usize| report.rows[i].cols.iter().find(|(n, _)| n == "ef").unwrap().1;
+        assert_eq!(ef_of(0), 10.0);
+        assert_eq!(ef_of(1), 16.0);
+        for row in &report.rows {
+            let get = |name: &str| row.cols.iter().find(|(n, _)| n == name).unwrap().1;
+            assert!(get("qps") > 0.0);
+            assert!(get("p99_ms") >= get("p50_ms"));
+            assert!((0.0..=1.0).contains(&get("recall@10")));
+        }
     }
 }

@@ -1,0 +1,379 @@
+//! Sharded serving: scatter-gather ANN search over the per-shard graphs
+//! of the out-of-core pipeline ([`crate::merge::outofcore`]).
+//!
+//! `ooc-build` leaves behind a [`ShardStore`] directory: one
+//! `shard_<i>.dsb` / `graph_<i>.knng` pair per shard (neighbor ids in
+//! the **global** id space, GGM-merged across all shard pairs) plus a
+//! [`ShardManifest`]. [`ShardedIndex`] opens that directory and serves
+//! it:
+//!
+//! 1. **route** — rank shards by query-to-centroid distance and keep the
+//!    best `probe_shards` (0 = probe everything), so hot paths skip
+//!    irrelevant shards;
+//! 2. **scatter** — run an independent best-first search *inside* each
+//!    probed shard. Only nodes owned by the shard are expanded;
+//!    cross-shard edges (the merge's contribution) are scored as
+//!    candidate results but never walked, which keeps the per-shard
+//!    walks independent — the property that later lets shards live on
+//!    different workers or devices;
+//! 3. **gather** — k-way merge the per-shard top-k lists (dedup by id:
+//!    a cross-shard edge and its home shard can propose the same
+//!    object) into the final ascending top-k.
+//!
+//! The whole pipeline reuses one [`SearchScratch`] per worker thread —
+//! the sharded hot path stays allocation-free once warm, exactly like
+//! the monolithic one.
+
+use std::cmp::Reverse;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::config::Metric;
+use crate::dataset::groundtruth::ordered::F32;
+use crate::dataset::Dataset;
+use crate::graph::KnnGraph;
+use crate::merge::outofcore::{shard_centroid, ShardStore};
+
+use super::{select_entries, AnnIndex, SearchParams, SearchScratch};
+
+/// One resident shard: its vectors, its merged sub-graph (neighbor ids
+/// in the global id space), its global-id offset, fixed entry points
+/// (global ids) and routing centroid.
+struct Shard {
+    ds: Dataset,
+    graph: KnnGraph,
+    offset: usize,
+    entries: Vec<u32>,
+    centroid: Vec<f32>,
+}
+
+/// An [`AnnIndex`] over the shard files of an out-of-core build.
+pub struct ShardedIndex {
+    shards: Vec<Shard>,
+    /// Start id of each shard, ascending (offsets\[s\] = shard s start).
+    offsets: Vec<usize>,
+    total: usize,
+    d: usize,
+    metric: Metric,
+    params: SearchParams,
+    /// Shards probed per query (0 = all).
+    probe_shards: usize,
+}
+
+impl ShardedIndex {
+    /// Open an `ooc-build` output directory (manifest + shard files).
+    pub fn open(
+        dir: impl AsRef<Path>,
+        params: SearchParams,
+        probe_shards: usize,
+    ) -> crate::Result<Self> {
+        let store = ShardStore::new(dir)?;
+        Self::from_store(&store, params, probe_shards)
+    }
+
+    pub fn from_store(
+        store: &ShardStore,
+        params: SearchParams,
+        probe_shards: usize,
+    ) -> crate::Result<Self> {
+        params.validate()?;
+        let manifest = store.load_manifest()?;
+        anyhow::ensure!(manifest.shards >= 1, "manifest has no shards");
+        let mut shards = Vec::with_capacity(manifest.shards);
+        let mut offsets = Vec::with_capacity(manifest.shards);
+        let mut expect = 0usize;
+        for s in 0..manifest.shards {
+            let ds = store.load_shard(s)?;
+            let graph = store.load_graph(s)?;
+            anyhow::ensure!(
+                graph.n() == ds.len(),
+                "shard {s}: graph covers {} objects but shard has {}",
+                graph.n(),
+                ds.len()
+            );
+            anyhow::ensure!(
+                ds.d == manifest.d,
+                "shard {s}: dim {} != manifest dim {}",
+                ds.d,
+                manifest.d
+            );
+            let offset = manifest.offsets[s];
+            anyhow::ensure!(
+                offset == expect,
+                "shard {s}: manifest offset {offset} not contiguous (expected {expect})"
+            );
+            expect += ds.len();
+            // the shards' global id space must be closed over the
+            // manifest total — corrupt graphs fail here, not mid-query
+            check_global_ids(&graph, offset, manifest.total)
+                .with_context(|| format!("shard {s} graph"))?;
+            // per-shard entry selection (shard-local ids -> global);
+            // decorrelate the per-shard RNG streams with the shard id
+            let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let sp = params.clone().with_seed(params.seed ^ salt);
+            let mut entries = select_entries(&ds, &graph, &sp);
+            for e in entries.iter_mut() {
+                *e += offset as u32;
+            }
+            let centroid = match manifest.centroids.get(s) {
+                Some(c) if !c.is_empty() => c.clone(),
+                _ => shard_centroid(&ds),
+            };
+            offsets.push(offset);
+            shards.push(Shard { ds, graph, offset, entries, centroid });
+        }
+        anyhow::ensure!(
+            expect == manifest.total,
+            "manifest total {} != sum of shard sizes {expect}",
+            manifest.total
+        );
+        Ok(ShardedIndex {
+            shards,
+            offsets,
+            total: manifest.total,
+            d: manifest.d,
+            metric: manifest.metric,
+            params,
+            probe_shards,
+        })
+    }
+
+    /// Number of shards resident.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Effective shards probed per query.
+    pub fn probe(&self) -> usize {
+        if self.probe_shards == 0 {
+            self.shards.len()
+        } else {
+            self.probe_shards.min(self.shards.len())
+        }
+    }
+
+    pub fn params(&self) -> &SearchParams {
+        &self.params
+    }
+
+    /// The full corpus re-assembled as one in-memory dataset (bench /
+    /// ground-truth convenience; true deployments keep shards apart).
+    pub fn concat_dataset(&self) -> Dataset {
+        let mut it = self.shards.iter();
+        let first = it.next().expect("at least one shard").ds.clone();
+        it.fold(first, |acc, s| acc.concat(&s.ds, "sharded"))
+    }
+
+    /// Owning shard of a global id.
+    #[inline]
+    fn owner(&self, gid: u32) -> usize {
+        self.offsets.partition_point(|&off| off <= gid as usize) - 1
+    }
+
+    /// Distance from `q` to global object `gid` (any resident shard).
+    #[inline]
+    fn dist_to_global(&self, gid: u32, q: &[f32]) -> f32 {
+        let s = self.owner(gid);
+        self.shards[s].ds.dist_to(gid as usize - self.shards[s].offset, q)
+    }
+
+    /// The scatter side: best-first search restricted to shard `s`,
+    /// appending the shard's top-`k` (global ids, ascending) to
+    /// `scratch.shard_topk`. Mirrors [`super::beam_search`] except that
+    /// cross-shard edges are scored but never expanded.
+    fn search_shard(
+        &self,
+        s: usize,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+    ) {
+        let shard = &self.shards[s];
+        let lo = shard.offset as u32;
+        let hi = (shard.offset + shard.ds.len()) as u32;
+        scratch.visited.begin(self.total);
+        scratch.frontier.clear();
+        scratch.results.clear();
+
+        for &e in &shard.entries {
+            if scratch.visited.insert(e) {
+                let d = shard.ds.dist_to((e - lo) as usize, q);
+                scratch.dist_evals += 1;
+                scratch.frontier.push(Reverse((F32(d), e)));
+                if e != exclude {
+                    scratch.results.push((F32(d), e));
+                    if scratch.results.len() > ef {
+                        scratch.results.pop();
+                    }
+                }
+            }
+        }
+
+        let beam_width = self.params.beam_width;
+        let max_hops = self.params.max_hops;
+        let mut hops = 0usize;
+        while let Some(Reverse((F32(d), u))) = scratch.frontier.pop() {
+            if scratch.results.len() >= ef {
+                if let Some(&(F32(w), _)) = scratch.results.peek() {
+                    if d > w {
+                        break;
+                    }
+                }
+            }
+            if max_hops > 0 && hops >= max_hops {
+                break;
+            }
+            hops += 1;
+            for e in shard.graph.list((u - lo) as usize) {
+                if e.is_empty() {
+                    break;
+                }
+                if !scratch.visited.insert(e.id) {
+                    continue;
+                }
+                let dv = self.dist_to_global(e.id, q);
+                scratch.dist_evals += 1;
+                if (lo..hi).contains(&e.id) {
+                    scratch.frontier.push(Reverse((F32(dv), e.id)));
+                }
+                if e.id != exclude {
+                    scratch.results.push((F32(dv), e.id));
+                    if scratch.results.len() > ef {
+                        scratch.results.pop();
+                    }
+                }
+            }
+            if beam_width > 0 && scratch.frontier.len() > 4 * beam_width {
+                scratch.buf.clear();
+                for _ in 0..beam_width {
+                    match scratch.frontier.pop() {
+                        Some(Reverse(x)) => scratch.buf.push(x),
+                        None => break,
+                    }
+                }
+                scratch.frontier.clear();
+                for &x in &scratch.buf {
+                    scratch.frontier.push(Reverse(x));
+                }
+            }
+        }
+        scratch.hops += hops;
+
+        // drain this shard's result pool (max-heap pops worst-first) and
+        // keep its best k for the gather phase
+        scratch.buf.clear();
+        while let Some(x) = scratch.results.pop() {
+            scratch.buf.push(x);
+        }
+        let take = k.min(scratch.buf.len());
+        for &x in scratch.buf.iter().rev().take(take) {
+            scratch.shard_topk.push(x);
+        }
+    }
+}
+
+/// Every neighbor id of a merged shard graph must stay inside the
+/// global id space and never point back at its own node — the
+/// invariants [`crate::merge::outofcore::merge_pair_global`] maintains.
+fn check_global_ids(graph: &KnnGraph, offset: usize, total: usize) -> crate::Result<()> {
+    for u in 0..graph.n() {
+        let gid = (offset + u) as u32;
+        for e in graph.list(u) {
+            if e.is_empty() {
+                break;
+            }
+            anyhow::ensure!(
+                (e.id as usize) < total,
+                "node {gid}: neighbor id {} outside global space (total {total})",
+                e.id
+            );
+            anyhow::ensure!(e.id != gid, "node {gid}: self loop");
+        }
+    }
+    Ok(())
+}
+
+impl AnnIndex for ShardedIndex {
+    fn len(&self) -> usize {
+        self.total
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn vector(&self, id: u32) -> &[f32] {
+        let s = self.owner(id);
+        self.shards[s].ds.vec(id as usize - self.shards[s].offset)
+    }
+
+    fn default_ef(&self) -> usize {
+        self.params.ef
+    }
+
+    fn describe(&self) -> String {
+        format!("sharded(n={}, shards={}, probe={})", self.total, self.shards.len(), self.probe())
+    }
+
+    fn make_scratch(&self) -> SearchScratch {
+        let mut s = SearchScratch::new();
+        s.visited.begin(self.total);
+        s
+    }
+
+    fn search_ef_into_excluding(
+        &self,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let ef = (if ef == 0 { self.params.ef } else { ef }).max(k).max(1);
+        scratch.dist_evals = 0;
+        scratch.hops = 0;
+
+        // ---- route ----
+        let probe = self.probe();
+        scratch.shard_rank.clear();
+        if probe < self.shards.len() {
+            for (s, sh) in self.shards.iter().enumerate() {
+                let d = crate::distance::distance(self.metric, q, &sh.centroid);
+                scratch.shard_rank.push((F32(d), s));
+            }
+            scratch.shard_rank.sort_unstable();
+        } else {
+            for s in 0..self.shards.len() {
+                scratch.shard_rank.push((F32(0.0), s));
+            }
+        }
+
+        // ---- scatter ----
+        scratch.shard_topk.clear();
+        for i in 0..probe {
+            let (_, s) = scratch.shard_rank[i];
+            self.search_shard(s, q, k, ef, exclude, scratch);
+        }
+
+        // ---- gather: k-way merge with cross-shard dedup ----
+        scratch.shard_topk.sort_unstable();
+        out.clear();
+        for &(F32(d), id) in scratch.shard_topk.iter() {
+            if out.len() >= k {
+                break;
+            }
+            if out.iter().any(|&(_, have)| have == id) {
+                continue;
+            }
+            out.push((d, id));
+        }
+    }
+}

@@ -1,6 +1,9 @@
-//! Minimal JSON writer for experiment reports (no serde in the vendored
-//! dependency closure). Only what the reports need: objects, arrays,
-//! strings, numbers, bools.
+//! Minimal JSON reader/writer (no serde in the vendored dependency
+//! closure). The writer covers what the experiment reports need:
+//! objects, arrays, strings, numbers, bools. The parser ([`Json::parse`])
+//! exists so on-disk metadata — the shard manifest and out-of-core build
+//! stats of [`crate::merge::outofcore`] — can round-trip through the
+//! same representation.
 
 use std::fmt::Write as _;
 
@@ -29,11 +32,49 @@ impl Json {
         self
     }
 
-    /// Serialize to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
+    /// Field lookup on an object (`None` on non-objects / missing key).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (strict on structure, lenient on number
+    /// syntax). Numbers land as [`Json::Num`] (f64), so round-trips of
+    /// the writer's own output are exact.
+    pub fn parse(s: &str) -> crate::Result<Json> {
+        let b = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos, 0)?;
+        skip_ws(b, &mut pos);
+        anyhow::ensure!(pos == b.len(), "trailing garbage at byte {pos}");
+        Ok(v)
     }
 
     fn write(&self, out: &mut String) {
@@ -140,6 +181,166 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Compact serialization (`to_string()` comes via `Display`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect_lit(b: &[u8], pos: &mut usize, lit: &str) -> crate::Result<()> {
+    let l = lit.as_bytes();
+    let end = *pos + l.len();
+    anyhow::ensure!(end <= b.len() && &b[*pos..end] == l, "invalid literal (expected {lit})");
+    *pos = end;
+    Ok(())
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> crate::Result<String> {
+    *pos += 1; // opening quote
+    let mut out: Vec<u8> = Vec::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(String::from_utf8(out)?);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "unterminated escape");
+                let c = b[*pos];
+                *pos += 1;
+                match c {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'/' => out.push(b'/'),
+                    b'n' => out.push(b'\n'),
+                    b't' => out.push(b'\t'),
+                    b'r' => out.push(b'\r'),
+                    b'b' => out.push(0x08),
+                    b'f' => out.push(0x0C),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 <= b.len(), "truncated \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos..*pos + 4])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        *pos += 4;
+                        let ch = char::from_u32(code).unwrap_or('\u{FFFD}');
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                    }
+                    other => anyhow::bail!("unknown escape \\{}", other as char),
+                }
+            }
+            c => {
+                out.push(c);
+                *pos += 1;
+            }
+        }
+    }
+    anyhow::bail!("unterminated string")
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *pos += 1;
+    }
+    anyhow::ensure!(*pos > start, "expected a JSON value at byte {start}");
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    let x: f64 = s.parse().map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?;
+    Ok(Json::Num(x))
+}
+
+/// Recursion guard: manifests/stats nest 2-3 levels; anything deeper
+/// than this is corrupt input, rejected instead of overflowing the
+/// stack.
+const MAX_DEPTH: usize = 128;
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> crate::Result<Json> {
+    anyhow::ensure!(depth < MAX_DEPTH, "JSON nested deeper than {MAX_DEPTH}");
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of JSON");
+    match b[*pos] {
+        b'n' => {
+            expect_lit(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        b't' => {
+            expect_lit(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        b'f' => {
+            expect_lit(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                anyhow::ensure!(*pos < b.len(), "unterminated array");
+                match b[*pos] {
+                    b',' => *pos += 1,
+                    b']' => {
+                        *pos += 1;
+                        break;
+                    }
+                    c => anyhow::bail!("unexpected {:?} in array", c as char),
+                }
+            }
+            Ok(Json::Arr(items))
+        }
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                anyhow::ensure!(*pos < b.len() && b[*pos] == b'"', "expected object key");
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                anyhow::ensure!(
+                    *pos < b.len() && b[*pos] == b':',
+                    "expected ':' after key {key:?}"
+                );
+                *pos += 1;
+                fields.push((key, parse_value(b, pos, depth + 1)?));
+                skip_ws(b, pos);
+                anyhow::ensure!(*pos < b.len(), "unterminated object");
+                match b[*pos] {
+                    b',' => *pos += 1,
+                    b'}' => {
+                        *pos += 1;
+                        break;
+                    }
+                    c => anyhow::bail!("unexpected {:?} in object", c as char),
+                }
+            }
+            Ok(Json::Obj(fields))
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +369,60 @@ mod tests {
     #[test]
     fn non_finite_is_null() {
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .set("name", "shard manifest")
+            .set("shards", 4usize)
+            .set("offsets", vec![0.0f64, 120.0, 240.0])
+            .set("nested", Json::obj().set("ok", true).set("x", -2.5))
+            .set("nothing", Json::Null);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.to_string(), text);
+        assert_eq!(back.get("shards").and_then(Json::as_usize), Some(4));
+        assert_eq!(back.get("name").and_then(Json::as_str), Some("shard manifest"));
+        let offs: Vec<usize> = back
+            .get("offsets")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        assert_eq!(offs, vec![0, 120, 240]);
+        assert_eq!(back.get("nested").and_then(|n| n.get("x")).and_then(Json::as_f64), Some(-2.5));
+    }
+
+    #[test]
+    fn parse_handles_ws_escapes_and_floats() {
+        let j = Json::parse(" { \"a\\n\\\"b\" : [ 1.5e2 , -0.25, \"\\u0041\" ] } ").unwrap();
+        let arr = j.get("a\n\"b").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].as_f64(), Some(150.0));
+        assert_eq!(arr[1].as_f64(), Some(-0.25));
+        assert_eq!(arr[2].as_str(), Some("A"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "{\"a\":1} x", "nul", "\"open"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // pathological nesting errors out instead of overflowing the stack
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("deep"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact() {
+        // manifest centroids are f32; f64 shortest-roundtrip printing
+        // must bring every value back bit-exact
+        for x in [0.1f32, 1.0 / 3.0, -7.25e-3, 1234.5678] {
+            let text = Json::Num(x as f64).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} -> {text}");
+        }
     }
 }

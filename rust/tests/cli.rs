@@ -104,19 +104,78 @@ fn cli_search_and_serve_bench() {
     assert!(ok, "batched search failed: {out}");
     assert!(std::path::Path::new(&res).exists(), "no ivecs written: {out}");
 
-    // serve-bench: one row per ef point, recall column present
+    // serve-bench: one row per ef point, recall column present; the
+    // sub-k point (ef=8 < k=10) is clamped to k with a warning
     let (ok, out) = run(&[
         "serve-bench", "--data", &data, "--graph", &graph, "--ef", "8,32,64",
         "--queries", "120", "--distinct", "60", "--threads", "2",
     ]);
     assert!(ok, "serve-bench failed: {out}");
     assert!(out.contains("recall@10"), "no recall column: {out}");
-    for ef in ["ef=8", "ef=32", "ef=64"] {
+    for ef in ["ef=10", "ef=32", "ef=64"] {
         assert!(out.contains(ef), "missing row {ef}: {out}");
     }
+    assert!(out.contains("clamped"), "no ef<k clamp warning: {out}");
 
     // missing query spec is an error
     let (ok, _) = run(&["search", "--data", &data, "--graph", &graph]);
+    assert!(!ok);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_sharded_serving() {
+    // ooc-build -> serve-bench --shards / search --shards: the shard
+    // directory is servable without the assembled graph file.
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let shard_dir = dir.join("shards").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "600", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "ooc-build", "--data", &data, "--dir", &shard_dir, "--shards", "3",
+        "--workers", "2", "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "ooc-build failed: {out}");
+    let sd = std::path::Path::new(&shard_dir);
+    assert!(sd.join("manifest.json").exists(), "no manifest written");
+    assert!(sd.join("stats.json").exists(), "no stats written");
+
+    // serve-bench over the shard directory, queries from the original
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--data", &data, "--ef", "16,64",
+        "--queries", "100", "--distinct", "50", "--threads", "2",
+    ]);
+    assert!(ok, "sharded serve-bench failed: {out}");
+    assert!(out.contains("recall@10"), "no recall column: {out}");
+    assert!(out.contains("sharded"), "index description missing: {out}");
+    for ef in ["ef=16", "ef=64"] {
+        assert!(out.contains(ef), "missing row {ef}: {out}");
+    }
+
+    // ... and without --data (corpus re-assembled from the shards)
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--ef", "32", "--queries", "60",
+        "--distinct", "30", "--threads", "2",
+    ]);
+    assert!(ok, "sharded serve-bench without --data failed: {out}");
+    assert!(out.contains("ef=32"), "missing row: {out}");
+
+    // single query + probe limit through the sharded index
+    let (ok, out) = run(&[
+        "search", "--shards", &shard_dir, "--query-id", "7", "--k", "5", "--ef", "32",
+        "--probe-shards", "2",
+    ]);
+    assert!(ok, "sharded search failed: {out}");
+    assert!(out.contains("top-5"), "unexpected search output: {out}");
+
+    // --graph and --shards together is an error
+    let (ok, _) = run(&[
+        "search", "--shards", &shard_dir, "--graph", &graph, "--query-id", "1",
+    ]);
     assert!(!ok);
     std::fs::remove_dir_all(dir).ok();
 }

@@ -6,6 +6,7 @@
 
 use std::collections::HashSet;
 
+use gnnd::baselines::bruteforce;
 use gnnd::dataset::{groundtruth, synth, Dataset};
 use gnnd::graph::KnnGraph;
 use gnnd::gnnd::{build, GnndParams};
@@ -68,8 +69,15 @@ fn serve_sweep_reaches_high_recall_on_converged_graph() {
         threads: 2,
         ..Default::default()
     };
-    let report = serve::run_sweep(&ds, &g, &cfg).unwrap();
+    let index = SearchIndex::new(&ds, &g, cfg.params.clone()).unwrap();
+    let report = serve::run_sweep_on(&index, &ds, &cfg).unwrap();
     assert_eq!(report.rows.len(), 3);
+    for row in &report.rows {
+        let get = |name: &str| row.cols.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!(get("qps") > 0.0);
+        assert!(get("p99_ms") >= get("p50_ms"));
+        assert!((0.0..=1.0).contains(&get("recall@10")));
+    }
     let best = report
         .rows
         .iter()
@@ -111,6 +119,48 @@ fn batched_results_are_bit_identical_to_single_query() {
             );
         }
     }
+}
+
+#[test]
+fn batch_thread_count_does_not_change_results() {
+    let ds = synth::clustered(250, 6, 102);
+    let g = bruteforce::build_native(&ds, 8);
+    let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+    let nq = 30;
+    let mut qbuf = Vec::new();
+    for q in 0..nq {
+        qbuf.extend_from_slice(ds.vec(q));
+    }
+    let a = BatchExecutor::new(&index, 1).run(&qbuf, ds.d, 5);
+    let b = BatchExecutor::new(&index, 3).run(&qbuf, ds.d, 5);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn batch_ef_override_matches_reconfigured_index() {
+    // BatchExecutor::with_ef(ef) must behave exactly like an index
+    // whose params carry that ef — the serve harness relies on it.
+    let ds = synth::clustered(300, 6, 104);
+    let g = bruteforce::build_native(&ds, 8);
+    let base = SearchIndex::new(&ds, &g, SearchParams::default().with_ef(16)).unwrap();
+    let nq = 25;
+    let mut qbuf = Vec::new();
+    for q in 0..nq {
+        qbuf.extend_from_slice(ds.vec(q));
+    }
+    let overridden = BatchExecutor::new(&base, 2).with_ef(96).run(&qbuf, ds.d, 10);
+    let reconfigured = base.with_ef(96);
+    let direct = BatchExecutor::new(&reconfigured, 2).run(&qbuf, ds.d, 10);
+    assert_eq!(overridden, direct);
+}
+
+#[test]
+fn empty_batch_is_fine() {
+    let ds = synth::uniform(60, 4, 103);
+    let g = bruteforce::build_native(&ds, 6);
+    let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+    let out = BatchExecutor::new(&index, 2).run(&[], ds.d, 5);
+    assert!(out.is_empty());
 }
 
 #[test]

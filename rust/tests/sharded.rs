@@ -1,0 +1,224 @@
+//! Integration: sharded serving over real `ooc-build` output — the
+//! manifest round-trip, the global-id invariants the merge maintains,
+//! and recall parity between the sharded scatter-gather path and the
+//! monolithic index over the same assembled graph.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use gnnd::config::Metric;
+use gnnd::dataset::{groundtruth, synth};
+use gnnd::gnnd::{GnndParams, NativeEngine};
+use gnnd::merge::outofcore::{
+    build_out_of_core, OutOfCoreConfig, ShardManifest, ShardStore, MANIFEST_FILE, STATS_FILE,
+};
+use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::{AnnIndex, SearchIndex, SearchParams};
+use gnnd::util::json::Json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-sharded-{tag}-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn manifest_roundtrip() {
+    let dir = tmpdir("manifest");
+    let store = ShardStore::new(&dir).unwrap();
+    let m = ShardManifest {
+        shards: 3,
+        total: 300,
+        d: 4,
+        k: 8,
+        metric: Metric::L2,
+        offsets: vec![0, 100, 200],
+        centroids: vec![
+            vec![0.5, 1.0, -2.25, 3.0],
+            vec![0.1, -0.2, 0.3, -0.4],
+            vec![7.75, 0.0, -1.5, 2.125],
+        ],
+    };
+    store.save_manifest(&m).unwrap();
+    let back = store.load_manifest().unwrap();
+    assert_eq!(back, m);
+    // a manifest missing a field is rejected with a useful error
+    let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    if let Json::Obj(fields) = &mut j {
+        fields.retain(|(k, _)| k != "offsets");
+    }
+    std::fs::write(dir.join(MANIFEST_FILE), j.to_string()).unwrap();
+    let err = store.load_manifest().unwrap_err().to_string();
+    assert!(err.contains("offsets"), "unhelpful error: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn ooc_build_persists_manifest_stats_and_global_id_invariants() {
+    let ds = synth::clustered(480, 8, 41);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("invariants");
+    let (_g, stats) = build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    // stats.json persisted for bench trajectories
+    let text = std::fs::read_to_string(dir.join(STATS_FILE)).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("merges").and_then(Json::as_usize), Some(stats.merges));
+    assert_eq!(j.get("rounds").and_then(Json::as_usize), Some(stats.rounds));
+    assert!(j.get("merge_secs").and_then(Json::as_f64).unwrap() >= 0.0);
+
+    // manifest describes the shard geometry
+    let store = ShardStore::new(&dir).unwrap();
+    let m = store.load_manifest().unwrap();
+    assert_eq!(m.shards, 4);
+    assert_eq!(m.total, 480);
+    assert_eq!(m.d, 8);
+    assert_eq!(m.k, 10);
+    assert_eq!(m.offsets.len(), 4);
+    assert_eq!(m.centroids.len(), 4);
+    assert_eq!(m.offsets[0], 0);
+    assert!(m.centroids.iter().all(|c| c.len() == 8));
+
+    // global-id invariants of every merged shard graph: every neighbor
+    // id lives inside the global space, no self-loops, no duplicates
+    for s in 0..m.shards {
+        let g = store.load_graph(s).unwrap();
+        let off = m.offsets[s] as u32;
+        for u in 0..g.n() {
+            let gid = off + u as u32;
+            let mut seen = HashSet::new();
+            for e in g.list(u) {
+                if e.is_empty() {
+                    break;
+                }
+                assert!(
+                    (e.id as usize) < m.total,
+                    "shard {s} u={u}: id {} >= total {}",
+                    e.id,
+                    m.total
+                );
+                assert_ne!(e.id, gid, "shard {s} u={u}: self loop");
+                assert!(seen.insert(e.id), "shard {s} u={u}: duplicate id {}", e.id);
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+fn recall_over(index: &dyn AnnIndex, qids: &[usize], truth: &[Vec<u32>], k: usize) -> f64 {
+    let mut scratch = index.make_scratch();
+    let mut out = Vec::new();
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (row, &q) in truth.iter().zip(qids) {
+        let qv = index.vector(q as u32).to_vec();
+        index.search_ef_into_excluding(&qv, k, 0, q as u32, &mut scratch, &mut out);
+        let set: HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+        hit += row.iter().take(k).filter(|id| set.contains(id)).count();
+        total += row.len().min(k);
+    }
+    hit as f64 / total as f64
+}
+
+#[test]
+fn sharded_recall_parity_with_monolithic() {
+    // The acceptance shape: serving the shard directory must be within
+    // 2 recall points of serving the assembled monolithic graph at the
+    // same ef.
+    let ds = synth::clustered(600, 8, 42);
+    let params = GnndParams::default().with_k(12).with_p(6).with_iters(8);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("parity");
+    let (g, _) = build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(64);
+    let mono = SearchIndex::new(&ds, &g, sp.clone()).unwrap();
+    let sharded = ShardedIndex::open(&dir, sp, 0).unwrap();
+    assert_eq!(sharded.len(), ds.len());
+    assert_eq!(sharded.dim(), ds.d);
+    assert_eq!(sharded.shards(), 4);
+
+    let (qids, truth) = groundtruth::sampled_truth(&ds, 150, 10, 7);
+    let r_mono = recall_over(&mono, &qids, &truth, 10);
+    let r_sharded = recall_over(&sharded, &qids, &truth, 10);
+    assert!(
+        r_sharded >= r_mono - 0.02,
+        "sharded recall {r_sharded} more than 2 points below monolithic {r_mono}"
+    );
+    assert!(r_sharded > 0.8, "sharded recall {r_sharded} too low outright");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sharded_results_are_sorted_dedup_and_deterministic() {
+    let ds = synth::clustered(400, 6, 43);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 3, workers: 1, params };
+    let dir = tmpdir("results");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(48);
+    let index = ShardedIndex::open(&dir, sp.clone(), 0).unwrap();
+    let again = ShardedIndex::open(&dir, sp, 0).unwrap();
+    let mut scratch = index.make_scratch();
+    let mut scratch2 = again.make_scratch();
+    let mut out = Vec::new();
+    let mut out2 = Vec::new();
+    for q in (0..ds.len()).step_by(37) {
+        index.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut scratch, &mut out);
+        assert!(!out.is_empty());
+        assert!(out.len() <= 10);
+        assert!(out.iter().all(|&(_, id)| id != q as u32), "self in results of {q}");
+        assert!(out.iter().all(|&(_, id)| (id as usize) < ds.len()));
+        for w in out.windows(2) {
+            assert!(w[0].0 <= w[1].0, "unsorted results for {q}");
+        }
+        let ids: HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids.len(), out.len(), "duplicate ids for {q}");
+        again.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut scratch2, &mut out2);
+        assert_eq!(out2, out, "nondeterministic for {q}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn probing_fewer_shards_is_monotone_in_recall() {
+    // Probing a subset of shards searches a subset of candidates, so
+    // recall at probe=all dominates recall at probe=1; both answer.
+    let ds = synth::clustered(500, 8, 44);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("probe");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(48);
+    let all = ShardedIndex::open(&dir, sp.clone(), 0).unwrap();
+    let one = ShardedIndex::open(&dir, sp, 1).unwrap();
+    assert_eq!(all.probe(), 4);
+    assert_eq!(one.probe(), 1);
+
+    let (qids, truth) = groundtruth::sampled_truth(&ds, 100, 10, 9);
+    let r_all = recall_over(&all, &qids, &truth, 10);
+    let r_one = recall_over(&one, &qids, &truth, 10);
+    assert!(r_all >= r_one - 1e-9, "probe=all recall {r_all} below probe=1 recall {r_one}");
+    let hits = one.search(ds.vec(3), 5);
+    assert_eq!(hits.len(), 5, "probe=1 must still fill k");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn opening_without_manifest_fails_cleanly() {
+    let dir = tmpdir("nomanifest");
+    let err = ShardedIndex::open(&dir, SearchParams::default(), 0).unwrap_err().to_string();
+    assert!(err.contains("manifest"), "unhelpful error: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
