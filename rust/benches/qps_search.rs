@@ -4,7 +4,11 @@
 //! counterpart of the construction-side fig benches. A second sweep
 //! serves the same corpus split into 4 shards through the out-of-core
 //! pipeline + `ShardedIndex`, so monolithic-vs-sharded QPS is tracked
-//! over time.
+//! over time; a third serves the shards under a residency budget that
+//! fits ~50% of the store (LRU faulting, residency counters printed),
+//! and a fourth compares sequential vs parallel scatter
+//! (`search_threads`) at a single serve worker, where per-query
+//! latency is the whole story.
 //!
 //! ```bash
 //! cargo bench --bench qps_search                 # standard scale
@@ -14,7 +18,7 @@
 
 use gnnd::dataset::synth;
 use gnnd::gnnd::{GnndParams, NativeEngine};
-use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ShardStore};
 use gnnd::search::serve::{self, ServeConfig};
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
@@ -66,6 +70,51 @@ fn main() {
     match report.save_json("results") {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    drop(sharded);
+
+    // ---- budget-constrained variant: ~50% of the store resident ----
+    // probe the 2 nearest of 4 shards so the per-query pinned set fits
+    // the budget; shards fault in and out through the LRU cache
+    let manifest = ShardStore::new(&dir)
+        .and_then(|s| s.load_manifest())
+        .expect("shard manifest");
+    let budget = manifest.estimated_resident_bytes() / 2;
+    let tight = ShardedIndex::open_with(&dir, cfg.params.clone(), 2, budget, 1)
+        .expect("budget-constrained index");
+    let mut ds_tight = ds.clone();
+    ds_tight.name = format!("{} sharded budget50", ds.name);
+    let report = serve::run_sweep_on(&tight, &ds_tight, &cfg).expect("budget sweep");
+    tight.store().evict_to_budget(); // shed the last queries' released pins
+    let res = tight.residency();
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    println!("residency at budget 50%: {}", res.to_json());
+    drop(tight);
+
+    // ---- sequential vs parallel scatter at 1 serve worker ----
+    // with a single closed-loop worker, QPS is per-query latency:
+    // fanning the probed shards across 4 scatter threads must beat the
+    // sequential scatter at identical recall (results are bit-equal)
+    let cfg_lat = ServeConfig {
+        ef_sweep: vec![32, 128],
+        n_queries: 500.min(n),
+        distinct_queries: 250.min(n),
+        threads: 1,
+        ..cfg.clone()
+    };
+    for (tag, search_threads) in [("scatter-seq", 1usize), ("scatter-par4", 4usize)] {
+        let index = ShardedIndex::open_with(&dir, cfg.params.clone(), 0, 0, search_threads)
+            .expect("scatter index");
+        let mut ds_tag = ds.clone();
+        ds_tag.name = format!("{} sharded {tag}", ds.name);
+        let report = serve::run_sweep_on(&index, &ds_tag, &cfg_lat).expect("scatter sweep");
+        match report.save_json("results") {
+            Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+            Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+        }
     }
     std::fs::remove_dir_all(dir).ok();
 }

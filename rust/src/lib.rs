@@ -20,9 +20,11 @@
 //!   [`search::SearchIndex`] answers online queries with best-first
 //!   beam search (zero-allocation hot path),
 //!   [`search::sharded::ShardedIndex`] scatter-gathers across the
-//!   per-shard graphs of an out-of-core build, [`search::batch`] fans
-//!   multi-query batches across worker threads, and [`search::serve`]
-//!   benchmarks the recall-vs-QPS operating curve of a deployment.
+//!   per-shard graphs of an out-of-core build (shard residency is
+//!   lazily managed by the `ShardStore` LRU cache, so corpora larger
+//!   than RAM stay servable), [`search::batch`] fans multi-query
+//!   batches across worker threads, and [`search::serve`] benchmarks
+//!   the recall-vs-QPS operating curve of a deployment.
 //!
 //! Python is never on the construction path: after `make artifacts` the
 //! binary is self-contained.

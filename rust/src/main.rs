@@ -10,12 +10,14 @@
 //! gnnd merge        --data data.dsb --n1 N --g1 a.knng --g2 b.knng --out graph.knng
 //! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
-//! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P])
+//! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
+//!                   [--memory-budget MB] [--search-threads N])
 //!                   (--query-id N | --queries q.dsb [--out res.ivecs])
 //!                   [--k 10] [--ef 64] [--entries 8] [--entry-strategy random|kmeans]
 //!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
 //! gnnd serve-bench  (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
-//!                   [--data data.dsb]) [--k 10] [--ef 8,16,32,64,128]
+//!                   [--memory-budget MB] [--search-threads N] [--data data.dsb])
+//!                   [--k 10] [--ef 8,16,32,64,128]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
 //!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
 //!                   [--max-hops 0] [--search-seed S] [--seed S]
@@ -28,7 +30,13 @@
 //! Both serve either a monolithic graph (`--data` + `--graph`) or an
 //! `ooc-build` shard directory (`--shards`, scatter-gather across the
 //! per-shard graphs; `--probe-shards` limits each query to the P
-//! nearest shards by centroid).
+//! nearest shards by centroid, clamped to the manifest shard count).
+//! Shard residency is managed: `--memory-budget <MB>` caps resident
+//! shard bytes (LRU eviction, 0 = unbounded) so shard directories
+//! larger than RAM stay servable, and `--search-threads <N>` fans the
+//! scatter phase across a worker pool. `serve-bench --shards` prints
+//! the residency counters (hits/misses/evictions/hit rate) and folds
+//! them into the directory's `stats.json`.
 //!
 //! Flat `key=value` config files (see `configs/`) plus `--set` overrides
 //! configure every GnndParams knob; `--set engine=pjrt` switches the
@@ -43,9 +51,9 @@ use gnnd::config::{ConfigMap, GnndParams};
 use gnnd::dataset::{groundtruth, io, synth};
 use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
-use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, STATS_FILE};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ShardStore, STATS_FILE};
 use gnnd::metrics::recall_at;
-use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::sharded::{clamp_probe, ShardedIndex};
 use gnnd::search::{batch::BatchExecutor, serve, AnnIndex, SearchIndex, SearchParams};
 use gnnd::util::timer::Timer;
 
@@ -242,12 +250,7 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             let params = args.search_params()?.with_ef(args.parse_or("ef", 64usize)?);
             match args.get("shards") {
                 Some(dir) => {
-                    anyhow::ensure!(
-                        args.get("graph").is_none(),
-                        "--graph and --shards are mutually exclusive"
-                    );
-                    let probe: usize = args.parse_or("probe-shards", 0usize)?;
-                    let index = ShardedIndex::open(dir, params, probe)?;
+                    let index = open_sharded_index(&args, dir, params)?;
                     run_search(&args, &index, k)?;
                 }
                 None => {
@@ -283,20 +286,31 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             let t = Timer::start();
             let report = match args.get("shards") {
                 Some(dir) => {
-                    anyhow::ensure!(
-                        args.get("graph").is_none(),
-                        "--graph and --shards are mutually exclusive"
-                    );
-                    let probe: usize = args.parse_or("probe-shards", 0usize)?;
-                    let index = ShardedIndex::open(dir, cfg.params.clone(), probe)?;
+                    let index = open_sharded_index(&args, dir, cfg.params.clone())?;
                     // queries + ground truth come from the original
                     // corpus; without --data it is re-assembled from
                     // the shards (identical rows, identical order)
                     let ds = match args.get("data") {
                         Some(p) => io::read_dsb(p)?,
-                        None => index.concat_dataset(),
+                        None => index.concat_dataset()?,
                     };
-                    serve::run_sweep_on(&index, &ds, &cfg)?
+                    let report = serve::run_sweep_on(&index, &ds, &cfg)?;
+                    // serve-time residency counters: printed and folded
+                    // into the directory's stats.json next to the
+                    // build stats. The last queries' pins have released
+                    // but no eviction pass has run since — shed to the
+                    // budget first so the snapshot reflects steady state
+                    index.store().evict_to_budget();
+                    let res = index.residency();
+                    println!("residency: {}", res.to_json());
+                    // a side-file problem should not discard the sweep
+                    match index.store().save_stats_with_residency(&res) {
+                        Ok(()) => println!("[residency folded into {dir}/{STATS_FILE}]"),
+                        Err(e) => eprintln!(
+                            "[serve] warning: residency not folded into stats.json: {e:#}"
+                        ),
+                    }
+                    report
                 }
                 None => {
                     let ds = io::read_dsb(args.req("data")?)?;
@@ -334,6 +348,54 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Open `--shards <dir>` with the serving knobs shared by `search` and
+/// `serve-bench`: `--probe-shards` (validated against the manifest
+/// shard count — phantom shards clamp with a warning), `--memory-budget
+/// <MB>` (resident-shard byte budget, 0 = unbounded) and
+/// `--search-threads <N>` (parallel scatter workers, <= 1 = sequential).
+fn open_sharded_index(
+    args: &Args,
+    dir: &str,
+    params: SearchParams,
+) -> anyhow::Result<ShardedIndex> {
+    anyhow::ensure!(
+        args.get("graph").is_none(),
+        "--graph and --shards are mutually exclusive"
+    );
+    let budget_mb: f64 = args.parse_or("memory-budget", 0.0f64)?;
+    anyhow::ensure!(budget_mb >= 0.0, "--memory-budget must be >= 0");
+    let budget_bytes = (budget_mb * 1024.0 * 1024.0) as usize;
+    let threads: usize = args.parse_or("search-threads", 1usize)?;
+    let store = ShardStore::with_budget(dir, budget_bytes)?;
+    let manifest = store.load_manifest()?;
+    let probe: usize = args.parse_or("probe-shards", 0usize)?;
+    let (probe, clamped) = clamp_probe(probe, manifest.shards);
+    if clamped {
+        eprintln!(
+            "[search] warning: --probe-shards exceeds the {} shards in the manifest; \
+             clamped to {} (phantom shards cannot be probed)",
+            manifest.shards, manifest.shards
+        );
+    }
+    // a query pins the shards it probes, so peak residency is bounded
+    // by the probe set, not the budget; warn when the two disagree
+    if budget_bytes > 0 {
+        let eff = if probe == 0 { manifest.shards } else { probe };
+        let mut sizes: Vec<usize> = (0..manifest.shards).map(|s| manifest.shard_bytes(s)).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let probed_bytes: usize = sizes.iter().take(eff).sum();
+        if probed_bytes > budget_bytes {
+            eprintln!(
+                "[search] warning: probing {eff} shards can pin ~{:.1} MB per query, above \
+                 --memory-budget {budget_mb} MB; peak residency is bounded by the probe set \
+                 — lower --probe-shards to stay within the budget",
+                probed_bytes as f64 / (1024.0 * 1024.0)
+            );
+        }
+    }
+    ShardedIndex::from_store(store, params, probe, threads)
+}
+
 /// The `search` subcommand body, written against [`AnnIndex`] only —
 /// identical behaviour over a monolithic graph or a shard directory.
 fn run_search(args: &Args, index: &dyn AnnIndex, k: usize) -> anyhow::Result<()> {
@@ -348,7 +410,7 @@ fn run_search(args: &Args, index: &dyn AnnIndex, k: usize) -> anyhow::Result<()>
             let mut scratch = index.make_scratch();
             let mut out = Vec::new();
             let qv = index.vector(q as u32);
-            index.search_ef_into_excluding(qv, k, 0, q as u32, &mut scratch, &mut out);
+            index.search_ef_into_excluding(&qv, k, 0, q as u32, &mut scratch, &mut out);
             println!(
                 "query {q}: top-{k} in {:.3} ms ({} distance evals, {} hops, ef={})",
                 t.ms(),

@@ -12,9 +12,16 @@
 //!
 //! Only the shard pairs in flight are memory-resident — the framework
 //! handles datasets that exceed "device" memory by construction.
+//!
+//! The same [`ShardStore`] doubles as the *serving-side* residency
+//! manager: [`ShardStore::get_shard`] serves shards out of a pinned
+//! (`Arc`-handle) LRU cache under a configurable byte budget, so
+//! corpora built out-of-core can also be *served* out-of-core (see
+//! [`crate::search::sharded`]).
 
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use anyhow::Context;
 
@@ -31,18 +38,164 @@ pub const MANIFEST_FILE: &str = "manifest.json";
 /// File name of the persisted [`OutOfCoreStats`] inside a shard dir.
 pub const STATS_FILE: &str = "stats.json";
 
+/// One fully loaded shard: its vectors, its merged sub-graph (neighbor
+/// ids in the global id space) and the in-memory byte cost the
+/// residency budget accounts it at. Handed out by
+/// [`ShardStore::get_shard`] behind an `Arc` — holding the handle
+/// *pins* the shard: the cache never frees a shard a search is still
+/// reading.
+pub struct ResidentShard {
+    pub ds: Dataset,
+    pub graph: KnnGraph,
+    /// Bytes this shard occupies while resident (vectors + graph).
+    pub bytes: usize,
+}
+
+/// In-memory byte cost of a (vectors, graph) pair — the unit the
+/// residency budget is accounted in.
+pub fn resident_cost(ds: &Dataset, graph: &KnnGraph) -> usize {
+    ds.raw().len() * std::mem::size_of::<f32>()
+        + graph.n() * graph.k() * std::mem::size_of::<Neighbor>()
+}
+
+/// Counters of the shard residency cache, exposed as a JSON block by
+/// serve-time tooling and folded into `stats.json`
+/// ([`ShardStore::save_stats_with_residency`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResidencyStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Shards currently held by the cache.
+    pub resident_shards: usize,
+    /// Bytes currently held by the cache. Can exceed `budget_bytes`
+    /// while pinned handles block eviction; drops back under the
+    /// budget at the next eviction pass after the pins release.
+    pub resident_bytes: usize,
+    pub peak_resident_bytes: usize,
+    /// Configured budget (0 = unbounded).
+    pub budget_bytes: usize,
+}
+
+impl ResidencyStats {
+    /// Fraction of [`ShardStore::get_shard`] calls served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("evictions", self.evictions)
+            .set("hit_rate", self.hit_rate())
+            .set("resident_shards", self.resident_shards)
+            .set("resident_bytes", self.resident_bytes)
+            .set("peak_resident_bytes", self.peak_resident_bytes)
+            .set("budget_bytes", self.budget_bytes)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ResidencyStats> {
+        let u64_of = |key: &str| -> crate::Result<u64> {
+            Ok(jfield(j, key)?
+                .as_f64()
+                .with_context(|| format!("residency field {key:?} is not a number"))?
+                as u64)
+        };
+        Ok(ResidencyStats {
+            hits: u64_of("hits")?,
+            misses: u64_of("misses")?,
+            evictions: u64_of("evictions")?,
+            resident_shards: jusize(j, "resident_shards")?,
+            resident_bytes: jusize(j, "resident_bytes")?,
+            peak_resident_bytes: jusize(j, "peak_resident_bytes")?,
+            budget_bytes: jusize(j, "budget_bytes")?,
+        })
+    }
+}
+
+/// A cached resident shard + its LRU stamp.
+struct CacheEntry {
+    shard: Arc<ResidentShard>,
+    last_used: u64,
+}
+
+/// Interior-mutable state of the residency cache; every field is
+/// guarded by one mutex (operations are short: map lookups and counter
+/// bumps — disk reads happen with the lock released).
+#[derive(Default)]
+struct ShardCache {
+    resident: HashMap<usize, CacheEntry>,
+    /// Shards a thread is currently faulting in from disk — other
+    /// threads wait on the store's condvar instead of duplicating the
+    /// read (and its transient memory) on a concurrent cold start.
+    loading: HashSet<usize>,
+    /// Shards invalidated (saved over) *while* an in-flight load was
+    /// reading them; the loader discards its possibly-torn read and
+    /// retries instead of caching stale data.
+    dirty: HashSet<usize>,
+    /// Monotonic access clock driving LRU ordering.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    resident_bytes: usize,
+    peak_resident_bytes: usize,
+}
+
 /// On-disk shard layout under `dir`: `shard_<i>.dsb` + `graph_<i>.knng`
 /// per shard, plus `manifest.json` (shard geometry, see
 /// [`ShardManifest`]) and `stats.json` (the last build's
 /// [`OutOfCoreStats`]).
+///
+/// Beyond the save/load path mapping, the store is a *residency
+/// manager*: [`ShardStore::get_shard`] returns shards from an LRU
+/// cache with a configurable byte budget, so a serving process touches
+/// disk only on cache misses and never holds more than the budget in
+/// unpinned shard memory. Handles are `Arc`-pinned — an in-flight
+/// search can never have its shard evicted underneath it; pinned
+/// shards survive eviction passes and are shed once the last handle
+/// drops and the next pass runs.
 pub struct ShardStore {
-    pub dir: PathBuf,
+    dir: PathBuf,
+    /// Byte budget of the residency cache (0 = unbounded: every shard
+    /// stays resident after first touch — the pre-residency behavior).
+    budget_bytes: usize,
+    cache: Mutex<ShardCache>,
+    /// Signalled when an in-flight shard load completes (or fails), so
+    /// threads parked on a `loading` shard re-check the cache.
+    loaded: Condvar,
 }
 
 impl ShardStore {
+    /// Open a store with an unbounded residency budget.
     pub fn new(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        Self::with_budget(dir, 0)
+    }
+
+    /// Open a store whose resident shards are LRU-evicted down to
+    /// `budget_bytes` (0 = unbounded).
+    pub fn with_budget(dir: impl AsRef<Path>, budget_bytes: usize) -> crate::Result<Self> {
         std::fs::create_dir_all(dir.as_ref())?;
-        Ok(ShardStore { dir: dir.as_ref().to_path_buf() })
+        Ok(ShardStore {
+            dir: dir.as_ref().to_path_buf(),
+            budget_bytes,
+            cache: Mutex::new(ShardCache::default()),
+            loaded: Condvar::new(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 
     fn shard_path(&self, i: usize) -> PathBuf {
@@ -54,19 +207,152 @@ impl ShardStore {
     }
 
     pub fn save_shard(&self, i: usize, ds: &Dataset) -> crate::Result<()> {
-        io::write_dsb(ds, self.shard_path(i))
+        io::write_dsb(ds, self.shard_path(i))?;
+        self.invalidate(i);
+        Ok(())
     }
 
+    /// Uncached disk read (the construction pipeline's path — builds
+    /// stream shards through once and must not accumulate residency).
     pub fn load_shard(&self, i: usize) -> crate::Result<Dataset> {
         io::read_dsb(self.shard_path(i))
     }
 
     pub fn save_graph(&self, i: usize, g: &KnnGraph) -> crate::Result<()> {
-        g.save(self.graph_path(i))
+        g.save(self.graph_path(i))?;
+        self.invalidate(i);
+        Ok(())
     }
 
+    /// Uncached disk read; see [`ShardStore::load_shard`].
     pub fn load_graph(&self, i: usize) -> crate::Result<KnnGraph> {
         KnnGraph::load(self.graph_path(i))
+    }
+
+    /// The serving path: shard `i`'s vectors + graph through the
+    /// residency cache. Hits bump the LRU stamp; misses read from disk
+    /// *outside* the cache lock (a cold load never blocks queries
+    /// hitting warm shards) and then run an eviction pass. Concurrent
+    /// misses on the same shard coalesce: one thread loads while the
+    /// rest wait on the condvar, so a cold start never duplicates the
+    /// disk read or its transient memory. The returned handle pins the
+    /// shard until dropped.
+    pub fn get_shard(&self, i: usize) -> crate::Result<Arc<ResidentShard>> {
+        loop {
+            {
+                let mut c = self.cache.lock().unwrap();
+                loop {
+                    c.tick += 1;
+                    let tick = c.tick;
+                    if let Some(e) = c.resident.get_mut(&i) {
+                        e.last_used = tick;
+                        let out = Arc::clone(&e.shard);
+                        c.hits += 1;
+                        // enforce the budget on hits too: shards pinned
+                        // past the budget at insert time are shed here,
+                        // on the first access after their pins release
+                        Self::evict_locked(&mut c, self.budget_bytes);
+                        return Ok(out);
+                    }
+                    if c.loading.contains(&i) {
+                        c = self.loaded.wait(c).unwrap();
+                        continue;
+                    }
+                    c.misses += 1;
+                    c.loading.insert(i);
+                    break;
+                }
+            }
+            let read: crate::Result<(Dataset, KnnGraph)> =
+                (|| Ok((self.load_shard(i)?, self.load_graph(i)?)))();
+            let mut c = self.cache.lock().unwrap();
+            c.loading.remove(&i);
+            let (ds, graph) = match read {
+                Ok(pair) => pair,
+                Err(e) => {
+                    // waiters must wake and retry (they will become the
+                    // loader and surface the error themselves)
+                    c.dirty.remove(&i);
+                    self.loaded.notify_all();
+                    return Err(e);
+                }
+            };
+            if c.dirty.remove(&i) {
+                // a save overlapped our read: the bytes may be stale or
+                // torn — discard and re-read the post-save files
+                drop((ds, graph));
+                self.loaded.notify_all();
+                continue;
+            }
+            let loaded =
+                Arc::new(ResidentShard { bytes: resident_cost(&ds, &graph), ds, graph });
+            c.tick += 1;
+            let tick = c.tick;
+            c.resident_bytes += loaded.bytes;
+            c.peak_resident_bytes = c.peak_resident_bytes.max(c.resident_bytes);
+            c.resident.insert(i, CacheEntry { shard: Arc::clone(&loaded), last_used: tick });
+            Self::evict_locked(&mut c, self.budget_bytes);
+            self.loaded.notify_all();
+            return Ok(loaded);
+        }
+    }
+
+    /// Evict least-recently-used *unpinned* shards until the cache fits
+    /// the budget (also run internally by every [`ShardStore::get_shard`]).
+    /// Pinned shards (a handle is still held outside the cache) are
+    /// never evicted, so the cache can transiently exceed the budget
+    /// while queries are in flight; calling this after the pins drop
+    /// brings it back under.
+    pub fn evict_to_budget(&self) {
+        let mut c = self.cache.lock().unwrap();
+        Self::evict_locked(&mut c, self.budget_bytes);
+    }
+
+    fn evict_locked(c: &mut ShardCache, budget: usize) {
+        if budget == 0 {
+            return;
+        }
+        while c.resident_bytes > budget {
+            let victim = c
+                .resident
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.shard) == 1)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&i, _)| i);
+            let Some(i) = victim else { break };
+            if let Some(e) = c.resident.remove(&i) {
+                c.resident_bytes -= e.shard.bytes;
+                c.evictions += 1;
+            }
+        }
+    }
+
+    /// Drop shard `i` from the cache (stale after a save; pinned
+    /// handles keep the old data alive until they release). An
+    /// in-flight load of `i` is flagged dirty so its possibly-torn
+    /// read is discarded and retried rather than cached.
+    fn invalidate(&self, i: usize) {
+        let mut c = self.cache.lock().unwrap();
+        if let Some(e) = c.resident.remove(&i) {
+            c.resident_bytes -= e.shard.bytes;
+        }
+        if c.loading.contains(&i) {
+            c.dirty.insert(i);
+        }
+    }
+
+    /// Snapshot of the residency counters.
+    pub fn residency(&self) -> ResidencyStats {
+        let c = self.cache.lock().unwrap();
+        ResidencyStats {
+            hits: c.hits,
+            misses: c.misses,
+            evictions: c.evictions,
+            resident_shards: c.resident.len(),
+            resident_bytes: c.resident_bytes,
+            peak_resident_bytes: c.peak_resident_bytes,
+            budget_bytes: self.budget_bytes,
+        }
     }
 
     pub fn save_manifest(&self, m: &ShardManifest) -> crate::Result<()> {
@@ -83,6 +369,49 @@ impl ShardStore {
 
     pub fn save_stats(&self, stats: &OutOfCoreStats) -> crate::Result<()> {
         std::fs::write(self.dir.join(STATS_FILE), stats.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Read back the build stats from `stats.json` if the directory has
+    /// them. Extra fields (e.g. a folded-in residency block) are
+    /// ignored; a `stats.json` *without* build fields (a residency-only
+    /// fold on a directory that never ran `ooc-build`) reads as `None`
+    /// rather than an error.
+    pub fn load_stats(&self) -> crate::Result<Option<OutOfCoreStats>> {
+        let path = self.dir.join(STATS_FILE);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text)?;
+        if j.get("build_secs").is_none() {
+            return Ok(None);
+        }
+        Ok(Some(OutOfCoreStats::from_json(&j)?))
+    }
+
+    /// Fold serve-time residency counters into `stats.json` next to the
+    /// build stats, so one file tracks both the build cost and the
+    /// serving cache behavior of the directory. Existing fields —
+    /// build stats and anything else — are preserved verbatim; only the
+    /// `"residency"` block is replaced. A `stats.json` that exists but
+    /// does not parse is an error (never silently overwritten).
+    pub fn save_stats_with_residency(&self, res: &ResidencyStats) -> crate::Result<()> {
+        let path = self.dir.join(STATS_FILE);
+        let mut fields = if path.exists() {
+            let text = std::fs::read_to_string(&path)?;
+            match Json::parse(&text)
+                .with_context(|| format!("corrupt {path:?}; refusing to overwrite"))?
+            {
+                Json::Obj(fields) => fields,
+                _ => anyhow::bail!("{path:?} is not a JSON object; refusing to overwrite"),
+            }
+        } else {
+            Vec::new()
+        };
+        fields.retain(|(k, _)| k != "residency");
+        fields.push(("residency".to_string(), res.to_json()));
+        std::fs::write(path, Json::Obj(fields).to_string())?;
         Ok(())
     }
 }
@@ -109,13 +438,19 @@ pub struct ShardManifest {
 }
 
 fn jfield<'a>(j: &'a Json, key: &str) -> crate::Result<&'a Json> {
-    j.get(key).with_context(|| format!("manifest missing field {key:?}"))
+    j.get(key).with_context(|| format!("missing field {key:?}"))
 }
 
 fn jusize(j: &Json, key: &str) -> crate::Result<usize> {
     jfield(j, key)?
         .as_usize()
-        .with_context(|| format!("manifest field {key:?} is not a number"))
+        .with_context(|| format!("field {key:?} is not a number"))
+}
+
+fn jf64(j: &Json, key: &str) -> crate::Result<f64> {
+    jfield(j, key)?
+        .as_f64()
+        .with_context(|| format!("field {key:?} is not a number"))
 }
 
 impl ShardManifest {
@@ -178,6 +513,26 @@ impl ShardManifest {
             m.shards
         );
         Ok(m)
+    }
+
+    /// Objects owned by shard `s` (derived from the offsets + total).
+    pub fn shard_len(&self, s: usize) -> usize {
+        let end = self.offsets.get(s + 1).copied().unwrap_or(self.total);
+        end - self.offsets[s]
+    }
+
+    /// Estimated resident bytes of shard `s` (vectors + graph) — what
+    /// [`resident_cost`] will report once the shard is loaded.
+    pub fn shard_bytes(&self, s: usize) -> usize {
+        let len = self.shard_len(s);
+        len * self.d * std::mem::size_of::<f32>()
+            + len * self.k * std::mem::size_of::<Neighbor>()
+    }
+
+    /// Estimated bytes of the whole store when fully resident — the
+    /// reference point for sizing `--memory-budget`.
+    pub fn estimated_resident_bytes(&self) -> usize {
+        (0..self.shards).map(|s| self.shard_bytes(s)).sum()
     }
 }
 
@@ -263,6 +618,19 @@ impl OutOfCoreStats {
             .set("merges", self.merges)
             .set("rounds", self.rounds)
             .set("io_secs", self.io_secs)
+    }
+
+    /// Inverse of [`OutOfCoreStats::to_json`], so `stats.json` is
+    /// readable back by tooling. Unknown fields (e.g. a folded-in
+    /// `"residency"` block) are ignored.
+    pub fn from_json(j: &Json) -> crate::Result<OutOfCoreStats> {
+        Ok(OutOfCoreStats {
+            build_secs: jf64(j, "build_secs")?,
+            merge_secs: jf64(j, "merge_secs")?,
+            merges: jusize(j, "merges")?,
+            rounds: jusize(j, "rounds")?,
+            io_secs: jf64(j, "io_secs")?,
+        })
     }
 }
 
@@ -664,6 +1032,179 @@ mod tests {
         let g = KnnGraph::empty(30, 4);
         store.save_graph(3, &g).unwrap();
         assert_eq!(store.load_graph(3).unwrap().n(), 30);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Write `shards` identical-size shard/graph pairs for cache tests.
+    fn write_shards(dir: &Path, shards: usize) {
+        let store = ShardStore::new(dir).unwrap();
+        for i in 0..shards {
+            let ds = synth::uniform(50, 4, 100 + i as u64);
+            store.save_shard(i, &ds).unwrap();
+            store.save_graph(i, &KnnGraph::empty(50, 6)).unwrap();
+        }
+    }
+
+    #[test]
+    fn residency_cache_lru_eviction_and_pinning() {
+        let dir = tmpdir("residency");
+        write_shards(&dir, 4);
+        // one-shard byte cost, measured through an unbounded store
+        let one = ShardStore::new(&dir).unwrap().get_shard(0).unwrap().bytes;
+
+        // budget fits exactly one shard
+        let store = ShardStore::with_budget(&dir, one).unwrap();
+        let h0 = store.get_shard(0).unwrap();
+        assert_eq!(store.residency().misses, 1);
+        assert_eq!(store.residency().resident_bytes, one);
+
+        // a second pinned shard pushes past the budget; neither is
+        // evictable while its handle is alive
+        let h1 = store.get_shard(1).unwrap();
+        let res = store.residency();
+        assert_eq!(res.misses, 2);
+        assert_eq!(res.evictions, 0, "pinned shards must survive eviction passes");
+        assert!(res.resident_bytes > store.budget_bytes());
+        drop(h1);
+
+        // shard 0 is still pinned by h0: a hit, and its data is intact
+        let h0b = store.get_shard(0).unwrap();
+        assert_eq!(store.residency().hits, 1);
+        assert_eq!(h0b.ds.raw(), h0.ds.raw());
+        // the hit's eviction pass shed the now-unpinned shard 1
+        let res = store.residency();
+        assert_eq!(res.evictions, 1);
+        assert_eq!(res.resident_bytes, one);
+
+        // after unpinning, an eviction pass brings the cache to budget
+        drop(h0);
+        drop(h0b);
+        store.evict_to_budget();
+        let res = store.residency();
+        assert!(
+            res.resident_bytes <= store.budget_bytes(),
+            "resident {} > budget {} after unpin",
+            res.resident_bytes,
+            store.budget_bytes()
+        );
+        assert!(res.peak_resident_bytes >= 2 * one);
+
+        // LRU order: 0 (just touched) survives, a fresh shard evicts it
+        // only after 0 becomes the least recently used
+        let h2 = store.get_shard(2).unwrap();
+        drop(h2);
+        let r = store.residency();
+        assert_eq!(r.resident_shards, 1, "budget fits one shard");
+        let h2b = store.get_shard(2).unwrap(); // most recent shard is a hit
+        drop(h2b);
+        assert_eq!(store.residency().hits, 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unbounded_store_caches_everything() {
+        let dir = tmpdir("unbounded");
+        write_shards(&dir, 3);
+        let store = ShardStore::new(&dir).unwrap();
+        for i in 0..3 {
+            store.get_shard(i).unwrap();
+        }
+        for i in 0..3 {
+            store.get_shard(i).unwrap();
+        }
+        let res = store.residency();
+        assert_eq!((res.hits, res.misses, res.evictions), (3, 3, 0));
+        assert_eq!(res.resident_shards, 3);
+        assert_eq!(res.budget_bytes, 0);
+        // saving over a cached shard invalidates it
+        let ds = synth::uniform(50, 4, 999);
+        store.save_shard(1, &ds).unwrap();
+        let back = store.get_shard(1).unwrap();
+        assert_eq!(back.ds.raw(), ds.raw(), "stale shard served after save");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stats_json_roundtrips() {
+        let stats = OutOfCoreStats {
+            build_secs: 1.5,
+            merge_secs: 2.25,
+            merges: 6,
+            rounds: 3,
+            io_secs: 0.125,
+        };
+        let back = OutOfCoreStats::from_json(&Json::parse(&stats.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.build_secs, stats.build_secs);
+        assert_eq!(back.merge_secs, stats.merge_secs);
+        assert_eq!((back.merges, back.rounds), (stats.merges, stats.rounds));
+        assert_eq!(back.io_secs, stats.io_secs);
+
+        let res = ResidencyStats {
+            hits: 10,
+            misses: 4,
+            evictions: 2,
+            resident_shards: 1,
+            resident_bytes: 4096,
+            peak_resident_bytes: 8192,
+            budget_bytes: 5000,
+        };
+        let back =
+            ResidencyStats::from_json(&Json::parse(&res.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, res);
+        assert!((res.hit_rate() - 10.0 / 14.0).abs() < 1e-12);
+
+        // the serve-time fold keeps the build stats readable and adds
+        // the residency block to the same file
+        let dir = tmpdir("statsfold");
+        let store = ShardStore::new(&dir).unwrap();
+        store.save_stats(&stats).unwrap();
+        store.save_stats_with_residency(&res).unwrap();
+        let text = std::fs::read_to_string(dir.join(STATS_FILE)).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("merges").and_then(Json::as_usize), Some(6));
+        let folded = ResidencyStats::from_json(j.get("residency").unwrap()).unwrap();
+        assert_eq!(folded, res);
+        let build_back = store.load_stats().unwrap().unwrap();
+        assert_eq!(build_back.merges, stats.merges);
+        // repeated folds replace the residency block, never duplicate it
+        store.save_stats_with_residency(&res).unwrap();
+        let text = std::fs::read_to_string(dir.join(STATS_FILE)).unwrap();
+        assert_eq!(text.matches("\"residency\"").count(), 1, "duplicated block: {text}");
+        std::fs::remove_dir_all(dir).ok();
+
+        // a dir that never ran ooc-build: folding works, load_stats
+        // reads the residency-only file as "no build stats" (not error)
+        let dir = tmpdir("statsnobuild");
+        let store = ShardStore::new(&dir).unwrap();
+        store.save_stats_with_residency(&res).unwrap();
+        store.save_stats_with_residency(&res).unwrap();
+        assert!(store.load_stats().unwrap().is_none());
+        let text = std::fs::read_to_string(dir.join(STATS_FILE)).unwrap();
+        assert_eq!(text.matches("\"residency\"").count(), 1);
+        // a corrupt stats.json is an error, never silently overwritten
+        std::fs::write(dir.join(STATS_FILE), "{truncated").unwrap();
+        assert!(store.save_stats_with_residency(&res).is_err());
+        assert_eq!(std::fs::read_to_string(dir.join(STATS_FILE)).unwrap(), "{truncated");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_byte_estimates_match_resident_cost() {
+        let dir = tmpdir("bytes");
+        let ds = synth::uniform(90, 6, 55);
+        let params = GnndParams::default().with_k(8).with_p(4).with_iters(3);
+        let cfg = OutOfCoreConfig { shards: 3, workers: 1, params };
+        build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+        let store = ShardStore::new(&dir).unwrap();
+        let m = store.load_manifest().unwrap();
+        let mut total = 0usize;
+        for s in 0..m.shards {
+            let h = store.get_shard(s).unwrap();
+            assert_eq!(m.shard_bytes(s), h.bytes, "estimate off for shard {s}");
+            total += h.bytes;
+        }
+        assert_eq!(m.estimated_resident_bytes(), total);
         std::fs::remove_dir_all(dir).ok();
     }
 }

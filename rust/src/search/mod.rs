@@ -18,7 +18,10 @@
 //!   once warm;
 //! * [`sharded`] — [`sharded::ShardedIndex`]: scatter-gather serving
 //!   over the per-shard graphs of the out-of-core pipeline
-//!   ([`crate::merge::outofcore`]);
+//!   ([`crate::merge::outofcore`]), resolving shards per query through
+//!   the `ShardStore` residency cache (lazy load + LRU eviction under
+//!   a byte budget) and optionally fanning the probed shards across a
+//!   scoped worker pool;
 //! * [`batch`] — multi-query execution fanned across worker threads
 //!   (crossbeam scoped threads, per-thread scratch);
 //! * [`serve`] — a closed-loop serving harness reporting QPS, latency
@@ -51,11 +54,13 @@ pub mod sharded;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::str::FromStr;
+use std::sync::Arc;
 
 use crate::baselines::kmeans;
 use crate::dataset::groundtruth::ordered::F32;
 use crate::dataset::Dataset;
 use crate::graph::{KnnGraph, EMPTY};
+use crate::merge::outofcore::ResidentShard;
 use crate::util::rng::Rng;
 
 /// How the fixed entry points of a [`SearchIndex`] are chosen.
@@ -208,6 +213,13 @@ pub struct SearchScratch {
     pub(crate) shard_topk: Vec<(F32, u32)>,
     /// Shard routing order: (query-to-centroid distance, shard).
     pub(crate) shard_rank: Vec<(F32, usize)>,
+    /// Per-query shard pin table: resolved residency handles, released
+    /// (set back to `None`) at the end of every query so a kept
+    /// scratch never pins shards ([`sharded::ShardedIndex`] only).
+    pub(crate) shard_pins: Vec<Option<Arc<ResidentShard>>>,
+    /// Probed set of the current query — the deterministic scoring
+    /// universe of the sharded scatter phase.
+    pub(crate) shard_probed: Vec<bool>,
     /// Distance evaluations performed by the last query.
     pub dist_evals: usize,
     /// Node expansions performed by the last query.
@@ -223,6 +235,8 @@ impl SearchScratch {
             buf: Vec::new(),
             shard_topk: Vec::new(),
             shard_rank: Vec::new(),
+            shard_pins: Vec::new(),
+            shard_probed: Vec::new(),
             dist_evals: 0,
             hops: 0,
         }
@@ -384,8 +398,12 @@ pub trait AnnIndex: Sync {
     /// Distance metric of the indexed data.
     fn metric(&self) -> crate::config::Metric;
 
-    /// The indexed vector with (global) object id `id`.
-    fn vector(&self, id: u32) -> &[f32];
+    /// The indexed vector with (global) object id `id`, copied out.
+    /// Owned rather than borrowed: a residency-managed index
+    /// ([`sharded::ShardedIndex`] under a memory budget) may have to
+    /// fault the owning shard in, and a borrow could not outlive that
+    /// shard's next eviction.
+    fn vector(&self, id: u32) -> Vec<f32>;
 
     /// The index's configured `ef` (used when a query passes `ef = 0`).
     fn default_ef(&self) -> usize;
@@ -557,8 +575,8 @@ impl<'a> AnnIndex for SearchIndex<'a> {
         self.ds.metric
     }
 
-    fn vector(&self, id: u32) -> &[f32] {
-        self.ds.vec(id as usize)
+    fn vector(&self, id: u32) -> Vec<f32> {
+        self.ds.vec(id as usize).to_vec()
     }
 
     fn default_ef(&self) -> usize {

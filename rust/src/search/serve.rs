@@ -4,7 +4,10 @@
 //! against exact ground truth) — across an `ef` sweep, emitting a
 //! [`Report`] of the recall-vs-QPS operating curve. The harness never
 //! sees the index layout, so the same sweep produces the
-//! monolithic-vs-sharded operating curves.
+//! monolithic-vs-sharded operating curves — including budget-
+//! constrained sharded indexes, whose residency knobs
+//! (`--memory-budget`, `--search-threads`) surface in the report's
+//! `index` metadata via [`AnnIndex::describe`].
 //!
 //! Two passes per operating point:
 //! 1. a *quality* pass through [`BatchExecutor`] computing recall@k;
@@ -317,8 +320,8 @@ mod tests {
             self.ds.metric
         }
 
-        fn vector(&self, id: u32) -> &[f32] {
-            self.ds.vec(id as usize)
+        fn vector(&self, id: u32) -> Vec<f32> {
+            self.ds.vec(id as usize).to_vec()
         }
 
         fn default_ef(&self) -> usize {

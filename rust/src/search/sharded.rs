@@ -12,45 +12,110 @@
 //!    irrelevant shards;
 //! 2. **scatter** — run an independent best-first search *inside* each
 //!    probed shard. Only nodes owned by the shard are expanded;
-//!    cross-shard edges (the merge's contribution) are scored as
-//!    candidate results but never walked, which keeps the per-shard
-//!    walks independent — the property that later lets shards live on
-//!    different workers or devices;
+//!    cross-shard edges (the merge's contribution) into *probed* shards
+//!    are scored as candidate results but never walked, which keeps the
+//!    per-shard walks independent — the property that lets shards fan
+//!    across worker threads here and across processes/devices later;
 //! 3. **gather** — k-way merge the per-shard top-k lists (dedup by id:
 //!    a cross-shard edge and its home shard can propose the same
 //!    object) into the final ascending top-k.
 //!
-//! The whole pipeline reuses one [`SearchScratch`] per worker thread —
-//! the sharded hot path stays allocation-free once warm, exactly like
-//! the monolithic one.
+//! Shard *residency* is managed, not assumed: the index owns no shard
+//! data. Every query resolves pinned handles from the
+//! [`ShardStore`] LRU cache ([`ShardStore::get_shard`]), so a store
+//! opened with a byte budget serves corpora larger than RAM — shards
+//! fault in on miss and the cache sheds least-recently-used shards as
+//! pins release. The scoring universe of a query is its *probed set*
+//! (cross-shard edges into unprobed shards are skipped
+//! deterministically), so results depend only on the probe set, never
+//! on what happened to be resident — a budget-constrained index
+//! returns bit-identical results to an unbounded one. The flip side:
+//! a query only ever pins probed shards, so *peak* residency is
+//! bounded by the probe set, not the budget — serving a
+//! larger-than-RAM store requires `probe_shards` small enough that
+//! the probed set fits memory (the CLI warns when probe and budget
+//! disagree).
+//!
+//! With `search_threads > 1` the scatter phase fans the probed shards
+//! across a scoped worker pool (per-worker [`SearchScratch`] from a
+//! reuse pool): a worker faulting a cold shard in from disk overlaps
+//! with the other workers' warm-shard compute. The gather sort is
+//! order-independent, so parallel scatter is bit-identical to
+//! sequential.
 
 use std::cmp::Reverse;
 use std::path::Path;
-
-use anyhow::Context;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::config::Metric;
 use crate::dataset::groundtruth::ordered::F32;
 use crate::dataset::Dataset;
 use crate::graph::KnnGraph;
-use crate::merge::outofcore::{shard_centroid, ShardStore};
+use crate::merge::outofcore::{shard_centroid, ResidencyStats, ResidentShard, ShardStore};
 
 use super::{select_entries, AnnIndex, SearchParams, SearchScratch};
 
-/// One resident shard: its vectors, its merged sub-graph (neighbor ids
-/// in the global id space), its global-id offset, fixed entry points
-/// (global ids) and routing centroid.
-struct Shard {
-    ds: Dataset,
-    graph: KnnGraph,
+/// Per-worker scatter output: (dist_evals, hops, shard top-k lists).
+type ScatterOut = (usize, usize, Vec<(F32, u32)>);
+
+/// Serving metadata of one shard — everything a query needs *before*
+/// touching the shard's data: geometry, fixed entry points (global
+/// ids) and the routing centroid. Vectors and graph are resolved
+/// through the [`ShardStore`] cache per query.
+struct ShardMeta {
     offset: usize,
+    len: usize,
     entries: Vec<u32>,
     centroid: Vec<f32>,
 }
 
-/// An [`AnnIndex`] over the shard files of an out-of-core build.
+/// Resolve (and pin) shard `s` into a query's pin table
+/// (`scratch.shard_pins`). Shard files vanishing mid-query means the
+/// store was deleted or corrupted underneath a live index —
+/// unrecoverable, so this panics rather than returning partial
+/// results.
+fn pin_handle(
+    store: &ShardStore,
+    pins: &mut [Option<Arc<ResidentShard>>],
+    s: usize,
+) -> Arc<ResidentShard> {
+    if let Some(h) = &pins[s] {
+        return Arc::clone(h);
+    }
+    let h = store
+        .get_shard(s)
+        .unwrap_or_else(|e| panic!("shard {s} unreadable mid-query (store corrupt?): {e:#}"));
+    pins[s] = Some(Arc::clone(&h));
+    h
+}
+
+/// `--probe-shards` beyond the manifest shard count would silently
+/// "probe" phantom shards; the CLI clamps it with a warning (same
+/// pattern as [`crate::search::serve::clamp_ef`]). Returns the
+/// effective probe count and whether clamping happened.
+pub fn clamp_probe(probe: usize, shards: usize) -> (usize, bool) {
+    if probe > shards {
+        (shards, true)
+    } else {
+        (probe, false)
+    }
+}
+
+/// An [`AnnIndex`] over the shard files of an out-of-core build, with
+/// managed shard residency and an optional parallel scatter phase.
 pub struct ShardedIndex {
-    shards: Vec<Shard>,
+    store: ShardStore,
+    meta: Vec<ShardMeta>,
+    /// Unbounded-budget fast path: with no byte budget nothing can
+    /// ever be evicted, so the index keeps one permanent pin per shard
+    /// and queries resolve handles with an `Arc` clone instead of
+    /// taking the cache mutex. Empty when a budget is set. Consequence:
+    /// an unbounded index serves a *snapshot taken at open* — saving
+    /// over shard files via [`ShardedIndex::store`] mid-serving is only
+    /// picked up by budget-constrained indexes (the pre-residency
+    /// `ShardedIndex` had the same snapshot-at-open semantics).
+    pinned_all: Vec<Arc<ResidentShard>>,
     /// Start id of each shard, ascending (offsets\[s\] = shard s start).
     offsets: Vec<usize>,
     total: usize,
@@ -59,33 +124,58 @@ pub struct ShardedIndex {
     params: SearchParams,
     /// Shards probed per query (0 = all).
     probe_shards: usize,
+    /// Scatter workers per query (<= 1 = sequential scatter).
+    search_threads: usize,
+    /// Warm per-worker scratches reused across queries.
+    scratch_pool: Mutex<Vec<SearchScratch>>,
 }
 
 impl ShardedIndex {
-    /// Open an `ooc-build` output directory (manifest + shard files).
+    /// Open an `ooc-build` output directory (manifest + shard files)
+    /// with an unbounded residency budget and sequential scatter — the
+    /// pre-residency behavior.
     pub fn open(
         dir: impl AsRef<Path>,
         params: SearchParams,
         probe_shards: usize,
     ) -> crate::Result<Self> {
-        let store = ShardStore::new(dir)?;
-        Self::from_store(&store, params, probe_shards)
+        Self::open_with(dir, params, probe_shards, 0, 1)
     }
 
-    pub fn from_store(
-        store: &ShardStore,
+    /// Open with the serving knobs: `memory_budget_bytes` caps resident
+    /// shard bytes (0 = unbounded) and `search_threads` sizes the
+    /// per-query scatter pool (<= 1 = sequential).
+    pub fn open_with(
+        dir: impl AsRef<Path>,
         params: SearchParams,
         probe_shards: usize,
+        memory_budget_bytes: usize,
+        search_threads: usize,
+    ) -> crate::Result<Self> {
+        let store = ShardStore::with_budget(dir, memory_budget_bytes)?;
+        Self::from_store(store, params, probe_shards, search_threads)
+    }
+
+    /// Build over an existing store (takes ownership — the index and
+    /// the residency cache live and die together). Opening streams
+    /// every shard through the cache exactly once for validation and
+    /// entry selection, then sheds back down to the budget.
+    pub fn from_store(
+        store: ShardStore,
+        params: SearchParams,
+        probe_shards: usize,
+        search_threads: usize,
     ) -> crate::Result<Self> {
         params.validate()?;
         let manifest = store.load_manifest()?;
         anyhow::ensure!(manifest.shards >= 1, "manifest has no shards");
-        let mut shards = Vec::with_capacity(manifest.shards);
+        let mut meta = Vec::with_capacity(manifest.shards);
         let mut offsets = Vec::with_capacity(manifest.shards);
+        let mut pinned_all = Vec::new();
         let mut expect = 0usize;
         for s in 0..manifest.shards {
-            let ds = store.load_shard(s)?;
-            let graph = store.load_graph(s)?;
+            let handle = store.get_shard(s)?;
+            let (ds, graph) = (&handle.ds, &handle.graph);
             anyhow::ensure!(
                 graph.n() == ds.len(),
                 "shard {s}: graph covers {} objects but shard has {}",
@@ -106,63 +196,96 @@ impl ShardedIndex {
             expect += ds.len();
             // the shards' global id space must be closed over the
             // manifest total — corrupt graphs fail here, not mid-query
-            check_global_ids(&graph, offset, manifest.total)
-                .with_context(|| format!("shard {s} graph"))?;
+            check_global_ids(graph, offset, manifest.total)
+                .map_err(|e| e.context(format!("shard {s} graph")))?;
             // per-shard entry selection (shard-local ids -> global);
             // decorrelate the per-shard RNG streams with the shard id
             let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             let sp = params.clone().with_seed(params.seed ^ salt);
-            let mut entries = select_entries(&ds, &graph, &sp);
+            let mut entries = select_entries(ds, graph, &sp);
             for e in entries.iter_mut() {
                 *e += offset as u32;
             }
             let centroid = match manifest.centroids.get(s) {
                 Some(c) if !c.is_empty() => c.clone(),
-                _ => shard_centroid(&ds),
+                _ => shard_centroid(ds),
             };
             offsets.push(offset);
-            shards.push(Shard { ds, graph, offset, entries, centroid });
+            meta.push(ShardMeta { offset, len: ds.len(), entries, centroid });
+            if store.budget_bytes() == 0 {
+                // unbounded: nothing will ever be evicted, so pin every
+                // shard permanently and skip the cache mutex per query
+                pinned_all.push(handle);
+            }
         }
         anyhow::ensure!(
             expect == manifest.total,
             "manifest total {} != sum of shard sizes {expect}",
             manifest.total
         );
+        // the validation sweep pinned shards one at a time; shed the
+        // cache back down to the budget before serving starts
+        store.evict_to_budget();
         Ok(ShardedIndex {
-            shards,
+            store,
+            meta,
+            pinned_all,
             offsets,
             total: manifest.total,
             d: manifest.d,
             metric: manifest.metric,
             params,
             probe_shards,
+            search_threads,
+            scratch_pool: Mutex::new(Vec::new()),
         })
     }
 
-    /// Number of shards resident.
+    /// Number of shards in the store.
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.meta.len()
     }
 
     /// Effective shards probed per query.
     pub fn probe(&self) -> usize {
         if self.probe_shards == 0 {
-            self.shards.len()
+            self.meta.len()
         } else {
-            self.probe_shards.min(self.shards.len())
+            self.probe_shards.min(self.meta.len())
         }
+    }
+
+    /// Effective scatter workers per query.
+    pub fn scatter_threads(&self) -> usize {
+        self.search_threads.max(1).min(self.probe())
     }
 
     pub fn params(&self) -> &SearchParams {
         &self.params
     }
 
+    /// The underlying residency-managed store.
+    pub fn store(&self) -> &ShardStore {
+        &self.store
+    }
+
+    /// Snapshot of the residency cache counters.
+    pub fn residency(&self) -> ResidencyStats {
+        self.store.residency()
+    }
+
     /// The full corpus re-assembled as one in-memory dataset (bench /
     /// ground-truth convenience; true deployments keep shards apart).
-    pub fn concat_dataset(&self) -> Dataset {
-        let mut it = self.shards.iter();
-        let first = it.next().expect("at least one shard").ds.clone();
-        it.fold(first, |acc, s| acc.concat(&s.ds, "sharded"))
+    /// Streams shard by shard through the cache: peak extra memory is
+    /// one shard, not a second copy of the whole corpus.
+    pub fn concat_dataset(&self) -> crate::Result<Dataset> {
+        let mut data = Vec::with_capacity(self.total * self.d);
+        for s in 0..self.meta.len() {
+            let h = self.store.get_shard(s)?;
+            data.extend_from_slice(h.ds.raw());
+        }
+        self.store.evict_to_budget();
+        Ok(Dataset::new("sharded", self.d, self.metric, data))
     }
 
     /// Owning shard of a global id.
@@ -171,17 +294,41 @@ impl ShardedIndex {
         self.offsets.partition_point(|&off| off <= gid as usize) - 1
     }
 
-    /// Distance from `q` to global object `gid` (any resident shard).
+    /// Resolve shard `s` for the current query: the permanent pin when
+    /// the budget is unbounded (an `Arc` clone, no lock), else through
+    /// the query's pin table and the residency cache.
     #[inline]
-    fn dist_to_global(&self, gid: u32, q: &[f32]) -> f32 {
-        let s = self.owner(gid);
-        self.shards[s].ds.dist_to(gid as usize - self.shards[s].offset, q)
+    fn resolve(&self, pins: &mut [Option<Arc<ResidentShard>>], s: usize) -> Arc<ResidentShard> {
+        if let Some(h) = self.pinned_all.get(s) {
+            return Arc::clone(h);
+        }
+        pin_handle(&self.store, pins, s)
+    }
+
+    /// Reset the scratch's pin table for a new query: no pins held,
+    /// probed set empty. `clear` + `resize` keep capacity, so a warm
+    /// scratch allocates nothing here.
+    fn begin_pins(&self, scratch: &mut SearchScratch) {
+        let n = self.meta.len();
+        scratch.shard_pins.clear();
+        scratch.shard_pins.resize(n, None);
+        scratch.shard_probed.clear();
+        scratch.shard_probed.resize(n, false);
+    }
+
+    /// Release every pin the query holds (a kept scratch must never
+    /// block eviction between queries).
+    fn release_pins(scratch: &mut SearchScratch) {
+        for p in scratch.shard_pins.iter_mut() {
+            *p = None;
+        }
     }
 
     /// The scatter side: best-first search restricted to shard `s`,
     /// appending the shard's top-`k` (global ids, ascending) to
     /// `scratch.shard_topk`. Mirrors [`super::beam_search`] except that
-    /// cross-shard edges are scored but never expanded.
+    /// cross-shard edges are scored (via the scratch's pin table,
+    /// against probed shards only) but never expanded.
     fn search_shard(
         &self,
         s: usize,
@@ -191,16 +338,17 @@ impl ShardedIndex {
         exclude: u32,
         scratch: &mut SearchScratch,
     ) {
-        let shard = &self.shards[s];
-        let lo = shard.offset as u32;
-        let hi = (shard.offset + shard.ds.len()) as u32;
+        let home = self.resolve(&mut scratch.shard_pins, s);
+        let m = &self.meta[s];
+        let lo = m.offset as u32;
+        let hi = (m.offset + m.len) as u32;
         scratch.visited.begin(self.total);
         scratch.frontier.clear();
         scratch.results.clear();
 
-        for &e in &shard.entries {
+        for &e in &m.entries {
             if scratch.visited.insert(e) {
-                let d = shard.ds.dist_to((e - lo) as usize, q);
+                let d = home.ds.dist_to((e - lo) as usize, q);
                 scratch.dist_evals += 1;
                 scratch.frontier.push(Reverse((F32(d), e)));
                 if e != exclude {
@@ -227,14 +375,26 @@ impl ShardedIndex {
                 break;
             }
             hops += 1;
-            for e in shard.graph.list((u - lo) as usize) {
+            for e in home.graph.list((u - lo) as usize) {
                 if e.is_empty() {
                     break;
                 }
                 if !scratch.visited.insert(e.id) {
                     continue;
                 }
-                let dv = self.dist_to_global(e.id, q);
+                let dv = if (lo..hi).contains(&e.id) {
+                    home.ds.dist_to((e.id - lo) as usize, q)
+                } else {
+                    // cross-shard edge: scored against its owning shard
+                    // iff that shard is probed — the scoring universe is
+                    // the probed set, independent of cache residency
+                    let o = self.owner(e.id);
+                    if !scratch.shard_probed[o] {
+                        continue;
+                    }
+                    let sh = self.resolve(&mut scratch.shard_pins, o);
+                    sh.ds.dist_to(e.id as usize - self.meta[o].offset, q)
+                };
                 scratch.dist_evals += 1;
                 if (lo..hi).contains(&e.id) {
                     scratch.frontier.push(Reverse((F32(dv), e.id)));
@@ -273,6 +433,54 @@ impl ShardedIndex {
             scratch.shard_topk.push(x);
         }
     }
+
+    /// A warm scratch from the reuse pool (or a fresh one), reset for a
+    /// new scatter task.
+    fn take_scratch(&self) -> SearchScratch {
+        let mut s = self.scratch_pool.lock().unwrap().pop().unwrap_or_default();
+        s.shard_topk.clear();
+        s.dist_evals = 0;
+        s.hops = 0;
+        s
+    }
+
+    fn put_scratch(&self, s: SearchScratch) {
+        self.scratch_pool.lock().unwrap().push(s);
+    }
+
+    /// One scatter worker: pull probed shards off the shared cursor
+    /// until none remain, then hand the accumulated per-shard top-k
+    /// (plus eval/hop counts) to `collected`. Runs on `workers - 1`
+    /// scoped threads *and* inline on the calling thread, so a query
+    /// never pays a spawn it does not use.
+    #[allow(clippy::too_many_arguments)]
+    fn scatter_worker(
+        &self,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        order: &[usize],
+        cursor: &AtomicUsize,
+        collected: &Mutex<Vec<ScatterOut>>,
+    ) {
+        let mut local = self.take_scratch();
+        self.begin_pins(&mut local);
+        for &s in order {
+            local.shard_probed[s] = true;
+        }
+        loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= order.len() {
+                break;
+            }
+            self.search_shard(order[i], q, k, ef, exclude, &mut local);
+        }
+        Self::release_pins(&mut local);
+        let topk = std::mem::take(&mut local.shard_topk);
+        collected.lock().unwrap().push((local.dist_evals, local.hops, topk));
+        self.put_scratch(local);
+    }
 }
 
 /// Every neighbor id of a merged shard graph must stay inside the
@@ -309,9 +517,16 @@ impl AnnIndex for ShardedIndex {
         self.metric
     }
 
-    fn vector(&self, id: u32) -> &[f32] {
+    fn vector(&self, id: u32) -> Vec<f32> {
         let s = self.owner(id);
-        self.shards[s].ds.vec(id as usize - self.shards[s].offset)
+        let h = match self.pinned_all.get(s) {
+            Some(h) => Arc::clone(h),
+            None => self
+                .store
+                .get_shard(s)
+                .unwrap_or_else(|e| panic!("shard {s} unreadable (store corrupt?): {e:#}")),
+        };
+        h.ds.vec(id as usize - self.meta[s].offset).to_vec()
     }
 
     fn default_ef(&self) -> usize {
@@ -319,7 +534,18 @@ impl AnnIndex for ShardedIndex {
     }
 
     fn describe(&self) -> String {
-        format!("sharded(n={}, shards={}, probe={})", self.total, self.shards.len(), self.probe())
+        let budget = match self.store.budget_bytes() {
+            0 => "unbounded".to_string(),
+            b => format!("{:.1}MB", b as f64 / (1024.0 * 1024.0)),
+        };
+        format!(
+            "sharded(n={}, shards={}, probe={}, budget={}, scatter_threads={})",
+            self.total,
+            self.meta.len(),
+            self.probe(),
+            budget,
+            self.scatter_threads()
+        )
     }
 
     fn make_scratch(&self) -> SearchScratch {
@@ -344,23 +570,61 @@ impl AnnIndex for ShardedIndex {
         // ---- route ----
         let probe = self.probe();
         scratch.shard_rank.clear();
-        if probe < self.shards.len() {
-            for (s, sh) in self.shards.iter().enumerate() {
-                let d = crate::distance::distance(self.metric, q, &sh.centroid);
+        if probe < self.meta.len() {
+            for (s, m) in self.meta.iter().enumerate() {
+                let d = crate::distance::distance(self.metric, q, &m.centroid);
                 scratch.shard_rank.push((F32(d), s));
             }
             scratch.shard_rank.sort_unstable();
         } else {
-            for s in 0..self.shards.len() {
+            for s in 0..self.meta.len() {
                 scratch.shard_rank.push((F32(0.0), s));
             }
         }
 
         // ---- scatter ----
         scratch.shard_topk.clear();
-        for i in 0..probe {
-            let (_, s) = scratch.shard_rank[i];
-            self.search_shard(s, q, k, ef, exclude, scratch);
+        let workers = self.scatter_threads();
+        if workers <= 1 {
+            self.begin_pins(scratch);
+            for i in 0..probe {
+                let s = scratch.shard_rank[i].1;
+                scratch.shard_probed[s] = true;
+            }
+            for i in 0..probe {
+                let (_, s) = scratch.shard_rank[i];
+                self.search_shard(s, q, k, ef, exclude, scratch);
+            }
+            Self::release_pins(scratch);
+        } else {
+            // fan the probed shards across a scoped pool: a worker
+            // faulting a cold shard in from disk overlaps with the
+            // others' warm-shard compute. Workers pull shard tasks from
+            // a shared cursor and collect per-task top-k lists; the
+            // gather sort below is order-independent, so the result is
+            // bit-identical to the sequential path. One worker runs
+            // inline on this thread — only workers-1 spawns per query.
+            let order: Vec<usize> =
+                scratch.shard_rank[..probe].iter().map(|&(_, s)| s).collect();
+            let cursor = AtomicUsize::new(0);
+            let collected: Mutex<Vec<ScatterOut>> = Mutex::new(Vec::with_capacity(workers));
+            crossbeam_utils::thread::scope(|sc| {
+                for _ in 1..workers {
+                    let cursor = &cursor;
+                    let order = &order;
+                    let collected = &collected;
+                    sc.spawn(move |_| {
+                        self.scatter_worker(q, k, ef, exclude, order, cursor, collected)
+                    });
+                }
+                self.scatter_worker(q, k, ef, exclude, &order, &cursor, &collected);
+            })
+            .unwrap();
+            for (evals, hops, mut topk) in collected.into_inner().unwrap() {
+                scratch.dist_evals += evals;
+                scratch.hops += hops;
+                scratch.shard_topk.append(&mut topk);
+            }
         }
 
         // ---- gather: k-way merge with cross-shard dedup ----

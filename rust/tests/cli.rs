@@ -181,6 +181,51 @@ fn cli_sharded_serving() {
 }
 
 #[test]
+fn cli_sharded_residency_budget_and_probe_clamp() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let shard_dir = dir.join("shards").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "600", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "ooc-build", "--data", &data, "--dir", &shard_dir, "--shards", "4",
+        "--workers", "2", "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "ooc-build failed: {out}");
+
+    // a ~0.02 MB budget fits less than one of these shards: the sweep
+    // must still complete, report residency counters with evictions,
+    // and fold them into stats.json
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--data", &data, "--ef", "32",
+        "--queries", "60", "--distinct", "30", "--threads", "2",
+        "--memory-budget", "0.02", "--search-threads", "2",
+    ]);
+    assert!(ok, "budget serve-bench failed: {out}");
+    assert!(out.contains("recall@10"), "no recall column: {out}");
+    assert!(out.contains("residency:"), "no residency block: {out}");
+    assert!(out.contains("\"evictions\""), "no eviction counter: {out}");
+    let stats_text =
+        std::fs::read_to_string(std::path::Path::new(&shard_dir).join("stats.json")).unwrap();
+    assert!(stats_text.contains("\"residency\""), "stats.json not folded: {stats_text}");
+    assert!(stats_text.contains("\"merges\""), "build stats lost in fold: {stats_text}");
+
+    // phantom --probe-shards clamps with a warning instead of probing
+    // shards that do not exist
+    let (ok, out) = run(&[
+        "search", "--shards", &shard_dir, "--query-id", "3", "--k", "5",
+        "--probe-shards", "99",
+    ]);
+    assert!(ok, "clamped search failed: {out}");
+    assert!(out.contains("clamped"), "no probe clamp warning: {out}");
+    assert!(out.contains("top-5"), "clamped search did not answer: {out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_input() {
     let (ok, _) = run(&["bogus-subcommand"]);
     assert!(!ok);

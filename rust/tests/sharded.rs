@@ -222,3 +222,89 @@ fn opening_without_manifest_fails_cleanly() {
     assert!(err.contains("manifest"), "unhelpful error: {err}");
     std::fs::remove_dir_all(dir).ok();
 }
+
+/// Results under a byte budget that fits only 1 of 4 shards must be
+/// *bit-identical* to the unbounded index (same seeds): the scoring
+/// universe is the probed set, never "what happened to be resident".
+#[test]
+fn budget_constrained_results_match_unbounded_exactly() {
+    let ds = synth::clustered(480, 8, 45);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("budget");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(48);
+    let unbounded = ShardedIndex::open(&dir, sp.clone(), 0).unwrap();
+    // total resident bytes of the store, via the manifest estimate
+    let store = ShardStore::new(&dir).unwrap();
+    let manifest = store.load_manifest().unwrap();
+    let budget = manifest.shard_bytes(0); // fits ~1 of 4 shards
+    assert!(budget * 3 < manifest.estimated_resident_bytes());
+    let tight = ShardedIndex::open_with(&dir, sp, 0, budget, 1).unwrap();
+    assert_eq!(tight.store().budget_bytes(), budget);
+
+    let mut s1 = unbounded.make_scratch();
+    let mut s2 = tight.make_scratch();
+    let (mut o1, mut o2) = (Vec::new(), Vec::new());
+    for q in (0..ds.len()).step_by(23) {
+        unbounded.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s1, &mut o1);
+        tight.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s2, &mut o2);
+        assert_eq!(o1, o2, "budget changed the results of query {q}");
+        assert_eq!(s1.dist_evals, s2.dist_evals, "budget changed the walk of query {q}");
+    }
+    let res = tight.residency();
+    assert!(res.evictions > 0, "1-of-4 budget must evict: {res:?}");
+    assert!(res.misses > res.hits, "1-of-4 budget at probe=all must mostly miss: {res:?}");
+    // unpinned cache respects the budget once the last query's pins drop
+    tight.store().evict_to_budget();
+    assert!(tight.residency().resident_bytes <= budget);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Parallel scatter (`--search-threads`) is bit-identical to the
+/// sequential scatter — the gather sort is order-independent and every
+/// per-shard walk is independent.
+#[test]
+fn parallel_scatter_matches_sequential() {
+    let ds = synth::clustered(480, 8, 46);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("parscatter");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(48);
+    let seq = ShardedIndex::open_with(&dir, sp.clone(), 0, 0, 1).unwrap();
+    let par = ShardedIndex::open_with(&dir, sp, 0, 0, 4).unwrap();
+    assert_eq!(seq.scatter_threads(), 1);
+    assert_eq!(par.scatter_threads(), 4);
+    let mut s1 = seq.make_scratch();
+    let mut s2 = par.make_scratch();
+    let (mut o1, mut o2) = (Vec::new(), Vec::new());
+    for q in (0..ds.len()).step_by(31) {
+        seq.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s1, &mut o1);
+        par.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s2, &mut o2);
+        assert_eq!(o1, o2, "parallel scatter diverged on query {q}");
+        assert_eq!(s1.dist_evals, s2.dist_evals, "eval counts diverged on query {q}");
+        assert_eq!(s1.hops, s2.hops, "hop counts diverged on query {q}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn probe_clamp_is_reported() {
+    use gnnd::search::sharded::clamp_probe;
+    assert_eq!(clamp_probe(99, 4), (4, true));
+    assert_eq!(clamp_probe(4, 4), (4, false));
+    assert_eq!(clamp_probe(0, 4), (0, false));
+    // the index itself also tolerates an oversized probe
+    let ds = synth::clustered(300, 6, 47);
+    let params = GnndParams::default().with_k(8).with_p(4).with_iters(4);
+    let cfg = OutOfCoreConfig { shards: 3, workers: 1, params };
+    let dir = tmpdir("probeclamp");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    let idx = ShardedIndex::open(&dir, SearchParams::default(), 99).unwrap();
+    assert_eq!(idx.probe(), 3);
+    assert_eq!(idx.search(ds.vec(1), 5).len(), 5);
+    std::fs::remove_dir_all(dir).ok();
+}
