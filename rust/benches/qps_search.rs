@@ -7,8 +7,13 @@
 //! over time; a third serves the shards under a residency budget that
 //! fits ~50% of the store (LRU faulting, residency counters printed),
 //! and a fourth compares sequential vs parallel scatter
-//! (`search_threads`) at a single serve worker, where per-query
-//! latency is the whole story.
+//! (`search_threads`, now a persistent pool) at a single serve worker,
+//! where per-query latency is the whole story. A final *open-loop*
+//! sweep probes the monolithic index's closed-loop capacity, then
+//! offers 60% and 150% of it on a seeded Poisson schedule — the
+//! underloaded point shows queue delays near zero, the overloaded one
+//! trips the overload flag and shows the queueing tail the closed
+//! loop structurally cannot see.
 //!
 //! ```bash
 //! cargo bench --bench qps_search                 # standard scale
@@ -117,4 +122,45 @@ fn main() {
         }
     }
     std::fs::remove_dir_all(dir).ok();
+
+    // ---- open-loop arrival sweep over the monolithic index ----
+    // probe capacity closed-loop at ef=64, then offer fractions of it
+    // on a seeded Poisson schedule: under load the achieved rate
+    // tracks the offered rate and queue delays stay near zero; past
+    // capacity the overload flag trips and the queue-delay tail is the
+    // whole latency story
+    let stream = serve::sample_queries(&ds, 500.min(n), cfg.k, cfg.seed);
+    let probe_cfg = ServeConfig {
+        ef_sweep: vec![64],
+        n_queries: 1_000.min(n),
+        distinct_queries: 500.min(n),
+        ..cfg.clone()
+    };
+    let capacity = serve::run_point(&index, &stream, &probe_cfg, 64).qps;
+    eprintln!("closed-loop capacity at ef=64: {capacity:.0} qps");
+    for (tag, frac) in [("underload-0.6x", 0.6), ("overload-1.5x", 1.5)] {
+        let open_cfg = ServeConfig { arrival_rate: capacity * frac, ..probe_cfg.clone() };
+        let s = serve::run_point(&index, &stream, &open_cfg, 64);
+        println!(
+            "open-loop {tag}: offered {:.0} qps, achieved {:.0} qps, service p50 {:.3} ms, \
+             queue p50 {:.3} ms, queue p99 {:.3} ms, overload={}",
+            s.offered_rate, s.qps, s.p50_ms, s.queue_p50_ms, s.queue_p99_ms, s.overload
+        );
+    }
+    // the saved open-loop operating curve (underload, so every ef
+    // point is comparable to the closed-loop curve above)
+    let open_cfg = ServeConfig {
+        ef_sweep: vec![32, 128],
+        arrival_rate: capacity * 0.6,
+        n_queries: 1_000.min(n),
+        distinct_queries: 500.min(n),
+        ..cfg.clone()
+    };
+    let mut ds_open = ds.clone();
+    ds_open.name = format!("{} open-loop poisson", ds.name);
+    let report = serve::run_sweep_on(&index, &ds_open, &open_cfg).expect("open-loop sweep");
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
 }

@@ -19,24 +19,33 @@
 //!                   [--memory-budget MB] [--search-threads N] [--data data.dsb])
 //!                   [--k 10] [--ef 8,16,32,64,128]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
+//!                   [--arrival-rate R] [--arrival poisson|uniform]
 //!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
 //!                   [--max-hops 0] [--search-seed S] [--seed S]
 //! gnnd experiment   fig4|fig5|fig6|fig7|table2|all [--scale quick|standard|full]
 //! ```
 //!
 //! `search` answers ANN queries over a finished graph (single query or
-//! a batched `.dsb` query file); `serve-bench` replays a closed-loop
-//! query stream and prints the recall-vs-QPS table over an `ef` sweep.
-//! Both serve either a monolithic graph (`--data` + `--graph`) or an
-//! `ooc-build` shard directory (`--shards`, scatter-gather across the
-//! per-shard graphs; `--probe-shards` limits each query to the P
-//! nearest shards by centroid, clamped to the manifest shard count).
-//! Shard residency is managed: `--memory-budget <MB>` caps resident
-//! shard bytes (LRU eviction, 0 = unbounded) so shard directories
-//! larger than RAM stay servable, and `--search-threads <N>` fans the
-//! scatter phase across a worker pool. `serve-bench --shards` prints
-//! the residency counters (hits/misses/evictions/hit rate) and folds
-//! them into the directory's `stats.json`.
+//! a batched `.dsb` query file); `serve-bench` replays a query stream
+//! and prints the recall-vs-QPS table over an `ef` sweep — closed loop
+//! by default (workers issue as fast as they can, measuring capacity),
+//! or *open loop* with `--arrival-rate R`: queries arrive on a seeded
+//! deterministic schedule (`--arrival poisson|uniform`) at R qps
+//! whether or not a worker is free, so the rows additionally report
+//! the offered `rate`, queue-delay percentiles (`queue_p50_ms` /
+//! `queue_p99_ms`) and an `overload` flag when the achieved rate falls
+//! short of the offered one. Both serve either a monolithic graph
+//! (`--data` + `--graph`) or an `ooc-build` shard directory
+//! (`--shards`, scatter-gather across the per-shard graphs;
+//! `--probe-shards` limits each query to the P nearest shards by
+//! centroid, clamped to the manifest shard count). Shard residency is
+//! managed: `--memory-budget <MB>` caps resident shard bytes (LRU
+//! eviction, 0 = unbounded) so shard directories larger than RAM stay
+//! servable, and `--search-threads <N>` fans the scatter phase across
+//! a persistent worker pool spawned once at open (0 clamps to 1 with a
+//! warning). `serve-bench --shards` prints the residency counters
+//! (hits/misses/evictions/hit rate) and folds them — plus the sweep
+//! rows as a `"serve"` block — into the directory's `stats.json`.
 //!
 //! Flat `key=value` config files (see `configs/`) plus `--set` overrides
 //! configure every GnndParams knob; `--set engine=pjrt` switches the
@@ -52,9 +61,10 @@ use gnnd::dataset::{groundtruth, io, synth};
 use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ShardStore, STATS_FILE};
-use gnnd::metrics::recall_at;
-use gnnd::search::sharded::{clamp_probe, ShardedIndex};
+use gnnd::metrics::{recall_at, Report};
+use gnnd::search::sharded::{clamp_probe, clamp_search_threads, ShardedIndex};
 use gnnd::search::{batch::BatchExecutor, serve, AnnIndex, SearchIndex, SearchParams};
+use gnnd::util::json::Json;
 use gnnd::util::timer::Timer;
 
 struct Args {
@@ -274,6 +284,11 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                     })
                     .collect::<anyhow::Result<Vec<usize>>>()?,
             };
+            let arrival_rate: f64 = args.parse_or("arrival-rate", dcfg.arrival_rate)?;
+            anyhow::ensure!(
+                arrival_rate >= 0.0 && arrival_rate.is_finite(),
+                "--arrival-rate must be a finite rate >= 0 (0 = closed loop)"
+            );
             let cfg = serve::ServeConfig {
                 k: args.parse_or("k", dcfg.k)?,
                 ef_sweep,
@@ -282,6 +297,8 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 threads: args.parse_or("threads", dcfg.threads)?,
                 params: args.search_params()?,
                 seed: args.parse_or("seed", dcfg.seed)?,
+                arrival_rate,
+                arrival: args.parse_or("arrival", dcfg.arrival)?,
             };
             let t = Timer::start();
             let report = match args.get("shards") {
@@ -308,6 +325,17 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                         Ok(()) => println!("[residency folded into {dir}/{STATS_FILE}]"),
                         Err(e) => eprintln!(
                             "[serve] warning: residency not folded into stats.json: {e:#}"
+                        ),
+                    }
+                    // the sweep rows themselves (including the open-loop
+                    // rate/queue_p50_ms/queue_p99_ms/overload columns)
+                    // also land in stats.json, so one file carries the
+                    // build cost, cache behavior and operating curve
+                    let block = serve_block(&report, &cfg);
+                    match index.store().save_stats_with_block("serve", block) {
+                        Ok(()) => println!("[serve sweep folded into {dir}/{STATS_FILE}]"),
+                        Err(e) => eprintln!(
+                            "[serve] warning: sweep not folded into stats.json: {e:#}"
                         ),
                     }
                     report
@@ -348,11 +376,38 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The serve sweep as a JSON block for the shard directory's
+/// `stats.json`: one object per operating-point row carrying every
+/// column (closed loop: ef/qps/latency/recall; open loop additionally
+/// rate, queue_p50_ms, queue_p99_ms and the overload flag), plus the
+/// load model that produced them. A closed-loop run is recorded as
+/// `"arrival": "closed"` — the configured arrival process never ran,
+/// so writing it would misdescribe the sweep to downstream tooling.
+fn serve_block(report: &Report, cfg: &serve::ServeConfig) -> Json {
+    let rows: Vec<Json> = report
+        .rows
+        .iter()
+        .map(|r| {
+            let mut o = Json::obj().set("label", r.label.as_str());
+            for (name, v) in &r.cols {
+                o = o.set(name, *v);
+            }
+            o
+        })
+        .collect();
+    let arrival = if cfg.arrival_rate > 0.0 { cfg.arrival.to_string() } else { "closed".into() };
+    Json::obj()
+        .set("arrival", arrival)
+        .set("arrival_rate", cfg.arrival_rate)
+        .set("rows", Json::Arr(rows))
+}
+
 /// Open `--shards <dir>` with the serving knobs shared by `search` and
 /// `serve-bench`: `--probe-shards` (validated against the manifest
 /// shard count — phantom shards clamp with a warning), `--memory-budget
 /// <MB>` (resident-shard byte budget, 0 = unbounded) and
-/// `--search-threads <N>` (parallel scatter workers, <= 1 = sequential).
+/// `--search-threads <N>` (persistent scatter pool participants,
+/// 1 = sequential; 0 clamps to 1 with a warning).
 fn open_sharded_index(
     args: &Args,
     dir: &str,
@@ -366,6 +421,16 @@ fn open_sharded_index(
     anyhow::ensure!(budget_mb >= 0.0, "--memory-budget must be >= 0");
     let budget_bytes = (budget_mb * 1024.0 * 1024.0) as usize;
     let threads: usize = args.parse_or("search-threads", 1usize)?;
+    // 0 threads would mean "no scatter workers at all"; previously only
+    // scatter_threads()'s max(1) masked it at query time — clamp where
+    // the operator can see it, mirroring the --probe-shards clamp
+    let (threads, tclamped) = clamp_search_threads(threads);
+    if tclamped {
+        eprintln!(
+            "[search] warning: --search-threads 0 would leave no scatter workers; \
+             clamped to {threads} (sequential scatter)"
+        );
+    }
     let store = ShardStore::with_budget(dir, budget_bytes)?;
     let manifest = store.load_manifest()?;
     let probe: usize = args.parse_or("probe-shards", 0usize)?;

@@ -392,11 +392,18 @@ impl ShardStore {
 
     /// Fold serve-time residency counters into `stats.json` next to the
     /// build stats, so one file tracks both the build cost and the
-    /// serving cache behavior of the directory. Existing fields —
-    /// build stats and anything else — are preserved verbatim; only the
-    /// `"residency"` block is replaced. A `stats.json` that exists but
-    /// does not parse is an error (never silently overwritten).
+    /// serving cache behavior of the directory.
     pub fn save_stats_with_residency(&self, res: &ResidencyStats) -> crate::Result<()> {
+        self.save_stats_with_block("residency", res.to_json())
+    }
+
+    /// Fold a named JSON block into `stats.json` next to the build
+    /// stats (serve tooling folds a `"residency"` block, the open-loop
+    /// serve bench a `"serve"` block). Existing fields — build stats
+    /// and every other block — are preserved verbatim; only the named
+    /// block is replaced. A `stats.json` that exists but does not
+    /// parse is an error (never silently overwritten).
+    pub fn save_stats_with_block(&self, name: &str, block: Json) -> crate::Result<()> {
         let path = self.dir.join(STATS_FILE);
         let mut fields = if path.exists() {
             let text = std::fs::read_to_string(&path)?;
@@ -409,8 +416,8 @@ impl ShardStore {
         } else {
             Vec::new()
         };
-        fields.retain(|(k, _)| k != "residency");
-        fields.push(("residency".to_string(), res.to_json()));
+        fields.retain(|(k, _)| k != name);
+        fields.push((name.to_string(), block));
         std::fs::write(path, Json::Obj(fields).to_string())?;
         Ok(())
     }

@@ -21,11 +21,19 @@
 //!   ([`crate::merge::outofcore`]), resolving shards per query through
 //!   the `ShardStore` residency cache (lazy load + LRU eviction under
 //!   a byte budget) and optionally fanning the probed shards across a
-//!   scoped worker pool;
+//!   persistent worker pool;
+//! * [`pool`] — [`pool::ScatterPool`]: the long-lived scatter workers
+//!   behind `search_threads > 1` (spawned once at index open, parked
+//!   on a job queue between queries, per-worker warm scratch,
+//!   panic-safe shutdown on drop);
 //! * [`batch`] — multi-query execution fanned across worker threads
 //!   (crossbeam scoped threads, per-thread scratch);
-//! * [`serve`] — a closed-loop serving harness reporting QPS, latency
-//!   percentiles and recall@k over an `ef` sweep.
+//! * [`serve`] — a serving harness reporting QPS, latency percentiles
+//!   and recall@k over an `ef` sweep, in closed-loop (workers issue as
+//!   fast as they can) or open-loop mode (a seeded Poisson or
+//!   fixed-interval arrival schedule, recording queue delay and
+//!   service time separately — the regime where tail latency under
+//!   load actually lives).
 //!
 //! The free function [`beam_search`] is the greedy-search loop of the
 //! monolithic path: [`crate::baselines::ggnn`] delegates its hierarchy
@@ -48,6 +56,7 @@
 //! ```
 
 pub mod batch;
+pub mod pool;
 pub mod serve;
 pub mod sharded;
 

@@ -1,0 +1,326 @@
+//! Persistent scatter worker pool for [`super::sharded::ShardedIndex`].
+//!
+//! The parallel scatter phase used to spawn `search_threads - 1` scoped
+//! threads *per query* — a fixed cost every query paid regardless of
+//! how much per-shard work there was to overlap. GGNN (Groh et al.)
+//! keeps long-lived per-GPU worker state across queries for exactly
+//! this reason, and the source paper's merge design treats shard walks
+//! as independent units of schedulable work — the natural host for
+//! them is a long-lived pool, not per-query threads.
+//!
+//! [`ScatterPool`] is that pool: `N` workers spawned once when the
+//! index opens, each parked on a shared job queue with its own warm
+//! [`SearchScratch`] (so a worker's visited set / heaps / pin table
+//! keep their capacity across every query it ever serves). A query
+//! submits one [`ScatterJob`] — the query vector, the probed shard
+//! order, a shared work cursor and a result collector — wakes up to
+//! `min(workers, shards - 1)` workers, and *participates inline* on
+//! the calling thread, so a query never waits on a fully busy pool to
+//! make progress. Workers pull shards off the job's cursor until none
+//! remain, push their accumulated per-shard top-k lists, and go back
+//! to sleep; the dispatcher blocks until every *shard* of the work
+//! list has been searched — never on busy workers that have yet to
+//! pop an already-drained job copy (under concurrent queries a
+//! dispatcher that scattered its whole probe set inline returns
+//! immediately).
+//!
+//! The gather merge in `sharded.rs` sorts the union of per-shard
+//! lists, so collection order is irrelevant — pool-based scatter is
+//! **bit-identical** to the sequential path (enforced by the parity
+//! suite in `tests/sharded.rs`).
+//!
+//! Shutdown and panics are handled explicitly:
+//!
+//! * dropping the pool closes the queue, wakes every worker and joins
+//!   them — an index drop never leaks threads;
+//! * a worker panic inside a job (e.g. the store vanished mid-query,
+//!   which [`super::sharded`] deliberately panics on) is caught, the
+//!   job is marked poisoned so the dispatcher re-panics on its own
+//!   thread (matching the old scoped-thread behavior), and the worker
+//!   survives to serve later queries with a cleaned scratch.
+//!
+//! The job queue is a hand-rolled `Mutex<VecDeque>` + `Condvar` MPMC
+//! channel: the vendored dependency closure has no channel crate, and
+//! the queue operations are two comparisons and a pointer push — far
+//! off the hot path (one send per woken worker per query).
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::sharded::{ScatterOut, ShardCore};
+use super::SearchScratch;
+
+/// One query's scatter fan-out: everything a worker needs to pull
+/// probed shards off the shared cursor and report its slice. Owns the
+/// query vector (copied — `d` floats), so a job outlives any unwinding
+/// dispatcher without borrowing from the caller's stack.
+///
+/// Completion is counted in **finished shards**, not popped job
+/// copies: a busy pool can leave a job's queue copies unclaimed long
+/// after the dispatcher has drained the cursor inline, and the
+/// dispatcher must not wait on workers that have nothing left to
+/// contribute (a participant only counts shards it actually searched,
+/// and pushes its contribution *before* reporting them finished, so
+/// when the count reaches the work-list length every contribution is
+/// already visible).
+pub(crate) struct ScatterJob {
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: usize,
+    pub(crate) ef: usize,
+    pub(crate) exclude: u32,
+    /// Probed shards in routing order — the work list.
+    pub(crate) order: Vec<usize>,
+    /// Next index into `order` to be claimed.
+    cursor: AtomicUsize,
+    /// Per-participant (dist_evals, hops, shard top-k) contributions.
+    pub(crate) collected: Mutex<Vec<ScatterOut>>,
+    /// Shards searched to completion so far + the first participant
+    /// panic, if any.
+    state: Mutex<JobState>,
+    done: Condvar,
+}
+
+struct JobState {
+    finished_shards: usize,
+    /// Payload of the first participant panic — carried to the
+    /// dispatcher and re-raised there with `resume_unwind`, preserving
+    /// the original message the way the old scoped-scope `.unwrap()`
+    /// did.
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// Job-state lock that shrugs off poisoning: the state is two plain
+/// fields mutated atomically under the lock (no invariant can be torn
+/// mid-update), and a poisoned-lock unwrap here would cascade one
+/// query's panic into every pool worker that later touches the job.
+fn lock_state(job: &ScatterJob) -> std::sync::MutexGuard<'_, JobState> {
+    job.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl ScatterJob {
+    fn new(
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        order: Vec<usize>,
+        fan: usize,
+    ) -> Arc<Self> {
+        Arc::new(ScatterJob {
+            q: q.to_vec(),
+            k,
+            ef,
+            exclude,
+            cursor: AtomicUsize::new(0),
+            collected: Mutex::new(Vec::with_capacity(fan + 1)),
+            state: Mutex::new(JobState { finished_shards: 0, panic_payload: None }),
+            done: Condvar::new(),
+            order,
+        })
+    }
+
+    /// Claim the next unprocessed shard of the job (None = exhausted).
+    pub(crate) fn next_shard(&self) -> Option<usize> {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.order.get(i).copied()
+    }
+
+    /// Cheap pre-check for a popped job copy whose work list has
+    /// already been drained by the other participants — a busy worker
+    /// skips it without touching its scratch.
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.order.len()
+    }
+
+    /// A participant finished its slice: `shards_done` shards searched
+    /// (its contribution is already in `collected`), `panic` = the
+    /// payload it unwound with mid-walk, if any. Signals the
+    /// dispatcher when the job is complete (every shard searched) or
+    /// poisoned.
+    fn finish(&self, shards_done: usize, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = lock_state(self);
+        st.finished_shards += shards_done;
+        if st.panic_payload.is_none() {
+            st.panic_payload = panic;
+        }
+        let wake = st.panic_payload.is_some() || st.finished_shards >= self.order.len();
+        drop(st);
+        if wake {
+            self.done.notify_all();
+        }
+    }
+
+    /// Dispatcher side: block until every shard of the work list has
+    /// been searched (regardless of which participants the queue
+    /// happened to hand the job to), then re-raise any worker panic on
+    /// the calling thread with its original payload (the contract the
+    /// per-query scoped scope's `.unwrap()` used to provide). The
+    /// guard is released before unwinding so the job's state mutex is
+    /// never poisoned by the propagation itself.
+    fn wait(&self) {
+        let mut st = lock_state(self);
+        while st.panic_payload.is_none() && st.finished_shards < self.order.len() {
+            st = self
+                .done
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        if let Some(payload) = st.panic_payload.take() {
+            drop(st);
+            panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Minimal MPMC job channel: senders push + wake one sleeper; closing
+/// wakes everyone so workers drain the queue and exit.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Arc<ScatterJob>>,
+    shutdown: bool,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        JobQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Arc<ScatterJob>) {
+        self.state.lock().unwrap().jobs.push_back(job);
+        self.ready.notify_one();
+    }
+
+    /// Next job, blocking while the queue is open and empty; `None`
+    /// once the queue is closed and drained.
+    fn pop(&self) -> Option<Arc<ScatterJob>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.jobs.pop_front() {
+                return Some(job);
+            }
+            if s.shutdown {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+}
+
+/// The long-lived scatter worker pool owned by a
+/// [`super::sharded::ShardedIndex`]: spawned once at open, parked
+/// between queries, joined on drop.
+pub struct ScatterPool {
+    queue: Arc<JobQueue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ScatterPool {
+    /// Spawn `workers` pool threads over the shared index core. The
+    /// dispatching thread always participates inline, so a pool of
+    /// `N - 1` workers gives `N`-way scatter parallelism.
+    pub(crate) fn new(core: Arc<ShardCore>, workers: usize) -> Self {
+        let queue = Arc::new(JobQueue::new());
+        let handles = (0..workers)
+            .map(|w| {
+                let queue = Arc::clone(&queue);
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("gnnd-scatter-{w}"))
+                    .spawn(move || worker_loop(&core, &queue))
+                    .expect("spawn scatter pool worker")
+            })
+            .collect();
+        ScatterPool { queue, workers: handles }
+    }
+
+    /// Number of parked pool workers (excluding the inline dispatcher).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fan one query's probed shards across the pool and the calling
+    /// thread; blocks until the whole probe set is searched. Returns
+    /// every participant's (dist_evals, hops, shard top-k) slice — the
+    /// caller's gather sort makes collection order irrelevant.
+    pub(crate) fn scatter(
+        &self,
+        core: &ShardCore,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        order: Vec<usize>,
+    ) -> Vec<ScatterOut> {
+        // never wake more workers than there are shards beyond the one
+        // the dispatcher itself will take
+        let fan = self.workers.len().min(order.len().saturating_sub(1));
+        let job = ScatterJob::new(q, k, ef, exclude, order, fan);
+        for _ in 0..fan {
+            self.queue.push(Arc::clone(&job));
+        }
+        // inline participation with a pooled warm scratch; an inline
+        // panic propagates directly on this thread (the job Arc keeps
+        // the in-flight workers' view alive regardless)
+        let mut scratch = core.take_scratch();
+        let done = core.run_scatter_job(&job, &mut scratch);
+        core.put_scratch(scratch);
+        job.finish(done, None);
+        job.wait();
+        std::mem::take(&mut *job.collected.lock().unwrap())
+    }
+}
+
+impl Drop for ScatterPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            // worker panics inside jobs are already caught and reported
+            // through the job; a join error here means the thread died
+            // outside one — nothing to do mid-drop but not block
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one pool worker: park on the queue, run each job's slice
+/// with a warm thread-local scratch, survive job panics.
+fn worker_loop(core: &ShardCore, queue: &JobQueue) {
+    let mut scratch = SearchScratch::new();
+    while let Some(job) = queue.pop() {
+        if job.exhausted() {
+            // the dispatcher (or another worker) already drained this
+            // job's cursor — nothing to contribute
+            job.finish(0, None);
+            continue;
+        }
+        let res = panic::catch_unwind(AssertUnwindSafe(|| {
+            core.run_scatter_job(&job, &mut scratch)
+        }));
+        match res {
+            Ok(done) => job.finish(done, None),
+            Err(payload) => {
+                // an unwound walk may have left pins (or partial
+                // results) in the scratch: drop them so a poisoned
+                // query can never block eviction or leak candidates
+                // into the next one
+                ShardCore::clear_scratch_after_panic(&mut scratch);
+                job.finish(0, Some(payload));
+            }
+        }
+    }
+}

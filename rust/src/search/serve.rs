@@ -1,25 +1,45 @@
-//! Closed-loop serving harness: replay a query stream against any
-//! [`AnnIndex`] and measure what a serving deployment cares about —
-//! throughput (QPS), tail latency (p50/p95/p99) and quality (recall@k
-//! against exact ground truth) — across an `ef` sweep, emitting a
-//! [`Report`] of the recall-vs-QPS operating curve. The harness never
-//! sees the index layout, so the same sweep produces the
-//! monolithic-vs-sharded operating curves — including budget-
-//! constrained sharded indexes, whose residency knobs
-//! (`--memory-budget`, `--search-threads`) surface in the report's
-//! `index` metadata via [`AnnIndex::describe`].
+//! Serving harness: replay a query stream against any [`AnnIndex`] and
+//! measure what a serving deployment cares about — throughput (QPS),
+//! tail latency (p50/p95/p99) and quality (recall@k against exact
+//! ground truth) — across an `ef` sweep, emitting a [`Report`] of the
+//! recall-vs-QPS operating curve. The harness never sees the index
+//! layout, so the same sweep produces the monolithic-vs-sharded
+//! operating curves — including budget-constrained sharded indexes,
+//! whose residency knobs (`--memory-budget`, `--search-threads`)
+//! surface in the report's `index` metadata via [`AnnIndex::describe`].
+//!
+//! Two load models for the timing pass, selected by
+//! [`ServeConfig::arrival_rate`]:
+//!
+//! * **closed loop** (`arrival_rate = 0`): `threads` workers pull query
+//!   indices from a shared cursor and issue back to back — measures the
+//!   system's *capacity* (max sustainable QPS), but can never show
+//!   queueing delay because the next query only arrives when a worker
+//!   is free;
+//! * **open loop** (`arrival_rate > 0` qps): queries *arrive* on a
+//!   seeded deterministic schedule — Poisson (exponential gaps, the
+//!   memoryless arrivals of real user traffic) or fixed-interval
+//!   ([`Arrival`]) — independent of completions. Each query's **queue
+//!   delay** (arrival → a worker picks it up) and **service time** (the
+//!   search itself) are recorded separately; when the offered rate
+//!   exceeds capacity the queue grows without bound and the row's
+//!   `overload` flag trips. This is the regime a "millions of users"
+//!   deployment lives in: tail latency is dominated by queueing, which
+//!   the closed-loop numbers structurally cannot see.
 //!
 //! Two passes per operating point:
-//! 1. a *quality* pass through [`BatchExecutor`] computing recall@k;
-//! 2. a *timing* pass where `threads` closed-loop workers pull query
-//!    indices from a shared cursor (each with its own warm scratch)
-//!    and record per-query wall latencies.
+//! 1. a *quality* pass through [`BatchExecutor`] computing recall@k
+//!    (identical in both load models — recall depends on the queries,
+//!    not their arrival times);
+//! 2. a *timing* pass under the selected load model recording
+//!    per-query wall latencies (and, open loop, queue delays).
 //!
 //! Operating points with `ef < k` are clamped up to `k` (with a printed
 //! warning): beam search caps the result pool at `max(ef, k)` anyway,
 //! so a sub-`k` point would silently run — and be reported — at a
 //! different `ef` than its label claims.
 
+use std::str::FromStr;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -31,6 +51,43 @@ use crate::util::timer::Timer;
 use super::batch::BatchExecutor;
 use super::{AnnIndex, SearchParams};
 
+/// Achieved-vs-offered slack before an open-loop point is flagged
+/// overloaded: finite runs end a hair above or below the offered rate
+/// (the wall clock includes the last queries' drain), so a strict
+/// `achieved < offered` would flap on healthy points.
+const OVERLOAD_MARGIN: f64 = 0.95;
+
+/// Arrival process of the open-loop load generator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// Exponential inter-arrival gaps (memoryless, the standard model
+    /// of independent user traffic) from a seeded [`Rng`].
+    Poisson,
+    /// Fixed-interval arrivals (`1/rate` apart) — the zero-variance
+    /// baseline that isolates service-time jitter from arrival burst.
+    Uniform,
+}
+
+impl std::fmt::Display for Arrival {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Arrival::Poisson => "poisson",
+            Arrival::Uniform => "uniform",
+        })
+    }
+}
+
+impl FromStr for Arrival {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "poisson" => Ok(Arrival::Poisson),
+            "uniform" => Ok(Arrival::Uniform),
+            _ => anyhow::bail!("unknown arrival process {s:?} (expected poisson|uniform)"),
+        }
+    }
+}
+
 /// Configuration of a serving benchmark.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -39,7 +96,7 @@ pub struct ServeConfig {
     /// `ef` operating points, one report row each (points below `k`
     /// clamp to `k`, see [`clamp_ef`]).
     pub ef_sweep: Vec<usize>,
-    /// Total queries replayed per operating point (closed loop).
+    /// Total queries replayed per operating point.
     pub n_queries: usize,
     /// Distinct query vectors sampled from the dataset (ground truth is
     /// computed for exactly these, so keep it moderate).
@@ -48,8 +105,13 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Base search parameters; `ef` is overridden by the sweep.
     pub params: SearchParams,
-    /// Query-sampling seed.
+    /// Query-sampling (and arrival-schedule) seed.
     pub seed: u64,
+    /// Offered arrival rate in queries/sec; 0 = closed loop (workers
+    /// issue as fast as they can).
+    pub arrival_rate: f64,
+    /// Arrival process of the open-loop schedule (ignored closed loop).
+    pub arrival: Arrival,
 }
 
 impl Default for ServeConfig {
@@ -62,20 +124,35 @@ impl Default for ServeConfig {
             threads: 0,
             params: SearchParams::default(),
             seed: 0x5E27E,
+            arrival_rate: 0.0,
+            arrival: Arrival::Poisson,
         }
     }
 }
 
 /// Measured behaviour of one operating point. `ef` is the *effective*
-/// width the point ran at (requested, clamped up to `k`).
+/// width the point ran at (requested, clamped up to `k`). Latency
+/// percentiles (`p50_ms`..) are **service time** (the search itself);
+/// open-loop points additionally report **queue delay** percentiles
+/// (arrival → service start) and whether the point was overloaded.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
     pub ef: usize,
+    /// Achieved rate (queries / wall seconds of the timing pass).
     pub qps: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub recall: f64,
+    /// Offered arrival rate of the point (0 = closed loop).
+    pub offered_rate: f64,
+    /// Queue-delay percentiles (0 closed loop — a closed loop has no
+    /// queue by construction).
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    /// Achieved rate fell short of the offered rate: the index cannot
+    /// keep up and the queue grows without bound.
+    pub overload: bool,
 }
 
 /// The sampled query stream: flat query matrix + the object ids the
@@ -147,12 +224,45 @@ fn clamp_ef_warn(ef: usize, k: usize) -> usize {
     eff
 }
 
+/// Linear-interpolated percentile of ascending seconds, in ms. The
+/// previous nearest-rank rounding collapsed high percentiles onto the
+/// max for small samples (p99 of 50 latencies *was* the max, silently),
+/// which made tiny sweeps look tail-heavy; interpolation gives the
+/// standard exclusive-of-nothing estimate for every n >= 1 and is
+/// monotone in `p`, so `p99 >= p50` always holds.
 fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
     if sorted_secs.is_empty() {
         return 0.0;
     }
-    let idx = ((p / 100.0) * (sorted_secs.len() - 1) as f64).round() as usize;
-    sorted_secs[idx.min(sorted_secs.len() - 1)] * 1e3
+    let pos = (p / 100.0).clamp(0.0, 1.0) * (sorted_secs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    (sorted_secs[lo] + (sorted_secs[hi] - sorted_secs[lo]) * frac) * 1e3
+}
+
+/// Deterministic open-loop arrival schedule: seconds-from-start of each
+/// of `n` arrivals at offered rate `rate` qps. The first arrival is at
+/// t = 0; Poisson gaps are exponential draws from a seeded [`Rng`], so
+/// the same (n, rate, seed) triple replays the exact same schedule —
+/// open-loop runs are as reproducible as everything else in the crate.
+pub fn arrival_schedule(n: usize, rate: f64, arrival: Arrival, seed: u64) -> Vec<f64> {
+    assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be positive, got {rate}");
+    match arrival {
+        Arrival::Uniform => (0..n).map(|i| i as f64 / rate).collect(),
+        Arrival::Poisson => {
+            let mut rng = Rng::new(seed ^ 0xA221_7A1E);
+            let mut t = 0.0f64;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(t);
+                // inverse-CDF exponential: u in [0,1) keeps 1-u in
+                // (0,1], so the gap is finite and non-negative
+                t += -(1.0 - rng.f64()).ln() / rate;
+            }
+            out
+        }
+    }
 }
 
 /// Measure one operating point (`ef`) of the sweep against any index.
@@ -175,28 +285,66 @@ pub fn run_point(
     );
     let recall = recall_of(&results, &stream.truth, cfg.k);
 
-    // ---- closed-loop timing pass ----
+    // ---- timing pass (closed or open loop) ----
     let nq = stream.qids.len();
     let total = cfg.n_queries.max(nq);
+    // open loop: arrival offsets (secs from pass start) per query index
+    let sched: Option<Vec<f64>> = if cfg.arrival_rate > 0.0 {
+        Some(arrival_schedule(total, cfg.arrival_rate, cfg.arrival, cfg.seed))
+    } else {
+        None
+    };
     let cursor = AtomicUsize::new(0);
     let lat = Mutex::new(Vec::with_capacity(total));
+    let qdelay = Mutex::new(Vec::with_capacity(if sched.is_some() { total } else { 0 }));
     let d = stream.d;
     let k = cfg.k;
     let qbuf = stream.qbuf.as_slice();
     let exclude_ref = exclude.as_slice();
+    let sched_ref = sched.as_deref();
     let wall = Timer::start();
     crossbeam_utils::thread::scope(|s| {
         for _ in 0..threads {
             let cursor = &cursor;
             let lat = &lat;
+            let qdelay = &qdelay;
+            let wall = &wall;
             s.spawn(move |_| {
                 let mut scratch = index.make_scratch();
                 let mut out = Vec::with_capacity(k);
                 let mut local = Vec::new();
+                let mut local_q = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= total {
                         break;
+                    }
+                    if let Some(sched) = sched_ref {
+                        // open loop: the query *arrives* at sched[i]
+                        // whether or not anyone is free to serve it. If
+                        // this worker got here late, the lateness IS the
+                        // queue delay — the number the closed loop can
+                        // never show. If it got here early it parks
+                        // until the arrival and the delay is zero by
+                        // definition: the delay is sampled at *claim*
+                        // time, so OS sleep overshoot (a load-generator
+                        // artifact) never masquerades as queueing.
+                        let due = sched[i];
+                        let claimed = wall.secs();
+                        if claimed < due {
+                            local_q.push(0.0);
+                            loop {
+                                let now = wall.secs();
+                                if now >= due {
+                                    break;
+                                }
+                                std::thread::sleep(std::time::Duration::from_secs_f64(
+                                    due - now,
+                                ));
+                            }
+                        } else {
+                            local_q.push(claimed - due);
+                        }
                     }
                     let qi = i % nq;
                     let t = Timer::start();
@@ -212,6 +360,9 @@ pub fn run_point(
                     std::hint::black_box(&out);
                 }
                 lat.lock().unwrap().extend_from_slice(&local);
+                if !local_q.is_empty() {
+                    qdelay.lock().unwrap().extend_from_slice(&local_q);
+                }
             });
         }
     })
@@ -219,14 +370,22 @@ pub fn run_point(
     let wall_secs = wall.secs();
     let mut lats = lat.into_inner().unwrap();
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut qdelays = qdelay.into_inner().unwrap();
+    qdelays.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
+    let qps = total as f64 / wall_secs.max(1e-9);
+    let offered = cfg.arrival_rate;
     ServeStats {
         ef,
-        qps: total as f64 / wall_secs.max(1e-9),
+        qps,
         p50_ms: percentile_ms(&lats, 50.0),
         p95_ms: percentile_ms(&lats, 95.0),
         p99_ms: percentile_ms(&lats, 99.0),
         recall,
+        offered_rate: offered,
+        queue_p50_ms: percentile_ms(&qdelays, 50.0),
+        queue_p99_ms: percentile_ms(&qdelays, 99.0),
+        overload: offered > 0.0 && qps < OVERLOAD_MARGIN * offered,
     }
 }
 
@@ -234,6 +393,9 @@ pub fn run_point(
 /// returning the recall-vs-QPS table. `ds` supplies the query stream
 /// (sampled objects + exact ground truth) and must be the corpus the
 /// index serves — for a sharded index, the un-split original dataset.
+/// With `cfg.arrival_rate > 0` every point runs open loop and the rows
+/// gain `rate` (offered), `queue_p50_ms`/`queue_p99_ms` and an
+/// `overload` flag (1.0 = the point could not keep up).
 pub fn run_sweep_on(
     index: &dyn AnnIndex,
     ds: &Dataset,
@@ -241,6 +403,10 @@ pub fn run_sweep_on(
 ) -> crate::Result<Report> {
     anyhow::ensure!(!cfg.ef_sweep.is_empty(), "ef_sweep is empty");
     anyhow::ensure!(cfg.k > 0, "k must be > 0");
+    anyhow::ensure!(
+        cfg.arrival_rate >= 0.0 && cfg.arrival_rate.is_finite(),
+        "arrival rate must be finite and >= 0"
+    );
     anyhow::ensure!(
         index.len() == ds.len(),
         "index covers {} objects but query corpus has {}",
@@ -269,6 +435,14 @@ pub fn run_sweep_on(
         .meta("threads", threads)
         .meta("entry", format!("{}x{}", cfg.params.n_entry, cfg.params.entry))
         .meta("queries", format!("{} distinct, {} replayed", stream.qids.len(), cfg.n_queries));
+    if cfg.arrival_rate > 0.0 {
+        report = report.meta(
+            "arrival",
+            format!("{} open loop @ {:.1} qps offered", cfg.arrival, cfg.arrival_rate),
+        );
+    } else {
+        report = report.meta("arrival", "closed loop");
+    }
     let recall_col = format!("recall@{}", cfg.k);
     // clamp sub-k points up front and dedupe: ef=2,4,8 at k=10 are all
     // the same operating point — measure (and report) it once
@@ -281,15 +455,21 @@ pub fn run_sweep_on(
     }
     for &ef in &sweep {
         let s = run_point(index, &stream, cfg, ef);
-        report.push(
-            Row::new(format!("ef={}", s.ef))
-                .col("ef", s.ef as f64)
-                .col("qps", s.qps)
-                .col("p50_ms", s.p50_ms)
-                .col("p95_ms", s.p95_ms)
-                .col("p99_ms", s.p99_ms)
-                .col(&recall_col, s.recall),
-        );
+        let mut row = Row::new(format!("ef={}", s.ef))
+            .col("ef", s.ef as f64)
+            .col("qps", s.qps)
+            .col("p50_ms", s.p50_ms)
+            .col("p95_ms", s.p95_ms)
+            .col("p99_ms", s.p99_ms)
+            .col(&recall_col, s.recall);
+        if cfg.arrival_rate > 0.0 {
+            row = row
+                .col("rate", s.offered_rate)
+                .col("queue_p50_ms", s.queue_p50_ms)
+                .col("queue_p99_ms", s.queue_p99_ms)
+                .col("overload", if s.overload { 1.0 } else { 0.0 });
+        }
+        report.push(row);
     }
     Ok(report)
 }
@@ -371,6 +551,30 @@ mod tests {
     }
 
     #[test]
+    fn percentile_interpolates_instead_of_collapsing_onto_max() {
+        // n = 1: every percentile is the single sample
+        assert!((percentile_ms(&[0.010], 50.0) - 10.0).abs() < 1e-9);
+        assert!((percentile_ms(&[0.010], 99.0) - 10.0).abs() < 1e-9);
+        // n = 2: p50 is the midpoint, p99 interpolates toward (but does
+        // not reach) the max — the nearest-rank bug this replaces
+        // reported the max for both
+        let two = [0.010, 0.020];
+        assert!((percentile_ms(&two, 0.0) - 10.0).abs() < 1e-9);
+        assert!((percentile_ms(&two, 50.0) - 15.0).abs() < 1e-9);
+        assert!((percentile_ms(&two, 99.0) - 19.9).abs() < 1e-9);
+        assert!((percentile_ms(&two, 100.0) - 20.0).abs() < 1e-9);
+        // n = 100: 1..=100 ms ascending
+        let hundred: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        assert!((percentile_ms(&hundred, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile_ms(&hundred, 95.0) - 95.05).abs() < 1e-9);
+        assert!((percentile_ms(&hundred, 99.0) - 99.01).abs() < 1e-9);
+        assert!((percentile_ms(&hundred, 100.0) - 100.0).abs() < 1e-9);
+        // empty stays 0 and p is monotone
+        assert_eq!(percentile_ms(&[], 99.0), 0.0);
+        assert!(percentile_ms(&hundred, 99.0) >= percentile_ms(&hundred, 50.0));
+    }
+
+    #[test]
     fn ef_below_k_is_clamped() {
         assert_eq!(clamp_ef(4, 10), (10, true));
         assert_eq!(clamp_ef(10, 10), (10, false));
@@ -387,6 +591,10 @@ mod tests {
         let s = run_point(&flat, &stream, &cfg, 4);
         assert_eq!(s.ef, 10, "ef < k must run (and report) at ef = k");
         assert!(s.recall > 0.999, "exact scan recall {}", s.recall);
+        // closed loop: no offered rate, no queue, never overloaded
+        assert_eq!(s.offered_rate, 0.0);
+        assert_eq!(s.queue_p50_ms, 0.0);
+        assert!(!s.overload);
     }
 
     #[test]
@@ -414,6 +622,34 @@ mod tests {
             assert!(get("qps") > 0.0);
             assert!(get("p99_ms") >= get("p50_ms"));
             assert!((0.0..=1.0).contains(&get("recall@10")));
+            // closed-loop rows carry no open-loop columns
+            assert!(row.cols.iter().all(|(n, _)| n != "rate" && n != "overload"));
         }
+    }
+
+    #[test]
+    fn open_loop_sweep_rows_carry_rate_queue_and_overload_columns() {
+        let ds = synth::uniform(60, 4, 9);
+        let corpus = ds.clone();
+        let flat = Flat { ds };
+        let cfg = ServeConfig {
+            ef_sweep: vec![16],
+            n_queries: 30,
+            distinct_queries: 30,
+            threads: 2,
+            // far beyond a flat scan's capacity: the point must trip
+            // the overload flag (and still finish — open loop never
+            // drops queries, it queues them)
+            arrival_rate: 1e9,
+            ..Default::default()
+        };
+        let report = run_sweep_on(&flat, &corpus, &cfg).unwrap();
+        assert_eq!(report.rows.len(), 1);
+        let row = &report.rows[0];
+        let get = |name: &str| row.cols.iter().find(|(n, _)| n == name).unwrap().1;
+        assert_eq!(get("rate"), 1e9);
+        assert!(get("queue_p99_ms") >= get("queue_p50_ms"));
+        assert_eq!(get("overload"), 1.0, "1e9 qps offered must overload");
+        assert!(get("qps") < 1e9);
     }
 }

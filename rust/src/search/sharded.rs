@@ -4,8 +4,8 @@
 //! `ooc-build` leaves behind a [`ShardStore`] directory: one
 //! `shard_<i>.dsb` / `graph_<i>.knng` pair per shard (neighbor ids in
 //! the **global** id space, GGM-merged across all shard pairs) plus a
-//! [`ShardManifest`]. [`ShardedIndex`] opens that directory and serves
-//! it:
+//! [`ShardManifest`](crate::merge::outofcore::ShardManifest).
+//! [`ShardedIndex`] opens that directory and serves it:
 //!
 //! 1. **route** — rank shards by query-to-centroid distance and keep the
 //!    best `probe_shards` (0 = probe everything), so hot paths skip
@@ -37,15 +37,17 @@
 //! disagree).
 //!
 //! With `search_threads > 1` the scatter phase fans the probed shards
-//! across a scoped worker pool (per-worker [`SearchScratch`] from a
-//! reuse pool): a worker faulting a cold shard in from disk overlaps
-//! with the other workers' warm-shard compute. The gather sort is
-//! order-independent, so parallel scatter is bit-identical to
-//! sequential.
+//! across a **persistent** [`ScatterPool`]: `search_threads - 1`
+//! workers spawned once at open (each with its own warm
+//! [`SearchScratch`]), parked on a job queue between queries, with the
+//! querying thread always participating inline — a query pays channel
+//! wakeups, never thread spawns. A worker faulting a cold shard in
+//! from disk overlaps with the other workers' warm-shard compute. The
+//! gather sort is order-independent, so pooled scatter is bit-identical
+//! to sequential (enforced by the parity suite in `tests/sharded.rs`).
 
 use std::cmp::Reverse;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::Metric;
@@ -54,10 +56,11 @@ use crate::dataset::Dataset;
 use crate::graph::KnnGraph;
 use crate::merge::outofcore::{shard_centroid, ResidencyStats, ResidentShard, ShardStore};
 
+use super::pool::{ScatterJob, ScatterPool};
 use super::{select_entries, AnnIndex, SearchParams, SearchScratch};
 
 /// Per-worker scatter output: (dist_evals, hops, shard top-k lists).
-type ScatterOut = (usize, usize, Vec<(F32, u32)>);
+pub(crate) type ScatterOut = (usize, usize, Vec<(F32, u32)>);
 
 /// Serving metadata of one shard — everything a query needs *before*
 /// touching the shard's data: geometry, fixed entry points (global
@@ -102,13 +105,31 @@ pub fn clamp_probe(probe: usize, shards: usize) -> (usize, bool) {
     }
 }
 
-/// An [`AnnIndex`] over the shard files of an out-of-core build, with
-/// managed shard residency and an optional parallel scatter phase.
-pub struct ShardedIndex {
+/// `--search-threads 0` would mean "no scatter workers at all" — it was
+/// only masked by [`ShardedIndex::scatter_threads`]'s `max(1)` at query
+/// time, so an operator asking for zero silently got one. The CLI
+/// clamps it to 1 (sequential scatter) with a warning at parse time,
+/// mirroring [`clamp_probe`]; the query-time `max(1)` stays as a
+/// backstop for library callers. Returns the effective thread count and
+/// whether clamping happened.
+pub fn clamp_search_threads(threads: usize) -> (usize, bool) {
+    if threads == 0 {
+        (1, true)
+    } else {
+        (threads, false)
+    }
+}
+
+/// Everything a scatter participant — the querying thread or a
+/// [`ScatterPool`] worker — needs to walk shards: the residency-managed
+/// store, per-shard serving metadata, and the scratch reuse pool.
+/// Shared as an `Arc` between the [`ShardedIndex`] front end and the
+/// pool's long-lived worker threads.
+pub(crate) struct ShardCore {
     store: ShardStore,
     meta: Vec<ShardMeta>,
     /// Unbounded-budget fast path: with no byte budget nothing can
-    /// ever be evicted, so the index keeps one permanent pin per shard
+    /// ever be evicted, so the core keeps one permanent pin per shard
     /// and queries resolve handles with an `Arc` clone instead of
     /// taking the cache mutex. Empty when a budget is set. Consequence:
     /// an unbounded index serves a *snapshot taken at open* — saving
@@ -122,172 +143,12 @@ pub struct ShardedIndex {
     d: usize,
     metric: Metric,
     params: SearchParams,
-    /// Shards probed per query (0 = all).
-    probe_shards: usize,
-    /// Scatter workers per query (<= 1 = sequential scatter).
-    search_threads: usize,
-    /// Warm per-worker scratches reused across queries.
+    /// Warm scratches for inline scatter dispatch, reused across
+    /// queries (pool workers own their scratch thread-locally instead).
     scratch_pool: Mutex<Vec<SearchScratch>>,
 }
 
-impl ShardedIndex {
-    /// Open an `ooc-build` output directory (manifest + shard files)
-    /// with an unbounded residency budget and sequential scatter — the
-    /// pre-residency behavior.
-    pub fn open(
-        dir: impl AsRef<Path>,
-        params: SearchParams,
-        probe_shards: usize,
-    ) -> crate::Result<Self> {
-        Self::open_with(dir, params, probe_shards, 0, 1)
-    }
-
-    /// Open with the serving knobs: `memory_budget_bytes` caps resident
-    /// shard bytes (0 = unbounded) and `search_threads` sizes the
-    /// per-query scatter pool (<= 1 = sequential).
-    pub fn open_with(
-        dir: impl AsRef<Path>,
-        params: SearchParams,
-        probe_shards: usize,
-        memory_budget_bytes: usize,
-        search_threads: usize,
-    ) -> crate::Result<Self> {
-        let store = ShardStore::with_budget(dir, memory_budget_bytes)?;
-        Self::from_store(store, params, probe_shards, search_threads)
-    }
-
-    /// Build over an existing store (takes ownership — the index and
-    /// the residency cache live and die together). Opening streams
-    /// every shard through the cache exactly once for validation and
-    /// entry selection, then sheds back down to the budget.
-    pub fn from_store(
-        store: ShardStore,
-        params: SearchParams,
-        probe_shards: usize,
-        search_threads: usize,
-    ) -> crate::Result<Self> {
-        params.validate()?;
-        let manifest = store.load_manifest()?;
-        anyhow::ensure!(manifest.shards >= 1, "manifest has no shards");
-        let mut meta = Vec::with_capacity(manifest.shards);
-        let mut offsets = Vec::with_capacity(manifest.shards);
-        let mut pinned_all = Vec::new();
-        let mut expect = 0usize;
-        for s in 0..manifest.shards {
-            let handle = store.get_shard(s)?;
-            let (ds, graph) = (&handle.ds, &handle.graph);
-            anyhow::ensure!(
-                graph.n() == ds.len(),
-                "shard {s}: graph covers {} objects but shard has {}",
-                graph.n(),
-                ds.len()
-            );
-            anyhow::ensure!(
-                ds.d == manifest.d,
-                "shard {s}: dim {} != manifest dim {}",
-                ds.d,
-                manifest.d
-            );
-            let offset = manifest.offsets[s];
-            anyhow::ensure!(
-                offset == expect,
-                "shard {s}: manifest offset {offset} not contiguous (expected {expect})"
-            );
-            expect += ds.len();
-            // the shards' global id space must be closed over the
-            // manifest total — corrupt graphs fail here, not mid-query
-            check_global_ids(graph, offset, manifest.total)
-                .map_err(|e| e.context(format!("shard {s} graph")))?;
-            // per-shard entry selection (shard-local ids -> global);
-            // decorrelate the per-shard RNG streams with the shard id
-            let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            let sp = params.clone().with_seed(params.seed ^ salt);
-            let mut entries = select_entries(ds, graph, &sp);
-            for e in entries.iter_mut() {
-                *e += offset as u32;
-            }
-            let centroid = match manifest.centroids.get(s) {
-                Some(c) if !c.is_empty() => c.clone(),
-                _ => shard_centroid(ds),
-            };
-            offsets.push(offset);
-            meta.push(ShardMeta { offset, len: ds.len(), entries, centroid });
-            if store.budget_bytes() == 0 {
-                // unbounded: nothing will ever be evicted, so pin every
-                // shard permanently and skip the cache mutex per query
-                pinned_all.push(handle);
-            }
-        }
-        anyhow::ensure!(
-            expect == manifest.total,
-            "manifest total {} != sum of shard sizes {expect}",
-            manifest.total
-        );
-        // the validation sweep pinned shards one at a time; shed the
-        // cache back down to the budget before serving starts
-        store.evict_to_budget();
-        Ok(ShardedIndex {
-            store,
-            meta,
-            pinned_all,
-            offsets,
-            total: manifest.total,
-            d: manifest.d,
-            metric: manifest.metric,
-            params,
-            probe_shards,
-            search_threads,
-            scratch_pool: Mutex::new(Vec::new()),
-        })
-    }
-
-    /// Number of shards in the store.
-    pub fn shards(&self) -> usize {
-        self.meta.len()
-    }
-
-    /// Effective shards probed per query.
-    pub fn probe(&self) -> usize {
-        if self.probe_shards == 0 {
-            self.meta.len()
-        } else {
-            self.probe_shards.min(self.meta.len())
-        }
-    }
-
-    /// Effective scatter workers per query.
-    pub fn scatter_threads(&self) -> usize {
-        self.search_threads.max(1).min(self.probe())
-    }
-
-    pub fn params(&self) -> &SearchParams {
-        &self.params
-    }
-
-    /// The underlying residency-managed store.
-    pub fn store(&self) -> &ShardStore {
-        &self.store
-    }
-
-    /// Snapshot of the residency cache counters.
-    pub fn residency(&self) -> ResidencyStats {
-        self.store.residency()
-    }
-
-    /// The full corpus re-assembled as one in-memory dataset (bench /
-    /// ground-truth convenience; true deployments keep shards apart).
-    /// Streams shard by shard through the cache: peak extra memory is
-    /// one shard, not a second copy of the whole corpus.
-    pub fn concat_dataset(&self) -> crate::Result<Dataset> {
-        let mut data = Vec::with_capacity(self.total * self.d);
-        for s in 0..self.meta.len() {
-            let h = self.store.get_shard(s)?;
-            data.extend_from_slice(h.ds.raw());
-        }
-        self.store.evict_to_budget();
-        Ok(Dataset::new("sharded", self.d, self.metric, data))
-    }
-
+impl ShardCore {
     /// Owning shard of a global id.
     #[inline]
     fn owner(&self, gid: u32) -> usize {
@@ -322,6 +183,15 @@ impl ShardedIndex {
         for p in scratch.shard_pins.iter_mut() {
             *p = None;
         }
+    }
+
+    /// Restore a pool worker's scratch after a job panicked out of a
+    /// walk: drop any pins the unwound query still holds and discard
+    /// its partial candidates, so a poisoned query can never block
+    /// eviction or leak results into the next one.
+    pub(crate) fn clear_scratch_after_panic(scratch: &mut SearchScratch) {
+        Self::release_pins(scratch);
+        scratch.shard_topk.clear();
     }
 
     /// The scatter side: best-first search restricted to shard `s`,
@@ -436,7 +306,7 @@ impl ShardedIndex {
 
     /// A warm scratch from the reuse pool (or a fresh one), reset for a
     /// new scatter task.
-    fn take_scratch(&self) -> SearchScratch {
+    pub(crate) fn take_scratch(&self) -> SearchScratch {
         let mut s = self.scratch_pool.lock().unwrap().pop().unwrap_or_default();
         s.shard_topk.clear();
         s.dist_evals = 0;
@@ -444,42 +314,226 @@ impl ShardedIndex {
         s
     }
 
-    fn put_scratch(&self, s: SearchScratch) {
+    pub(crate) fn put_scratch(&self, s: SearchScratch) {
         self.scratch_pool.lock().unwrap().push(s);
     }
 
-    /// One scatter worker: pull probed shards off the shared cursor
-    /// until none remain, then hand the accumulated per-shard top-k
-    /// (plus eval/hop counts) to `collected`. Runs on `workers - 1`
-    /// scoped threads *and* inline on the calling thread, so a query
-    /// never pays a spawn it does not use.
-    #[allow(clippy::too_many_arguments)]
-    fn scatter_worker(
-        &self,
-        q: &[f32],
-        k: usize,
-        ef: usize,
-        exclude: u32,
-        order: &[usize],
-        cursor: &AtomicUsize,
-        collected: &Mutex<Vec<ScatterOut>>,
-    ) {
-        let mut local = self.take_scratch();
-        self.begin_pins(&mut local);
-        for &s in order {
-            local.shard_probed[s] = true;
+    /// One scatter participant's slice of a job: pull probed shards off
+    /// the job's shared cursor until none remain, then hand the
+    /// accumulated per-shard top-k (plus eval/hop counts) to the job's
+    /// collector. Runs on parked [`ScatterPool`] workers *and* inline
+    /// on the dispatching thread. Returns the number of shards this
+    /// participant searched — the unit the job's completion is counted
+    /// in; the contribution is pushed *before* the caller reports the
+    /// count, and a participant that claimed nothing (its job copy was
+    /// popped after the cursor ran dry) contributes nothing at all.
+    pub(crate) fn run_scatter_job(&self, job: &ScatterJob, scratch: &mut SearchScratch) -> usize {
+        scratch.shard_topk.clear();
+        scratch.dist_evals = 0;
+        scratch.hops = 0;
+        self.begin_pins(scratch);
+        for &s in &job.order {
+            scratch.shard_probed[s] = true;
         }
-        loop {
-            let i = cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= order.len() {
-                break;
+        let mut done = 0usize;
+        while let Some(s) = job.next_shard() {
+            self.search_shard(s, &job.q, job.k, job.ef, job.exclude, scratch);
+            done += 1;
+        }
+        Self::release_pins(scratch);
+        if done > 0 {
+            let topk = std::mem::take(&mut scratch.shard_topk);
+            job.collected.lock().unwrap().push((scratch.dist_evals, scratch.hops, topk));
+        }
+        done
+    }
+}
+
+/// An [`AnnIndex`] over the shard files of an out-of-core build, with
+/// managed shard residency and an optional persistent scatter pool.
+pub struct ShardedIndex {
+    core: Arc<ShardCore>,
+    /// Long-lived scatter workers (`search_threads - 1` of them),
+    /// spawned once at open; `None` when scatter is sequential.
+    pool: Option<ScatterPool>,
+    /// Shards probed per query (0 = all).
+    probe_shards: usize,
+    /// Scatter participants per query (<= 1 = sequential scatter).
+    search_threads: usize,
+}
+
+impl ShardedIndex {
+    /// Open an `ooc-build` output directory (manifest + shard files)
+    /// with an unbounded residency budget and sequential scatter — the
+    /// pre-residency behavior.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        params: SearchParams,
+        probe_shards: usize,
+    ) -> crate::Result<Self> {
+        Self::open_with(dir, params, probe_shards, 0, 1)
+    }
+
+    /// Open with the serving knobs: `memory_budget_bytes` caps resident
+    /// shard bytes (0 = unbounded) and `search_threads` sizes the
+    /// persistent scatter pool (<= 1 = sequential).
+    pub fn open_with(
+        dir: impl AsRef<Path>,
+        params: SearchParams,
+        probe_shards: usize,
+        memory_budget_bytes: usize,
+        search_threads: usize,
+    ) -> crate::Result<Self> {
+        let store = ShardStore::with_budget(dir, memory_budget_bytes)?;
+        Self::from_store(store, params, probe_shards, search_threads)
+    }
+
+    /// Build over an existing store (takes ownership — the index and
+    /// the residency cache live and die together). Opening streams
+    /// every shard through the cache exactly once for validation and
+    /// entry selection, then sheds back down to the budget; with
+    /// `search_threads > 1` the scatter pool is spawned here, once,
+    /// and lives until the index drops.
+    pub fn from_store(
+        store: ShardStore,
+        params: SearchParams,
+        probe_shards: usize,
+        search_threads: usize,
+    ) -> crate::Result<Self> {
+        params.validate()?;
+        let manifest = store.load_manifest()?;
+        anyhow::ensure!(manifest.shards >= 1, "manifest has no shards");
+        let mut meta = Vec::with_capacity(manifest.shards);
+        let mut offsets = Vec::with_capacity(manifest.shards);
+        let mut pinned_all = Vec::new();
+        let mut expect = 0usize;
+        for s in 0..manifest.shards {
+            let handle = store.get_shard(s)?;
+            let (ds, graph) = (&handle.ds, &handle.graph);
+            anyhow::ensure!(
+                graph.n() == ds.len(),
+                "shard {s}: graph covers {} objects but shard has {}",
+                graph.n(),
+                ds.len()
+            );
+            anyhow::ensure!(
+                ds.d == manifest.d,
+                "shard {s}: dim {} != manifest dim {}",
+                ds.d,
+                manifest.d
+            );
+            let offset = manifest.offsets[s];
+            anyhow::ensure!(
+                offset == expect,
+                "shard {s}: manifest offset {offset} not contiguous (expected {expect})"
+            );
+            expect += ds.len();
+            // the shards' global id space must be closed over the
+            // manifest total — corrupt graphs fail here, not mid-query
+            check_global_ids(graph, offset, manifest.total)
+                .map_err(|e| e.context(format!("shard {s} graph")))?;
+            // per-shard entry selection (shard-local ids -> global);
+            // decorrelate the per-shard RNG streams with the shard id
+            let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let sp = params.clone().with_seed(params.seed ^ salt);
+            let mut entries = select_entries(ds, graph, &sp);
+            for e in entries.iter_mut() {
+                *e += offset as u32;
             }
-            self.search_shard(order[i], q, k, ef, exclude, &mut local);
+            let centroid = match manifest.centroids.get(s) {
+                Some(c) if !c.is_empty() => c.clone(),
+                _ => shard_centroid(ds),
+            };
+            offsets.push(offset);
+            meta.push(ShardMeta { offset, len: ds.len(), entries, centroid });
+            if store.budget_bytes() == 0 {
+                // unbounded: nothing will ever be evicted, so pin every
+                // shard permanently and skip the cache mutex per query
+                pinned_all.push(handle);
+            }
         }
-        Self::release_pins(&mut local);
-        let topk = std::mem::take(&mut local.shard_topk);
-        collected.lock().unwrap().push((local.dist_evals, local.hops, topk));
-        self.put_scratch(local);
+        anyhow::ensure!(
+            expect == manifest.total,
+            "manifest total {} != sum of shard sizes {expect}",
+            manifest.total
+        );
+        // the validation sweep pinned shards one at a time; shed the
+        // cache back down to the budget before serving starts
+        store.evict_to_budget();
+        let core = Arc::new(ShardCore {
+            store,
+            meta,
+            pinned_all,
+            offsets,
+            total: manifest.total,
+            d: manifest.d,
+            metric: manifest.metric,
+            params,
+            scratch_pool: Mutex::new(Vec::new()),
+        });
+        // a participant beyond the shard count can never claim work
+        // (fan is capped at shards - 1 per query), so don't spawn
+        // threads that would park forever — a 2-shard store opened
+        // with --search-threads 8 gets 1 pool worker, not 7
+        let pool_size = (search_threads.saturating_sub(1)).min(core.meta.len().saturating_sub(1));
+        let pool = if pool_size > 0 {
+            Some(ScatterPool::new(Arc::clone(&core), pool_size))
+        } else {
+            None
+        };
+        Ok(ShardedIndex { core, pool, probe_shards, search_threads })
+    }
+
+    /// Number of shards in the store.
+    pub fn shards(&self) -> usize {
+        self.core.meta.len()
+    }
+
+    /// Effective shards probed per query.
+    pub fn probe(&self) -> usize {
+        if self.probe_shards == 0 {
+            self.core.meta.len()
+        } else {
+            self.probe_shards.min(self.core.meta.len())
+        }
+    }
+
+    /// Effective scatter participants per query (inline + pool).
+    pub fn scatter_threads(&self) -> usize {
+        self.search_threads.max(1).min(self.probe())
+    }
+
+    /// Parked pool workers (0 = sequential scatter, no pool spawned).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, ScatterPool::workers)
+    }
+
+    pub fn params(&self) -> &SearchParams {
+        &self.core.params
+    }
+
+    /// The underlying residency-managed store.
+    pub fn store(&self) -> &ShardStore {
+        &self.core.store
+    }
+
+    /// Snapshot of the residency cache counters.
+    pub fn residency(&self) -> ResidencyStats {
+        self.core.store.residency()
+    }
+
+    /// The full corpus re-assembled as one in-memory dataset (bench /
+    /// ground-truth convenience; true deployments keep shards apart).
+    /// Streams shard by shard through the cache: peak extra memory is
+    /// one shard, not a second copy of the whole corpus.
+    pub fn concat_dataset(&self) -> crate::Result<Dataset> {
+        let mut data = Vec::with_capacity(self.core.total * self.core.d);
+        for s in 0..self.core.meta.len() {
+            let h = self.core.store.get_shard(s)?;
+            data.extend_from_slice(h.ds.raw());
+        }
+        self.core.store.evict_to_budget();
+        Ok(Dataset::new("sharded", self.core.d, self.core.metric, data))
     }
 }
 
@@ -506,51 +560,53 @@ fn check_global_ids(graph: &KnnGraph, offset: usize, total: usize) -> crate::Res
 
 impl AnnIndex for ShardedIndex {
     fn len(&self) -> usize {
-        self.total
+        self.core.total
     }
 
     fn dim(&self) -> usize {
-        self.d
+        self.core.d
     }
 
     fn metric(&self) -> Metric {
-        self.metric
+        self.core.metric
     }
 
     fn vector(&self, id: u32) -> Vec<f32> {
-        let s = self.owner(id);
-        let h = match self.pinned_all.get(s) {
+        let s = self.core.owner(id);
+        let h = match self.core.pinned_all.get(s) {
             Some(h) => Arc::clone(h),
             None => self
+                .core
                 .store
                 .get_shard(s)
                 .unwrap_or_else(|e| panic!("shard {s} unreadable (store corrupt?): {e:#}")),
         };
-        h.ds.vec(id as usize - self.meta[s].offset).to_vec()
+        h.ds.vec(id as usize - self.core.meta[s].offset).to_vec()
     }
 
     fn default_ef(&self) -> usize {
-        self.params.ef
+        self.core.params.ef
     }
 
     fn describe(&self) -> String {
-        let budget = match self.store.budget_bytes() {
+        let budget = match self.core.store.budget_bytes() {
             0 => "unbounded".to_string(),
             b => format!("{:.1}MB", b as f64 / (1024.0 * 1024.0)),
         };
         format!(
-            "sharded(n={}, shards={}, probe={}, budget={}, scatter_threads={})",
-            self.total,
-            self.meta.len(),
+            "sharded(n={}, shards={}, probe={}, budget={}, scatter_threads={}, pool_workers={})",
+            self.core.total,
+            self.core.meta.len(),
             self.probe(),
             budget,
-            self.scatter_threads()
+            self.scatter_threads(),
+            self.pool_workers()
         )
     }
 
     fn make_scratch(&self) -> SearchScratch {
         let mut s = SearchScratch::new();
-        s.visited.begin(self.total);
+        s.visited.begin(self.core.total);
         s
     }
 
@@ -563,67 +619,60 @@ impl AnnIndex for ShardedIndex {
         scratch: &mut SearchScratch,
         out: &mut Vec<(f32, u32)>,
     ) {
-        let ef = (if ef == 0 { self.params.ef } else { ef }).max(k).max(1);
+        let ef = (if ef == 0 { self.core.params.ef } else { ef }).max(k).max(1);
         scratch.dist_evals = 0;
         scratch.hops = 0;
 
         // ---- route ----
         let probe = self.probe();
         scratch.shard_rank.clear();
-        if probe < self.meta.len() {
-            for (s, m) in self.meta.iter().enumerate() {
-                let d = crate::distance::distance(self.metric, q, &m.centroid);
+        if probe < self.core.meta.len() {
+            for (s, m) in self.core.meta.iter().enumerate() {
+                let d = crate::distance::distance(self.core.metric, q, &m.centroid);
                 scratch.shard_rank.push((F32(d), s));
             }
             scratch.shard_rank.sort_unstable();
         } else {
-            for s in 0..self.meta.len() {
+            for s in 0..self.core.meta.len() {
                 scratch.shard_rank.push((F32(0.0), s));
             }
         }
 
         // ---- scatter ----
         scratch.shard_topk.clear();
-        let workers = self.scatter_threads();
-        if workers <= 1 {
-            self.begin_pins(scratch);
-            for i in 0..probe {
-                let s = scratch.shard_rank[i].1;
-                scratch.shard_probed[s] = true;
-            }
-            for i in 0..probe {
-                let (_, s) = scratch.shard_rank[i];
-                self.search_shard(s, q, k, ef, exclude, scratch);
-            }
-            Self::release_pins(scratch);
-        } else {
-            // fan the probed shards across a scoped pool: a worker
-            // faulting a cold shard in from disk overlaps with the
-            // others' warm-shard compute. Workers pull shard tasks from
-            // a shared cursor and collect per-task top-k lists; the
-            // gather sort below is order-independent, so the result is
-            // bit-identical to the sequential path. One worker runs
-            // inline on this thread — only workers-1 spawns per query.
-            let order: Vec<usize> =
-                scratch.shard_rank[..probe].iter().map(|&(_, s)| s).collect();
-            let cursor = AtomicUsize::new(0);
-            let collected: Mutex<Vec<ScatterOut>> = Mutex::new(Vec::with_capacity(workers));
-            crossbeam_utils::thread::scope(|sc| {
-                for _ in 1..workers {
-                    let cursor = &cursor;
-                    let order = &order;
-                    let collected = &collected;
-                    sc.spawn(move |_| {
-                        self.scatter_worker(q, k, ef, exclude, order, cursor, collected)
-                    });
+        match &self.pool {
+            // pool scatter only pays off with work to overlap: two or
+            // more probed shards. A single-shard probe runs the
+            // sequential path below even when a pool exists.
+            Some(pool) if probe > 1 => {
+                // fan the probed shards across the persistent pool: a
+                // worker faulting a cold shard in from disk overlaps
+                // with the others' warm-shard compute. Workers pull
+                // shard tasks from the job's shared cursor; the gather
+                // sort below is order-independent, so the result is
+                // bit-identical to the sequential path. The dispatching
+                // thread participates inline — a query never waits on a
+                // fully busy pool to start making progress.
+                let order: Vec<usize> =
+                    scratch.shard_rank[..probe].iter().map(|&(_, s)| s).collect();
+                let collected = pool.scatter(&self.core, q, k, ef, exclude, order);
+                for (evals, hops, mut topk) in collected {
+                    scratch.dist_evals += evals;
+                    scratch.hops += hops;
+                    scratch.shard_topk.append(&mut topk);
                 }
-                self.scatter_worker(q, k, ef, exclude, &order, &cursor, &collected);
-            })
-            .unwrap();
-            for (evals, hops, mut topk) in collected.into_inner().unwrap() {
-                scratch.dist_evals += evals;
-                scratch.hops += hops;
-                scratch.shard_topk.append(&mut topk);
+            }
+            _ => {
+                self.core.begin_pins(scratch);
+                for i in 0..probe {
+                    let s = scratch.shard_rank[i].1;
+                    scratch.shard_probed[s] = true;
+                }
+                for i in 0..probe {
+                    let (_, s) = scratch.shard_rank[i];
+                    self.core.search_shard(s, q, k, ef, exclude, scratch);
+                }
+                ShardCore::release_pins(scratch);
             }
         }
 

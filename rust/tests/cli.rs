@@ -226,6 +226,63 @@ fn cli_sharded_residency_budget_and_probe_clamp() {
 }
 
 #[test]
+fn cli_search_threads_zero_is_clamped_and_open_loop_serve_bench_reports_queue() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let shard_dir = dir.join("shards").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "400", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "ooc-build", "--data", &data, "--dir", &shard_dir, "--shards", "3",
+        "--workers", "2", "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=4",
+    ]);
+    assert!(ok, "ooc-build failed: {out}");
+
+    // --search-threads 0 clamps to 1 with a warning instead of being
+    // silently masked at query time
+    let (ok, out) = run(&[
+        "search", "--shards", &shard_dir, "--query-id", "3", "--k", "5",
+        "--search-threads", "0",
+    ]);
+    assert!(ok, "clamped search failed: {out}");
+    assert!(
+        out.contains("search-threads") && out.contains("clamped"),
+        "no search-threads clamp warning: {out}"
+    );
+    assert!(out.contains("top-5"), "clamped search did not answer: {out}");
+
+    // open-loop serve-bench: rows gain rate/queue/overload columns and
+    // the sweep is folded into the shard directory's stats.json
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--data", &data, "--ef", "16,32",
+        "--queries", "60", "--distinct", "30", "--threads", "2",
+        "--search-threads", "2", "--arrival-rate", "300", "--arrival", "poisson",
+    ]);
+    assert!(ok, "open-loop serve-bench failed: {out}");
+    for col in ["rate", "queue_p50_ms", "queue_p99_ms", "overload"] {
+        assert!(out.contains(col), "missing open-loop column {col}: {out}");
+    }
+    let stats_text =
+        std::fs::read_to_string(std::path::Path::new(&shard_dir).join("stats.json")).unwrap();
+    for key in ["\"serve\"", "\"queue_p50_ms\"", "\"queue_p99_ms\"", "\"overload\"", "\"rate\""]
+    {
+        assert!(stats_text.contains(key), "stats.json missing {key}: {stats_text}");
+    }
+
+    // an unparseable arrival process is rejected
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--data", &data, "--ef", "16",
+        "--queries", "10", "--distinct", "10", "--arrival-rate", "100",
+        "--arrival", "bursty",
+    ]);
+    assert!(!ok, "unknown arrival process must be rejected: {out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_input() {
     let (ok, _) = run(&["bogus-subcommand"]);
     assert!(!ok);

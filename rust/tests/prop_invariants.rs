@@ -1,12 +1,16 @@
 //! Cross-module property tests (the DESIGN.md invariant list), using
 //! the crate's seeded mini-prop harness (`gnnd::util::prop`).
 
+use std::sync::Arc;
+
 use gnnd::config::{GnndParams, UpdateStrategy};
 use gnnd::dataset::{groundtruth, synth};
 use gnnd::gnnd::engine::{Batch, CrossmatchEngine, NativeEngine};
 use gnnd::gnnd::{build_with_stats, sample::parallel_sample};
 use gnnd::graph::{KnnGraph, EMPTY};
+use gnnd::merge::outofcore::{ResidencyStats, ResidentShard, ShardStore};
 use gnnd::metrics::recall_at;
+use gnnd::util::json::Json;
 use gnnd::util::{prop, rng::Rng};
 
 #[test]
@@ -130,6 +134,113 @@ fn prop_crossmatch_winner_is_true_minimum() {
         }
         Ok(())
     });
+}
+
+/// Residency invariants of the serving-side [`ShardStore`] cache under
+/// seeded-random op sequences (get / hold pin / drop pin / evict):
+///
+/// * `resident_bytes <= budget` whenever no pins are held (after an
+///   eviction pass — pins legitimately push the cache past the budget
+///   while they live);
+/// * `hits + misses` equals the number of `get_shard` calls, at every
+///   point in the sequence;
+/// * evictions never touch pinned shards: re-getting a shard whose
+///   handle is still held is always a cache hit;
+/// * the counters survive a `to_json`/`from_json` round trip.
+#[test]
+fn prop_shard_store_residency_invariants() {
+    // one on-disk shard dir shared by every case (cases only read)
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-prop-store-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let shards = 5usize;
+    {
+        let store = ShardStore::new(&dir).unwrap();
+        for i in 0..shards {
+            // identical geometry -> identical byte cost per shard, so a
+            // budget of m*one fits exactly m shards
+            store.save_shard(i, &synth::uniform(40, 4, 900 + i as u64)).unwrap();
+            store.save_graph(i, &KnnGraph::empty(40, 6)).unwrap();
+        }
+    }
+    let one = ShardStore::new(&dir).unwrap().get_shard(0).unwrap().bytes;
+
+    prop::check("shard-store-residency", 12, |rng| {
+        let budget = one * (1 + rng.below(shards));
+        let store = ShardStore::with_budget(&dir, budget).map_err(|e| e.to_string())?;
+        let mut held: Vec<(usize, Arc<ResidentShard>)> = Vec::new();
+        let mut gets = 0u64;
+        for _ in 0..60 {
+            match rng.below(10) {
+                0..=4 => {
+                    let s = rng.below(shards);
+                    let h = store.get_shard(s).map_err(|e| e.to_string())?;
+                    gets += 1;
+                    if rng.below(2) == 0 {
+                        held.push((s, h));
+                    }
+                }
+                5 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len());
+                        held.swap_remove(i);
+                    }
+                }
+                6 => store.evict_to_budget(),
+                7..=8 => {
+                    // a held pin must never have been evicted: re-get
+                    // is a hit, and the handle still reads coherently
+                    if !held.is_empty() {
+                        let (s, ref h) = held[rng.below(held.len())];
+                        let before = store.residency().hits;
+                        let again = store.get_shard(s).map_err(|e| e.to_string())?;
+                        gets += 1;
+                        prop::assert_prop(
+                            store.residency().hits == before + 1,
+                            format!("pinned shard {s} was evicted out of the cache"),
+                        )?;
+                        prop::assert_prop(
+                            again.ds.raw() == h.ds.raw(),
+                            format!("pinned shard {s} re-read with different data"),
+                        )?;
+                    }
+                }
+                _ => {
+                    let r = store.residency();
+                    prop::assert_prop(
+                        r.hits + r.misses == gets,
+                        format!("hits {} + misses {} != {gets} get_shard calls", r.hits, r.misses),
+                    )?;
+                }
+            }
+        }
+        // with every pin released, one eviction pass restores the
+        // budget invariant exactly
+        held.clear();
+        store.evict_to_budget();
+        let r = store.residency();
+        prop::assert_prop(
+            r.resident_bytes <= budget,
+            format!("resident {} > budget {budget} with no pins held", r.resident_bytes),
+        )?;
+        prop::assert_prop(r.hits + r.misses == gets, "final get_shard accounting")?;
+        prop::assert_prop(
+            r.peak_resident_bytes >= r.resident_bytes,
+            "peak below current residency",
+        )?;
+        // counters survive a JSON round trip bit-for-bit
+        let text = r.to_json().to_string();
+        let back = ResidencyStats::from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        prop::assert_prop(back == r, format!("round trip {back:?} != {r:?}"))
+    });
+    std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]

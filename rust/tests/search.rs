@@ -184,6 +184,85 @@ fn fixed_seed_gives_deterministic_output() {
 }
 
 #[test]
+fn arrival_schedules_are_seeded_and_reproducible() {
+    // the same (n, rate, process, seed) replays the exact same schedule
+    let a = serve::arrival_schedule(500, 200.0, serve::Arrival::Poisson, 7);
+    let b = serve::arrival_schedule(500, 200.0, serve::Arrival::Poisson, 7);
+    assert_eq!(a, b, "seeded Poisson schedule must be reproducible across runs");
+    let c = serve::arrival_schedule(500, 200.0, serve::Arrival::Poisson, 8);
+    assert_ne!(a, c, "distinct seeds must give distinct schedules");
+
+    // arrivals start at t=0, never go backwards, and pace ~n/rate
+    assert_eq!(a[0], 0.0);
+    assert!(a.windows(2).all(|w| w[1] >= w[0]), "arrival times must be non-decreasing");
+    let span = *a.last().unwrap();
+    let expect = 499.0 / 200.0;
+    assert!(
+        (0.7..1.3).contains(&(span / expect)),
+        "Poisson span {span:.3}s far from expected {expect:.3}s"
+    );
+
+    // the fixed-interval process is exactly 1/rate apart
+    let u = serve::arrival_schedule(10, 100.0, serve::Arrival::Uniform, 7);
+    for (i, t) in u.iter().enumerate() {
+        assert!((t - i as f64 * 0.01).abs() < 1e-12, "uniform arrival {i} at {t}");
+    }
+}
+
+#[test]
+fn open_loop_recall_matches_closed_loop_and_overload_flag_trips() {
+    let ds = synth::clustered(300, 6, 0x5EA7);
+    let g = bruteforce::build_native(&ds, 8);
+    let index = SearchIndex::new(&ds, &g, SearchParams::default()).unwrap();
+    let stream = serve::sample_queries(&ds, 60, 10, 5);
+    let base = serve::ServeConfig {
+        n_queries: 120,
+        distinct_queries: 60,
+        threads: 2,
+        ..Default::default()
+    };
+    let closed = serve::run_point(&index, &stream, &base, 32);
+    assert!(!closed.overload, "closed loop can never be overloaded");
+
+    // a saturating arrival rate: every query is due immediately, so the
+    // open loop issues the same queries in the same order as the closed
+    // loop — recall (a property of the queries, not their arrival
+    // times) must match exactly, and a tiny index cannot possibly keep
+    // up with 1e9 offered qps, so the overload flag must trip
+    let open_cfg = serve::ServeConfig { arrival_rate: 1e9, ..base.clone() };
+    let open = serve::run_point(&index, &stream, &open_cfg, 32);
+    assert_eq!(
+        open.recall, closed.recall,
+        "open-loop recall diverged from closed-loop on the same queries"
+    );
+    assert!(open.queue_p99_ms >= open.queue_p50_ms, "queue tail below median");
+    assert!(open.overload, "offered 1e9 qps must overload (achieved {:.0})", open.qps);
+    assert!(open.qps < 1e9 * 0.95);
+
+    // a comfortably low offered rate is achieved (no overload) and the
+    // queue stays near-empty — fixed-interval arrivals so the only
+    // queueing left is service-time jitter. Sizing the slack: 400
+    // queries at 200 qps span ~2.0 s of absolute deadlines, and the
+    // overload margin (0.95) only trips if the whole pass takes over
+    // 400/190 ≈ 2.1 s — arrival deadlines are absolute, so per-sleep
+    // overshoot does not accumulate and only a >100 ms stall at the
+    // very end of the run could flake this
+    let low_cfg = serve::ServeConfig {
+        n_queries: 400,
+        arrival_rate: 200.0,
+        arrival: serve::Arrival::Uniform,
+        ..base
+    };
+    let low = serve::run_point(&index, &stream, &low_cfg, 32);
+    assert!(
+        !low.overload,
+        "200 qps offered must not overload a flat 300-point index (achieved {:.0})",
+        low.qps
+    );
+    assert!(low.queue_p99_ms >= low.queue_p50_ms);
+}
+
+#[test]
 fn serving_works_over_a_loaded_graph_file() {
     // Round-trip through the on-disk format: any persisted build output
     // (in-core, merged, out-of-core) must serve identically.

@@ -262,6 +262,81 @@ fn budget_constrained_results_match_unbounded_exactly() {
     std::fs::remove_dir_all(dir).ok();
 }
 
+/// Pool-based scatter is bit-identical to sequential scatter across
+/// the (search_threads, probe_shards) grid — including more pool
+/// participants than probed shards and a residency budget that fits
+/// only half the store. The gather sort is order-independent and every
+/// per-shard walk is independent, so neither the pool fan-out nor the
+/// cache state may change a single bit of output.
+#[test]
+fn pool_scatter_parity_across_threads_probe_and_budget() {
+    let ds = synth::clustered(480, 8, 48);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("poolparity");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    let manifest = ShardStore::new(&dir).unwrap().load_manifest().unwrap();
+    let half = manifest.estimated_resident_bytes() / 2;
+
+    let sp = SearchParams::default().with_ef(48);
+    for probe in [0usize, 1, 2, 3] {
+        let seq = ShardedIndex::open_with(&dir, sp.clone(), probe, 0, 1).unwrap();
+        assert_eq!(seq.pool_workers(), 0, "sequential index must not spawn a pool");
+        let mut s_seq = seq.make_scratch();
+        let mut o_seq = Vec::new();
+        for threads in [2usize, 4, 8] {
+            for budget in [0usize, half] {
+                let par = ShardedIndex::open_with(&dir, sp.clone(), probe, budget, threads)
+                    .unwrap();
+                // pool size is search_threads - 1 capped at shards - 1:
+                // a participant beyond the shard count can never claim
+                // work, so no thread is spawned to park forever
+                assert_eq!(
+                    par.pool_workers(),
+                    (threads - 1).min(par.shards() - 1),
+                    "wrong pool size for search_threads={threads}"
+                );
+                let mut s_par = par.make_scratch();
+                let mut o_par = Vec::new();
+                for q in (0..ds.len()).step_by(41) {
+                    seq.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_seq,
+                        &mut o_seq,
+                    );
+                    par.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_par,
+                        &mut o_par,
+                    );
+                    assert_eq!(
+                        o_seq, o_par,
+                        "pool scatter diverged (threads={threads} probe={probe} \
+                         budget={budget}) on query {q}"
+                    );
+                    assert_eq!(
+                        s_seq.dist_evals, s_par.dist_evals,
+                        "eval counts diverged (threads={threads} probe={probe} \
+                         budget={budget}) on query {q}"
+                    );
+                    assert_eq!(
+                        s_seq.hops, s_par.hops,
+                        "hop counts diverged (threads={threads} probe={probe} \
+                         budget={budget}) on query {q}"
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
 /// Parallel scatter (`--search-threads`) is bit-identical to the
 /// sequential scatter — the gather sort is order-independent and every
 /// per-shard walk is independent.
