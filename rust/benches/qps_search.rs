@@ -5,8 +5,10 @@
 //! serves the same corpus split into 4 shards through the out-of-core
 //! pipeline + `ShardedIndex`, so monolithic-vs-sharded QPS is tracked
 //! over time; a third serves the shards under a residency budget that
-//! fits ~50% of the store (LRU faulting, residency counters printed),
-//! and a fourth compares sequential vs parallel scatter
+//! fits ~50% of the store (LRU faulting, residency counters printed);
+//! a fourth serves the same budget at *block* granularity (paged shard
+//! files, partial reads — bytes_read vs total payload printed), and a
+//! fifth compares sequential vs parallel scatter
 //! (`search_threads`, now a persistent pool) at a single serve worker,
 //! where per-query latency is the whole story. A final *open-loop*
 //! sweep probes the monolithic index's closed-loop capacity, then
@@ -23,7 +25,7 @@
 
 use gnnd::dataset::synth;
 use gnnd::gnnd::{GnndParams, NativeEngine};
-use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ShardStore};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardStore};
 use gnnd::search::serve::{self, ServeConfig};
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
@@ -98,6 +100,31 @@ fn main() {
     }
     println!("residency at budget 50%: {}", res.to_json());
     drop(tight);
+
+    // ---- block-residency variant: same 50% budget, but enforced over
+    // 64 KiB blocks of all shards instead of whole shards — queries
+    // page in only the rows their walks visit (bytes_read vs the
+    // store's total payload is the partial-read story), results are
+    // bit-identical to every other configuration ----
+    let paged = ShardedIndex::open_with_residency(
+        &dir,
+        cfg.params.clone(),
+        2,
+        budget,
+        1,
+        ResidencyMode::block(),
+    )
+    .expect("block-residency index");
+    let mut ds_paged = ds.clone();
+    ds_paged.name = format!("{} sharded block50", ds.name);
+    let report = serve::run_sweep_on(&paged, &ds_paged, &cfg).expect("block sweep");
+    let res = paged.residency();
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    println!("residency at block-granular budget 50%: {}", res.to_json());
+    drop(paged);
 
     // ---- sequential vs parallel scatter at 1 serve worker ----
     // with a single closed-loop worker, QPS is per-query latency:

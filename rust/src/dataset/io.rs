@@ -3,21 +3,68 @@
 //! * `.fvecs` / `.ivecs` — the TEXMEX interchange formats used by the
 //!   paper's benchmarks (SIFT1M etc.), so real corpora drop in when
 //!   available.
-//! * `.dsb` — our own raw binary dataset format (header + f32 rows),
-//!   used by the out-of-core shard store because it supports metric
-//!   metadata and fast bulk reads.
+//! * `.dsb` — our own raw binary dataset format (spec below), used by
+//!   the out-of-core shard store because it supports metric metadata,
+//!   fast bulk reads, and (v2) random row access for paged serving.
+//!
+//! # `.dsb` format spec
+//!
+//! All integers little-endian u32; all vector components little-endian
+//! f32.
+//!
+//! **v2** (written by [`write_dsb`]) — fixed-stride, pageable:
+//!
+//! ```text
+//! offset  field
+//!      0  magic        0x4453_4232 ("DSB2")
+//!      4  d            vector dimensionality
+//!      8  n            number of rows
+//!     12  metric       0 = l2, 1 = ip, 2 = cosine (rows pre-normalized)
+//!     16  row_stride   bytes per row, = 4*d (recorded so row offsets
+//!                      are computable without knowledge of the codec)
+//!     20  block_rows   writer's block-size hint (readers may page at
+//!                      any row-aligned block size; this records the
+//!                      default-`DEFAULT_BLOCK_BYTES` granularity the
+//!                      file was written for)
+//!     24  data         n rows x row_stride bytes, row i at
+//!                      24 + i*row_stride
+//! ```
+//!
+//! Because the stride is fixed and recorded, any row's byte offset is
+//! computable without scanning — the property the paged
+//! ([`read_dsb_paged`]) serving path relies on.
+//!
+//! **v1** (legacy; still read, written only by [`write_dsb_v1`]):
+//! magic 0x4453_4231 ("DSB1"), d, n, metric, then n*d f32. v1 files
+//! always load fully resident (the owned path), including under
+//! block-residency serving.
+//!
+//! Both readers validate the header against the actual file length on
+//! open, so truncated or corrupt files fail with the path and expected
+//! vs. actual sizes instead of a `read_exact` EOF mid-load.
+//!
+//! The `.knng` graph format mirrors this scheme (KNG1/KNG2); see
+//! [`crate::graph::KnnGraph::save`].
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
 use crate::config::Metric;
 
+use super::store::{self, BlockCache, PagedRows, VectorStore, DEFAULT_BLOCK_BYTES};
 use super::Dataset;
 
-const DSB_MAGIC: u32 = 0x4453_4231; // "DSB1"
+const DSB_MAGIC_V1: u32 = 0x4453_4231; // "DSB1"
+const DSB_MAGIC_V2: u32 = 0x4453_4232; // "DSB2"
+
+/// v2 header length in bytes.
+const DSB_V2_HEADER: u64 = 24;
+/// v1 header length in bytes.
+const DSB_V1_HEADER: u64 = 16;
 
 fn metric_code(m: Metric) -> u32 {
     match m {
@@ -51,38 +98,227 @@ fn read_f32s(r: &mut impl Read, n: usize) -> crate::Result<Vec<f32>> {
         .collect())
 }
 
-/// Write a dataset in `.dsb` (magic, d, n, metric, then n*d f32 LE).
-pub fn write_dsb(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
-    let mut w = BufWriter::new(File::create(path.as_ref())?);
-    w.write_all(&DSB_MAGIC.to_le_bytes())?;
-    w.write_all(&(ds.d as u32).to_le_bytes())?;
-    w.write_all(&(ds.len() as u32).to_le_bytes())?;
-    w.write_all(&metric_code(ds.metric).to_le_bytes())?;
-    for &x in ds.raw() {
-        w.write_all(&x.to_le_bytes())?;
+/// Validate a parsed header against the real file length — the
+/// difference between "truncated `x.dsb`: expected 4824 bytes (n=300
+/// d=4), file has 4100" and a bare `read_exact` EOF three layers down.
+pub(crate) fn check_file_len(
+    path: &Path,
+    actual: u64,
+    expected: u64,
+    detail: &str,
+) -> crate::Result<()> {
+    anyhow::ensure!(
+        actual == expected,
+        "truncated or corrupt {path:?}: header implies {expected} bytes ({detail}), \
+         file has {actual}"
+    );
+    Ok(())
+}
+
+/// `header + rows * stride` in checked u64 arithmetic: the fields come
+/// from an untrusted header, and the validation guarding against
+/// corrupt files must not itself wrap (and then accidentally match the
+/// file length) on crafted n/stride values.
+pub(crate) fn expected_file_len(
+    path: &Path,
+    header: u64,
+    rows: usize,
+    stride: usize,
+) -> crate::Result<u64> {
+    (rows as u64)
+        .checked_mul(stride as u64)
+        .and_then(|payload| payload.checked_add(header))
+        .with_context(|| {
+            format!("corrupt {path:?}: header implies an impossibly large file (rows={rows} stride={stride})")
+        })
+}
+
+/// Read the real file length plus up to `max_len` leading header bytes
+/// (shorter files yield what exists; callers zero-pad via
+/// [`header_word`]). Shared by the `.dsb` and `.knng` readers so the
+/// probe/validation machinery cannot drift between the two mirrored
+/// formats.
+pub(crate) fn probe_header(
+    file: &mut File,
+    path: &Path,
+    max_len: usize,
+) -> crate::Result<(u64, Vec<u8>)> {
+    let actual = file.metadata()?.len();
+    let take = max_len.min(actual as usize);
+    let mut head = vec![0u8; take];
+    file.read_exact(&mut head)
+        .with_context(|| format!("read header of {path:?}"))?;
+    anyhow::ensure!(take >= 4, "file too short for a magic number: {path:?}");
+    Ok((actual, head))
+}
+
+/// Little-endian u32 word `i` of a probed header (zero when the probe
+/// was shorter than the requested word).
+pub(crate) fn header_word(head: &[u8], i: usize) -> u32 {
+    let mut b = [0u8; 4];
+    let off = i * 4;
+    if off + 4 <= head.len() {
+        b.copy_from_slice(&head[off..off + 4]);
+    }
+    u32::from_le_bytes(b)
+}
+
+/// Serialize rows into reusable byte buffers and write them in bulk —
+/// the shard-spill path of `ooc-build` writes every vector this way
+/// (the old one-`f32`-at-a-time loop paid a `BufWriter` call per
+/// component).
+fn write_f32s_bulk(w: &mut impl Write, data: &[f32]) -> crate::Result<()> {
+    const CHUNK_F32S: usize = 64 * 1024; // 256 KiB staging buffer
+    let mut buf = Vec::with_capacity(CHUNK_F32S.min(data.len()) * 4);
+    for chunk in data.chunks(CHUNK_F32S) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
     }
     Ok(())
 }
 
-/// Read a `.dsb` dataset.
-pub fn read_dsb(path: impl AsRef<Path>) -> crate::Result<Dataset> {
-    let mut r = BufReader::new(
-        File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?,
-    );
-    if read_u32(&mut r)? != DSB_MAGIC {
-        bail!("not a .dsb file: {:?}", path.as_ref());
+/// Write a dataset in `.dsb` v2 (fixed-stride; see the module spec).
+pub fn write_dsb(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    let row_stride = (ds.d * 4) as u32;
+    let block_rows = (DEFAULT_BLOCK_BYTES as u32 / row_stride).max(1);
+    w.write_all(&DSB_MAGIC_V2.to_le_bytes())?;
+    w.write_all(&(ds.d as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&metric_code(ds.metric).to_le_bytes())?;
+    w.write_all(&row_stride.to_le_bytes())?;
+    w.write_all(&block_rows.to_le_bytes())?;
+    write_f32s_bulk(&mut w, ds.raw())?;
+    Ok(())
+}
+
+/// Write the legacy `.dsb` v1 layout. Kept for compatibility coverage
+/// (old shard directories keep serving); new files should use
+/// [`write_dsb`].
+pub fn write_dsb_v1(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    w.write_all(&DSB_MAGIC_V1.to_le_bytes())?;
+    w.write_all(&(ds.d as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&metric_code(ds.metric).to_le_bytes())?;
+    write_f32s_bulk(&mut w, ds.raw())?;
+    Ok(())
+}
+
+/// Parsed `.dsb` header (either version), with the file length already
+/// validated against it.
+struct DsbHeader {
+    version: u32,
+    d: usize,
+    n: usize,
+    metric: Metric,
+    data_off: u64,
+    row_stride: usize,
+}
+
+fn read_dsb_header(file: &mut File, path: &Path) -> crate::Result<DsbHeader> {
+    let (actual, head) = probe_header(file, path, DSB_V2_HEADER as usize)?;
+    let word = |i: usize| header_word(&head, i);
+    match word(0) {
+        DSB_MAGIC_V1 => {
+            anyhow::ensure!(
+                head.len() as u64 >= DSB_V1_HEADER,
+                "truncated .dsb v1 header: {path:?}"
+            );
+            let (d, n) = (word(1) as usize, word(2) as usize);
+            let metric = metric_from_code(word(3))?;
+            anyhow::ensure!(d > 0, "{path:?}: zero dimension");
+            let row_stride = d * 4;
+            check_file_len(
+                path,
+                actual,
+                expected_file_len(path, DSB_V1_HEADER, n, row_stride)?,
+                &format!("v1, n={n} d={d}"),
+            )?;
+            Ok(DsbHeader { version: 1, d, n, metric, data_off: DSB_V1_HEADER, row_stride })
+        }
+        DSB_MAGIC_V2 => {
+            anyhow::ensure!(
+                head.len() as u64 >= DSB_V2_HEADER,
+                "truncated .dsb v2 header: {path:?}"
+            );
+            let (d, n) = (word(1) as usize, word(2) as usize);
+            let metric = metric_from_code(word(3))?;
+            let row_stride = word(4) as usize;
+            anyhow::ensure!(d > 0, "{path:?}: zero dimension");
+            anyhow::ensure!(
+                row_stride == d * 4,
+                "{path:?}: row stride {row_stride} != 4*d ({}) — unsupported layout",
+                d * 4
+            );
+            check_file_len(
+                path,
+                actual,
+                expected_file_len(path, DSB_V2_HEADER, n, row_stride)?,
+                &format!("v2, n={n} d={d} stride={row_stride}"),
+            )?;
+            Ok(DsbHeader { version: 2, d, n, metric, data_off: DSB_V2_HEADER, row_stride })
+        }
+        _ => bail!("not a .dsb file: {path:?}"),
     }
-    let d = read_u32(&mut r)? as usize;
-    let n = read_u32(&mut r)? as usize;
-    let metric = metric_from_code(read_u32(&mut r)?)?;
-    let data = read_f32s(&mut r, n * d)?;
-    let name = path
-        .as_ref()
-        .file_stem()
+}
+
+fn dsb_name(path: &Path) -> String {
+    path.file_stem()
         .map(|s| s.to_string_lossy().into_owned())
-        .unwrap_or_else(|| "dsb".into());
+        .unwrap_or_else(|| "dsb".into())
+}
+
+/// Read a `.dsb` dataset (v1 or v2) fully into memory.
+pub fn read_dsb(path: impl AsRef<Path>) -> crate::Result<Dataset> {
+    let path = path.as_ref();
+    let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let h = read_dsb_header(&mut file, path)?;
+    // the header probe may have read past a short (v1) header
+    file.seek(SeekFrom::Start(h.data_off))?;
+    let mut r = BufReader::new(file);
+    let data = read_f32s(&mut r, h.n * h.d)?;
     // bypass Dataset::new to avoid re-normalizing cosine data
-    Ok(Dataset { name, d, metric, data })
+    Ok(Dataset {
+        name: dsb_name(path),
+        d: h.d,
+        metric: h.metric,
+        data: VectorStore::Owned(data),
+    })
+}
+
+/// Open a `.dsb` for *paged* row access through `cache`: rows are
+/// fetched in row-aligned blocks on demand, nothing is read eagerly
+/// beyond the header. v1 files have no pageable guarantee recorded, so
+/// they fall back to the fully-resident owned path (documented compat
+/// behavior — old shard directories keep serving under
+/// `--residency block`, just without partial reads).
+pub fn read_dsb_paged(path: impl AsRef<Path>, cache: &Arc<BlockCache>) -> crate::Result<Dataset> {
+    let path = path.as_ref();
+    let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let h = read_dsb_header(&mut file, path)?;
+    if h.version == 1 {
+        return read_dsb(path);
+    }
+    let rows = PagedRows::new(
+        file,
+        path.to_path_buf(),
+        h.data_off,
+        h.n,
+        h.row_stride,
+        h.d,
+        cache,
+        store::decode_f32_block,
+    );
+    Ok(Dataset {
+        name: dsb_name(path),
+        d: h.d,
+        metric: h.metric,
+        data: VectorStore::Paged(rows),
+    })
 }
 
 /// Read a TEXMEX `.fvecs` file (each row: i32 dim then dim f32).
@@ -154,6 +390,7 @@ pub fn read_ivecs(path: impl AsRef<Path>) -> crate::Result<Vec<Vec<u32>>> {
 mod tests {
     use super::*;
     use crate::dataset::synth;
+    use crate::util::prop;
 
     fn tmpdir() -> std::path::PathBuf {
         let dir = std::env::temp_dir().join(format!(
@@ -183,13 +420,113 @@ mod tests {
     }
 
     #[test]
-    fn dsb_cosine_roundtrip_no_double_normalize() {
+    fn dsb_v1_still_reads() {
+        let dir = tmpdir();
+        let ds = synth::clustered(23, 5, 3);
+        let p = dir.join("legacy.dsb");
+        write_dsb_v1(&ds, &p).unwrap();
+        let back = read_dsb(&p).unwrap();
+        assert_eq!(back.raw(), ds.raw());
+        assert_eq!((back.d, back.metric), (ds.d, ds.metric));
+        // the paged open falls back to the owned path on v1
+        let cache = BlockCache::new(0, 256);
+        let paged = read_dsb_paged(&p, &cache).unwrap();
+        assert!(!paged.is_paged());
+        assert_eq!(paged.raw(), ds.raw());
+        assert_eq!(cache.stats().fetches, 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn dsb_format_roundtrip_property() {
+        // random (n, d, metric, version) grids round-trip bit-exactly
+        let dir = tmpdir();
+        let p = dir.join("prop.dsb");
+        prop::check("dsb-roundtrip", 25, |rng| {
+            let n = 1 + rng.below(60);
+            let d = 1 + rng.below(17);
+            let metric = match rng.below(3) {
+                0 => Metric::L2,
+                1 => Metric::Ip,
+                _ => Metric::Cosine,
+            };
+            let data: Vec<f32> = (0..n * d).map(|_| rng.f32() * 8.0 - 4.0).collect();
+            let ds = Dataset::new("prop", d, metric, data);
+            if rng.below(2) == 0 {
+                write_dsb(&ds, &p).map_err(|e| e.to_string())?;
+            } else {
+                write_dsb_v1(&ds, &p).map_err(|e| e.to_string())?;
+            }
+            let back = read_dsb(&p).map_err(|e| e.to_string())?;
+            prop::assert_prop(back.raw() == ds.raw(), "data mismatch")?;
+            prop::assert_prop(
+                (back.d, back.len(), back.metric) == (ds.d, ds.len(), ds.metric),
+                "geometry mismatch",
+            )
+        });
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn dsb_paged_matches_owned_rows() {
+        let dir = tmpdir();
+        // d=7 (28B stride) with 64B blocks -> 2 rows/block, short tail
+        let ds = synth::uniform(11, 7, 9);
+        let p = dir.join("paged.dsb");
+        write_dsb(&ds, &p).unwrap();
+        let cache = BlockCache::new(0, 64);
+        let paged = read_dsb_paged(&p, &cache).unwrap();
+        assert!(paged.is_paged());
+        assert_eq!(paged.len(), ds.len());
+        assert_eq!(paged.d, ds.d);
+        for i in 0..ds.len() {
+            assert_eq!(paged.vector(i), ds.vec(i), "row {i}");
+            assert_eq!(paged.dist_to(i, ds.vec(0)), ds.dist_to(i, ds.vec(0)));
+        }
+        assert!(cache.stats().fetches > 1, "multiple blocks must have paged in");
+        // materialize round-trips the full matrix
+        assert_eq!(paged.materialize().raw(), ds.raw());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn dsb_cosine_paged_no_double_normalize() {
         let dir = tmpdir();
         let ds = synth::glove_like(20, 2);
         let p = dir.join("g.dsb");
         write_dsb(&ds, &p).unwrap();
         let back = read_dsb(&p).unwrap();
         assert_eq!(back.raw(), ds.raw());
+        let cache = BlockCache::new(0, 128);
+        let paged = read_dsb_paged(&p, &cache).unwrap();
+        for i in 0..ds.len() {
+            assert_eq!(paged.vector(i), ds.vec(i));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_dsb_reports_sizes() {
+        let dir = tmpdir();
+        let ds = synth::uniform(30, 4, 5);
+        for v2 in [true, false] {
+            let name = if v2 { "t2.dsb" } else { "t1.dsb" };
+            let p = dir.join(name);
+            if v2 {
+                write_dsb(&ds, &p).unwrap();
+            } else {
+                write_dsb_v1(&ds, &p).unwrap();
+            }
+            let full = std::fs::read(&p).unwrap();
+            std::fs::write(&p, &full[..full.len() - 7]).unwrap();
+            let err = format!("{:#}", read_dsb(&p).unwrap_err());
+            assert!(
+                err.contains("truncated") && err.contains(name) && err.contains("bytes"),
+                "unhelpful truncation error: {err}"
+            );
+            let cache = BlockCache::new(0, 128);
+            assert!(read_dsb_paged(&p, &cache).is_err(), "paged open must validate too");
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,70 +1,176 @@
 //! Datasets: a flat row-major f32 matrix plus metric metadata.
+//!
+//! Rows live behind a [`store::VectorStore`]: fully in memory
+//! (`Owned`, every construction path) or paged from a `.dsb` v2 file
+//! through a shared block cache (`Paged`, the serving path of
+//! [`crate::merge::outofcore::ShardStore`] in block-residency mode).
+//! Accessors split accordingly: [`Dataset::vec`] / [`Dataset::raw`]
+//! borrow and exist only for owned data; [`Dataset::with_vec`],
+//! [`Dataset::vector`], [`Dataset::dist`] and [`Dataset::dist_to`]
+//! work on either backing (a paged row is borrowed for the duration of
+//! a closure — a borrow that outlived the access could dangle past the
+//! block's next eviction, the same reasoning behind
+//! [`crate::search::AnnIndex::vector`] returning owned data).
 
 pub mod groundtruth;
 pub mod io;
+pub mod store;
 pub mod synth;
 
 use crate::config::Metric;
 use crate::distance;
 
-/// An in-memory dataset of `n` vectors of dimension `d` (row-major).
+use store::VectorStore;
+
+/// A dataset of `n` vectors of dimension `d` (row-major).
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
     pub d: usize,
     pub metric: Metric,
-    data: Vec<f32>,
+    data: VectorStore,
 }
 
 impl Dataset {
     pub fn new(name: impl Into<String>, d: usize, metric: Metric, data: Vec<f32>) -> Self {
         assert!(d > 0, "dimension must be positive");
         assert_eq!(data.len() % d, 0, "data length must be a multiple of d");
-        let mut ds = Dataset { name: name.into(), d, metric, data };
+        let mut data = data;
         if metric == Metric::Cosine {
             // Cosine is served as normalize-once + negated inner product
             // (monotone in cosine distance); mirrors the L2 model design.
-            for i in 0..ds.len() {
-                let row = &mut ds.data[i * d..(i + 1) * d];
+            for row in data.chunks_exact_mut(d) {
                 distance::normalize(row);
             }
         }
-        ds
+        Dataset { name: name.into(), d, metric, data: VectorStore::Owned(data) }
     }
 
     /// Number of vectors.
     pub fn len(&self) -> usize {
-        self.data.len() / self.d
+        match &self.data {
+            VectorStore::Owned(v) => v.len() / self.d,
+            VectorStore::Paged(p) => p.rows(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
-    /// Row view.
+    /// True when rows are paged from disk rather than memory-resident.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.data, VectorStore::Paged(_))
+    }
+
+    /// Bytes this dataset holds resident *itself* (paged datasets keep
+    /// only a handle; their blocks are accounted by the shared cache).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.data {
+            VectorStore::Owned(v) => v.len() * std::mem::size_of::<f32>(),
+            VectorStore::Paged(_) => store::PAGED_HANDLE_BYTES,
+        }
+    }
+
+    /// Row view. Owned backing only — a paged row cannot be borrowed
+    /// past the access (use [`Dataset::with_vec`] / [`Dataset::vector`]).
     #[inline]
     pub fn vec(&self, i: usize) -> &[f32] {
-        &self.data[i * self.d..(i + 1) * self.d]
+        match &self.data {
+            VectorStore::Owned(v) => &v[i * self.d..(i + 1) * self.d],
+            VectorStore::Paged(_) => {
+                panic!("Dataset::vec on a paged dataset; use with_vec/vector")
+            }
+        }
     }
 
-    /// Raw flat storage.
+    /// Borrow row `i` for the duration of `f` — works on either
+    /// backing (the hot-path shape: no copy on owned, one block-cache
+    /// access on paged).
+    #[inline]
+    pub fn with_vec<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        match &self.data {
+            VectorStore::Owned(v) => f(&v[i * self.d..(i + 1) * self.d]),
+            VectorStore::Paged(p) => p.with_f32_row(i, f),
+        }
+    }
+
+    /// Row `i`, copied out (backing-agnostic).
+    pub fn vector(&self, i: usize) -> Vec<f32> {
+        self.with_vec(i, |row| row.to_vec())
+    }
+
+    /// Raw flat storage. Owned backing only.
     pub fn raw(&self) -> &[f32] {
-        &self.data
+        match &self.data {
+            VectorStore::Owned(v) => v,
+            VectorStore::Paged(_) => {
+                panic!("Dataset::raw on a paged dataset; use extend_flat_into/materialize")
+            }
+        }
+    }
+
+    /// Append every row to `out` in order (streams blocks on a paged
+    /// backing; a bulk copy on owned).
+    pub fn extend_flat_into(&self, out: &mut Vec<f32>) {
+        match &self.data {
+            VectorStore::Owned(v) => out.extend_from_slice(v),
+            VectorStore::Paged(p) => {
+                for i in 0..p.rows() {
+                    p.with_f32_row(i, |row| out.extend_from_slice(row));
+                }
+            }
+        }
+    }
+
+    /// The paged backing's cache namespace id, if paged (lets the shard
+    /// store drop a re-saved shard's stale blocks).
+    pub(crate) fn block_store_id(&self) -> Option<u64> {
+        match &self.data {
+            VectorStore::Owned(_) => None,
+            VectorStore::Paged(p) => Some(p.store_id()),
+        }
+    }
+
+    /// A fully memory-resident copy of this dataset (reads every block
+    /// of a paged backing once; rows are already normalized, so no
+    /// re-normalization happens).
+    pub fn materialize(&self) -> Dataset {
+        let mut data = Vec::with_capacity(self.len() * self.d);
+        self.extend_flat_into(&mut data);
+        Dataset { name: self.name.clone(), d: self.d, metric: self.metric, data: VectorStore::Owned(data) }
     }
 
     /// Distance between rows `i` and `j` under the dataset metric.
     #[inline]
     pub fn dist(&self, i: usize, j: usize) -> f32 {
-        distance::distance(self.metric, self.vec(i), self.vec(j))
+        match &self.data {
+            VectorStore::Owned(v) => distance::distance(
+                self.metric,
+                &v[i * self.d..(i + 1) * self.d],
+                &v[j * self.d..(j + 1) * self.d],
+            ),
+            VectorStore::Paged(_) => {
+                self.with_vec(i, |vi| self.with_vec(j, |vj| distance::distance(self.metric, vi, vj)))
+            }
+        }
     }
 
     /// Distance between row `i` and an external query vector.
     #[inline]
     pub fn dist_to(&self, i: usize, q: &[f32]) -> f32 {
-        distance::distance(self.metric, self.vec(i), q)
+        match &self.data {
+            VectorStore::Owned(v) => {
+                distance::distance(self.metric, &v[i * self.d..(i + 1) * self.d], q)
+            }
+            VectorStore::Paged(p) => {
+                p.with_f32_row(i, |row| distance::distance(self.metric, row, q))
+            }
+        }
     }
 
     /// New dataset holding the selected rows (in the given order).
+    /// Owned backing only (a construction-side utility).
     pub fn select(&self, ids: &[usize], name: impl Into<String>) -> Dataset {
         let mut data = Vec::with_capacity(ids.len() * self.d);
         for &i in ids {
@@ -72,19 +178,19 @@ impl Dataset {
         }
         // rows are already normalized if cosine; Dataset::new would
         // re-normalize harmlessly, but skip the cost:
-        Dataset { name: name.into(), d: self.d, metric: self.metric, data }
+        Dataset { name: name.into(), d: self.d, metric: self.metric, data: VectorStore::Owned(data) }
     }
 
-    /// Concatenate two datasets with identical (d, metric).
+    /// Concatenate two datasets with identical (d, metric). Owned only.
     pub fn concat(&self, other: &Dataset, name: impl Into<String>) -> Dataset {
         assert_eq!(self.d, other.d);
         assert_eq!(self.metric, other.metric);
-        let mut data = self.data.clone();
-        data.extend_from_slice(&other.data);
-        Dataset { name: name.into(), d: self.d, metric: self.metric, data }
+        let mut data = self.raw().to_vec();
+        data.extend_from_slice(other.raw());
+        Dataset { name: name.into(), d: self.d, metric: self.metric, data: VectorStore::Owned(data) }
     }
 
-    /// Split into `parts` near-equal contiguous shards.
+    /// Split into `parts` near-equal contiguous shards. Owned only.
     pub fn split(&self, parts: usize) -> Vec<Dataset> {
         crate::util::split_ranges(self.len(), parts)
             .into_iter()
@@ -93,7 +199,7 @@ impl Dataset {
                 name: format!("{}[shard{}]", self.name, i),
                 d: self.d,
                 metric: self.metric,
-                data: self.data[r.start * self.d..r.end * self.d].to_vec(),
+                data: VectorStore::Owned(self.raw()[r.start * self.d..r.end * self.d].to_vec()),
             })
             .collect()
     }
@@ -113,6 +219,10 @@ mod tests {
         assert_eq!(ds.len(), 3);
         assert_eq!(ds.vec(1), &[3.0, 4.0]);
         assert_eq!(ds.dist(0, 1), 25.0);
+        assert_eq!(ds.vector(1), vec![3.0, 4.0]);
+        assert_eq!(ds.with_vec(2, |v| v.to_vec()), vec![1.0, 1.0]);
+        assert!(!ds.is_paged());
+        assert_eq!(ds.resident_bytes(), 6 * 4);
     }
 
     #[test]
@@ -135,6 +245,14 @@ mod tests {
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[0].len() + shards[1].len(), 5);
         assert_eq!(shards[1].vec(0), cat.vec(3));
+    }
+
+    #[test]
+    fn materialize_is_identity_on_owned() {
+        let ds = tiny();
+        let m = ds.materialize();
+        assert_eq!(m.raw(), ds.raw());
+        assert_eq!(m.metric, ds.metric);
     }
 
     #[test]

@@ -1,15 +1,39 @@
 //! The fixed-degree k-NN graph (paper §4): `n` lists of `k` neighbors,
 //! each sorted ascending by distance, each entry carrying the NEW/OLD
 //! flag that drives NN-Descent sampling.
+//!
+//! Like [`Dataset`](crate::dataset::Dataset), a graph's rows live
+//! behind one of two backings: fully in memory (`Owned`, every
+//! construction path — mutation is owned-only) or paged from a `.knng`
+//! v2 file through a shared
+//! [`BlockCache`](crate::dataset::store::BlockCache) (the
+//! block-residency serving path). [`KnnGraph::list`] /
+//! [`KnnGraph::list_mut`] borrow and exist only for owned graphs;
+//! [`KnnGraph::neighbors_into`] copies a row's live prefix out and
+//! works on either backing (a borrow could dangle past the block's
+//! next eviction).
+//!
+//! # `.knng` format spec (mirrors the `.dsb` spec in
+//! [`crate::dataset::io`])
+//!
+//! **v2** (written by [`KnnGraph::save`]): magic 0x4B4E_4732 ("KNG2"),
+//! n, k, row_stride (= 8*k bytes), block_rows hint, then `n` rows of
+//! `k` entries, each `(id_with_flag: u32, dist: f32)` little-endian,
+//! row `u` at `20 + u*row_stride`. **v1** (legacy; read-only, written
+//! by [`KnnGraph::save_v1`]): magic 0x4B4E_4731 ("KNG1"), n, k, then
+//! the same entry stream. Both readers validate the header against the
+//! actual file length on open.
 
 pub mod concurrent;
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
+use crate::dataset::store::{Block, BlockCache, PagedRows, DEFAULT_BLOCK_BYTES, PAGED_HANDLE_BYTES};
 use crate::dataset::Dataset;
 use crate::util::rng::Rng;
 
@@ -19,6 +43,13 @@ pub const EMPTY: u32 = u32::MAX;
 /// Flag bit stored in the serialized id (ids stay < 2^31; the paper's
 /// largest benchmark is 1e9 < 2^31).
 const FLAG_BIT: u32 = 1 << 31;
+
+const KNNG_MAGIC_V1: u32 = 0x4B4E_4731; // "KNG1"
+const KNNG_MAGIC_V2: u32 = 0x4B4E_4732; // "KNG2"
+const KNNG_V1_HEADER: u64 = 12;
+const KNNG_V2_HEADER: u64 = 20;
+/// On-disk bytes per neighbor entry (u32 id_with_flag + f32 dist).
+const ENTRY_BYTES: usize = 8;
 
 /// One k-NN list entry.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -40,19 +71,58 @@ impl Neighbor {
     }
 }
 
+/// Where a graph's neighbor lists live.
+#[derive(Clone, Debug)]
+enum GraphRows {
+    Owned(Vec<Neighbor>),
+    Paged(PagedRows),
+}
+
 /// A fixed-degree approximate k-NN graph.
 #[derive(Clone, Debug)]
 pub struct KnnGraph {
     n: usize,
     k: usize,
-    lists: Vec<Neighbor>,
+    lists: GraphRows,
 }
 
 impl KnnGraph {
     /// All-empty graph.
     pub fn empty(n: usize, k: usize) -> Self {
         assert!(n > 0 && k > 0);
-        KnnGraph { n, k, lists: vec![Neighbor::empty(); n * k] }
+        KnnGraph { n, k, lists: GraphRows::Owned(vec![Neighbor::empty(); n * k]) }
+    }
+
+    /// True when lists are paged from disk rather than memory-resident.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.lists, GraphRows::Paged(_))
+    }
+
+    /// Bytes this graph holds resident itself (paged graphs keep only
+    /// a handle; their blocks are accounted by the shared cache).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.lists {
+            GraphRows::Owned(v) => v.len() * std::mem::size_of::<Neighbor>(),
+            GraphRows::Paged(_) => PAGED_HANDLE_BYTES,
+        }
+    }
+
+    #[inline]
+    fn owned(&self) -> &Vec<Neighbor> {
+        match &self.lists {
+            GraphRows::Owned(v) => v,
+            GraphRows::Paged(_) => {
+                panic!("borrowing row access on a paged graph; use neighbors_into")
+            }
+        }
+    }
+
+    #[inline]
+    fn owned_mut(&mut self) -> &mut Vec<Neighbor> {
+        match &mut self.lists {
+            GraphRows::Owned(v) => v,
+            GraphRows::Paged(_) => panic!("paged graphs are read-only"),
+        }
     }
 
     /// Paper Algorithm 1 lines 1–5: k random distinct neighbors per
@@ -90,14 +160,31 @@ impl KnnGraph {
     }
 
     /// The (sorted) neighbor list of `u`, including empty tail slots.
+    /// Owned backing only (a paged row cannot be borrowed past the
+    /// access — use [`KnnGraph::neighbors_into`]).
     #[inline]
     pub fn list(&self, u: usize) -> &[Neighbor] {
-        &self.lists[u * self.k..(u + 1) * self.k]
+        &self.owned()[u * self.k..(u + 1) * self.k]
     }
 
     #[inline]
     pub fn list_mut(&mut self, u: usize) -> &mut [Neighbor] {
-        &mut self.lists[u * self.k..(u + 1) * self.k]
+        let k = self.k;
+        &mut self.owned_mut()[u * k..(u + 1) * k]
+    }
+
+    /// Copy `u`'s live neighbor prefix (sorted, no empty slots) into
+    /// `out` (cleared first). Works on either backing — the serving hot
+    /// path's row accessor: on owned it is a short memcpy, on paged one
+    /// block-cache access plus the copy.
+    pub fn neighbors_into(&self, u: usize, out: &mut Vec<Neighbor>) {
+        out.clear();
+        match &self.lists {
+            GraphRows::Owned(_) => {
+                out.extend(self.list(u).iter().take_while(|e| !e.is_empty()).copied())
+            }
+            GraphRows::Paged(p) => p.neighbors_into(u, out),
+        }
     }
 
     /// Number of live entries in `u`'s list.
@@ -152,7 +239,7 @@ impl KnnGraph {
     /// φ(G) — Eq. 3: the sum of all neighbor distances. Monotonically
     /// non-increasing across NN-Descent iterations (Fig. 4 traces).
     pub fn phi(&self) -> f64 {
-        self.lists
+        self.owned()
             .iter()
             .filter(|e| !e.is_empty())
             .map(|e| e.dist as f64)
@@ -200,7 +287,7 @@ impl KnnGraph {
 
     /// Remap all neighbor ids through `f` (GGM id-space stitching).
     pub fn remap_ids(&mut self, f: impl Fn(u32) -> u32) {
-        for e in self.lists.iter_mut() {
+        for e in self.owned_mut().iter_mut() {
             if !e.is_empty() {
                 e.id = f(e.id);
             }
@@ -211,60 +298,173 @@ impl KnnGraph {
     /// ids are taken as-is. Used by GGM to join two sub-graphs.
     pub fn stack(&self, other: &KnnGraph) -> KnnGraph {
         assert_eq!(self.k, other.k);
-        let mut lists = self.lists.clone();
-        lists.extend_from_slice(&other.lists);
-        KnnGraph { n: self.n + other.n, k: self.k, lists }
+        let mut lists = self.owned().clone();
+        lists.extend_from_slice(other.owned());
+        KnnGraph { n: self.n + other.n, k: self.k, lists: GraphRows::Owned(lists) }
     }
 
-    /// Serialize (binary: magic, n, k, then n*k (id_with_flag, dist)).
+    /// Serialize entry `e` into its on-disk 8 bytes.
+    fn encode_entry(e: &Neighbor, out: &mut Vec<u8>) {
+        let id = if e.is_empty() {
+            EMPTY
+        } else {
+            e.id | if e.new { FLAG_BIT } else { 0 }
+        };
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&e.dist.to_le_bytes());
+    }
+
+    /// Serialize in the `.knng` v2 fixed-stride layout (see the module
+    /// spec). Rows are staged into bulk buffers, not written entry by
+    /// entry.
     pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
         let mut w = BufWriter::new(File::create(path.as_ref())?);
-        w.write_all(&0x4B4E_4731u32.to_le_bytes())?; // "KNG1"
+        let row_stride = (self.k * ENTRY_BYTES) as u32;
+        let block_rows = (DEFAULT_BLOCK_BYTES as u32 / row_stride).max(1);
+        w.write_all(&KNNG_MAGIC_V2.to_le_bytes())?;
         w.write_all(&(self.n as u32).to_le_bytes())?;
         w.write_all(&(self.k as u32).to_le_bytes())?;
-        for e in &self.lists {
-            let id = if e.is_empty() {
-                EMPTY
-            } else {
-                e.id | if e.new { FLAG_BIT } else { 0 }
-            };
-            w.write_all(&id.to_le_bytes())?;
-            w.write_all(&e.dist.to_le_bytes())?;
+        w.write_all(&row_stride.to_le_bytes())?;
+        w.write_all(&block_rows.to_le_bytes())?;
+        self.write_entries_bulk(&mut w)
+    }
+
+    /// Serialize in the legacy v1 layout (compatibility coverage; new
+    /// files should use [`KnnGraph::save`]).
+    pub fn save_v1(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let mut w = BufWriter::new(File::create(path.as_ref())?);
+        w.write_all(&KNNG_MAGIC_V1.to_le_bytes())?;
+        w.write_all(&(self.n as u32).to_le_bytes())?;
+        w.write_all(&(self.k as u32).to_le_bytes())?;
+        self.write_entries_bulk(&mut w)
+    }
+
+    fn write_entries_bulk(&self, w: &mut impl Write) -> crate::Result<()> {
+        const CHUNK_ENTRIES: usize = 32 * 1024; // 256 KiB staging buffer
+        let lists = self.owned();
+        let mut buf = Vec::with_capacity(CHUNK_ENTRIES.min(lists.len()) * ENTRY_BYTES);
+        for chunk in lists.chunks(CHUNK_ENTRIES) {
+            buf.clear();
+            for e in chunk {
+                Self::encode_entry(e, &mut buf);
+            }
+            w.write_all(&buf)?;
         }
         Ok(())
     }
 
-    pub fn load(path: impl AsRef<Path>) -> crate::Result<KnnGraph> {
-        let mut r = BufReader::new(
-            File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?,
-        );
-        let mut b4 = [0u8; 4];
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != 0x4B4E_4731 {
-            bail!("not a knn-graph file: {:?}", path.as_ref());
-        }
-        r.read_exact(&mut b4)?;
-        let n = u32::from_le_bytes(b4) as usize;
-        r.read_exact(&mut b4)?;
-        let k = u32::from_le_bytes(b4) as usize;
-        let mut lists = Vec::with_capacity(n * k);
-        for _ in 0..n * k {
-            r.read_exact(&mut b4)?;
-            let raw = u32::from_le_bytes(b4);
-            r.read_exact(&mut b4)?;
-            let dist = f32::from_le_bytes(b4);
-            if raw == EMPTY {
-                lists.push(Neighbor::empty());
-            } else {
-                lists.push(Neighbor {
-                    id: raw & !FLAG_BIT,
-                    dist,
-                    new: raw & FLAG_BIT != 0,
-                });
+    /// Parse a `.knng` header (either version) and validate the file
+    /// length against it. The probe / word-extraction / checked-length
+    /// machinery is shared with the `.dsb` reader
+    /// ([`crate::dataset::io`]), so hardening applied there covers both
+    /// mirrored formats.
+    fn read_header(file: &mut File, path: &Path) -> crate::Result<(u32, usize, usize, u64)> {
+        use crate::dataset::io::{check_file_len, expected_file_len, header_word, probe_header};
+        let (actual, head) = probe_header(file, path, KNNG_V2_HEADER as usize)?;
+        let word = |i: usize| header_word(&head, i);
+        match word(0) {
+            KNNG_MAGIC_V1 => {
+                anyhow::ensure!(
+                    head.len() as u64 >= KNNG_V1_HEADER,
+                    "truncated .knng header: {path:?}"
+                );
+                let (n, k) = (word(1) as usize, word(2) as usize);
+                check_file_len(
+                    path,
+                    actual,
+                    expected_file_len(path, KNNG_V1_HEADER, n, k.saturating_mul(ENTRY_BYTES))?,
+                    &format!("v1, n={n} k={k}"),
+                )?;
+                Ok((1, n, k, KNNG_V1_HEADER))
             }
+            KNNG_MAGIC_V2 => {
+                anyhow::ensure!(
+                    head.len() as u64 >= KNNG_V2_HEADER,
+                    "truncated .knng header: {path:?}"
+                );
+                let (n, k) = (word(1) as usize, word(2) as usize);
+                let row_stride = word(3) as usize;
+                anyhow::ensure!(
+                    row_stride == k.saturating_mul(ENTRY_BYTES),
+                    "{path:?}: row stride {row_stride} != 8*k — unsupported layout"
+                );
+                check_file_len(
+                    path,
+                    actual,
+                    expected_file_len(path, KNNG_V2_HEADER, n, row_stride)?,
+                    &format!("v2, n={n} k={k} stride={row_stride}"),
+                )?;
+                Ok((2, n, k, KNNG_V2_HEADER))
+            }
+            _ => bail!("not a knn-graph file: {path:?}"),
         }
-        Ok(KnnGraph { n, k, lists })
     }
+
+    /// Read a `.knng` (v1 or v2) fully into memory.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<KnnGraph> {
+        let path = path.as_ref();
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let (_, n, k, data_off) = Self::read_header(&mut file, path)?;
+        file.seek(SeekFrom::Start(data_off))?;
+        let mut r = BufReader::new(file);
+        let mut bytes = vec![0u8; n * k * ENTRY_BYTES];
+        r.read_exact(&mut bytes)?;
+        let lists = decode_entries(&bytes);
+        Ok(KnnGraph { n, k, lists: GraphRows::Owned(lists) })
+    }
+
+    /// Open a `.knng` for paged row access through `cache` (nothing
+    /// read eagerly beyond the header). v1 files fall back to the
+    /// fully-resident owned path, mirroring
+    /// [`crate::dataset::io::read_dsb_paged`].
+    pub fn load_paged(path: impl AsRef<Path>, cache: &Arc<BlockCache>) -> crate::Result<KnnGraph> {
+        let path = path.as_ref();
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let (version, n, k, data_off) = Self::read_header(&mut file, path)?;
+        if version == 1 {
+            return Self::load(path);
+        }
+        let rows = PagedRows::new(
+            file,
+            path.to_path_buf(),
+            data_off,
+            n,
+            k * ENTRY_BYTES,
+            k,
+            cache,
+            decode_neigh_block,
+        );
+        Ok(KnnGraph { n, k, lists: GraphRows::Paged(rows) })
+    }
+
+    /// The paged backing's cache namespace id, if paged (lets the shard
+    /// store drop a re-saved shard's stale blocks).
+    pub(crate) fn block_store_id(&self) -> Option<u64> {
+        match &self.lists {
+            GraphRows::Owned(_) => None,
+            GraphRows::Paged(p) => Some(p.store_id()),
+        }
+    }
+}
+
+fn decode_entries(bytes: &[u8]) -> Vec<Neighbor> {
+    bytes
+        .chunks_exact(ENTRY_BYTES)
+        .map(|c| {
+            let raw = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let dist = f32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+            if raw == EMPTY {
+                Neighbor::empty()
+            } else {
+                Neighbor { id: raw & !FLAG_BIT, dist, new: raw & FLAG_BIT != 0 }
+            }
+        })
+        .collect()
+}
+
+/// Decode a raw `.knng` v2 block payload into neighbor entries.
+fn decode_neigh_block(bytes: &[u8]) -> Block {
+    Block::Neigh(decode_entries(bytes))
 }
 
 #[cfg(test)]
@@ -388,6 +588,83 @@ mod tests {
         for u in 0..g.n() {
             assert_eq!(back.list(u), g.list(u));
         }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_v1_load_roundtrip_and_truncation_errors() {
+        let ds = synth::uniform(25, 4, 11);
+        let mut rng = Rng::new(9);
+        let g = KnnGraph::random_init(&ds, 5, &mut rng);
+        let dir = std::env::temp_dir().join(format!(
+            "gnnd-graph-fmt-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("legacy.knng");
+        g.save_v1(&p).unwrap();
+        let back = KnnGraph::load(&p).unwrap();
+        for u in 0..g.n() {
+            assert_eq!(back.list(u), g.list(u));
+        }
+        // v1 paged open falls back to the owned path
+        let cache = crate::dataset::store::BlockCache::new(0, 256);
+        let paged = KnnGraph::load_paged(&p, &cache).unwrap();
+        assert!(!paged.is_paged());
+        // truncated files (both versions) name the path and sizes
+        for v2 in [true, false] {
+            let p = dir.join(if v2 { "t2.knng" } else { "t1.knng" });
+            if v2 {
+                g.save(&p).unwrap();
+            } else {
+                g.save_v1(&p).unwrap();
+            }
+            let full = std::fs::read(&p).unwrap();
+            std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+            let err = format!("{:#}", KnnGraph::load(&p).unwrap_err());
+            assert!(
+                err.contains("truncated") && err.contains("bytes"),
+                "unhelpful truncation error: {err}"
+            );
+            assert!(KnnGraph::load_paged(&p, &cache).is_err());
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn paged_graph_matches_owned_across_block_boundaries() {
+        let ds = synth::uniform(40, 4, 12);
+        let mut rng = Rng::new(10);
+        let g = KnnGraph::random_init(&ds, 6, &mut rng);
+        let dir = std::env::temp_dir().join(format!(
+            "gnnd-graph-paged-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.knng");
+        g.save(&p).unwrap();
+        // row stride = 48 bytes; 100-byte blocks -> 2 rows per block
+        // (k does not divide the block size), short tail block
+        let cache = crate::dataset::store::BlockCache::new(0, 100);
+        let paged = KnnGraph::load_paged(&p, &cache).unwrap();
+        assert!(paged.is_paged());
+        assert_eq!((paged.n(), paged.k()), (g.n(), g.k()));
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        for u in 0..g.n() {
+            paged.neighbors_into(u, &mut got);
+            g.neighbors_into(u, &mut want);
+            assert_eq!(got, want, "row {u}");
+        }
+        assert!(cache.stats().fetches > 1);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -11,12 +11,14 @@
 //! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
 //! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
-//!                   [--memory-budget MB] [--search-threads N])
+//!                   [--memory-budget MB] [--residency shard|block] [--block-size KiB]
+//!                   [--search-threads N])
 //!                   (--query-id N | --queries q.dsb [--out res.ivecs])
 //!                   [--k 10] [--ef 64] [--entries 8] [--entry-strategy random|kmeans]
 //!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
 //! gnnd serve-bench  (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
-//!                   [--memory-budget MB] [--search-threads N] [--data data.dsb])
+//!                   [--memory-budget MB] [--residency shard|block] [--block-size KiB]
+//!                   [--search-threads N] [--data data.dsb])
 //!                   [--k 10] [--ef 8,16,32,64,128]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
 //!                   [--arrival-rate R] [--arrival poisson|uniform]
@@ -39,13 +41,20 @@
 //! (`--shards`, scatter-gather across the per-shard graphs;
 //! `--probe-shards` limits each query to the P nearest shards by
 //! centroid, clamped to the manifest shard count). Shard residency is
-//! managed: `--memory-budget <MB>` caps resident shard bytes (LRU
-//! eviction, 0 = unbounded) so shard directories larger than RAM stay
-//! servable, and `--search-threads <N>` fans the scatter phase across
-//! a persistent worker pool spawned once at open (0 clamps to 1 with a
-//! warning). `serve-bench --shards` prints the residency counters
-//! (hits/misses/evictions/hit rate) and folds them — plus the sweep
-//! rows as a `"serve"` block — into the directory's `stats.json`.
+//! managed: `--memory-budget <MB>` caps resident bytes (LRU eviction,
+//! 0 = unbounded) so shard directories larger than RAM stay servable.
+//! `--residency` picks the granularity: `shard` (default) faults in
+//! whole `.dsb`/`.knng` pairs; `block` serves shards straight from
+//! disk in `--block-size <KiB>` (default 64) row-aligned blocks
+//! through a shared budget-capped block cache — cold-start cost
+//! proportional to the rows a query actually visits, budgets smaller
+//! than one shard allowed, results bit-identical either way.
+//! `--search-threads <N>` fans the scatter phase across a persistent
+//! worker pool spawned once at open (0 clamps to 1 with a warning).
+//! `serve-bench --shards` prints the residency counters
+//! (hits/misses/evictions/hit rate, block fetches, bytes read,
+//! doorkeeper rejections) and folds them — plus the sweep rows as a
+//! `"serve"` block — into the directory's `stats.json`.
 //!
 //! Flat `key=value` config files (see `configs/`) plus `--set` overrides
 //! configure every GnndParams knob; `--set engine=pjrt` switches the
@@ -60,7 +69,9 @@ use gnnd::config::{ConfigMap, GnndParams};
 use gnnd::dataset::{groundtruth, io, synth};
 use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
-use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ShardStore, STATS_FILE};
+use gnnd::merge::outofcore::{
+    build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardStore, STATS_FILE,
+};
 use gnnd::metrics::{recall_at, Report};
 use gnnd::search::sharded::{clamp_probe, clamp_search_threads, ShardedIndex};
 use gnnd::search::{batch::BatchExecutor, serve, AnnIndex, SearchIndex, SearchParams};
@@ -405,9 +416,11 @@ fn serve_block(report: &Report, cfg: &serve::ServeConfig) -> Json {
 /// Open `--shards <dir>` with the serving knobs shared by `search` and
 /// `serve-bench`: `--probe-shards` (validated against the manifest
 /// shard count — phantom shards clamp with a warning), `--memory-budget
-/// <MB>` (resident-shard byte budget, 0 = unbounded) and
-/// `--search-threads <N>` (persistent scatter pool participants,
-/// 1 = sequential; 0 clamps to 1 with a warning).
+/// <MB>` (resident byte budget, 0 = unbounded), `--residency
+/// shard|block` with `--block-size <KiB>` (block-granular paging of
+/// shard files under the same budget) and `--search-threads <N>`
+/// (persistent scatter pool participants, 1 = sequential; 0 clamps to
+/// 1 with a warning).
 fn open_sharded_index(
     args: &Args,
     dir: &str,
@@ -420,6 +433,21 @@ fn open_sharded_index(
     let budget_mb: f64 = args.parse_or("memory-budget", 0.0f64)?;
     anyhow::ensure!(budget_mb >= 0.0, "--memory-budget must be >= 0");
     let budget_bytes = (budget_mb * 1024.0 * 1024.0) as usize;
+    let mode: ResidencyMode = args.parse_or("residency", ResidencyMode::Shard)?;
+    let block_kib: usize = args.parse_or("block-size", 0usize)?;
+    let mode = match (mode, block_kib) {
+        (ResidencyMode::Block { .. }, kib) if kib > 0 => {
+            ResidencyMode::Block { block_bytes: kib * 1024 }
+        }
+        (m, kib) => {
+            if kib > 0 {
+                eprintln!(
+                    "[search] warning: --block-size only applies with --residency block; ignored"
+                );
+            }
+            m
+        }
+    };
     let threads: usize = args.parse_or("search-threads", 1usize)?;
     // 0 threads would mean "no scatter workers at all"; previously only
     // scatter_threads()'s max(1) masked it at query time — clamp where
@@ -431,7 +459,7 @@ fn open_sharded_index(
              clamped to {threads} (sequential scatter)"
         );
     }
-    let store = ShardStore::with_budget(dir, budget_bytes)?;
+    let store = ShardStore::with_residency(dir, budget_bytes, mode)?;
     let manifest = store.load_manifest()?;
     let probe: usize = args.parse_or("probe-shards", 0usize)?;
     let (probe, clamped) = clamp_probe(probe, manifest.shards);
@@ -442,9 +470,12 @@ fn open_sharded_index(
             manifest.shards, manifest.shards
         );
     }
-    // a query pins the shards it probes, so peak residency is bounded
-    // by the probe set, not the budget; warn when the two disagree
-    if budget_bytes > 0 {
+    // under whole-shard residency a query pins the full data of every
+    // probed shard, so peak residency is bounded by the probe set, not
+    // the budget; warn when the two disagree. Block residency pins
+    // only cheap paged handles — no warning needed (that configuration
+    // is exactly what --residency block is for).
+    if budget_bytes > 0 && mode == ResidencyMode::Shard {
         let eff = if probe == 0 { manifest.shards } else { probe };
         let mut sizes: Vec<usize> = (0..manifest.shards).map(|s| manifest.shard_bytes(s)).collect();
         sizes.sort_unstable_by(|a, b| b.cmp(a));
@@ -453,7 +484,7 @@ fn open_sharded_index(
             eprintln!(
                 "[search] warning: probing {eff} shards can pin ~{:.1} MB per query, above \
                  --memory-budget {budget_mb} MB; peak residency is bounded by the probe set \
-                 — lower --probe-shards to stay within the budget",
+                 — lower --probe-shards or switch to --residency block",
                 probed_bytes as f64 / (1024.0 * 1024.0)
             );
         }

@@ -220,6 +220,12 @@ pub struct SearchScratch {
     /// Scatter-gather accumulator: per-shard top-k candidates awaiting
     /// the final k-way merge ([`sharded::ShardedIndex`] only).
     pub(crate) shard_topk: Vec<(F32, u32)>,
+    /// Neighbor-row staging buffer for the sharded walk: rows are
+    /// copied out of the graph backing ([`sharded::ShardedIndex`]
+    /// only) — a paged row cannot be borrowed across the expansion
+    /// loop, and copying keeps the owned and paged walks on one code
+    /// path.
+    pub(crate) nbuf: Vec<crate::graph::Neighbor>,
     /// Shard routing order: (query-to-centroid distance, shard).
     pub(crate) shard_rank: Vec<(F32, usize)>,
     /// Per-query shard pin table: resolved residency handles, released
@@ -243,6 +249,7 @@ impl SearchScratch {
             results: BinaryHeap::new(),
             buf: Vec::new(),
             shard_topk: Vec::new(),
+            nbuf: Vec::new(),
             shard_rank: Vec::new(),
             shard_pins: Vec::new(),
             shard_probed: Vec::new(),

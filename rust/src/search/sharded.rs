@@ -29,12 +29,15 @@
 //! (cross-shard edges into unprobed shards are skipped
 //! deterministically), so results depend only on the probe set, never
 //! on what happened to be resident — a budget-constrained index
-//! returns bit-identical results to an unbounded one. The flip side:
-//! a query only ever pins probed shards, so *peak* residency is
-//! bounded by the probe set, not the budget — serving a
-//! larger-than-RAM store requires `probe_shards` small enough that
-//! the probed set fits memory (the CLI warns when probe and budget
-//! disagree).
+//! returns bit-identical results to an unbounded one. Under
+//! whole-shard residency ([`ResidencyMode::Shard`]) a query pins the
+//! full data of every probed shard, so *peak* residency is bounded by
+//! the probe set, not the budget (the CLI warns when probe and budget
+//! disagree). Under block residency ([`ResidencyMode::Block`]) pins
+//! hold only cheap paged handles and rows page in block-by-block
+//! through a shared budget-capped cache, so even a budget smaller
+//! than one shard serves — cold-start cost is proportional to rows
+//! actually visited, not shard size.
 //!
 //! With `search_threads > 1` the scatter phase fans the probed shards
 //! across a **persistent** [`ScatterPool`]: `search_threads - 1`
@@ -54,10 +57,12 @@ use crate::config::Metric;
 use crate::dataset::groundtruth::ordered::F32;
 use crate::dataset::Dataset;
 use crate::graph::KnnGraph;
-use crate::merge::outofcore::{shard_centroid, ResidencyStats, ResidentShard, ShardStore};
+use crate::merge::outofcore::{
+    shard_centroid, ResidencyMode, ResidencyStats, ResidentShard, ShardStore,
+};
 
 use super::pool::{ScatterJob, ScatterPool};
-use super::{select_entries, AnnIndex, SearchParams, SearchScratch};
+use super::{select_entries, AnnIndex, EntryStrategy, SearchParams, SearchScratch};
 
 /// Per-worker scatter output: (dist_evals, hops, shard top-k lists).
 pub(crate) type ScatterOut = (usize, usize, Vec<(F32, u32)>);
@@ -245,10 +250,12 @@ impl ShardCore {
                 break;
             }
             hops += 1;
-            for e in home.graph.list((u - lo) as usize) {
-                if e.is_empty() {
-                    break;
-                }
+            // copy the row out of the graph backing (owned: a short
+            // memcpy; paged: one block-cache access) — a borrow could
+            // not be held across the expansion's own shard resolves
+            let mut nbuf = std::mem::take(&mut scratch.nbuf);
+            home.graph.neighbors_into((u - lo) as usize, &mut nbuf);
+            for e in &nbuf {
                 if !scratch.visited.insert(e.id) {
                     continue;
                 }
@@ -276,6 +283,7 @@ impl ShardCore {
                     }
                 }
             }
+            scratch.nbuf = nbuf;
             if beam_width > 0 && scratch.frontier.len() > 4 * beam_width {
                 scratch.buf.clear();
                 for _ in 0..beam_width {
@@ -376,7 +384,9 @@ impl ShardedIndex {
 
     /// Open with the serving knobs: `memory_budget_bytes` caps resident
     /// shard bytes (0 = unbounded) and `search_threads` sizes the
-    /// persistent scatter pool (<= 1 = sequential).
+    /// persistent scatter pool (<= 1 = sequential). Residency is
+    /// whole-shard; see [`ShardedIndex::open_with_residency`] for
+    /// block-granular serving.
     pub fn open_with(
         dir: impl AsRef<Path>,
         params: SearchParams,
@@ -384,7 +394,30 @@ impl ShardedIndex {
         memory_budget_bytes: usize,
         search_threads: usize,
     ) -> crate::Result<Self> {
-        let store = ShardStore::with_budget(dir, memory_budget_bytes)?;
+        Self::open_with_residency(
+            dir,
+            params,
+            probe_shards,
+            memory_budget_bytes,
+            search_threads,
+            ResidencyMode::Shard,
+        )
+    }
+
+    /// Open with an explicit [`ResidencyMode`]: `ResidencyMode::Block`
+    /// serves shards straight from disk in fixed-size blocks (the byte
+    /// budget then caps *blocks across all shards*, so budgets smaller
+    /// than one shard — unservable under whole-shard residency — work,
+    /// with bit-identical results to any other configuration).
+    pub fn open_with_residency(
+        dir: impl AsRef<Path>,
+        params: SearchParams,
+        probe_shards: usize,
+        memory_budget_bytes: usize,
+        search_threads: usize,
+        mode: ResidencyMode,
+    ) -> crate::Result<Self> {
+        let store = ShardStore::with_residency(dir, memory_budget_bytes, mode)?;
         Self::from_store(store, params, probe_shards, search_threads)
     }
 
@@ -429,14 +462,31 @@ impl ShardedIndex {
             );
             expect += ds.len();
             // the shards' global id space must be closed over the
-            // manifest total — corrupt graphs fail here, not mid-query
-            check_global_ids(graph, offset, manifest.total)
-                .map_err(|e| e.context(format!("shard {s} graph")))?;
+            // manifest total — corrupt graphs fail here, not mid-query.
+            // A *paged* graph is exempt: walking every row would read
+            // the whole file and defeat the point of block residency
+            // (cold start proportional to rows visited); corrupt paged
+            // graphs instead fail at query time with a panic, like any
+            // store mutated underneath a live index
+            if !graph.is_paged() {
+                check_global_ids(graph, offset, manifest.total)
+                    .map_err(|e| e.context(format!("shard {s} graph")))?;
+            }
             // per-shard entry selection (shard-local ids -> global);
             // decorrelate the per-shard RNG streams with the shard id
             let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             let sp = params.clone().with_seed(params.seed ^ salt);
-            let mut entries = select_entries(ds, graph, &sp);
+            // k-means entry training needs the full shard matrix; for a
+            // paged shard, materialize a transient owned copy (open-time
+            // only — the random strategy, the default, reads no rows).
+            // The seeded RNG makes both routes pick identical entries
+            // for identical data, preserving owned-vs-paged parity.
+            let mut entries = if ds.is_paged() && sp.entry == EntryStrategy::KMeans {
+                let owned = ds.materialize();
+                select_entries(&owned, graph, &sp)
+            } else {
+                select_entries(ds, graph, &sp)
+            };
             for e in entries.iter_mut() {
                 *e += offset as u32;
             }
@@ -524,13 +574,15 @@ impl ShardedIndex {
 
     /// The full corpus re-assembled as one in-memory dataset (bench /
     /// ground-truth convenience; true deployments keep shards apart).
-    /// Streams shard by shard through the cache: peak extra memory is
-    /// one shard, not a second copy of the whole corpus.
+    /// Streams shard by shard through the cache (rows are copied out
+    /// through the backing accessor, so paged shards stream block by
+    /// block): peak extra memory is one shard, not a second copy of
+    /// the whole corpus.
     pub fn concat_dataset(&self) -> crate::Result<Dataset> {
         let mut data = Vec::with_capacity(self.core.total * self.core.d);
         for s in 0..self.core.meta.len() {
             let h = self.core.store.get_shard(s)?;
-            data.extend_from_slice(h.ds.raw());
+            h.ds.extend_flat_into(&mut data);
         }
         self.core.store.evict_to_budget();
         Ok(Dataset::new("sharded", self.core.d, self.core.metric, data))
@@ -581,7 +633,7 @@ impl AnnIndex for ShardedIndex {
                 .get_shard(s)
                 .unwrap_or_else(|e| panic!("shard {s} unreadable (store corrupt?): {e:#}")),
         };
-        h.ds.vec(id as usize - self.core.meta[s].offset).to_vec()
+        h.ds.vector(id as usize - self.core.meta[s].offset)
     }
 
     fn default_ef(&self) -> usize {
@@ -594,11 +646,13 @@ impl AnnIndex for ShardedIndex {
             b => format!("{:.1}MB", b as f64 / (1024.0 * 1024.0)),
         };
         format!(
-            "sharded(n={}, shards={}, probe={}, budget={}, scatter_threads={}, pool_workers={})",
+            "sharded(n={}, shards={}, probe={}, budget={}, residency={}, scatter_threads={}, \
+             pool_workers={})",
             self.core.total,
             self.core.meta.len(),
             self.probe(),
             budget,
+            self.core.store.mode(),
             self.scatter_threads(),
             self.pool_workers()
         )

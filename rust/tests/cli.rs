@@ -283,6 +283,66 @@ fn cli_search_threads_zero_is_clamped_and_open_loop_serve_bench_reports_queue() 
 }
 
 #[test]
+fn cli_block_residency_serves_under_sub_shard_budget() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let shard_dir = dir.join("shards").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "600", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "ooc-build", "--data", &data, "--dir", &shard_dir, "--shards", "4",
+        "--workers", "2", "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "ooc-build failed: {out}");
+
+    // the same query under whole-shard (unbounded) and block residency
+    // with a budget far below one shard: identical answer lines, and
+    // the block run must not emit the probe-vs-budget pin warning
+    // (block pins are handles, not shard data)
+    let q = ["search", "--shards", &shard_dir, "--query-id", "7", "--k", "5", "--ef", "32"];
+    let (ok, out_shard) = run(&q);
+    assert!(ok, "shard-mode search failed: {out_shard}");
+    let (ok, out_block) = run(&[
+        "search", "--shards", &shard_dir, "--query-id", "7", "--k", "5", "--ef", "32",
+        "--residency", "block", "--memory-budget", "0.02", "--block-size", "4",
+    ]);
+    assert!(ok, "block-mode search failed: {out_block}");
+    assert!(!out_block.contains("can pin"), "block mode must not warn about pins: {out_block}");
+    let answers = |text: &str| -> Vec<String> {
+        text.lines().filter(|l| l.contains("dist=")).map(|l| l.trim().to_string()).collect()
+    };
+    let (a, b) = (answers(&out_shard), answers(&out_block));
+    assert_eq!(a.len(), 5, "unexpected result shape: {out_shard}");
+    assert_eq!(a, b, "block residency changed the answers:\n{out_shard}\nvs\n{out_block}");
+
+    // serve-bench in block mode folds block counters into stats.json
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--data", &data, "--ef", "32",
+        "--queries", "60", "--distinct", "30", "--threads", "2",
+        "--residency", "block", "--memory-budget", "0.05",
+    ]);
+    assert!(ok, "block serve-bench failed: {out}");
+    assert!(out.contains("residency=block"), "describe missing mode: {out}");
+    assert!(out.contains("\"mode\": \"block\"") || out.contains("\"mode\":\"block\""),
+        "residency json missing mode: {out}");
+    let stats_text =
+        std::fs::read_to_string(std::path::Path::new(&shard_dir).join("stats.json")).unwrap();
+    for key in ["\"block_fetches\"", "\"bytes_read\"", "\"rejected_admissions\""] {
+        assert!(stats_text.contains(key), "stats.json missing {key}: {stats_text}");
+    }
+
+    // an unknown residency mode is rejected
+    let (ok, out) = run(&[
+        "search", "--shards", &shard_dir, "--query-id", "1", "--residency", "mmap",
+    ]);
+    assert!(!ok, "unknown residency mode must be rejected: {out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_input() {
     let (ok, _) = run(&["bogus-subcommand"]);
     assert!(!ok);

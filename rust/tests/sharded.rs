@@ -9,8 +9,11 @@ use std::path::PathBuf;
 use gnnd::config::Metric;
 use gnnd::dataset::{groundtruth, synth};
 use gnnd::gnnd::{GnndParams, NativeEngine};
+use gnnd::dataset::io;
+use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{
-    build_out_of_core, OutOfCoreConfig, ShardManifest, ShardStore, MANIFEST_FILE, STATS_FILE,
+    build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardManifest, ShardStore, MANIFEST_FILE,
+    STATS_FILE,
 };
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{AnnIndex, SearchIndex, SearchParams};
@@ -363,6 +366,167 @@ fn parallel_scatter_matches_sequential() {
         assert_eq!(s1.dist_evals, s2.dist_evals, "eval counts diverged on query {q}");
         assert_eq!(s1.hops, s2.hops, "hop counts diverged on query {q}");
     }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The tentpole acceptance grid: block-granular paged serving is
+/// *bit-identical* to the owned (whole-shard, unbounded) path across
+/// probe x budget x threads — including budgets smaller than a single
+/// shard, a configuration whole-shard residency could not serve
+/// without pinning past the budget on every query.
+#[test]
+fn paged_parity_with_owned_across_probe_budget_threads() {
+    let ds = synth::clustered(480, 8, 49);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("pagedparity");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    let manifest = ShardStore::new(&dir).unwrap().load_manifest().unwrap();
+    let sub_shard = manifest.shard_bytes(0) / 3; // smaller than ONE shard
+    let half = manifest.estimated_resident_bytes() / 2;
+
+    let sp = SearchParams::default().with_ef(48);
+    for probe in [0usize, 1, 2] {
+        let owned = ShardedIndex::open_with(&dir, sp.clone(), probe, 0, 1).unwrap();
+        let mut s_own = owned.make_scratch();
+        let mut o_own = Vec::new();
+        for budget in [0usize, sub_shard, half] {
+            for threads in [1usize, 4] {
+                let paged = ShardedIndex::open_with_residency(
+                    &dir,
+                    sp.clone(),
+                    probe,
+                    budget,
+                    threads,
+                    ResidencyMode::block(),
+                )
+                .unwrap();
+                let mut s_pg = paged.make_scratch();
+                let mut o_pg = Vec::new();
+                for q in (0..ds.len()).step_by(29) {
+                    owned.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_own,
+                        &mut o_own,
+                    );
+                    paged.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_pg,
+                        &mut o_pg,
+                    );
+                    assert_eq!(
+                        o_own, o_pg,
+                        "paged serving diverged (probe={probe} budget={budget} \
+                         threads={threads}) on query {q}"
+                    );
+                    assert_eq!(
+                        s_own.dist_evals, s_pg.dist_evals,
+                        "eval counts diverged (probe={probe} budget={budget} \
+                         threads={threads}) on query {q}"
+                    );
+                }
+                let res = paged.residency();
+                assert_eq!(res.mode, "block");
+                assert!(res.block_fetches > 0, "no blocks paged in: {res:?}");
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The partial-read acceptance shape: a low-probe serve run over a
+/// block-residency store must read strictly fewer bytes off disk than
+/// the store's total payload — whole-shard residency had to read
+/// everything the probe touched; block residency reads only the rows
+/// the walks visit.
+#[test]
+fn block_residency_reads_less_than_total_bytes() {
+    let ds = synth::clustered(600, 8, 50);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("partialread");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    let manifest = ShardStore::new(&dir).unwrap().load_manifest().unwrap();
+    // total on-disk payload (vectors + graph entries) across shards
+    let total: u64 = (0..manifest.shards)
+        .map(|s| (manifest.shard_len(s) * (manifest.d * 4 + manifest.k * 8)) as u64)
+        .sum();
+
+    // small blocks so reads track visited rows closely; probe=1 keeps
+    // each query inside its nearest shard
+    let sp = SearchParams::default().with_ef(32);
+    let index = ShardedIndex::open_with_residency(
+        &dir,
+        sp,
+        1,
+        256 * 1024,
+        1,
+        ResidencyMode::Block { block_bytes: 1024 },
+    )
+    .unwrap();
+    let mut scratch = index.make_scratch();
+    let mut out = Vec::new();
+    // two queries at probe=1 touch at most 2 of the 4 shards' blocks,
+    // so even a walk that visits a whole shard stays under the total
+    for q in [0usize, 400] {
+        index.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut scratch, &mut out);
+        assert!(!out.is_empty());
+    }
+    let res = index.residency();
+    assert!(res.block_fetches > 0);
+    assert!(
+        res.bytes_read < total,
+        "low-probe block serving read {} bytes >= total payload {total} — \
+         partial-shard reads are not happening: {res:?}",
+        res.bytes_read
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Legacy v1 shard files under `--residency block` fall back to owned
+/// loads per shard and still return results identical to a v2 store.
+#[test]
+fn block_residency_serves_v1_stores_identically() {
+    let ds = synth::clustered(400, 6, 51);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(5);
+    let cfg = OutOfCoreConfig { shards: 3, workers: 1, params };
+    let dir = tmpdir("v1compat");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(48);
+    let v2 = ShardedIndex::open_with_residency(&dir, sp.clone(), 0, 0, 1, ResidencyMode::block())
+        .unwrap();
+    let mut s2 = v2.make_scratch();
+    let mut o2 = Vec::new();
+    let mut answers = Vec::new();
+    for q in (0..ds.len()).step_by(43) {
+        v2.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s2, &mut o2);
+        answers.push(o2.clone());
+    }
+    drop(v2);
+
+    // rewrite every shard pair in the legacy v1 layouts
+    for s in 0..3 {
+        let shard = io::read_dsb(dir.join(format!("shard_{s}.dsb"))).unwrap();
+        io::write_dsb_v1(&shard, dir.join(format!("shard_{s}.dsb"))).unwrap();
+        let g = KnnGraph::load(dir.join(format!("graph_{s}.knng"))).unwrap();
+        g.save_v1(dir.join(format!("graph_{s}.knng"))).unwrap();
+    }
+    let v1 = ShardedIndex::open_with_residency(&dir, sp, 0, 0, 1, ResidencyMode::block()).unwrap();
+    let mut s1 = v1.make_scratch();
+    let mut o1 = Vec::new();
+    for (row, q) in (0..ds.len()).step_by(43).enumerate() {
+        v1.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s1, &mut o1);
+        assert_eq!(o1, answers[row], "v1 fallback diverged on query {q}");
+    }
+    // v1 files cannot page: no block traffic, everything owned
+    assert_eq!(v1.residency().block_fetches, 0);
     std::fs::remove_dir_all(dir).ok();
 }
 
