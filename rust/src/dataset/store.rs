@@ -177,6 +177,7 @@ pub struct BlockCache {
     budget_bytes: usize,
     block_bytes: usize,
     inner: Mutex<BlockCacheInner>,
+    tele: BlockTele,
 }
 
 impl BlockCache {
@@ -193,7 +194,12 @@ impl BlockCache {
             let cap = (4 * budget_bytes / block_bytes).max(64);
             inner.door = Some(Doorkeeper::new(cap));
         }
-        Arc::new(BlockCache { budget_bytes, block_bytes, inner: Mutex::new(inner) })
+        Arc::new(BlockCache {
+            budget_bytes,
+            block_bytes,
+            inner: Mutex::new(inner),
+            tele: BlockTele::new(),
+        })
     }
 
     pub fn budget_bytes(&self) -> usize {
@@ -224,8 +230,10 @@ impl BlockCache {
             if let Some(slot) = c.blocks.remove(&key) {
                 c.resident_bytes -= slot.bytes;
                 c.evictions += 1;
+                self.tele.evictions.inc();
             }
         }
+        self.tele.resident_bytes.set(c.resident_bytes as i64);
     }
 
     /// The block under `key`, fetching via `fetch` on a miss (`fetch`
@@ -245,6 +253,8 @@ impl BlockCache {
             if let Some(slot) = c.blocks.get_mut(&key) {
                 slot.last_used = tick;
                 c.hits += 1;
+                tls_block_hit();
+                self.tele.hits.inc();
                 return Ok(Arc::clone(&slot.data));
             }
         }
@@ -254,6 +264,9 @@ impl BlockCache {
         let mut c = self.inner.lock().unwrap();
         c.fetches += 1;
         c.bytes_read += disk_bytes as u64;
+        tls_block_fetch();
+        self.tele.fetches.inc();
+        self.tele.bytes_read.add(disk_bytes as u64);
         c.tick += 1;
         let tick = c.tick;
         if let Some(slot) = c.blocks.get_mut(&key) {
@@ -283,11 +296,14 @@ impl BlockCache {
                     if let Some(slot) = c.blocks.remove(&v) {
                         c.resident_bytes -= slot.bytes;
                         c.evictions += 1;
+                        self.tele.evictions.inc();
                     }
                 }
             }
+            self.tele.resident_bytes.set(c.resident_bytes as i64);
         } else {
             c.rejected_admissions += 1;
+            self.tele.rejected_admissions.inc();
         }
         Ok(data)
     }
@@ -313,6 +329,64 @@ impl BlockCache {
 /// Mix a `(store, block)` key into the doorkeeper's u64 key space.
 fn block_key_hash((store, block): (u64, usize)) -> u64 {
     store.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (block as u64)
+}
+
+thread_local! {
+    /// Block-cache activity of *this thread*, bumped on every
+    /// [`BlockCache::get`] regardless of tracing. A shard walk runs
+    /// entirely on one thread, so a before/after read pair brackets
+    /// exactly that shard's block traffic — the per-shard
+    /// `block_fetches`/`block_hits` of a query trace, attributed
+    /// without plumbing a context handle through the row accessors.
+    static TLS_BLOCK: std::cell::Cell<(u64, u64)> = const { std::cell::Cell::new((0, 0)) };
+}
+
+/// This thread's cumulative `(hits, fetches)` across all block caches.
+/// Monotone; callers diff two reads to attribute a code region.
+pub fn thread_block_counters() -> (u64, u64) {
+    TLS_BLOCK.with(|c| c.get())
+}
+
+fn tls_block_hit() {
+    TLS_BLOCK.with(|c| {
+        let (h, f) = c.get();
+        c.set((h + 1, f));
+    });
+}
+
+fn tls_block_fetch() {
+    TLS_BLOCK.with(|c| {
+        let (h, f) = c.get();
+        c.set((h, f + 1));
+    });
+}
+
+/// Global-registry mirrors of the block-cache counters. The
+/// authoritative counts stay in [`BlockCacheInner`] under its mutex
+/// (and keep feeding `ResidencyStats`); these handles make the same
+/// events visible live through [`crate::telemetry::global`] snapshots
+/// mid-run. Handles are resolved once per cache, not per access.
+struct BlockTele {
+    hits: Arc<crate::telemetry::Counter>,
+    fetches: Arc<crate::telemetry::Counter>,
+    evictions: Arc<crate::telemetry::Counter>,
+    rejected_admissions: Arc<crate::telemetry::Counter>,
+    bytes_read: Arc<crate::telemetry::Counter>,
+    resident_bytes: Arc<crate::telemetry::Gauge>,
+}
+
+impl BlockTele {
+    fn new() -> Self {
+        let g = crate::telemetry::global();
+        BlockTele {
+            hits: g.counter("block_cache.hits"),
+            fetches: g.counter("block_cache.fetches"),
+            evictions: g.counter("block_cache.evictions"),
+            rejected_admissions: g.counter("block_cache.rejected_admissions"),
+            bytes_read: g.counter("block_cache.bytes_read"),
+            resident_bytes: g.gauge("block_cache.resident_bytes"),
+        }
+    }
 }
 
 /// File-backed fixed-stride rows served block-at-a-time through a

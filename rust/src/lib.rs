@@ -25,6 +25,11 @@
 //!   than RAM stay servable), [`search::batch`] fans multi-query
 //!   batches across worker threads, and [`search::serve`] benchmarks
 //!   the recall-vs-QPS operating curve of a deployment.
+//! * **Telemetry** ([`telemetry`]): a contention-free registry of named
+//!   work/latency counters, gauges and log2 histograms plus sampled
+//!   per-query scatter-gather traces — the live view of the paper's
+//!   scanning-rate argument, exported by `serve-bench` and inspected
+//!   with `gnnd trace`.
 //!
 //! Python is never on the construction path: after `make artifacts` the
 //! binary is self-contained.
@@ -58,6 +63,7 @@ pub mod merge;
 pub mod metrics;
 pub mod runtime;
 pub mod search;
+pub mod telemetry;
 pub mod util;
 
 pub use config::{EngineKind, Metric};

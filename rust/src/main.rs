@@ -24,6 +24,8 @@
 //!                   [--arrival-rate R] [--arrival poisson|uniform]
 //!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
 //!                   [--max-hops 0] [--search-seed S] [--seed S]
+//!                   [--trace-sample N] [--trace-out traces.jsonl] [--metrics-out m.jsonl]
+//! gnnd trace        traces.jsonl [--top 5]
 //! gnnd experiment   fig4|fig5|fig6|fig7|table2|all [--scale quick|standard|full]
 //! ```
 //!
@@ -54,7 +56,18 @@
 //! `serve-bench --shards` prints the residency counters
 //! (hits/misses/evictions/hit rate, block fetches, bytes read,
 //! doorkeeper rejections) and folds them — plus the sweep rows as a
-//! `"serve"` block — into the directory's `stats.json`.
+//! `"serve"` block and the full metrics-registry snapshot as a
+//! `"telemetry"` block — into the directory's `stats.json`.
+//!
+//! Observability ([`gnnd::telemetry`]): `serve-bench --trace-sample N`
+//! records a full per-query trace (route/scatter/gather spans with
+//! per-shard hops, distance evals and block traffic) for every Nth
+//! query, appended as JSON Lines to `--trace-out` (default
+//! `traces.jsonl`); `gnnd trace <file>` pretty-prints the collected
+//! traces. `--metrics-out <file>` writes one JSON line per sweep
+//! operating point with the cumulative registry snapshot and the
+//! per-point delta. Tracing is observation-only: results are
+//! bit-identical with it on or off.
 //!
 //! Flat `key=value` config files (see `configs/`) plus `--set` overrides
 //! configure every GnndParams knob; `--set engine=pjrt` switches the
@@ -75,6 +88,7 @@ use gnnd::merge::outofcore::{
 use gnnd::metrics::{recall_at, Report};
 use gnnd::search::sharded::{clamp_probe, clamp_search_threads, ShardedIndex};
 use gnnd::search::{batch::BatchExecutor, serve, AnnIndex, SearchIndex, SearchParams};
+use gnnd::telemetry::{self, trace::read_traces, trace::render_report, trace::TraceWriter};
 use gnnd::util::json::Json;
 use gnnd::util::timer::Timer;
 
@@ -157,7 +171,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "gnnd — GPU-architecture NN-Descent on a Rust+XLA stack\n\
-         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|eval|search|serve-bench|experiment> [flags]\n\
+         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|eval|search|serve-bench|trace|experiment> [flags]\n\
          see rust/src/main.rs header or README.md for full flag reference"
     );
 }
@@ -310,7 +324,13 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 seed: args.parse_or("seed", dcfg.seed)?,
                 arrival_rate,
                 arrival: args.parse_or("arrival", dcfg.arrival)?,
+                trace_sample: args.parse_or("trace-sample", dcfg.trace_sample)?,
             };
+            let mut sinks = serve::ServeSinks::default();
+            if cfg.trace_sample > 0 {
+                let trace_out = args.get("trace-out").unwrap_or("traces.jsonl");
+                sinks.trace = Some(TraceWriter::append_to(trace_out)?);
+            }
             let t = Timer::start();
             let report = match args.get("shards") {
                 Some(dir) => {
@@ -322,7 +342,7 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                         Some(p) => io::read_dsb(p)?,
                         None => index.concat_dataset()?,
                     };
-                    let report = serve::run_sweep_on(&index, &ds, &cfg)?;
+                    let report = serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?;
                     // serve-time residency counters: printed and folded
                     // into the directory's stats.json next to the
                     // build stats. The last queries' pins have released
@@ -334,8 +354,8 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                     // a side-file problem should not discard the sweep
                     match index.store().save_stats_with_residency(&res) {
                         Ok(()) => println!("[residency folded into {dir}/{STATS_FILE}]"),
-                        Err(e) => eprintln!(
-                            "[serve] warning: residency not folded into stats.json: {e:#}"
+                        Err(e) => telemetry::warn!(
+                            "serve: residency not folded into stats.json: {e:#}"
                         ),
                     }
                     // the sweep rows themselves (including the open-loop
@@ -345,8 +365,17 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                     let block = serve_block(&report, &cfg);
                     match index.store().save_stats_with_block("serve", block) {
                         Ok(()) => println!("[serve sweep folded into {dir}/{STATS_FILE}]"),
-                        Err(e) => eprintln!(
-                            "[serve] warning: sweep not folded into stats.json: {e:#}"
+                        Err(e) => telemetry::warn!(
+                            "serve: sweep not folded into stats.json: {e:#}"
+                        ),
+                    }
+                    // and the registry itself — counters, gauges and
+                    // histograms for the whole sweep in one snapshot
+                    let snap = telemetry::global().snapshot().to_json();
+                    match index.store().save_stats_with_block("telemetry", snap) {
+                        Ok(()) => println!("[telemetry folded into {dir}/{STATS_FILE}]"),
+                        Err(e) => telemetry::warn!(
+                            "serve: telemetry not folded into stats.json: {e:#}"
                         ),
                     }
                     report
@@ -355,14 +384,31 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                     let ds = io::read_dsb(args.req("data")?)?;
                     let g = KnnGraph::load(args.req("graph")?)?;
                     let index = SearchIndex::new(&ds, &g, cfg.params.clone())?;
-                    serve::run_sweep_on(&index, &ds, &cfg)?
+                    serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?
                 }
             };
             println!("{}", report.render());
+            if let Some(w) = sinks.trace.as_ref() {
+                println!("[{} sampled traces -> {}]", w.written(), w.path().display());
+            }
+            if let Some(mpath) = args.get("metrics-out") {
+                write_metrics_jsonl(mpath, &sinks.metrics_points)?;
+                println!("[{} metric points -> {mpath}]", sinks.metrics_points.len());
+            }
             match report.save_json("results") {
                 Ok(p) => println!("[saved {} — {:.1}s total]", p.display(), t.secs()),
                 Err(e) => println!("[save failed: {e}]"),
             }
+        }
+        "trace" => {
+            let path = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .context("usage: gnnd trace <traces.jsonl> [--top N]")?;
+            let top: usize = args.parse_or("top", 5usize)?;
+            let traces = read_traces(path)?;
+            print!("{}", render_report(&traces, top));
         }
         "experiment" => {
             let name = args
@@ -413,6 +459,28 @@ fn serve_block(report: &Report, cfg: &serve::ServeConfig) -> Json {
         .set("rows", Json::Arr(rows))
 }
 
+/// `--metrics-out` payload: one JSON line per sweep operating point
+/// carrying the row label, the cumulative registry snapshot taken
+/// after that point, and the delta against the previous point (so a
+/// point's own block fetches / query work can be read off directly).
+fn write_metrics_jsonl(
+    path: &str,
+    points: &[(String, telemetry::Snapshot, telemetry::Snapshot)],
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    for (label, cum, delta) in points {
+        let line = Json::obj()
+            .set("point", label.as_str())
+            .set("cumulative", cum.to_json())
+            .set("delta", delta.to_json());
+        writeln!(w, "{line}").with_context(|| format!("write {path}"))?;
+    }
+    w.flush().with_context(|| format!("flush {path}"))?;
+    Ok(())
+}
+
 /// Open `--shards <dir>` with the serving knobs shared by `search` and
 /// `serve-bench`: `--probe-shards` (validated against the manifest
 /// shard count — phantom shards clamp with a warning), `--memory-budget
@@ -441,8 +509,8 @@ fn open_sharded_index(
         }
         (m, kib) => {
             if kib > 0 {
-                eprintln!(
-                    "[search] warning: --block-size only applies with --residency block; ignored"
+                telemetry::warn!(
+                    "search: --block-size only applies with --residency block; ignored"
                 );
             }
             m
@@ -454,8 +522,8 @@ fn open_sharded_index(
     // the operator can see it, mirroring the --probe-shards clamp
     let (threads, tclamped) = clamp_search_threads(threads);
     if tclamped {
-        eprintln!(
-            "[search] warning: --search-threads 0 would leave no scatter workers; \
+        telemetry::warn!(
+            "search: --search-threads 0 would leave no scatter workers; \
              clamped to {threads} (sequential scatter)"
         );
     }
@@ -464,10 +532,11 @@ fn open_sharded_index(
     let probe: usize = args.parse_or("probe-shards", 0usize)?;
     let (probe, clamped) = clamp_probe(probe, manifest.shards);
     if clamped {
-        eprintln!(
-            "[search] warning: --probe-shards exceeds the {} shards in the manifest; \
+        telemetry::warn!(
+            "search: --probe-shards exceeds the {} shards in the manifest; \
              clamped to {} (phantom shards cannot be probed)",
-            manifest.shards, manifest.shards
+            manifest.shards,
+            manifest.shards
         );
     }
     // under whole-shard residency a query pins the full data of every
@@ -481,8 +550,8 @@ fn open_sharded_index(
         sizes.sort_unstable_by(|a, b| b.cmp(a));
         let probed_bytes: usize = sizes.iter().take(eff).sum();
         if probed_bytes > budget_bytes {
-            eprintln!(
-                "[search] warning: probing {eff} shards can pin ~{:.1} MB per query, above \
+            telemetry::warn!(
+                "search: probing {eff} shards can pin ~{:.1} MB per query, above \
                  --memory-budget {budget_mb} MB; peak residency is bounded by the probe set \
                  — lower --probe-shards or switch to --residency block",
                 probed_bytes as f64 / (1024.0 * 1024.0)

@@ -257,6 +257,32 @@ struct ShardCache {
     bytes_read: u64,
 }
 
+/// Global-registry mirrors of the shard-cache counters. The
+/// authoritative counts stay in [`ShardCache`] under its mutex (and
+/// keep feeding [`ResidencyStats`]); these handles make the same
+/// events visible live through [`crate::telemetry::global`] snapshots
+/// mid-run. Handles are resolved once per store, not per access.
+struct ShardTele {
+    hits: Arc<crate::telemetry::Counter>,
+    misses: Arc<crate::telemetry::Counter>,
+    evictions: Arc<crate::telemetry::Counter>,
+    rejected_admissions: Arc<crate::telemetry::Counter>,
+    bytes_read: Arc<crate::telemetry::Counter>,
+}
+
+impl ShardTele {
+    fn new() -> Self {
+        let g = crate::telemetry::global();
+        ShardTele {
+            hits: g.counter("shard_cache.hits"),
+            misses: g.counter("shard_cache.misses"),
+            evictions: g.counter("shard_cache.evictions"),
+            rejected_admissions: g.counter("shard_cache.rejected_admissions"),
+            bytes_read: g.counter("shard_cache.bytes_read"),
+        }
+    }
+}
+
 /// On-disk shard layout under `dir`: `shard_<i>.dsb` + `graph_<i>.knng`
 /// per shard, plus `manifest.json` (shard geometry, see
 /// [`ShardManifest`]) and `stats.json` (the last build's
@@ -281,6 +307,7 @@ pub struct ShardStore {
     /// handles (constructed unbounded-and-unused in shard mode).
     blocks: Arc<BlockCache>,
     cache: Mutex<ShardCache>,
+    tele: ShardTele,
     /// Signalled when an in-flight shard load completes (or fails), so
     /// threads parked on a `loading` shard re-check the cache.
     loaded: Condvar,
@@ -321,6 +348,7 @@ impl ShardStore {
             mode,
             blocks,
             cache: Mutex::new(ShardCache::default()),
+            tele: ShardTele::new(),
             loaded: Condvar::new(),
         })
     }
@@ -400,10 +428,11 @@ impl ShardStore {
                         e.last_used = tick;
                         let out = Arc::clone(&e.shard);
                         c.hits += 1;
+                        self.tele.hits.inc();
                         // enforce the budget on hits too: shards pinned
                         // past the budget at insert time are shed here,
                         // on the first access after their pins release
-                        Self::evict_locked(&mut c, self.budget_bytes, &self.blocks);
+                        Self::evict_locked(&mut c, self.budget_bytes, &self.blocks, &self.tele);
                         return Ok(out);
                     }
                     if c.loading.contains(&i) {
@@ -411,6 +440,7 @@ impl ShardStore {
                         continue;
                     }
                     c.misses += 1;
+                    self.tele.misses.inc();
                     c.loading.insert(i);
                     break;
                 }
@@ -448,9 +478,11 @@ impl ShardStore {
             // accounted by the block cache as they happen)
             if !ds.is_paged() {
                 c.bytes_read += (ds.len() * ds.d * 4) as u64;
+                self.tele.bytes_read.add((ds.len() * ds.d * 4) as u64);
             }
             if !graph.is_paged() {
                 c.bytes_read += (graph.n() * graph.k() * 8) as u64;
+                self.tele.bytes_read.add((graph.n() * graph.k() * 8) as u64);
             }
             let loaded =
                 Arc::new(ResidentShard { bytes: resident_cost(&ds, &graph), ds, graph });
@@ -463,11 +495,12 @@ impl ShardStore {
                 c.resident_bytes += loaded.bytes;
                 c.peak_resident_bytes = c.peak_resident_bytes.max(c.resident_bytes);
                 c.resident.insert(i, CacheEntry { shard: Arc::clone(&loaded), last_used: tick });
-                Self::evict_locked(&mut c, self.budget_bytes, &self.blocks);
+                Self::evict_locked(&mut c, self.budget_bytes, &self.blocks, &self.tele);
             } else {
                 // served but not cached: the handle stays alive for the
                 // caller's query and is freed when the pin drops
                 c.rejected_admissions += 1;
+                self.tele.rejected_admissions.inc();
             }
             self.loaded.notify_all();
             return Ok(loaded);
@@ -482,10 +515,10 @@ impl ShardStore {
     /// brings it back under.
     pub fn evict_to_budget(&self) {
         let mut c = self.cache.lock().unwrap();
-        Self::evict_locked(&mut c, self.budget_bytes, &self.blocks);
+        Self::evict_locked(&mut c, self.budget_bytes, &self.blocks, &self.tele);
     }
 
-    fn evict_locked(c: &mut ShardCache, budget: usize, blocks: &BlockCache) {
+    fn evict_locked(c: &mut ShardCache, budget: usize, blocks: &BlockCache, tele: &ShardTele) {
         if budget == 0 {
             return;
         }
@@ -500,6 +533,7 @@ impl ShardStore {
             if let Some(e) = c.resident.remove(&i) {
                 c.resident_bytes -= e.shard.bytes;
                 c.evictions += 1;
+                tele.evictions.inc();
                 // a paged victim's cached blocks are unreachable once
                 // its handle leaves the map (a reload registers a fresh
                 // store id) — drop them so orphans never consume the

@@ -239,6 +239,11 @@ pub struct SearchScratch {
     pub dist_evals: usize,
     /// Node expansions performed by the last query.
     pub hops: usize,
+    /// Per-query trace collection point (disabled by default). Armed
+    /// by the serve harness for sampled queries; index implementations
+    /// fill it with route/shard/gather spans. Observation-only — never
+    /// influences results.
+    pub trace: crate::telemetry::trace::TraceSink,
 }
 
 impl SearchScratch {
@@ -255,6 +260,7 @@ impl SearchScratch {
             shard_probed: Vec::new(),
             dist_evals: 0,
             hops: 0,
+            trace: crate::telemetry::trace::TraceSink::default(),
         }
     }
 }
@@ -627,6 +633,7 @@ impl<'a> AnnIndex for SearchIndex<'a> {
             exclude,
         };
         beam_search(self.ds, self.graph, None, &spec, scratch, out);
+        crate::telemetry::record_query(scratch.dist_evals, scratch.hops);
     }
 }
 

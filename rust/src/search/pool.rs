@@ -50,6 +50,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::telemetry;
+use crate::util::timer::Timer;
+
 use super::sharded::{ScatterOut, ShardCore};
 use super::SearchScratch;
 
@@ -73,6 +76,9 @@ pub(crate) struct ScatterJob {
     pub(crate) exclude: u32,
     /// Probed shards in routing order — the work list.
     pub(crate) order: Vec<usize>,
+    /// Collect per-shard trace spans for this query (sampled by the
+    /// serve harness; observation-only).
+    pub(crate) traced: bool,
     /// Next index into `order` to be claimed.
     cursor: AtomicUsize,
     /// Per-participant (dist_evals, hops, shard top-k) contributions.
@@ -108,12 +114,14 @@ impl ScatterJob {
         exclude: u32,
         order: Vec<usize>,
         fan: usize,
+        traced: bool,
     ) -> Arc<Self> {
         Arc::new(ScatterJob {
             q: q.to_vec(),
             k,
             ef,
             exclude,
+            traced,
             cursor: AtomicUsize::new(0),
             collected: Mutex::new(Vec::with_capacity(fan + 1)),
             state: Mutex::new(JobState { finished_shards: 0, panic_payload: None }),
@@ -180,6 +188,9 @@ impl ScatterJob {
 struct JobQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
+    /// Live `scatter.queue_depth` gauge: job copies pushed but not yet
+    /// popped (adjusted at queue transitions, off the search path).
+    depth: Arc<telemetry::Gauge>,
 }
 
 struct QueueState {
@@ -192,11 +203,13 @@ impl JobQueue {
         JobQueue {
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             ready: Condvar::new(),
+            depth: telemetry::global().gauge("scatter.queue_depth"),
         }
     }
 
     fn push(&self, job: Arc<ScatterJob>) {
         self.state.lock().unwrap().jobs.push_back(job);
+        self.depth.add(1);
         self.ready.notify_one();
     }
 
@@ -206,6 +219,7 @@ impl JobQueue {
         let mut s = self.state.lock().unwrap();
         loop {
             if let Some(job) = s.jobs.pop_front() {
+                self.depth.add(-1);
                 return Some(job);
             }
             if s.shutdown {
@@ -227,6 +241,8 @@ impl JobQueue {
 pub struct ScatterPool {
     queue: Arc<JobQueue>,
     workers: Vec<JoinHandle<()>>,
+    /// `scatter.jobs` counter: one bump per dispatched query fan-out.
+    jobs: Arc<telemetry::Counter>,
 }
 
 impl ScatterPool {
@@ -241,11 +257,11 @@ impl ScatterPool {
                 let core = Arc::clone(&core);
                 std::thread::Builder::new()
                     .name(format!("gnnd-scatter-{w}"))
-                    .spawn(move || worker_loop(&core, &queue))
+                    .spawn(move || worker_loop(&core, &queue, w))
                     .expect("spawn scatter pool worker")
             })
             .collect();
-        ScatterPool { queue, workers: handles }
+        ScatterPool { queue, workers: handles, jobs: telemetry::global().counter("scatter.jobs") }
     }
 
     /// Number of parked pool workers (excluding the inline dispatcher).
@@ -265,11 +281,13 @@ impl ScatterPool {
         ef: usize,
         exclude: u32,
         order: Vec<usize>,
+        traced: bool,
     ) -> Vec<ScatterOut> {
+        self.jobs.inc();
         // never wake more workers than there are shards beyond the one
         // the dispatcher itself will take
         let fan = self.workers.len().min(order.len().saturating_sub(1));
-        let job = ScatterJob::new(q, k, ef, exclude, order, fan);
+        let job = ScatterJob::new(q, k, ef, exclude, order, fan, traced);
         for _ in 0..fan {
             self.queue.push(Arc::clone(&job));
         }
@@ -298,29 +316,40 @@ impl Drop for ScatterPool {
 }
 
 /// Body of one pool worker: park on the queue, run each job's slice
-/// with a warm thread-local scratch, survive job panics.
-fn worker_loop(core: &ShardCore, queue: &JobQueue) {
+/// with a warm thread-local scratch, survive job panics. Worker `w`
+/// attributes its wall time to `scatter.worker{w}.busy_us` (running a
+/// job) vs `.idle_us` (parked on the queue) — the live view of how
+/// well scatter work saturates the pool.
+fn worker_loop(core: &ShardCore, queue: &JobQueue, w: usize) {
+    let g = telemetry::global();
+    let busy_us = g.counter(&format!("scatter.worker{w}.busy_us"));
+    let idle_us = g.counter(&format!("scatter.worker{w}.idle_us"));
     let mut scratch = SearchScratch::new();
-    while let Some(job) = queue.pop() {
+    loop {
+        let t_idle = Timer::start();
+        let Some(job) = queue.pop() else { break };
+        idle_us.add(telemetry::us(t_idle.secs()));
+        let t_busy = Timer::start();
         if job.exhausted() {
             // the dispatcher (or another worker) already drained this
             // job's cursor — nothing to contribute
             job.finish(0, None);
-            continue;
-        }
-        let res = panic::catch_unwind(AssertUnwindSafe(|| {
-            core.run_scatter_job(&job, &mut scratch)
-        }));
-        match res {
-            Ok(done) => job.finish(done, None),
-            Err(payload) => {
-                // an unwound walk may have left pins (or partial
-                // results) in the scratch: drop them so a poisoned
-                // query can never block eviction or leak candidates
-                // into the next one
-                ShardCore::clear_scratch_after_panic(&mut scratch);
-                job.finish(0, Some(payload));
+        } else {
+            let res = panic::catch_unwind(AssertUnwindSafe(|| {
+                core.run_scatter_job(&job, &mut scratch)
+            }));
+            match res {
+                Ok(done) => job.finish(done, None),
+                Err(payload) => {
+                    // an unwound walk may have left pins (or partial
+                    // results) in the scratch: drop them so a poisoned
+                    // query can never block eviction or leak candidates
+                    // into the next one
+                    ShardCore::clear_scratch_after_panic(&mut scratch);
+                    job.finish(0, Some(payload));
+                }
             }
         }
+        busy_us.add(telemetry::us(t_busy.secs()));
     }
 }

@@ -38,13 +38,20 @@
 //! warning): beam search caps the result pool at `max(ef, k)` anyway,
 //! so a sub-`k` point would silently run — and be reported — at a
 //! different `ef` than its label claims.
+//!
+//! The timing pass is instrumented ([`crate::telemetry`]): per-query
+//! service time and open-loop queue delay feed global histograms,
+//! every `ServeConfig::trace_sample`-th query records a full
+//! [`QueryTrace`], and [`run_sweep_with`] snapshots the registry per
+//! operating point ([`ServeSinks`]) — all observation-only.
 
 use std::str::FromStr;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::dataset::{groundtruth, Dataset};
 use crate::metrics::{Report, Row};
+use crate::telemetry::{self, trace::QueryTrace, trace::TraceWriter};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -112,6 +119,10 @@ pub struct ServeConfig {
     pub arrival_rate: f64,
     /// Arrival process of the open-loop schedule (ignored closed loop).
     pub arrival: Arrival,
+    /// Trace every Nth query of the timing pass into a
+    /// [`QueryTrace`] (0 = tracing off). Observation-only: traced
+    /// queries return bit-identical results to untraced ones.
+    pub trace_sample: usize,
 }
 
 impl Default for ServeConfig {
@@ -126,6 +137,7 @@ impl Default for ServeConfig {
             seed: 0x5E27E,
             arrival_rate: 0.0,
             arrival: Arrival::Poisson,
+            trace_sample: 0,
         }
     }
 }
@@ -153,6 +165,11 @@ pub struct ServeStats {
     /// Achieved rate fell short of the offered rate: the index cannot
     /// keep up and the queue grows without bound.
     pub overload: bool,
+    /// Mean distance evaluations per query of the timing pass — the
+    /// paper's scanning-rate metric as an operating-curve column.
+    pub dist_evals: f64,
+    /// Mean beam-search hops per query of the timing pass.
+    pub hops: f64,
 }
 
 /// The sampled query stream: flat query matrix + the object ids the
@@ -216,8 +233,8 @@ pub fn clamp_ef(ef: usize, k: usize) -> (usize, bool) {
 fn clamp_ef_warn(ef: usize, k: usize) -> usize {
     let (eff, clamped) = clamp_ef(ef, k);
     if clamped {
-        eprintln!(
-            "[serve] warning: ef={ef} < k={k}; clamped to ef={eff} \
+        telemetry::warn!(
+            "serve: ef={ef} < k={k}; clamped to ef={eff} \
              (ef below k silently caps the result pool and recall)"
         );
     }
@@ -265,12 +282,29 @@ pub fn arrival_schedule(n: usize, rate: f64, arrival: Arrival, seed: u64) -> Vec
     }
 }
 
-/// Measure one operating point (`ef`) of the sweep against any index.
+/// Measure one operating point (`ef`) of the sweep against any index
+/// (traces, if sampling is configured, are discarded — see
+/// [`run_point_traced`]).
 pub fn run_point(
     index: &dyn AnnIndex,
     stream: &QueryStream,
     cfg: &ServeConfig,
     ef: usize,
+) -> ServeStats {
+    run_point_traced(index, stream, cfg, ef, &mut Vec::new())
+}
+
+/// [`run_point`], appending the timing pass's sampled [`QueryTrace`]s
+/// (every `cfg.trace_sample`-th query; none when 0) to `traces` in
+/// query order. The timing pass also feeds the global telemetry
+/// registry: `query.service_us` per query and, open loop,
+/// `query.queue_wait_us` per arrival.
+pub fn run_point_traced(
+    index: &dyn AnnIndex,
+    stream: &QueryStream,
+    cfg: &ServeConfig,
+    ef: usize,
+    traces: &mut Vec<QueryTrace>,
 ) -> ServeStats {
     let ef = clamp_ef_warn(ef, cfg.k);
     let threads = if cfg.threads == 0 { crate::util::num_threads() } else { cfg.threads };
@@ -297,8 +331,14 @@ pub fn run_point(
     let cursor = AtomicUsize::new(0);
     let lat = Mutex::new(Vec::with_capacity(total));
     let qdelay = Mutex::new(Vec::with_capacity(if sched.is_some() { total } else { 0 }));
+    let collected_traces = Mutex::new(Vec::new());
+    let tot_evals = AtomicU64::new(0);
+    let tot_hops = AtomicU64::new(0);
+    let h_service = telemetry::global().histogram("query.service_us");
+    let h_queue = telemetry::global().histogram("query.queue_wait_us");
     let d = stream.d;
     let k = cfg.k;
+    let trace_sample = cfg.trace_sample;
     let qbuf = stream.qbuf.as_slice();
     let exclude_ref = exclude.as_slice();
     let sched_ref = sched.as_deref();
@@ -308,17 +348,26 @@ pub fn run_point(
             let cursor = &cursor;
             let lat = &lat;
             let qdelay = &qdelay;
+            let collected_traces = &collected_traces;
+            let tot_evals = &tot_evals;
+            let tot_hops = &tot_hops;
+            let h_service = &h_service;
+            let h_queue = &h_queue;
             let wall = &wall;
             s.spawn(move |_| {
                 let mut scratch = index.make_scratch();
                 let mut out = Vec::with_capacity(k);
                 let mut local = Vec::new();
                 let mut local_q = Vec::new();
+                let mut local_traces = Vec::new();
+                let mut local_evals = 0u64;
+                let mut local_hops = 0u64;
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= total {
                         break;
                     }
+                    let mut queue_secs = 0.0f64;
                     if let Some(sched) = sched_ref {
                         // open loop: the query *arrives* at sched[i]
                         // whether or not anyone is free to serve it. If
@@ -332,7 +381,6 @@ pub fn run_point(
                         let due = sched[i];
                         let claimed = wall.secs();
                         if claimed < due {
-                            local_q.push(0.0);
                             loop {
                                 let now = wall.secs();
                                 if now >= due {
@@ -343,8 +391,14 @@ pub fn run_point(
                                 ));
                             }
                         } else {
-                            local_q.push(claimed - due);
+                            queue_secs = claimed - due;
                         }
+                        local_q.push(queue_secs);
+                        h_queue.record(telemetry::us(queue_secs));
+                    }
+                    let traced = trace_sample > 0 && i % trace_sample == 0;
+                    if traced {
+                        scratch.trace.begin();
                     }
                     let qi = i % nq;
                     let t = Timer::start();
@@ -356,18 +410,44 @@ pub fn run_point(
                         &mut scratch,
                         &mut out,
                     );
-                    local.push(t.secs());
+                    let service_secs = t.secs();
+                    local.push(service_secs);
+                    h_service.record(telemetry::us(service_secs));
+                    local_evals += scratch.dist_evals as u64;
+                    local_hops += scratch.hops as u64;
+                    if traced {
+                        scratch.trace.end();
+                        local_traces.push(QueryTrace {
+                            query: i,
+                            ef,
+                            queue_ms: queue_secs * 1e3,
+                            service_ms: service_secs * 1e3,
+                            route_ms: scratch.trace.route_ms,
+                            gather_ms: scratch.trace.gather_ms,
+                            dist_evals: scratch.dist_evals,
+                            hops: scratch.hops,
+                            shards: std::mem::take(&mut scratch.trace.shards),
+                        });
+                    }
                     std::hint::black_box(&out);
                 }
                 lat.lock().unwrap().extend_from_slice(&local);
                 if !local_q.is_empty() {
                     qdelay.lock().unwrap().extend_from_slice(&local_q);
                 }
+                if !local_traces.is_empty() {
+                    collected_traces.lock().unwrap().append(&mut local_traces);
+                }
+                tot_evals.fetch_add(local_evals, Ordering::Relaxed);
+                tot_hops.fetch_add(local_hops, Ordering::Relaxed);
             });
         }
     })
     .unwrap();
     let wall_secs = wall.secs();
+    let mut new_traces = collected_traces.into_inner().unwrap();
+    new_traces.sort_by_key(|t| t.query);
+    traces.append(&mut new_traces);
     let mut lats = lat.into_inner().unwrap();
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mut qdelays = qdelay.into_inner().unwrap();
@@ -386,7 +466,24 @@ pub fn run_point(
         queue_p50_ms: percentile_ms(&qdelays, 50.0),
         queue_p99_ms: percentile_ms(&qdelays, 99.0),
         overload: offered > 0.0 && qps < OVERLOAD_MARGIN * offered,
+        dist_evals: tot_evals.load(Ordering::Relaxed) as f64 / total as f64,
+        hops: tot_hops.load(Ordering::Relaxed) as f64 / total as f64,
     }
+}
+
+/// Telemetry destinations of a sweep ([`run_sweep_with`]): sampled
+/// query traces stream to a JSONL writer as each point finishes;
+/// per-point registry snapshots accumulate in `metrics_points`.
+#[derive(Default)]
+pub struct ServeSinks {
+    /// Destination for sampled [`QueryTrace`]s (`None` = discard).
+    pub trace: Option<TraceWriter>,
+    /// One entry per operating point, in sweep order: the row label,
+    /// the cumulative registry [`telemetry::Snapshot`] taken after the
+    /// point, and the delta against the previous point (the first
+    /// point's delta is against the sweep's starting snapshot, so it
+    /// isolates that point's own work).
+    pub metrics_points: Vec<(String, telemetry::Snapshot, telemetry::Snapshot)>,
 }
 
 /// Run the whole `ef` sweep against an already-constructed index,
@@ -400,6 +497,19 @@ pub fn run_sweep_on(
     index: &dyn AnnIndex,
     ds: &Dataset,
     cfg: &ServeConfig,
+) -> crate::Result<Report> {
+    run_sweep_with(index, ds, cfg, &mut ServeSinks::default())
+}
+
+/// [`run_sweep_on`] with explicit telemetry sinks: sampled traces are
+/// appended (and flushed) to `sinks.trace` after every operating
+/// point, and a cumulative + delta registry snapshot per point lands
+/// in `sinks.metrics_points` — the `--metrics-out` payload.
+pub fn run_sweep_with(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    cfg: &ServeConfig,
+    sinks: &mut ServeSinks,
 ) -> crate::Result<Report> {
     anyhow::ensure!(!cfg.ef_sweep.is_empty(), "ef_sweep is empty");
     anyhow::ensure!(cfg.k > 0, "k must be > 0");
@@ -453,14 +563,28 @@ pub fn run_sweep_on(
             sweep.push(eff);
         }
     }
+    let mut prev = telemetry::global().snapshot();
     for &ef in &sweep {
-        let s = run_point(index, &stream, cfg, ef);
+        let mut traces = Vec::new();
+        let s = run_point_traced(index, &stream, cfg, ef, &mut traces);
+        if let Some(w) = sinks.trace.as_mut() {
+            for t in &traces {
+                w.append(t)?;
+            }
+            w.flush()?;
+        }
+        let snap = telemetry::global().snapshot();
+        let delta = snap.delta(&prev);
+        prev = snap.clone();
+        sinks.metrics_points.push((format!("ef={}", s.ef), snap, delta));
         let mut row = Row::new(format!("ef={}", s.ef))
             .col("ef", s.ef as f64)
             .col("qps", s.qps)
             .col("p50_ms", s.p50_ms)
             .col("p95_ms", s.p95_ms)
             .col("p99_ms", s.p99_ms)
+            .col("dist_evals", s.dist_evals)
+            .col("hops", s.hops)
             .col(&recall_col, s.recall);
         if cfg.arrival_rate > 0.0 {
             row = row
@@ -651,5 +775,66 @@ mod tests {
         assert!(get("queue_p99_ms") >= get("queue_p50_ms"));
         assert_eq!(get("overload"), 1.0, "1e9 qps offered must overload");
         assert!(get("qps") < 1e9);
+    }
+
+    #[test]
+    fn trace_sampling_collects_every_nth_query() {
+        let ds = synth::uniform(50, 4, 11);
+        let flat = Flat { ds };
+        let stream = sample_queries(&flat.ds, 10, 5, 3);
+        let cfg = ServeConfig {
+            k: 5,
+            n_queries: 10,
+            distinct_queries: 10,
+            threads: 2,
+            trace_sample: 3,
+            ..Default::default()
+        };
+        let mut traces = Vec::new();
+        let s = run_point_traced(&flat, &stream, &cfg, 16, &mut traces);
+        // queries 0, 3, 6, 9 of the 10-query pass, in query order
+        assert_eq!(traces.len(), 4, "{traces:?}");
+        assert!(traces.windows(2).all(|w| w[0].query < w[1].query));
+        for t in &traces {
+            assert_eq!(t.query % 3, 0);
+            assert_eq!(t.ef, 16);
+            assert!(t.service_ms >= 0.0);
+            assert_eq!(t.queue_ms, 0.0, "closed loop has no queue");
+        }
+        assert!(s.qps > 0.0);
+        // run_point (the untraced wrapper) still works and reports means
+        let s2 = run_point(&flat, &stream, &cfg, 16);
+        assert_eq!(s2.ef, 16);
+    }
+
+    #[test]
+    fn sweep_sinks_collect_per_point_snapshots_and_work_columns() {
+        let ds = synth::uniform(60, 4, 12);
+        let corpus = ds.clone();
+        let flat = Flat { ds };
+        let cfg = ServeConfig {
+            ef_sweep: vec![16, 32],
+            n_queries: 10,
+            distinct_queries: 10,
+            threads: 1,
+            ..Default::default()
+        };
+        let mut sinks = ServeSinks::default();
+        let report = run_sweep_with(&flat, &corpus, &cfg, &mut sinks).unwrap();
+        assert_eq!(sinks.metrics_points.len(), 2);
+        assert_eq!(sinks.metrics_points[0].0, "ef=16");
+        assert_eq!(sinks.metrics_points[1].0, "ef=32");
+        for row in &report.rows {
+            for col in ["dist_evals", "hops"] {
+                assert!(row.cols.iter().any(|(n, _)| n == col), "row missing {col}");
+            }
+        }
+        // the timing pass records a service-time histogram; each
+        // point's delta holds (at least) its own timing-pass queries
+        // (the registry is process-global, so only >= is assertable)
+        let (_, cum, delta) = &sinks.metrics_points[1];
+        let total = cfg.n_queries as u64;
+        assert!(cum.hist("query.service_us").unwrap().count >= 2 * total);
+        assert!(delta.hist("query.service_us").unwrap().count >= total);
     }
 }

@@ -61,11 +61,22 @@ use crate::merge::outofcore::{
     shard_centroid, ResidencyMode, ResidencyStats, ResidentShard, ShardStore,
 };
 
+use crate::telemetry::trace::ShardSpan;
+use crate::util::timer::Timer;
+
 use super::pool::{ScatterJob, ScatterPool};
 use super::{select_entries, AnnIndex, EntryStrategy, SearchParams, SearchScratch};
 
-/// Per-worker scatter output: (dist_evals, hops, shard top-k lists).
-pub(crate) type ScatterOut = (usize, usize, Vec<(F32, u32)>);
+/// One scatter participant's contribution to a query: its work
+/// counters, the per-shard top-k entries it accumulated, and — when
+/// the query is traced — one [`ShardSpan`] per shard it searched
+/// (empty otherwise).
+pub(crate) struct ScatterOut {
+    pub(crate) dist_evals: usize,
+    pub(crate) hops: usize,
+    pub(crate) topk: Vec<(F32, u32)>,
+    pub(crate) spans: Vec<ShardSpan>,
+}
 
 /// Serving metadata of one shard — everything a query needs *before*
 /// touching the shard's data: geometry, fixed entry points (global
@@ -197,6 +208,8 @@ impl ShardCore {
     pub(crate) fn clear_scratch_after_panic(scratch: &mut SearchScratch) {
         Self::release_pins(scratch);
         scratch.shard_topk.clear();
+        scratch.trace.clear();
+        scratch.trace.enabled = false;
     }
 
     /// The scatter side: best-first search restricted to shard `s`,
@@ -213,7 +226,19 @@ impl ShardCore {
         exclude: u32,
         scratch: &mut SearchScratch,
     ) {
+        // tracing is observation-only: everything below the timers runs
+        // identically whether or not the sink is armed
+        let tracing = scratch.trace.enabled;
+        let t_shard = tracing.then(Timer::start);
+        let (blk_hits0, blk_fetches0) = if tracing {
+            crate::dataset::store::thread_block_counters()
+        } else {
+            (0, 0)
+        };
+        let evals0 = scratch.dist_evals;
+        let t_pin = tracing.then(Timer::start);
         let home = self.resolve(&mut scratch.shard_pins, s);
+        let wait_ms = t_pin.map_or(0.0, |t| t.ms());
         let m = &self.meta[s];
         let lo = m.offset as u32;
         let hi = (m.offset + m.len) as u32;
@@ -310,6 +335,19 @@ impl ShardCore {
         for &x in scratch.buf.iter().rev().take(take) {
             scratch.shard_topk.push(x);
         }
+
+        if let Some(t) = t_shard {
+            let (blk_hits1, blk_fetches1) = crate::dataset::store::thread_block_counters();
+            scratch.trace.shards.push(ShardSpan {
+                shard: s,
+                wait_ms,
+                search_ms: t.ms(),
+                dist_evals: scratch.dist_evals - evals0,
+                hops,
+                block_fetches: blk_fetches1 - blk_fetches0,
+                block_hits: blk_hits1 - blk_hits0,
+            });
+        }
     }
 
     /// A warm scratch from the reuse pool (or a fresh one), reset for a
@@ -339,6 +377,8 @@ impl ShardCore {
         scratch.shard_topk.clear();
         scratch.dist_evals = 0;
         scratch.hops = 0;
+        scratch.trace.enabled = job.traced;
+        scratch.trace.clear();
         self.begin_pins(scratch);
         for &s in &job.order {
             scratch.shard_probed[s] = true;
@@ -351,8 +391,15 @@ impl ShardCore {
         Self::release_pins(scratch);
         if done > 0 {
             let topk = std::mem::take(&mut scratch.shard_topk);
-            job.collected.lock().unwrap().push((scratch.dist_evals, scratch.hops, topk));
+            let spans = std::mem::take(&mut scratch.trace.shards);
+            job.collected.lock().unwrap().push(ScatterOut {
+                dist_evals: scratch.dist_evals,
+                hops: scratch.hops,
+                topk,
+                spans,
+            });
         }
+        scratch.trace.enabled = false;
         done
     }
 }
@@ -589,6 +636,17 @@ impl ShardedIndex {
     }
 }
 
+/// Human-readable byte count for [`AnnIndex::describe`] strings.
+fn fmt_bytes(b: usize) -> String {
+    if b >= 1024 * 1024 {
+        format!("{:.1}MB", b as f64 / (1024.0 * 1024.0))
+    } else if b >= 1024 {
+        format!("{:.1}KB", b as f64 / 1024.0)
+    } else {
+        format!("{b}B")
+    }
+}
+
 /// Every neighbor id of a merged shard graph must stay inside the
 /// global id space and never point back at its own node — the
 /// invariants [`crate::merge::outofcore::merge_pair_global`] maintains.
@@ -643,7 +701,19 @@ impl AnnIndex for ShardedIndex {
     fn describe(&self) -> String {
         let budget = match self.core.store.budget_bytes() {
             0 => "unbounded".to_string(),
-            b => format!("{:.1}MB", b as f64 / (1024.0 * 1024.0)),
+            b => fmt_bytes(b),
+        };
+        // block residency's operative knobs are the block size and the
+        // block-cache budget — surface them where operators look first
+        let residency = match self.core.store.mode() {
+            ResidencyMode::Block { block_bytes } => {
+                let cache = match self.core.store.block_cache().budget_bytes() {
+                    0 => "unbounded".to_string(),
+                    b => fmt_bytes(b),
+                };
+                format!("block[block={}, cache={}]", fmt_bytes(block_bytes), cache)
+            }
+            ResidencyMode::Shard => "shard".to_string(),
         };
         format!(
             "sharded(n={}, shards={}, probe={}, budget={}, residency={}, scatter_threads={}, \
@@ -652,7 +722,7 @@ impl AnnIndex for ShardedIndex {
             self.core.meta.len(),
             self.probe(),
             budget,
-            self.core.store.mode(),
+            residency,
             self.scatter_threads(),
             self.pool_workers()
         )
@@ -676,8 +746,13 @@ impl AnnIndex for ShardedIndex {
         let ef = (if ef == 0 { self.core.params.ef } else { ef }).max(k).max(1);
         scratch.dist_evals = 0;
         scratch.hops = 0;
+        let traced = scratch.trace.enabled;
+        if traced {
+            scratch.trace.clear();
+        }
 
         // ---- route ----
+        let t_route = traced.then(Timer::start);
         let probe = self.probe();
         scratch.shard_rank.clear();
         if probe < self.core.meta.len() {
@@ -690,6 +765,9 @@ impl AnnIndex for ShardedIndex {
             for s in 0..self.core.meta.len() {
                 scratch.shard_rank.push((F32(0.0), s));
             }
+        }
+        if let Some(t) = &t_route {
+            scratch.trace.route_ms = t.ms();
         }
 
         // ---- scatter ----
@@ -709,11 +787,12 @@ impl AnnIndex for ShardedIndex {
                 // fully busy pool to start making progress.
                 let order: Vec<usize> =
                     scratch.shard_rank[..probe].iter().map(|&(_, s)| s).collect();
-                let collected = pool.scatter(&self.core, q, k, ef, exclude, order);
-                for (evals, hops, mut topk) in collected {
-                    scratch.dist_evals += evals;
-                    scratch.hops += hops;
-                    scratch.shard_topk.append(&mut topk);
+                let collected = pool.scatter(&self.core, q, k, ef, exclude, order, traced);
+                for mut part in collected {
+                    scratch.dist_evals += part.dist_evals;
+                    scratch.hops += part.hops;
+                    scratch.shard_topk.append(&mut part.topk);
+                    scratch.trace.shards.append(&mut part.spans);
                 }
             }
             _ => {
@@ -731,6 +810,7 @@ impl AnnIndex for ShardedIndex {
         }
 
         // ---- gather: k-way merge with cross-shard dedup ----
+        let t_gather = traced.then(Timer::start);
         scratch.shard_topk.sort_unstable();
         out.clear();
         for &(F32(d), id) in scratch.shard_topk.iter() {
@@ -742,5 +822,12 @@ impl AnnIndex for ShardedIndex {
             }
             out.push((d, id));
         }
+        if let Some(t) = &t_gather {
+            scratch.trace.gather_ms = t.ms();
+            // participants report in completion order under pooled
+            // scatter; sort so a trace is deterministic either way
+            scratch.trace.shards.sort_by_key(|sp| sp.shard);
+        }
+        crate::telemetry::record_query(scratch.dist_evals, scratch.hops);
     }
 }

@@ -1,0 +1,276 @@
+//! Fixed-bucket log2 histograms for work/latency distributions.
+//!
+//! [`BUCKETS`] = 65 buckets over `u64`: bucket 0 holds the value 0,
+//! bucket `i` (1..=63) holds `[2^(i-1), 2^i - 1]`, bucket 64 holds
+//! everything from `2^63` up. Log2 bucketing keeps
+//! [`Histogram::record`] allocation-free and O(1) — one atomic add per
+//! observation — while resolving order of magnitude from 1 µs to
+//! hours, which is what a latency/work distribution needs. Exact
+//! `count`/`sum`/`max` ride along, so means are exact even though
+//! percentiles are bucket-resolution upper bounds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+use super::{stripe_index, STRIPES};
+
+/// Bucket count: the zero bucket, 63 power-of-two ranges, overflow top.
+pub const BUCKETS: usize = 65;
+
+/// Bucket index of `v`: 0 for 0, else `64 - leading_zeros(v)`.
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i`.
+pub fn bucket_upper(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1..=63 => (1u64 << i) - 1,
+        _ => u64::MAX,
+    }
+}
+
+struct Stripe {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Stripe {
+    fn new() -> Self {
+        Stripe {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Thread-striped log2 histogram; see the module doc for the layout.
+/// Obtain through [`super::MetricsRegistry::histogram`].
+pub struct Histogram {
+    stripes: Vec<Stripe>,
+}
+
+impl Histogram {
+    pub(crate) fn new() -> Self {
+        Histogram { stripes: (0..STRIPES).map(|_| Stripe::new()).collect() }
+    }
+
+    /// Record one observation (Relaxed, on this thread's stripe).
+    pub fn record(&self, v: u64) {
+        let s = &self.stripes[stripe_index()];
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+        s.max.fetch_max(v, Ordering::Relaxed);
+        s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time merge of all stripes.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::default();
+        for s in &self.stripes {
+            out.count += s.count.load(Ordering::Relaxed);
+            out.sum += s.sum.load(Ordering::Relaxed);
+            out.max = out.max.max(s.max.load(Ordering::Relaxed));
+            for (b, v) in out.buckets.iter_mut().zip(&s.buckets) {
+                *b += v.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+}
+
+/// Owned, mergeable copy of a [`Histogram`]'s state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    /// [`BUCKETS`] entries, indexed by [`bucket_of`].
+    pub buckets: Vec<u64>,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { count: 0, sum: 0, max: 0, buckets: vec![0; BUCKETS] }
+    }
+}
+
+impl HistSnapshot {
+    /// Exact mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-wise addition of `other` into `self`.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        for (b, v) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += v;
+        }
+    }
+
+    /// What was recorded since `prev` (bucket-wise subtraction). `max`
+    /// keeps the lifetime max: a window max is not recoverable from
+    /// two cumulative snapshots.
+    pub fn delta(&self, prev: &HistSnapshot) -> HistSnapshot {
+        let mut out = self.clone();
+        out.count = self.count.saturating_sub(prev.count);
+        out.sum = self.sum.saturating_sub(prev.sum);
+        for (b, p) in out.buckets.iter_mut().zip(&prev.buckets) {
+            *b = b.saturating_sub(*p);
+        }
+        out
+    }
+
+    /// Upper bound of the bucket holding the `p`-th percentile
+    /// observation (nearest rank over buckets) — a log2-resolution
+    /// upper estimate, monotone in `p`. 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return bucket_upper(i);
+            }
+        }
+        self.max
+    }
+
+    /// Scalar stats plus sparse `[bucket_index, count]` pairs — empty
+    /// buckets are elided so a 65-bucket histogram stays a short line.
+    pub fn to_json(&self) -> Json {
+        let pairs: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::from(i), Json::from(c)]))
+            .collect();
+        Json::obj()
+            .set("count", self.count)
+            .set("sum", self.sum)
+            .set("mean", self.mean())
+            .set("max", self.max)
+            .set("p50", self.percentile(50.0))
+            .set("p99", self.percentile(99.0))
+            .set("buckets", Json::Arr(pairs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of((1 << 63) - 1), 63);
+        assert_eq!(bucket_of(1 << 63), 64);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        // every bucket's upper bound lands back in that bucket
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_of(bucket_upper(i)), i, "bucket {i}");
+        }
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+    }
+
+    #[test]
+    fn record_snapshot_mean_max() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1006);
+        assert_eq!(s.max, 1000);
+        assert!((s.mean() - 201.2).abs() < 1e-9);
+        assert_eq!(s.buckets[0], 1); // 0
+        assert_eq!(s.buckets[1], 1); // 1
+        assert_eq!(s.buckets[2], 2); // 2, 3
+        assert_eq!(s.buckets[10], 1); // 1000 in [512, 1023]
+    }
+
+    #[test]
+    fn percentile_walks_buckets() {
+        let mut s = HistSnapshot::default();
+        // 50x value 1, 49x value ~1000, 1x value ~100000
+        s.buckets[1] = 50;
+        s.buckets[10] = 49;
+        s.buckets[17] = 1;
+        s.count = 100;
+        s.max = 100_000;
+        assert_eq!(s.percentile(0.0), 1);
+        assert_eq!(s.percentile(50.0), 1);
+        assert_eq!(s.percentile(51.0), 1023);
+        assert_eq!(s.percentile(99.0), 1023);
+        assert_eq!(s.percentile(100.0), (1 << 17) - 1);
+        assert!(s.percentile(99.0) >= s.percentile(50.0));
+        assert_eq!(HistSnapshot::default().percentile(99.0), 0);
+    }
+
+    #[test]
+    fn merge_and_delta_are_bucketwise() {
+        let a = Histogram::new();
+        a.record(1);
+        a.record(100);
+        let b = Histogram::new();
+        b.record(100);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.sum, 201);
+        assert_eq!(m.buckets[bucket_of(100)], 2);
+
+        let before = a.snapshot();
+        a.record(7);
+        let d = a.snapshot().delta(&before);
+        assert_eq!(d.count, 1);
+        assert_eq!(d.sum, 7);
+        assert_eq!(d.buckets[bucket_of(7)], 1);
+        assert_eq!(d.buckets[bucket_of(100)], 0);
+    }
+
+    #[test]
+    fn json_is_sparse_and_parseable() {
+        let h = Histogram::new();
+        h.record(5);
+        h.record(5);
+        let j = h.snapshot().to_json();
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("sum").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(j.get("mean").and_then(Json::as_f64), Some(5.0));
+        let pairs = j.get("buckets").and_then(Json::as_arr).unwrap();
+        assert_eq!(pairs.len(), 1, "only the populated bucket is emitted");
+        let pair = pairs[0].as_arr().unwrap();
+        assert_eq!(pair[0].as_usize(), Some(bucket_of(5)));
+        assert_eq!(pair[1].as_usize(), Some(2));
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+}

@@ -1,0 +1,465 @@
+//! Query-path telemetry: a process-wide [`MetricsRegistry`] of named
+//! counters, gauges and log2 work/latency histograms ([`hist`]), plus
+//! sampled per-query traces ([`trace`]). The paper's central argument
+//! is *counting work* — memory accesses and distance evaluations are
+//! the costs its GPU redesign minimizes — so the serving stack reports
+//! the same counters live instead of only as end-of-run aggregates.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **No hot-path contention.** Counters and histograms are striped
+//!    across [`STRIPES`] cache-padded atomics; each thread bumps its
+//!    own stripe (Relaxed ordering), so the scatter pool and the serve
+//!    workers never fight over a line. The registry's map lock is
+//!    taken only at registration — instrumented subsystems cache
+//!    `Arc` handles at construction time.
+//! 2. **Observation only.** Nothing in this module may influence query
+//!    results; tracing on vs off is bit-identical (proven by
+//!    `tests/telemetry.rs` across the probe × budget × threads grid).
+//! 3. **Same export path as everything else.** [`Snapshot::to_json`]
+//!    produces [`crate::util::json::Json`], so snapshots fold into the
+//!    shard directory's `stats.json` through the existing
+//!    `save_stats_with_block` and print as JSONL for `--metrics-out`.
+//!
+//! Registered names (the README "Observability" section carries the
+//! same table):
+//!
+//! | name | kind | meaning |
+//! |---|---|---|
+//! | `query.count` | counter | queries served through any index |
+//! | `query.dist_evals` | histogram | distance evaluations per query |
+//! | `query.hops` | histogram | beam-search hops per query |
+//! | `query.service_us` | histogram | search wall time per query (µs) |
+//! | `query.queue_wait_us` | histogram | open-loop queue delay (µs) |
+//! | `scatter.jobs` | counter | scatter-gather jobs dispatched |
+//! | `scatter.queue_depth` | gauge | jobs waiting in the pool queue |
+//! | `scatter.worker{N}.busy_us` | counter | per-worker time running jobs |
+//! | `scatter.worker{N}.idle_us` | counter | per-worker time blocked on the queue |
+//! | `block_cache.hits` | counter | block reads served from cache |
+//! | `block_cache.fetches` | counter | block reads faulted from disk |
+//! | `block_cache.evictions` | counter | blocks evicted under budget |
+//! | `block_cache.rejected_admissions` | counter | one-shot blocks the doorkeeper kept out |
+//! | `block_cache.bytes_read` | counter | bytes faulted from disk |
+//! | `block_cache.resident_bytes` | gauge | bytes currently cached |
+//! | `shard_cache.hits` / `.misses` / `.evictions` / `.rejected_admissions` / `.bytes_read` | counter | whole-shard residency, same meanings |
+//! | `warnings_total` | counter | operator warnings emitted ([`warn!`]) |
+
+pub mod hist;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crossbeam_utils::CachePadded;
+
+use crate::util::json::Json;
+
+pub use hist::{HistSnapshot, Histogram};
+
+/// Stripes per counter/histogram: enough that the scatter workers and
+/// serve threads (both bounded by core count) rarely share one.
+pub(crate) const STRIPES: usize = 16;
+
+/// Stable per-thread stripe assignment, round-robin at first use.
+pub(crate) fn stripe_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    STRIPE.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+            s.set(v);
+        }
+        v
+    })
+}
+
+/// Monotone event counter, striped across cache lines.
+pub struct Counter {
+    stripes: Vec<CachePadded<AtomicU64>>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Counter { stripes: (0..STRIPES).map(|_| CachePadded::new(AtomicU64::new(0))).collect() }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.stripes[stripe_index()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Point-in-time total across all stripes.
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Instantaneous signed value (queue depth, resident bytes). A single
+/// atomic: gauges are set/adjusted at queue transitions, not in the
+/// per-distance hot path.
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Histogram>),
+}
+
+/// Named metrics, registered on first use. The map lock guards only
+/// registration/lookup and [`snapshot`](MetricsRegistry::snapshot) —
+/// hot paths hold `Arc` handles and never touch it.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Counter handle for `name`, registering it on first use. Panics
+    /// if `name` is already registered as a different metric kind —
+    /// that is a naming bug, not a runtime condition.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric {name:?} is not a counter"),
+        }
+    }
+
+    /// Gauge handle for `name` (see [`counter`](Self::counter)).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new()))) {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric {name:?} is not a gauge"),
+        }
+    }
+
+    /// Histogram handle for `name` (see [`counter`](Self::counter)).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Arc::new(Histogram::new())))
+        {
+            Metric::Hist(h) => Arc::clone(h),
+            _ => panic!("metric {name:?} is not a histogram"),
+        }
+    }
+
+    /// Point-in-time copy of every registered metric, ordered by name.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.metrics.lock().unwrap();
+        let mut snap = Snapshot::default();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => snap.counters.push((name.clone(), c.get())),
+                Metric::Gauge(g) => snap.gauges.push((name.clone(), g.get())),
+                Metric::Hist(h) => snap.hists.push((name.clone(), h.snapshot())),
+            }
+        }
+        snap
+    }
+}
+
+/// The process-wide registry every instrumented subsystem reports to.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Point-in-time values of every metric in a registry, ordered by name.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// What happened since `prev`: counters and histograms subtract
+    /// (metrics absent from `prev` count from zero); gauges keep their
+    /// current instantaneous value — a gauge has no "since".
+    pub fn delta(&self, prev: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(n, v)| (n.clone(), v.saturating_sub(prev.counter(n).unwrap_or(0))))
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(n, h)| {
+                let d = match prev.hist(n) {
+                    Some(p) => h.delta(p),
+                    None => h.clone(),
+                };
+                (n.clone(), d)
+            })
+            .collect();
+        Snapshot { counters, gauges: self.gauges.clone(), hists }
+    }
+
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (n, v) in &self.counters {
+            counters = counters.set(n, *v);
+        }
+        let mut gauges = Json::obj();
+        for (n, v) in &self.gauges {
+            gauges = gauges.set(n, *v);
+        }
+        let mut hists = Json::obj();
+        for (n, h) in &self.hists {
+            hists = hists.set(n, h.to_json());
+        }
+        Json::obj().set("counters", counters).set("gauges", gauges).set("histograms", hists)
+    }
+}
+
+/// Format + route a message through [`emit_warning`]: one `[warn]`
+/// prefix and one `warnings_total` counter for every warning site.
+#[macro_export]
+macro_rules! tele_warn {
+    ($($arg:tt)*) => {
+        $crate::telemetry::emit_warning(&format!($($arg)*))
+    };
+}
+pub use crate::tele_warn as warn;
+
+fn warn_counter() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| global().counter("warnings_total"))
+}
+
+/// Print an operator-facing warning with the uniform `[warn]` prefix
+/// and count it. Use through [`warn!`].
+pub fn emit_warning(msg: &str) {
+    warn_counter().inc();
+    eprintln!("[warn] {msg}");
+}
+
+/// Total warnings this process has emitted so far.
+pub fn warnings_total() -> u64 {
+    warn_counter().get()
+}
+
+struct QueryMetrics {
+    queries: Arc<Counter>,
+    dist_evals: Arc<Histogram>,
+    hops: Arc<Histogram>,
+}
+
+fn query_metrics() -> &'static QueryMetrics {
+    static M: OnceLock<QueryMetrics> = OnceLock::new();
+    M.get_or_init(|| QueryMetrics {
+        queries: global().counter("query.count"),
+        dist_evals: global().histogram("query.dist_evals"),
+        hops: global().histogram("query.hops"),
+    })
+}
+
+/// Record one served query's work counters — the paper's scanning-rate
+/// metric — into the global registry. Called by the [`crate::search::AnnIndex`]
+/// query entry points, *not* by raw beam search: the same walk runs
+/// inside graph construction, which must not pollute serving metrics.
+pub fn record_query(dist_evals: usize, hops: usize) {
+    let m = query_metrics();
+    m.queries.inc();
+    m.dist_evals.record(dist_evals as u64);
+    m.hops.record(hops as u64);
+}
+
+/// Microseconds of a duration in seconds, clamped non-negative — the
+/// unit every `*_us` histogram records.
+pub fn us(secs: f64) -> u64 {
+    (secs * 1e6).max(0.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_hammer_is_exact() {
+        // N threads x M increments each: striping must lose nothing.
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("hammer");
+        let (threads, per) = (8usize, 10_000u64);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..per {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), threads as u64 * per);
+        assert_eq!(reg.snapshot().counter("hammer"), Some(threads as u64 * per));
+    }
+
+    #[test]
+    fn histogram_hammer_is_exact() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("work");
+        let (threads, per) = (8usize, 5_000u64);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let h = Arc::clone(&h);
+                s.spawn(move || {
+                    for v in 0..per {
+                        h.record(v % 7);
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count, threads as u64 * per);
+        let per_sum: u64 = (0..per).map(|v| v % 7).sum();
+        assert_eq!(snap.sum, threads as u64 * per_sum);
+        assert_eq!(snap.max, 6);
+    }
+
+    #[test]
+    fn gauge_tracks_instantaneous_value() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("depth");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        g.set(7);
+        assert_eq!(reg.snapshot().gauge("depth"), Some(7));
+    }
+
+    #[test]
+    fn handles_are_shared_not_cloned() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("same");
+        let b = reg.counter("same");
+        a.add(2);
+        b.add(3);
+        assert_eq!(reg.counter("same").get(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn name_collision_across_kinds_panics() {
+        let reg = MetricsRegistry::new();
+        let _c = reg.counter("x");
+        let _g = reg.gauge("x");
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_counters_and_keeps_gauges() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("events");
+        let g = reg.gauge("level");
+        let h = reg.histogram("lat");
+        c.add(10);
+        g.set(4);
+        h.record(3);
+        let a = reg.snapshot();
+        c.add(7);
+        g.set(9);
+        h.record(100);
+        let b = reg.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.counter("events"), Some(7));
+        assert_eq!(d.gauge("level"), Some(9));
+        let dh = d.hist("lat").unwrap();
+        assert_eq!(dh.count, 1);
+        assert_eq!(dh.sum, 100);
+        // a metric born after the baseline counts from zero
+        let c2 = reg.counter("late");
+        c2.add(2);
+        let d2 = reg.snapshot().delta(&a);
+        assert_eq!(d2.counter("late"), Some(2));
+    }
+
+    #[test]
+    fn snapshot_json_has_all_sections() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c").add(1);
+        reg.gauge("g").set(-2);
+        reg.histogram("h").record(5);
+        let j = reg.snapshot().to_json();
+        assert_eq!(j.get("counters").and_then(|o| o.get("c")).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("gauges").and_then(|o| o.get("g")).and_then(Json::as_f64), Some(-2.0));
+        let h = j.get("histograms").and_then(|o| o.get("h")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(h.get("sum").and_then(Json::as_f64), Some(5.0));
+        // round-trips through the strict parser (the --metrics-out path)
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn warnings_are_counted() {
+        let before = warnings_total();
+        tele_warn!("test warning {}", 42);
+        assert!(warnings_total() >= before + 1);
+    }
+
+    #[test]
+    fn record_query_feeds_global_histograms() {
+        record_query(123, 9);
+        let snap = global().snapshot();
+        assert!(snap.counter("query.count").unwrap() >= 1);
+        assert!(snap.hist("query.dist_evals").unwrap().sum >= 123);
+        assert!(snap.hist("query.hops").unwrap().sum >= 9);
+    }
+
+    #[test]
+    fn us_converts_and_clamps() {
+        assert_eq!(us(0.001), 1000);
+        assert_eq!(us(-1.0), 0);
+    }
+}

@@ -1,0 +1,428 @@
+//! Sampled per-query traces: the full scatter-gather timeline of one
+//! served query, appended as JSONL (`--trace-sample N` traces every
+//! Nth query of the timing pass). `gnnd trace <file>` renders the
+//! aggregate distributions and the slowest queries' span timelines.
+//!
+//! # `traces.jsonl` record format
+//!
+//! One JSON object per line, one line per sampled query:
+//!
+//! ```text
+//! field          type   meaning
+//! query          int    index of the query in the replayed stream
+//! ef             int    effective beam width the query ran at
+//! queue_ms       float  open-loop queue delay (arrival -> claim); 0 closed loop
+//! service_ms     float  wall time of the search call itself
+//! route_ms       float  centroid routing (sharded index; 0 monolithic)
+//! gather_ms      float  merge of per-shard top-k lists (0 monolithic)
+//! dist_evals     int    distance evaluations across all probed shards
+//! hops           int    beam-search hops across all probed shards
+//! shards         array  per-shard spans, sorted by shard id:
+//!   .shard          int    shard index
+//!   .wait_ms        float  pin wait (home-shard resolve, incl. faulting)
+//!   .search_ms      float  wall time of this shard's walk
+//!   .dist_evals     int    distance evaluations inside this shard
+//!   .hops           int    hops inside this shard
+//!   .block_fetches  int    block-cache misses faulted from disk
+//!   .block_hits     int    block-cache hits
+//! ```
+//!
+//! Tracing is observation-only: a traced query returns bit-identical
+//! results to an untraced one (`tests/telemetry.rs` proves it across
+//! the probe × budget × threads grid), so spans never lie about the
+//! work the untraced path would have done.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+/// Per-shard section of a [`QueryTrace`]; field meanings in the module
+/// doc's format table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardSpan {
+    pub shard: usize,
+    pub wait_ms: f64,
+    pub search_ms: f64,
+    pub dist_evals: usize,
+    pub hops: usize,
+    pub block_fetches: u64,
+    pub block_hits: u64,
+}
+
+impl ShardSpan {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("shard", self.shard)
+            .set("wait_ms", self.wait_ms)
+            .set("search_ms", self.search_ms)
+            .set("dist_evals", self.dist_evals)
+            .set("hops", self.hops)
+            .set("block_fetches", self.block_fetches)
+            .set("block_hits", self.block_hits)
+    }
+
+    fn from_json(j: &Json) -> crate::Result<ShardSpan> {
+        let num = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("span missing {k:?}"))
+        };
+        Ok(ShardSpan {
+            shard: num("shard")? as usize,
+            wait_ms: num("wait_ms")?,
+            search_ms: num("search_ms")?,
+            dist_evals: num("dist_evals")? as usize,
+            hops: num("hops")? as usize,
+            block_fetches: num("block_fetches")? as u64,
+            block_hits: num("block_hits")? as u64,
+        })
+    }
+}
+
+/// One sampled query's timeline; see the module doc's format table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueryTrace {
+    pub query: usize,
+    pub ef: usize,
+    pub queue_ms: f64,
+    pub service_ms: f64,
+    pub route_ms: f64,
+    pub gather_ms: f64,
+    pub dist_evals: usize,
+    pub hops: usize,
+    pub shards: Vec<ShardSpan>,
+}
+
+impl QueryTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("query", self.query)
+            .set("ef", self.ef)
+            .set("queue_ms", self.queue_ms)
+            .set("service_ms", self.service_ms)
+            .set("route_ms", self.route_ms)
+            .set("gather_ms", self.gather_ms)
+            .set("dist_evals", self.dist_evals)
+            .set("hops", self.hops)
+            .set("shards", Json::Arr(self.shards.iter().map(ShardSpan::to_json).collect()))
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<QueryTrace> {
+        let num = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("trace missing {k:?}"))
+        };
+        let shards = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace missing \"shards\""))?
+            .iter()
+            .map(ShardSpan::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(QueryTrace {
+            query: num("query")? as usize,
+            ef: num("ef")? as usize,
+            queue_ms: num("queue_ms")?,
+            service_ms: num("service_ms")?,
+            route_ms: num("route_ms")?,
+            gather_ms: num("gather_ms")?,
+            dist_evals: num("dist_evals")? as usize,
+            hops: num("hops")? as usize,
+            shards,
+        })
+    }
+}
+
+/// Per-scratch trace collection point, embedded in
+/// [`crate::search::SearchScratch`]. The serve harness arms it per
+/// sampled query ([`begin`](TraceSink::begin)), the index
+/// implementations fill it, the harness harvests it into a
+/// [`QueryTrace`]. Disabled (the default), every instrumentation site
+/// is a single branch — and armed or not, the sink never influences
+/// results.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    /// Collect spans for the current query.
+    pub enabled: bool,
+    /// Centroid routing time (set by the sharded index).
+    pub route_ms: f64,
+    /// Top-k merge time across shard lists.
+    pub gather_ms: f64,
+    /// One span per probed shard.
+    pub shards: Vec<ShardSpan>,
+}
+
+impl TraceSink {
+    /// Arm for the next query, clearing the previous query's spans.
+    pub fn begin(&mut self) {
+        self.enabled = true;
+        self.clear();
+    }
+
+    /// Disarm (after harvesting into a [`QueryTrace`]).
+    pub fn end(&mut self) {
+        self.enabled = false;
+    }
+
+    pub fn clear(&mut self) {
+        self.route_ms = 0.0;
+        self.gather_ms = 0.0;
+        self.shards.clear();
+    }
+}
+
+/// Append-only JSONL writer for sampled traces.
+pub struct TraceWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    written: usize,
+}
+
+impl TraceWriter {
+    /// Open `path` for appending, creating it if absent.
+    pub fn append_to(path: impl AsRef<Path>) -> crate::Result<TraceWriter> {
+        let path = path.as_ref().to_path_buf();
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open trace file {}", path.display()))?;
+        Ok(TraceWriter { w: BufWriter::new(f), path, written: 0 })
+    }
+
+    pub fn append(&mut self, t: &QueryTrace) -> crate::Result<()> {
+        writeln!(self.w, "{}", t.to_json())
+            .with_context(|| format!("append trace to {}", self.path.display()))?;
+        self.written += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> crate::Result<()> {
+        self.w.flush().with_context(|| format!("flush trace file {}", self.path.display()))
+    }
+
+    /// Traces appended through this writer (not lines already in the file).
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Parse a `traces.jsonl` file, one [`QueryTrace`] per non-empty line.
+pub fn read_traces(path: impl AsRef<Path>) -> crate::Result<Vec<QueryTrace>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace file {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line)
+            .and_then(|j| QueryTrace::from_json(&j))
+            .with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+        out.push(parsed);
+    }
+    Ok(out)
+}
+
+/// Linear-interpolated percentile of ascending values (0 when empty).
+fn pctl(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+}
+
+fn dist_line(out: &mut String, name: &str, values: &mut [f64]) {
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    };
+    let max = values.last().copied().unwrap_or(0.0);
+    out.push_str(&format!(
+        "{name:<16} {mean:>10.3} {p50:>10.3} {p99:>10.3} {max:>10.3}\n",
+        p50 = pctl(values, 50.0),
+        p99 = pctl(values, 99.0),
+    ));
+}
+
+/// Human-readable report over parsed traces: exact aggregate
+/// distributions (these are the sampled values themselves, not log2
+/// buckets) plus the span timeline of the `top` slowest queries.
+pub fn render_report(traces: &[QueryTrace], top: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{} sampled queries\n\n", traces.len()));
+    out.push_str(&format!(
+        "{:<16} {:>10} {:>10} {:>10} {:>10}\n",
+        "metric", "mean", "p50", "p99", "max"
+    ));
+    let mut col = |name: &str, f: &dyn Fn(&QueryTrace) -> f64| {
+        let mut v: Vec<f64> = traces.iter().map(f).collect();
+        dist_line(&mut out, name, &mut v);
+    };
+    col("service_ms", &|t| t.service_ms);
+    col("queue_ms", &|t| t.queue_ms);
+    col("route_ms", &|t| t.route_ms);
+    col("gather_ms", &|t| t.gather_ms);
+    col("dist_evals", &|t| t.dist_evals as f64);
+    col("hops", &|t| t.hops as f64);
+    col("block_fetches", &|t| {
+        t.shards.iter().map(|s| s.block_fetches).sum::<u64>() as f64
+    });
+    col("block_hits", &|t| t.shards.iter().map(|s| s.block_hits).sum::<u64>() as f64);
+
+    let mut slowest: Vec<&QueryTrace> = traces.iter().collect();
+    slowest.sort_by(|a, b| {
+        b.service_ms.partial_cmp(&a.service_ms).unwrap().then(a.query.cmp(&b.query))
+    });
+    slowest.truncate(top);
+    out.push_str(&format!("\nslowest {} queries:\n", slowest.len()));
+    for t in slowest {
+        out.push_str(&format!(
+            "#{} ef={}: queue {:.3} ms | route {:.3} ms | {} shard spans | gather {:.3} ms \
+             | service {:.3} ms, {} evals, {} hops\n",
+            t.query,
+            t.ef,
+            t.queue_ms,
+            t.route_ms,
+            t.shards.len(),
+            t.gather_ms,
+            t.service_ms,
+            t.dist_evals,
+            t.hops
+        ));
+        for s in &t.shards {
+            out.push_str(&format!(
+                "  shard {}: wait {:.3} ms, search {:.3} ms, {} evals, {} hops, \
+                 blocks {} fetched / {} hit\n",
+                s.shard, s.wait_ms, s.search_ms, s.dist_evals, s.hops, s.block_fetches,
+                s.block_hits
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(q: usize, service_ms: f64) -> QueryTrace {
+        QueryTrace {
+            query: q,
+            ef: 32,
+            queue_ms: 0.25,
+            service_ms,
+            route_ms: 0.01,
+            gather_ms: 0.02,
+            dist_evals: 120,
+            hops: 9,
+            shards: vec![
+                ShardSpan {
+                    shard: 0,
+                    wait_ms: 0.05,
+                    search_ms: service_ms / 2.0,
+                    dist_evals: 70,
+                    hops: 5,
+                    block_fetches: 3,
+                    block_hits: 11,
+                },
+                ShardSpan {
+                    shard: 2,
+                    wait_ms: 0.0,
+                    search_ms: service_ms / 3.0,
+                    dist_evals: 50,
+                    hops: 4,
+                    block_fetches: 0,
+                    block_hits: 14,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let t = sample(7, 1.5);
+        let text = t.to_json().to_string();
+        let back = QueryTrace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let j = Json::parse("{\"query\":1}").unwrap();
+        assert!(QueryTrace::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn writer_appends_and_reader_parses() {
+        let dir = std::env::temp_dir().join(format!(
+            "gnnd-trace-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("traces.jsonl");
+        let mut w = TraceWriter::append_to(&path).unwrap();
+        w.append(&sample(0, 1.0)).unwrap();
+        w.append(&sample(4, 3.0)).unwrap();
+        assert_eq!(w.written(), 2);
+        w.flush().unwrap();
+        drop(w);
+        // append mode: a second writer extends the same file
+        let mut w = TraceWriter::append_to(&path).unwrap();
+        w.append(&sample(8, 2.0)).unwrap();
+        w.flush().unwrap();
+        drop(w);
+        let got = read_traces(&path).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], sample(0, 1.0));
+        assert_eq!(got[2].query, 8);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sink_begin_clears_previous_query() {
+        let mut sink = TraceSink::default();
+        assert!(!sink.enabled);
+        sink.begin();
+        sink.shards.push(ShardSpan { shard: 1, ..Default::default() });
+        sink.route_ms = 9.0;
+        sink.end();
+        assert!(!sink.enabled);
+        sink.begin();
+        assert!(sink.enabled);
+        assert!(sink.shards.is_empty());
+        assert_eq!(sink.route_ms, 0.0);
+    }
+
+    #[test]
+    fn report_ranks_slowest_and_prints_spans() {
+        let traces = vec![sample(0, 1.0), sample(4, 3.0), sample(8, 2.0)];
+        let r = render_report(&traces, 2);
+        assert!(r.contains("3 sampled queries"), "{r}");
+        assert!(r.contains("slowest 2 queries"), "{r}");
+        // slowest first, and only `top` of them
+        let q4 = r.find("#4 ").unwrap();
+        let q8 = r.find("#8 ").unwrap();
+        assert!(q4 < q8, "{r}");
+        assert!(!r.contains("#0 "), "{r}");
+        assert!(r.contains("shard 2:"), "{r}");
+        for m in ["service_ms", "dist_evals", "block_fetches"] {
+            assert!(r.contains(m), "missing {m}: {r}");
+        }
+    }
+}

@@ -343,6 +343,71 @@ fn cli_block_residency_serves_under_sub_shard_budget() {
 }
 
 #[test]
+fn cli_telemetry_trace_and_metrics_export() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let shard_dir = dir.join("shards").to_string_lossy().into_owned();
+    let traces = dir.join("traces.jsonl").to_string_lossy().into_owned();
+    let metrics = dir.join("metrics.jsonl").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "500", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "ooc-build", "--data", &data, "--dir", &shard_dir, "--shards", "3",
+        "--workers", "2", "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "ooc-build failed: {out}");
+
+    // block-residency sweep with every 4th query traced and per-point
+    // registry snapshots exported
+    let (ok, out) = run(&[
+        "serve-bench", "--shards", &shard_dir, "--data", &data, "--ef", "16,32",
+        "--queries", "40", "--distinct", "20", "--threads", "2",
+        "--residency", "block", "--trace-sample", "4",
+        "--trace-out", &traces, "--metrics-out", &metrics,
+    ]);
+    assert!(ok, "telemetry serve-bench failed: {out}");
+    assert!(out.contains("sampled traces ->"), "no trace summary line: {out}");
+    assert!(out.contains("metric points ->"), "no metrics summary line: {out}");
+    // the sweep rows grew mean work columns
+    assert!(out.contains("dist_evals") && out.contains("hops"), "no work columns: {out}");
+
+    // traces: 40 queries sampled every 4th, per ef point -> 10 x 2
+    let ttext = std::fs::read_to_string(&traces).unwrap();
+    assert_eq!(ttext.lines().count(), 20, "wrong trace count:\n{ttext}");
+    assert!(ttext.contains("\"shards\""), "traces carry no spans:\n{ttext}");
+
+    // metrics: one JSONL object per operating point
+    let mtext = std::fs::read_to_string(&metrics).unwrap();
+    assert_eq!(mtext.lines().count(), 2, "wrong metrics point count:\n{mtext}");
+    assert!(mtext.contains("\"point\""), "no point label: {mtext}");
+    assert!(mtext.contains("block_cache.fetches"), "no block counters: {mtext}");
+    assert!(mtext.contains("query.service_us"), "no service histogram: {mtext}");
+
+    // stats.json gained the registry snapshot next to build/serve stats
+    let stats_text =
+        std::fs::read_to_string(std::path::Path::new(&shard_dir).join("stats.json")).unwrap();
+    assert!(stats_text.contains("\"telemetry\""), "no telemetry block: {stats_text}");
+    assert!(stats_text.contains("query.dist_evals"), "no query work: {stats_text}");
+    assert!(stats_text.contains("\"merges\""), "build stats lost in fold: {stats_text}");
+
+    // the trace subcommand renders the aggregate report
+    let (ok, out) = run(&["trace", &traces, "--top", "2"]);
+    assert!(ok, "trace subcommand failed: {out}");
+    assert!(out.contains("20 sampled queries"), "wrong report header: {out}");
+    assert!(out.contains("slowest 2 queries:"), "no slowest section: {out}");
+    assert!(out.contains("service_ms"), "no distribution table: {out}");
+
+    // a missing trace file is an error, not an empty report
+    let nope = dir.join("nope.jsonl").to_string_lossy().into_owned();
+    let (ok, out) = run(&["trace", &nope]);
+    assert!(!ok, "trace on a missing file must fail: {out}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_input() {
     let (ok, _) = run(&["bogus-subcommand"]);
     assert!(!ok);

@@ -1,0 +1,209 @@
+//! Integration: the telemetry layer against real `ooc-build` output —
+//! tracing must be observation-only (bit-identical results with the
+//! sink armed or not), span accounting must reconcile exactly with the
+//! query's work counters, and the serve sweep must stream sampled
+//! traces through the JSONL writer and collect per-point registry
+//! snapshots. Global-registry assertions use `>=` only: the registry
+//! is process-wide and tests in this binary run concurrently.
+
+use std::path::{Path, PathBuf};
+
+use gnnd::dataset::synth;
+use gnnd::gnnd::{GnndParams, NativeEngine};
+use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardStore};
+use gnnd::search::serve::{self, ServeConfig};
+use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::{AnnIndex, SearchParams};
+use gnnd::telemetry::{self, trace::read_traces, trace::render_report, trace::TraceWriter};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-telemetry-{tag}-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn build_store(dir: &Path, n: usize, seed: u64) -> gnnd::dataset::Dataset {
+    let ds = synth::clustered(n, 8, seed);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    build_out_of_core(&ds, dir, &cfg, &NativeEngine).unwrap();
+    ds
+}
+
+/// The tentpole acceptance shape: arming the trace sink must not change
+/// a single bit of output, eval count or hop count across the
+/// probe x budget x threads grid — and the spans a traced query records
+/// must reconcile exactly with its work counters (route centroid
+/// distances are not beam work, so per-shard spans sum to the totals).
+#[test]
+fn tracing_is_observation_only_across_probe_budget_threads() {
+    let dir = tmpdir("parity");
+    let ds = build_store(&dir, 480, 52);
+    let manifest = ShardStore::new(&dir).unwrap().load_manifest().unwrap();
+    let sub_shard = manifest.shard_bytes(0) / 2;
+
+    let sp = SearchParams::default().with_ef(48);
+    for probe in [0usize, 2] {
+        for budget in [0usize, sub_shard] {
+            for threads in [1usize, 3] {
+                let open = || {
+                    ShardedIndex::open_with_residency(
+                        &dir,
+                        sp.clone(),
+                        probe,
+                        budget,
+                        threads,
+                        ResidencyMode::block(),
+                    )
+                    .unwrap()
+                };
+                let plain = open();
+                let traced = open();
+                let mut s_plain = plain.make_scratch();
+                let mut s_traced = traced.make_scratch();
+                let (mut o_plain, mut o_traced) = (Vec::new(), Vec::new());
+                for q in (0..ds.len()).step_by(53) {
+                    plain.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_plain,
+                        &mut o_plain,
+                    );
+                    s_traced.trace.begin();
+                    traced.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_traced,
+                        &mut o_traced,
+                    );
+                    s_traced.trace.end();
+                    assert_eq!(
+                        o_plain, o_traced,
+                        "tracing changed results (probe={probe} budget={budget} \
+                         threads={threads}) on query {q}"
+                    );
+                    assert_eq!(s_plain.dist_evals, s_traced.dist_evals, "evals on query {q}");
+                    assert_eq!(s_plain.hops, s_traced.hops, "hops on query {q}");
+
+                    // span accounting: one span per probed shard, in
+                    // shard order, summing exactly to the query totals
+                    let spans = &s_traced.trace.shards;
+                    let expect = if probe == 0 { 4 } else { probe };
+                    assert_eq!(spans.len(), expect, "span count on query {q}");
+                    assert!(
+                        spans.windows(2).all(|w| w[0].shard < w[1].shard),
+                        "spans unsorted on query {q}: {spans:?}"
+                    );
+                    let span_evals: usize = spans.iter().map(|s| s.dist_evals).sum();
+                    let span_hops: usize = spans.iter().map(|s| s.hops).sum();
+                    assert_eq!(span_evals, s_traced.dist_evals, "span evals on query {q}");
+                    assert_eq!(span_hops, s_traced.hops, "span hops on query {q}");
+                    assert!(
+                        spans.iter().all(|s| s.search_ms >= 0.0 && s.wait_ms >= 0.0),
+                        "negative span time on query {q}: {spans:?}"
+                    );
+                    // untraced queries must leave no spans behind
+                    assert!(s_plain.trace.shards.is_empty());
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The sweep-level export path end to end: `run_sweep_with` streams
+/// every `trace_sample`-th query of the timing pass to the JSONL
+/// writer, the file round-trips through `read_traces`, block-residency
+/// traces carry block traffic in their spans, and `metrics_points`
+/// holds one (cumulative, delta) snapshot pair per operating point.
+#[test]
+fn sweep_streams_sampled_traces_and_per_point_snapshots() {
+    let dir = tmpdir("sweep");
+    let ds = build_store(&dir, 400, 53);
+
+    let sp = SearchParams::default().with_ef(32);
+    let index =
+        ShardedIndex::open_with_residency(&dir, sp.clone(), 0, 0, 2, ResidencyMode::block())
+            .unwrap();
+    let cfg = ServeConfig {
+        k: 10,
+        ef_sweep: vec![16, 32],
+        n_queries: 12,
+        distinct_queries: 12,
+        threads: 2,
+        params: sp,
+        trace_sample: 3,
+        ..ServeConfig::default()
+    };
+    let trace_path = dir.join("traces.jsonl");
+    let mut sinks = serve::ServeSinks {
+        trace: Some(TraceWriter::append_to(&trace_path).unwrap()),
+        ..Default::default()
+    };
+    let report = serve::run_sweep_with(&index, &ds, &cfg, &mut sinks).unwrap();
+    assert_eq!(report.rows.len(), 2);
+
+    // queries 0, 3, 6, 9 of each of the two points
+    let traces = read_traces(&trace_path).unwrap();
+    assert_eq!(sinks.trace.as_ref().unwrap().written(), 8);
+    assert_eq!(traces.len(), 8);
+    for (i, t) in traces.iter().enumerate() {
+        assert_eq!(t.query % 3, 0, "trace {i} is not a sampled query: {t:?}");
+        assert_eq!(t.ef, if i < 4 { 16 } else { 32 });
+        assert_eq!(t.queue_ms, 0.0, "closed loop must not queue");
+        assert_eq!(t.shards.len(), 4, "probe=all over 4 shards");
+        let span_evals: usize = t.shards.iter().map(|s| s.dist_evals).sum();
+        assert_eq!(span_evals, t.dist_evals);
+    }
+    // block residency: the traced walks touched the block cache
+    let traffic: u64 = traces
+        .iter()
+        .flat_map(|t| t.shards.iter())
+        .map(|s| s.block_fetches + s.block_hits)
+        .sum();
+    assert!(traffic > 0, "no block traffic in any span");
+    // the human report renders without panicking and names the format
+    let rendered = render_report(&traces, 3);
+    assert!(rendered.contains("8 sampled queries"), "{rendered}");
+    assert!(rendered.contains("slowest 3 queries:"), "{rendered}");
+
+    // per-point snapshots: one pair per ef, labelled in sweep order,
+    // each point's delta attributing at least its own timed queries
+    let labels: Vec<&str> =
+        sinks.metrics_points.iter().map(|(l, _, _)| l.as_str()).collect();
+    assert_eq!(labels, ["ef=16", "ef=32"]);
+    for (label, cum, delta) in &sinks.metrics_points {
+        let d = delta.counter("query.count").unwrap_or(0);
+        assert!(d >= 12, "{label}: delta query.count {d} < 12");
+        assert!(cum.counter("query.count").unwrap_or(0) >= d);
+        assert!(cum.hist("query.service_us").is_some(), "{label}: no service histogram");
+    }
+    // the sweep rows grew the work columns
+    for row in &report.rows {
+        assert!(row.cols.iter().any(|(n, v)| n == "dist_evals" && *v > 0.0), "{row:?}");
+        assert!(row.cols.iter().any(|(n, v)| n == "hops" && *v > 0.0), "{row:?}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// `telemetry::warn!` goes through the counted `[warn]` funnel: the
+/// process-wide warning total advances by at least the warnings this
+/// test emits (other tests may emit their own concurrently).
+#[test]
+fn warn_macro_counts_warnings() {
+    let before = telemetry::warnings_total();
+    telemetry::warn!("telemetry test: {} of {}", 1, 2);
+    telemetry::warn!("telemetry test: second");
+    assert!(telemetry::warnings_total() >= before + 2);
+}
