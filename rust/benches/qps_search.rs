@@ -25,7 +25,9 @@
 
 use gnnd::dataset::synth;
 use gnnd::gnnd::{GnndParams, NativeEngine};
-use gnnd::merge::outofcore::{build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardStore};
+use gnnd::merge::outofcore::{
+    build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore,
+};
 use gnnd::search::serve::{self, ServeConfig};
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
@@ -125,6 +127,31 @@ fn main() {
     }
     println!("residency at block-granular budget 50%: {}", res.to_json());
     drop(paged);
+
+    // ---- quantized variant: same 50% budget at block granularity,
+    // but the vector payload is u8 scalar-quantized codes (4x more
+    // rows per block of budget) with the f32 shards as the
+    // exact-rerank source (`rerank=4`) — recall vs the two f32 curves
+    // above is the quantization story, the rerank_evals column the
+    // extra exact work it costs ----
+    let t = Timer::start();
+    quantize_store(&dir).expect("quantize shard store");
+    eprintln!("quantized shard store in {:.1}s", t.secs());
+    let qstore = ShardStore::with_options(&dir, budget, ResidencyMode::block(), true)
+        .expect("quantized store");
+    let quant = ShardedIndex::from_store(qstore, cfg.params.clone().with_rerank(4), 2, 1)
+        .expect("quantized index");
+    let cfg_quant = ServeConfig { params: cfg.params.clone().with_rerank(4), ..cfg.clone() };
+    let mut ds_quant = ds.clone();
+    ds_quant.name = format!("{} sharded quant50 rerank4", ds.name);
+    let report = serve::run_sweep_on(&quant, &ds_quant, &cfg_quant).expect("quantized sweep");
+    let res = quant.residency();
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    println!("residency at quantized block budget 50%: {}", res.to_json());
+    drop(quant);
 
     // ---- sequential vs parallel scatter at 1 serve worker ----
     // with a single closed-loop worker, QPS is per-query latency:

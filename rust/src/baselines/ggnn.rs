@@ -92,7 +92,7 @@ fn search_graph_with(
     scratch: &mut SearchScratch,
 ) -> Vec<(f32, u32)> {
     let ef = k + ((4.0 * tau * k as f64).ceil() as usize).max(1);
-    let spec = QuerySpec { q, k, ef, beam_width: 0, max_hops: 0, entries, exclude };
+    let spec = QuerySpec { q, k, ef, beam_width: 0, max_hops: 0, entries, exclude, rerank: 1 };
     let mut out = Vec::with_capacity(k);
     beam_search(ds, graph, subset, &spec, scratch, &mut out);
     out

@@ -39,6 +39,31 @@
 //! always load fully resident (the owned path), including under
 //! block-residency serving.
 //!
+//! **q1** (scalar-quantized; written by [`write_dsb_quantized_with`]
+//! / `gnnd quantize`) — the v2 layout with u8 code rows and a
+//! [`QuantParams`] sidecar between header and data:
+//!
+//! ```text
+//! offset      field
+//!      0      magic        0x4453_5131 ("DSQ1")
+//!      4      d            vector dimensionality
+//!      8      n            number of rows
+//!     12      metric       same codes as v2
+//!     16      row_stride   bytes per row, = d (one u8 code per dim)
+//!     20      block_rows   writer's block-size hint
+//!     24      scale        d f32 (per-dimension quantization step)
+//!     24+4d   offset       d f32 (per-dimension minimum)
+//!     24+8d   data         n rows x d bytes, row i at 24 + 8*d + i*d
+//! ```
+//!
+//! Dimension `j` of row `x` encodes as
+//! `round((x[j] - offset[j]) / scale[j])` clamped to `[0, 255]`.
+//! Readers auto-detect the magic: [`read_dsb`] loads codes owned,
+//! [`read_dsb_paged`] pages them through the block cache at 1 byte per
+//! dimension (4x the rows per byte of budget vs. v2), and
+//! [`read_dsb_quantized`] additionally attaches a paged full-precision
+//! v2 sidecar for the exact rerank phase of two-phase search.
+//!
 //! Both readers validate the header against the actual file length on
 //! open, so truncated or corrupt files fail with the path and expected
 //! vs. actual sizes instead of a `read_exact` EOF mid-load.
@@ -55,13 +80,18 @@ use anyhow::{bail, Context};
 
 use crate::config::Metric;
 
-use super::store::{self, BlockCache, PagedRows, VectorStore, DEFAULT_BLOCK_BYTES};
+use super::store::{
+    self, BlockCache, ExactRows, PagedRows, QuantCodes, QuantFitter, QuantParams, QuantStore,
+    VectorStore, DEFAULT_BLOCK_BYTES,
+};
 use super::Dataset;
 
 const DSB_MAGIC_V1: u32 = 0x4453_4231; // "DSB1"
 const DSB_MAGIC_V2: u32 = 0x4453_4232; // "DSB2"
+const DSB_MAGIC_Q1: u32 = 0x4453_5131; // "DSQ1"
 
-/// v2 header length in bytes.
+/// v2 header length in bytes (q1 shares it; its params sidecar starts
+/// right after).
 const DSB_V2_HEADER: u64 = 24;
 /// v1 header length in bytes.
 const DSB_V1_HEADER: u64 = 16;
@@ -208,8 +238,58 @@ pub fn write_dsb_v1(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
     Ok(())
 }
 
-/// Parsed `.dsb` header (either version), with the file length already
-/// validated against it.
+/// Write a dataset as a scalar-quantized `.dsb` q1 file, encoding every
+/// row with the given (already-fitted) `params`. A sharded store passes
+/// the same union-fitted params for every shard so code-space distances
+/// stay comparable across shards at gather time.
+pub fn write_dsb_quantized_with(
+    ds: &Dataset,
+    params: &QuantParams,
+    path: impl AsRef<Path>,
+) -> crate::Result<()> {
+    anyhow::ensure!(
+        params.d() == ds.d,
+        "quant params dimension {} != dataset dimension {}",
+        params.d(),
+        ds.d
+    );
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    let block_rows = (DEFAULT_BLOCK_BYTES / ds.d).max(1) as u32;
+    w.write_all(&DSB_MAGIC_Q1.to_le_bytes())?;
+    w.write_all(&(ds.d as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&metric_code(ds.metric).to_le_bytes())?;
+    w.write_all(&(ds.d as u32).to_le_bytes())?; // row_stride = d: 1 byte/dim
+    w.write_all(&block_rows.to_le_bytes())?;
+    write_f32s_bulk(&mut w, &params.scale)?;
+    write_f32s_bulk(&mut w, &params.offset)?;
+    const STAGE_BYTES: usize = 256 * 1024;
+    let mut codes = Vec::with_capacity(ds.d);
+    let mut buf: Vec<u8> = Vec::with_capacity(STAGE_BYTES + ds.d);
+    for i in 0..ds.len() {
+        ds.with_vec(i, |row| params.encode_into(row, &mut codes));
+        buf.extend_from_slice(&codes);
+        if buf.len() >= STAGE_BYTES {
+            w.write_all(&buf)?;
+            buf.clear();
+        }
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Fit [`QuantParams`] on `ds`'s own rows and write it as a quantized
+/// `.dsb` q1 — the single-file form of `gnnd quantize`.
+pub fn write_dsb_quantized(ds: &Dataset, path: impl AsRef<Path>) -> crate::Result<()> {
+    let mut fit = QuantFitter::new(ds.d);
+    for i in 0..ds.len() {
+        ds.with_vec(i, |row| fit.observe(row));
+    }
+    write_dsb_quantized_with(ds, &fit.finish(), path)
+}
+
+/// Parsed `.dsb` header (any version; `version` is 1, 2, or 3 for
+/// q1), with the file length already validated against it.
 struct DsbHeader {
     version: u32,
     d: usize,
@@ -262,8 +342,40 @@ fn read_dsb_header(file: &mut File, path: &Path) -> crate::Result<DsbHeader> {
             )?;
             Ok(DsbHeader { version: 2, d, n, metric, data_off: DSB_V2_HEADER, row_stride })
         }
+        DSB_MAGIC_Q1 => {
+            anyhow::ensure!(
+                head.len() as u64 >= DSB_V2_HEADER,
+                "truncated .dsb q1 header: {path:?}"
+            );
+            let (d, n) = (word(1) as usize, word(2) as usize);
+            let metric = metric_from_code(word(3))?;
+            let row_stride = word(4) as usize;
+            anyhow::ensure!(d > 0, "{path:?}: zero dimension");
+            anyhow::ensure!(
+                row_stride == d,
+                "{path:?}: quantized row stride {row_stride} != d ({d}) — unsupported layout"
+            );
+            // params sidecar (2*d f32) sits between header and data
+            let data_off = DSB_V2_HEADER + 8 * d as u64;
+            check_file_len(
+                path,
+                actual,
+                expected_file_len(path, data_off, n, row_stride)?,
+                &format!("q1, n={n} d={d}"),
+            )?;
+            Ok(DsbHeader { version: 3, d, n, metric, data_off, row_stride })
+        }
         _ => bail!("not a .dsb file: {path:?}"),
     }
+}
+
+/// Read the q1 params sidecar (leaves the cursor at the start of the
+/// code rows).
+fn read_quant_params(file: &mut File, path: &Path, d: usize) -> crate::Result<QuantParams> {
+    file.seek(SeekFrom::Start(DSB_V2_HEADER))?;
+    let scale = read_f32s(file, d).with_context(|| format!("read quant scales of {path:?}"))?;
+    let offset = read_f32s(file, d).with_context(|| format!("read quant offsets of {path:?}"))?;
+    Ok(QuantParams { scale, offset })
 }
 
 fn dsb_name(path: &Path) -> String {
@@ -272,11 +384,16 @@ fn dsb_name(path: &Path) -> String {
         .unwrap_or_else(|| "dsb".into())
 }
 
-/// Read a `.dsb` dataset (v1 or v2) fully into memory.
+/// Read a `.dsb` dataset (any version) fully into memory: f32 rows
+/// owned for v1/v2, u8 codes owned (a `Quantized` backing with no
+/// exact sidecar) for q1.
 pub fn read_dsb(path: impl AsRef<Path>) -> crate::Result<Dataset> {
     let path = path.as_ref();
     let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
     let h = read_dsb_header(&mut file, path)?;
+    if h.version == 3 {
+        return finish_q1(file, h, path, None, None);
+    }
     // the header probe may have read past a short (v1) header
     file.seek(SeekFrom::Start(h.data_off))?;
     let mut r = BufReader::new(file);
@@ -288,6 +405,109 @@ pub fn read_dsb(path: impl AsRef<Path>) -> crate::Result<Dataset> {
         metric: h.metric,
         data: VectorStore::Owned(data),
     })
+}
+
+/// Assemble the `Quantized` dataset from an opened q1 file: params
+/// sidecar, then codes either paged through `cache` or read owned, and
+/// an optional exact-rows attachment.
+fn finish_q1(
+    mut file: File,
+    h: DsbHeader,
+    path: &Path,
+    cache: Option<&Arc<BlockCache>>,
+    exact: Option<ExactRows>,
+) -> crate::Result<Dataset> {
+    let params = Arc::new(read_quant_params(&mut file, path, h.d)?);
+    let codes = match cache {
+        Some(cache) => QuantCodes::Paged(PagedRows::new(
+            file,
+            path.to_path_buf(),
+            h.data_off,
+            h.n,
+            h.row_stride,
+            h.d,
+            cache,
+            store::decode_u8_block,
+        )),
+        None => {
+            // read_quant_params left the cursor at the code rows
+            let mut v = vec![0u8; h.n * h.d];
+            file.read_exact(&mut v)
+                .with_context(|| format!("read quantized rows of {path:?}"))?;
+            QuantCodes::Owned(v)
+        }
+    };
+    // every open of a quantized store is (4-1) bytes/dim of row payload
+    // the f32 form would have cost
+    crate::telemetry::global()
+        .counter("quant.bytes_saved")
+        .add(3 * (h.n as u64) * (h.d as u64));
+    Ok(Dataset {
+        name: dsb_name(path),
+        d: h.d,
+        metric: h.metric,
+        data: VectorStore::Quantized(Box::new(QuantStore { d: h.d, params, codes, exact })),
+    })
+}
+
+/// Open a quantized q1 `.dsb` for serving: codes paged through `cache`
+/// (`paged = true`, the block-residency path — 4x the rows per byte of
+/// budget vs. f32) or fully owned (`paged = false`, shard residency),
+/// with `exact_path` optionally attaching the original full-precision
+/// v2 file as a *paged* sidecar for the exact rerank phase (rows fault
+/// in through the same cache, so rerank reads only the rows it
+/// scores). A v1 exact file has no pageable layout — it is skipped
+/// with a warning and rerank falls back to dequantized codes.
+pub fn read_dsb_quantized(
+    quant_path: impl AsRef<Path>,
+    exact_path: Option<&Path>,
+    cache: &Arc<BlockCache>,
+    paged: bool,
+) -> crate::Result<Dataset> {
+    let path = quant_path.as_ref();
+    let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let h = read_dsb_header(&mut file, path)?;
+    anyhow::ensure!(h.version == 3, "not a quantized .dsb (expected q1 magic): {path:?}");
+    let exact = match exact_path {
+        Some(ep) => attach_exact(ep, &h, cache)?,
+        None => None,
+    };
+    finish_q1(file, h, path, paged.then_some(cache), exact)
+}
+
+/// Open the full-precision sidecar of a quantized store as paged rows.
+fn attach_exact(
+    path: &Path,
+    qh: &DsbHeader,
+    cache: &Arc<BlockCache>,
+) -> crate::Result<Option<ExactRows>> {
+    let mut file = File::open(path).with_context(|| format!("open exact rows {path:?}"))?;
+    let h = read_dsb_header(&mut file, path)?;
+    anyhow::ensure!(
+        h.d == qh.d && h.n == qh.n,
+        "exact rows {path:?} (n={} d={}) do not match the quantized store (n={} d={})",
+        h.n,
+        h.d,
+        qh.n,
+        qh.d
+    );
+    if h.version != 2 {
+        crate::telemetry::warn!(
+            "quantized store: exact rows {path:?} are not .dsb v2 (pageable); \
+             rerank will use dequantized codes"
+        );
+        return Ok(None);
+    }
+    Ok(Some(ExactRows::Paged(PagedRows::new(
+        file,
+        path.to_path_buf(),
+        h.data_off,
+        h.n,
+        h.row_stride,
+        h.d,
+        cache,
+        store::decode_f32_block,
+    ))))
 }
 
 /// Open a `.dsb` for *paged* row access through `cache`: rows are
@@ -302,6 +522,9 @@ pub fn read_dsb_paged(path: impl AsRef<Path>, cache: &Arc<BlockCache>) -> crate:
     let h = read_dsb_header(&mut file, path)?;
     if h.version == 1 {
         return read_dsb(path);
+    }
+    if h.version == 3 {
+        return finish_q1(file, h, path, Some(cache), None);
     }
     let rows = PagedRows::new(
         file,
@@ -527,6 +750,106 @@ mod tests {
             let cache = BlockCache::new(0, 128);
             assert!(read_dsb_paged(&p, &cache).is_err(), "paged open must validate too");
         }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn quantized_dsb_roundtrip_owned_and_paged() {
+        let dir = tmpdir();
+        let ds = synth::clustered(60, 9, 4);
+        let p = dir.join("q.dsb");
+        write_dsb_quantized(&ds, &p).unwrap();
+        // auto-detect: read_dsb yields a quantized backing
+        let q = read_dsb(&p).unwrap();
+        assert!(q.is_quantized());
+        assert_eq!((q.len(), q.d, q.metric), (ds.len(), ds.d, ds.metric));
+        // dequantized rows stay within half a quantization step of the
+        // originals (step = per-dim range / 255)
+        let mut lo = vec![f32::INFINITY; ds.d];
+        let mut hi = vec![f32::NEG_INFINITY; ds.d];
+        for i in 0..ds.len() {
+            for (j, &x) in ds.vec(i).iter().enumerate() {
+                lo[j] = lo[j].min(x);
+                hi[j] = hi[j].max(x);
+            }
+        }
+        for i in 0..ds.len() {
+            let back = q.vector(i);
+            for j in 0..ds.d {
+                let bound = (hi[j] - lo[j]) / 255.0 / 2.0 + 1e-4 * ds.vec(i)[j].abs().max(1.0);
+                assert!(
+                    (back[j] - ds.vec(i)[j]).abs() <= bound,
+                    "row {i} dim {j}: {} vs {}",
+                    back[j],
+                    ds.vec(i)[j]
+                );
+            }
+        }
+        // paged codes serve the same dequantized rows bit-identically
+        let cache = BlockCache::new(0, 64);
+        let paged = read_dsb_paged(&p, &cache).unwrap();
+        assert!(paged.is_quantized());
+        for i in 0..ds.len() {
+            assert_eq!(paged.vector(i), q.vector(i), "row {i}");
+        }
+        assert!(cache.stats().fetches > 1, "u8 blocks must have paged in");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn quantized_exact_sidecar_serves_f32_rerank_rows() {
+        let dir = tmpdir();
+        let ds = synth::uniform(33, 7, 2);
+        let f = dir.join("f.dsb");
+        let qp = dir.join("q.dsb");
+        write_dsb(&ds, &f).unwrap();
+        write_dsb_quantized(&ds, &qp).unwrap();
+        let cache = BlockCache::new(0, 256);
+        let q = read_dsb_quantized(&qp, Some(&f), &cache, true).unwrap();
+        let mut buf = Vec::new();
+        for i in 0..ds.len() {
+            // rerank matches the f32 kernel bit-exactly via the sidecar
+            let want = ds.dist_to(i, ds.vec(0));
+            assert_eq!(q.rerank_dist_to(i, ds.vec(0), &mut buf), want, "row {i}");
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn quantized_exact_sidecar_mismatch_errors_and_v1_falls_back() {
+        let dir = tmpdir();
+        let ds = synth::uniform(20, 4, 7);
+        let qp = dir.join("q.dsb");
+        write_dsb_quantized(&ds, &qp).unwrap();
+        let cache = BlockCache::new(0, 256);
+        // geometry mismatch is an error, not silent wrong answers
+        let other = synth::uniform(10, 4, 7);
+        let bad = dir.join("bad.dsb");
+        write_dsb(&other, &bad).unwrap();
+        assert!(read_dsb_quantized(&qp, Some(&bad), &cache, false).is_err());
+        // a v1 sidecar is skipped (not pageable): rerank still answers,
+        // from dequantized codes
+        let v1 = dir.join("v1.dsb");
+        write_dsb_v1(&ds, &v1).unwrap();
+        let q = read_dsb_quantized(&qp, Some(&v1), &cache, false).unwrap();
+        let mut buf = Vec::new();
+        assert!(q.rerank_dist_to(1, ds.vec(0), &mut buf).is_finite());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_quantized_dsb_reports_sizes() {
+        let dir = tmpdir();
+        let ds = synth::uniform(30, 4, 5);
+        let p = dir.join("tq.dsb");
+        write_dsb_quantized(&ds, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 7]).unwrap();
+        let err = format!("{:#}", read_dsb(&p).unwrap_err());
+        assert!(
+            err.contains("truncated") && err.contains("tq.dsb") && err.contains("bytes"),
+            "unhelpful truncation error: {err}"
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,16 +1,20 @@
 //! Datasets: a flat row-major f32 matrix plus metric metadata.
 //!
 //! Rows live behind a [`store::VectorStore`]: fully in memory
-//! (`Owned`, every construction path) or paged from a `.dsb` v2 file
+//! (`Owned`, every construction path), paged from a `.dsb` v2 file
 //! through a shared block cache (`Paged`, the serving path of
-//! [`crate::merge::outofcore::ShardStore`] in block-residency mode).
+//! [`crate::merge::outofcore::ShardStore`] in block-residency mode),
+//! or scalar-quantized u8 codes with a [`store::QuantParams`] sidecar
+//! (`Quantized`, the cheap beam-phase backing of two-phase serving —
+//! see [`Dataset::dist_to_quant`] / [`Dataset::rerank_dist_to`]).
 //! Accessors split accordingly: [`Dataset::vec`] / [`Dataset::raw`]
 //! borrow and exist only for owned data; [`Dataset::with_vec`],
 //! [`Dataset::vector`], [`Dataset::dist`] and [`Dataset::dist_to`]
-//! work on either backing (a paged row is borrowed for the duration of
+//! work on any backing (a paged row is borrowed for the duration of
 //! a closure — a borrow that outlived the access could dangle past the
 //! block's next eviction, the same reasoning behind
-//! [`crate::search::AnnIndex::vector`] returning owned data).
+//! [`crate::search::AnnIndex::vector`] returning owned data; a
+//! quantized row is dequantized into a transient buffer first).
 
 pub mod groundtruth;
 pub mod io;
@@ -20,7 +24,7 @@ pub mod synth;
 use crate::config::Metric;
 use crate::distance;
 
-use store::VectorStore;
+use store::{ExactRows, QuantCodes, QuantFitter, QuantStore, VectorStore};
 
 /// A dataset of `n` vectors of dimension `d` (row-major).
 #[derive(Clone, Debug)]
@@ -51,6 +55,7 @@ impl Dataset {
         match &self.data {
             VectorStore::Owned(v) => v.len() / self.d,
             VectorStore::Paged(p) => p.rows(),
+            VectorStore::Quantized(q) => q.rows(),
         }
     }
 
@@ -58,44 +63,79 @@ impl Dataset {
         self.len() == 0
     }
 
-    /// True when rows are paged from disk rather than memory-resident.
+    /// True when f32 rows are paged from disk rather than
+    /// memory-resident (a quantized backing is *not* "paged" even when
+    /// its codes are — check [`Dataset::is_quantized`]).
     pub fn is_paged(&self) -> bool {
         matches!(self.data, VectorStore::Paged(_))
     }
 
+    /// True when rows are scalar-quantized u8 codes.
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.data, VectorStore::Quantized(_))
+    }
+
+    /// True when rows are a fully memory-resident f32 matrix — the
+    /// backing the construction-side utilities ([`Dataset::select`],
+    /// [`Dataset::concat`], [`Dataset::split`], [`Dataset::raw`])
+    /// require.
+    pub fn is_owned(&self) -> bool {
+        matches!(self.data, VectorStore::Owned(_))
+    }
+
+    /// Human-readable backing name for error messages and `describe()`.
+    pub fn backing_kind(&self) -> &'static str {
+        match &self.data {
+            VectorStore::Owned(_) => "owned",
+            VectorStore::Paged(_) => "paged",
+            VectorStore::Quantized(_) => "quantized",
+        }
+    }
+
     /// Bytes this dataset holds resident *itself* (paged datasets keep
-    /// only a handle; their blocks are accounted by the shared cache).
+    /// only a handle; their blocks are accounted by the shared cache;
+    /// quantized datasets hold 1 byte per dimension plus the params
+    /// sidecar).
     pub fn resident_bytes(&self) -> usize {
         match &self.data {
             VectorStore::Owned(v) => v.len() * std::mem::size_of::<f32>(),
             VectorStore::Paged(_) => store::PAGED_HANDLE_BYTES,
+            VectorStore::Quantized(q) => q.resident_bytes(),
         }
     }
 
     /// Row view. Owned backing only — a paged row cannot be borrowed
-    /// past the access (use [`Dataset::with_vec`] / [`Dataset::vector`]).
+    /// past the access and a quantized row does not exist as f32 (use
+    /// [`Dataset::with_vec`] / [`Dataset::vector`]).
     #[inline]
     pub fn vec(&self, i: usize) -> &[f32] {
         match &self.data {
             VectorStore::Owned(v) => &v[i * self.d..(i + 1) * self.d],
-            VectorStore::Paged(_) => {
-                panic!("Dataset::vec on a paged dataset; use with_vec/vector")
-            }
+            _ => panic!(
+                "Dataset::vec on a {} dataset; use with_vec/vector",
+                self.backing_kind()
+            ),
         }
     }
 
-    /// Borrow row `i` for the duration of `f` — works on either
-    /// backing (the hot-path shape: no copy on owned, one block-cache
-    /// access on paged).
+    /// Borrow row `i` for the duration of `f` — works on any backing
+    /// (the hot-path shape: no copy on owned, one block-cache access on
+    /// paged, a transient dequantize on quantized).
     #[inline]
     pub fn with_vec<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
         match &self.data {
             VectorStore::Owned(v) => f(&v[i * self.d..(i + 1) * self.d]),
             VectorStore::Paged(p) => p.with_f32_row(i, f),
+            VectorStore::Quantized(q) => {
+                let mut buf = Vec::with_capacity(self.d);
+                q.decode_row_into(i, &mut buf);
+                f(&buf)
+            }
         }
     }
 
-    /// Row `i`, copied out (backing-agnostic).
+    /// Row `i`, copied out (backing-agnostic; dequantized on a
+    /// quantized backing).
     pub fn vector(&self, i: usize) -> Vec<f32> {
         self.with_vec(i, |row| row.to_vec())
     }
@@ -104,14 +144,16 @@ impl Dataset {
     pub fn raw(&self) -> &[f32] {
         match &self.data {
             VectorStore::Owned(v) => v,
-            VectorStore::Paged(_) => {
-                panic!("Dataset::raw on a paged dataset; use extend_flat_into/materialize")
-            }
+            _ => panic!(
+                "Dataset::raw requires an owned (in-memory f32) backing, got {}; \
+                 use extend_flat_into/materialize",
+                self.backing_kind()
+            ),
         }
     }
 
     /// Append every row to `out` in order (streams blocks on a paged
-    /// backing; a bulk copy on owned).
+    /// backing; dequantizes on quantized; a bulk copy on owned).
     pub fn extend_flat_into(&self, out: &mut Vec<f32>) {
         match &self.data {
             VectorStore::Owned(v) => out.extend_from_slice(v),
@@ -120,15 +162,34 @@ impl Dataset {
                     p.with_f32_row(i, |row| out.extend_from_slice(row));
                 }
             }
+            VectorStore::Quantized(q) => {
+                let mut buf = Vec::with_capacity(self.d);
+                for i in 0..q.rows() {
+                    q.decode_row_into(i, &mut buf);
+                    out.extend_from_slice(&buf);
+                }
+            }
         }
     }
 
-    /// The paged backing's cache namespace id, if paged (lets the shard
-    /// store drop a re-saved shard's stale blocks).
+    /// The paged backing's cache namespace id, if any (lets the shard
+    /// store drop a re-saved or evicted shard's stale blocks). For a
+    /// quantized backing this is the *codes* namespace; the exact-rows
+    /// namespace is [`Dataset::exact_block_store_id`].
     pub(crate) fn block_store_id(&self) -> Option<u64> {
         match &self.data {
             VectorStore::Owned(_) => None,
             VectorStore::Paged(p) => Some(p.store_id()),
+            VectorStore::Quantized(q) => q.codes_store_id(),
+        }
+    }
+
+    /// Cache namespace of a quantized backing's paged exact rows, if
+    /// present — eviction must forget this namespace too.
+    pub(crate) fn exact_block_store_id(&self) -> Option<u64> {
+        match &self.data {
+            VectorStore::Quantized(q) => q.exact_store_id(),
+            _ => None,
         }
     }
 
@@ -138,7 +199,12 @@ impl Dataset {
     pub fn materialize(&self) -> Dataset {
         let mut data = Vec::with_capacity(self.len() * self.d);
         self.extend_flat_into(&mut data);
-        Dataset { name: self.name.clone(), d: self.d, metric: self.metric, data: VectorStore::Owned(data) }
+        Dataset {
+            name: self.name.clone(),
+            d: self.d,
+            metric: self.metric,
+            data: VectorStore::Owned(data),
+        }
     }
 
     /// Distance between rows `i` and `j` under the dataset metric.
@@ -150,13 +216,16 @@ impl Dataset {
                 &v[i * self.d..(i + 1) * self.d],
                 &v[j * self.d..(j + 1) * self.d],
             ),
-            VectorStore::Paged(_) => {
+            _ => {
                 self.with_vec(i, |vi| self.with_vec(j, |vj| distance::distance(self.metric, vi, vj)))
             }
         }
     }
 
-    /// Distance between row `i` and an external query vector.
+    /// Distance between row `i` and an external query vector. On a
+    /// quantized backing the row is dequantized first (metric-unit
+    /// result carrying quantization error); the beam hot path uses
+    /// [`Dataset::dist_to_quant`] instead, which stays in code space.
     #[inline]
     pub fn dist_to(&self, i: usize, q: &[f32]) -> f32 {
         match &self.data {
@@ -166,12 +235,116 @@ impl Dataset {
             VectorStore::Paged(p) => {
                 p.with_f32_row(i, |row| distance::distance(self.metric, row, q))
             }
+            VectorStore::Quantized(_) => self.with_vec(i, |row| {
+                distance::distance(self.metric, row, q)
+            }),
         }
     }
 
+    /// Encode a query into this dataset's code space (into `out`,
+    /// cleared first). Returns `false` — leaving `out` empty — on a
+    /// non-quantized backing, where no code space exists.
+    pub fn encode_query(&self, q: &[f32], out: &mut Vec<u8>) -> bool {
+        match &self.data {
+            VectorStore::Quantized(qs) => {
+                qs.params.encode_into(q, out);
+                true
+            }
+            _ => {
+                out.clear();
+                false
+            }
+        }
+    }
+
+    /// Beam-phase distance of row `i` to the query: the approximate
+    /// quantized kernel on a quantized backing (L2 in code space
+    /// against `qcodes` from [`Dataset::encode_query`]; inner product
+    /// over on-the-fly dequantized codes), the exact f32 path
+    /// otherwise (`qcodes` ignored).
+    #[inline]
+    pub fn dist_to_quant(&self, i: usize, q: &[f32], qcodes: &[u8]) -> f32 {
+        match &self.data {
+            VectorStore::Quantized(qs) => qs.dist_to(self.metric, i, q, qcodes),
+            _ => self.dist_to(i, q),
+        }
+    }
+
+    /// Rerank-phase distance of row `i` to the query: full-precision
+    /// on a quantized backing (the exact-rows sidecar when attached,
+    /// else the dequantized row via `buf`), identical to
+    /// [`Dataset::dist_to`] otherwise.
+    #[inline]
+    pub fn rerank_dist_to(&self, i: usize, q: &[f32], buf: &mut Vec<f32>) -> f32 {
+        match &self.data {
+            VectorStore::Quantized(qs) => qs.rerank_dist_to(self.metric, i, q, buf),
+            _ => self.dist_to(i, q),
+        }
+    }
+
+    /// Scalar-quantize this dataset (params fitted on its own rows) to
+    /// a memory-resident `Quantized` backing without exact rows —
+    /// rerank falls back to dequantized rows. Works on any backing.
+    pub fn quantize(&self) -> Dataset {
+        self.quantize_impl(false)
+    }
+
+    /// Like [`Dataset::quantize`] but also keeps an owned f32 copy of
+    /// the rows for exact rerank — the in-memory serving convenience
+    /// (`--quantize` on a monolithic `search`): distances go 1
+    /// byte/dim, rerank stays bit-exact.
+    pub fn quantize_with_exact(&self) -> Dataset {
+        self.quantize_impl(true)
+    }
+
+    fn quantize_impl(&self, keep_exact: bool) -> Dataset {
+        let mut fit = QuantFitter::new(self.d);
+        for i in 0..self.len() {
+            self.with_vec(i, |row| fit.observe(row));
+        }
+        let params = std::sync::Arc::new(fit.finish());
+        let mut codes = Vec::with_capacity(self.len() * self.d);
+        let mut row_codes = Vec::with_capacity(self.d);
+        let mut exact =
+            if keep_exact { Vec::with_capacity(self.len() * self.d) } else { Vec::new() };
+        for i in 0..self.len() {
+            self.with_vec(i, |row| {
+                params.encode_into(row, &mut row_codes);
+                if keep_exact {
+                    exact.extend_from_slice(row);
+                }
+            });
+            codes.extend_from_slice(&row_codes);
+        }
+        Dataset {
+            name: self.name.clone(),
+            d: self.d,
+            metric: self.metric,
+            data: VectorStore::Quantized(Box::new(QuantStore {
+                d: self.d,
+                params,
+                codes: QuantCodes::Owned(codes),
+                exact: keep_exact.then_some(ExactRows::Owned(exact)),
+            })),
+        }
+    }
+
+    /// Guard for the construction-side, owned-only utilities: a clear
+    /// error at the API boundary instead of a panic deep in `vec()`.
+    fn require_owned(&self, op: &str) {
+        assert!(
+            self.is_owned(),
+            "Dataset::{op} requires an owned (in-memory f32) backing, got {}; \
+             call materialize() first",
+            self.backing_kind()
+        );
+    }
+
     /// New dataset holding the selected rows (in the given order).
-    /// Owned backing only (a construction-side utility).
+    /// Owned backing only (a construction-side utility) — panics with
+    /// the backing kind otherwise; `materialize()` first.
     pub fn select(&self, ids: &[usize], name: impl Into<String>) -> Dataset {
+        self.require_owned("select");
         let mut data = Vec::with_capacity(ids.len() * self.d);
         for &i in ids {
             data.extend_from_slice(self.vec(i));
@@ -181,17 +354,23 @@ impl Dataset {
         Dataset { name: name.into(), d: self.d, metric: self.metric, data: VectorStore::Owned(data) }
     }
 
-    /// Concatenate two datasets with identical (d, metric). Owned only.
+    /// Concatenate two datasets with identical (d, metric). Owned
+    /// backings only (both sides) — panics with the backing kind
+    /// otherwise; `materialize()` first.
     pub fn concat(&self, other: &Dataset, name: impl Into<String>) -> Dataset {
         assert_eq!(self.d, other.d);
         assert_eq!(self.metric, other.metric);
+        self.require_owned("concat");
+        other.require_owned("concat");
         let mut data = self.raw().to_vec();
         data.extend_from_slice(other.raw());
         Dataset { name: name.into(), d: self.d, metric: self.metric, data: VectorStore::Owned(data) }
     }
 
-    /// Split into `parts` near-equal contiguous shards. Owned only.
+    /// Split into `parts` near-equal contiguous shards. Owned only —
+    /// panics with the backing kind otherwise.
     pub fn split(&self, parts: usize) -> Vec<Dataset> {
+        self.require_owned("split");
         crate::util::split_ranges(self.len(), parts)
             .into_iter()
             .enumerate()

@@ -37,6 +37,7 @@ use std::os::unix::fs::FileExt;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+use crate::config::Metric;
 use crate::graph::Neighbor;
 
 /// Default block payload size (64 KiB): large enough that sequential
@@ -57,6 +58,9 @@ pub const PAGED_HANDLE_BYTES: usize = 512;
 pub enum Block {
     /// Dataset rows: `block_rows * d` floats.
     F32(Vec<f32>),
+    /// Quantized dataset rows: `block_rows * d` u8 codes — 4x more rows
+    /// per byte of cache budget than [`Block::F32`].
+    U8(Vec<u8>),
     /// Graph rows: `block_rows * k` neighbor entries (flag bit and
     /// EMPTY sentinel already decoded).
     Neigh(Vec<Neighbor>),
@@ -69,6 +73,7 @@ impl Block {
     pub fn mem_bytes(&self) -> usize {
         match self {
             Block::F32(v) => v.len() * std::mem::size_of::<f32>(),
+            Block::U8(v) => v.len(),
             Block::Neigh(v) => v.len() * std::mem::size_of::<Neighbor>(),
         }
     }
@@ -82,6 +87,12 @@ pub(crate) fn decode_f32_block(bytes: &[u8]) -> Block {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect(),
     )
+}
+
+/// Decode a raw quantized `.dsb` block payload (u8 code rows — the
+/// on-disk and in-memory forms coincide).
+pub(crate) fn decode_u8_block(bytes: &[u8]) -> Block {
+    Block::U8(bytes.to_vec())
 }
 
 /// Two-visit admission gate: a fixed-capacity recently-seen key set
@@ -500,7 +511,17 @@ impl PagedRows {
         let (block, start) = self.row_block(i);
         match &*block {
             Block::F32(v) => f(&v[start..start + self.elems_per_row]),
-            Block::Neigh(_) => unreachable!("f32 row access on a neighbor store"),
+            _ => unreachable!("f32 row access on a non-f32 store"),
+        }
+    }
+
+    /// Borrow row `i` as u8 codes for the duration of `f`. Panics if
+    /// this store does not hold quantized rows.
+    pub fn with_u8_row<R>(&self, i: usize, f: impl FnOnce(&[u8]) -> R) -> R {
+        let (block, start) = self.row_block(i);
+        match &*block {
+            Block::U8(v) => f(&v[start..start + self.elems_per_row]),
+            _ => unreachable!("u8 row access on a non-quantized store"),
         }
     }
 
@@ -515,7 +536,7 @@ impl PagedRows {
                     .take_while(|e| !e.is_empty())
                     .copied(),
             ),
-            Block::F32(_) => unreachable!("neighbor row access on an f32 store"),
+            _ => unreachable!("neighbor row access on a non-neighbor store"),
         }
     }
 }
@@ -540,12 +561,233 @@ fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
     f.read_exact(buf)
 }
 
-/// Where a data structure's rows live: fully in memory, or paged from
-/// disk through a [`BlockCache`].
+/// Per-dimension scalar-quantization parameters: dimension `j` of a
+/// row `x` encodes as `round((x[j] - offset[j]) / scale[j])` clamped to
+/// `[0, 255]`, and decodes as `offset[j] + scale[j] * code`. For a row
+/// inside the fitted min/max box the round-trip error per dimension is
+/// at most `scale[j] / 2` — the bound the property suite asserts.
+///
+/// The same per-dimension affine codebook shape as the IVF-PQ
+/// baseline's coarse quantizer, reduced to one u8 code per dimension
+/// (no subspace clustering), so a quantized row is exactly `d` bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: Vec<f32>,
+    pub offset: Vec<f32>,
+}
+
+impl QuantParams {
+    pub fn d(&self) -> usize {
+        self.scale.len()
+    }
+
+    /// Encode one f32 row into `out` (cleared first).
+    pub fn encode_into(&self, row: &[f32], out: &mut Vec<u8>) {
+        debug_assert_eq!(row.len(), self.d());
+        out.clear();
+        out.extend(row.iter().zip(&self.scale).zip(&self.offset).map(|((&x, &s), &o)| {
+            // s > 0 by construction (QuantFitter::finish)
+            ((x - o) / s).round().clamp(0.0, 255.0) as u8
+        }));
+    }
+
+    /// Decode one code row into `out` (cleared first).
+    pub fn decode_into(&self, codes: &[u8], out: &mut Vec<f32>) {
+        debug_assert_eq!(codes.len(), self.d());
+        out.clear();
+        out.extend(
+            codes
+                .iter()
+                .zip(&self.scale)
+                .zip(&self.offset)
+                .map(|((&c, &s), &o)| o + s * c as f32),
+        );
+    }
+
+    /// In-memory footprint of the sidecar itself.
+    pub fn mem_bytes(&self) -> usize {
+        (self.scale.len() + self.offset.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Streaming per-dimension min/max accumulator for fitting
+/// [`QuantParams`] without materializing the corpus: `observe` every
+/// row (of every shard, for a sharded store — one shared code space
+/// keeps cross-shard code distances comparable), then `finish`.
+pub struct QuantFitter {
+    min: Vec<f32>,
+    max: Vec<f32>,
+    rows: usize,
+}
+
+impl QuantFitter {
+    pub fn new(d: usize) -> Self {
+        QuantFitter { min: vec![f32::INFINITY; d], max: vec![f32::NEG_INFINITY; d], rows: 0 }
+    }
+
+    pub fn observe(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.min.len());
+        for (j, &x) in row.iter().enumerate() {
+            self.min[j] = self.min[j].min(x);
+            self.max[j] = self.max[j].max(x);
+        }
+        self.rows += 1;
+    }
+
+    /// Fitted parameters. A constant (or never-observed) dimension gets
+    /// `scale = 1`, which encodes every value to code 0 and decodes it
+    /// back exactly (`offset` carries the constant).
+    pub fn finish(self) -> QuantParams {
+        let scale = self
+            .min
+            .iter()
+            .zip(&self.max)
+            .map(|(&lo, &hi)| {
+                let s = (hi - lo) / 255.0;
+                if s > 0.0 && s.is_finite() {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let offset = self.min.iter().map(|&lo| if lo.is_finite() { lo } else { 0.0 }).collect();
+        QuantParams { scale, offset }
+    }
+}
+
+/// Where a quantized store's u8 code rows live.
+#[derive(Clone, Debug)]
+pub(crate) enum QuantCodes {
+    Owned(Vec<u8>),
+    Paged(PagedRows),
+}
+
+/// Full-precision rows kept alongside a quantized store for the exact
+/// rerank phase. Paged is the serving form (rows fault in through the
+/// block cache, so rerank reads only the `rerank * k` rows it scores);
+/// Owned is the in-memory convenience (`--quantize` on a monolithic
+/// search).
+#[derive(Clone, Debug)]
+pub(crate) enum ExactRows {
+    Owned(Vec<f32>),
+    Paged(PagedRows),
+}
+
+/// A scalar-quantized vector backing: u8 code rows plus the
+/// [`QuantParams`] sidecar, with optional full-precision [`ExactRows`]
+/// for rerank. The beam phase scores candidates in code space (L2) or
+/// against dequantized codes (inner product) — 1 byte per dimension of
+/// row traffic either way.
+#[derive(Clone, Debug)]
+pub(crate) struct QuantStore {
+    pub(crate) d: usize,
+    pub(crate) params: Arc<QuantParams>,
+    pub(crate) codes: QuantCodes,
+    pub(crate) exact: Option<ExactRows>,
+}
+
+impl QuantStore {
+    pub(crate) fn rows(&self) -> usize {
+        match &self.codes {
+            QuantCodes::Owned(v) => v.len() / self.d,
+            QuantCodes::Paged(p) => p.rows(),
+        }
+    }
+
+    /// Borrow row `i`'s codes for the duration of `f`.
+    pub(crate) fn with_codes<R>(&self, i: usize, f: impl FnOnce(&[u8]) -> R) -> R {
+        match &self.codes {
+            QuantCodes::Owned(v) => f(&v[i * self.d..(i + 1) * self.d]),
+            QuantCodes::Paged(p) => p.with_u8_row(i, f),
+        }
+    }
+
+    /// Dequantize row `i` into `out` (cleared first).
+    pub(crate) fn decode_row_into(&self, i: usize, out: &mut Vec<f32>) {
+        let params = &self.params;
+        self.with_codes(i, |codes| params.decode_into(codes, out));
+    }
+
+    /// Approximate (beam-phase) distance of row `i` to the query. L2
+    /// runs the integer kernel against the pre-encoded query codes
+    /// (`qcodes`, from [`QuantParams::encode_into`]) — the value is in
+    /// code space, comparable only within one code space. Inner-product
+    /// metrics dequantize on the fly against the f32 query
+    /// ([`crate::distance::dot_dequant`]).
+    pub(crate) fn dist_to(&self, metric: Metric, i: usize, q: &[f32], qcodes: &[u8]) -> f32 {
+        match metric.kernel_metric() {
+            Metric::L2 => self.with_codes(i, |row| crate::distance::l2_sq_u8(row, qcodes) as f32),
+            Metric::Ip => {
+                let p = &self.params;
+                self.with_codes(i, |row| -crate::distance::dot_dequant(row, q, &p.scale, &p.offset))
+            }
+            Metric::Cosine => unreachable!("kernel_metric lowers cosine"),
+        }
+    }
+
+    /// Full-precision distance of row `i` to the query, for the rerank
+    /// phase: exact rows when attached, else the dequantized row (still
+    /// metric-unit, just carrying the quantization error) via `buf`.
+    pub(crate) fn rerank_dist_to(
+        &self,
+        metric: Metric,
+        i: usize,
+        q: &[f32],
+        buf: &mut Vec<f32>,
+    ) -> f32 {
+        match &self.exact {
+            Some(ExactRows::Owned(v)) => {
+                crate::distance::distance(metric, &v[i * self.d..(i + 1) * self.d], q)
+            }
+            Some(ExactRows::Paged(p)) => {
+                p.with_f32_row(i, |row| crate::distance::distance(metric, row, q))
+            }
+            None => {
+                self.decode_row_into(i, buf);
+                crate::distance::distance(metric, buf, q)
+            }
+        }
+    }
+
+    /// In-memory footprint: codes (owned) or handle (paged), plus the
+    /// params sidecar and the exact-rows attachment.
+    pub(crate) fn resident_bytes(&self) -> usize {
+        let codes = match &self.codes {
+            QuantCodes::Owned(v) => v.len(),
+            QuantCodes::Paged(_) => PAGED_HANDLE_BYTES,
+        };
+        let exact = match &self.exact {
+            Some(ExactRows::Owned(v)) => v.len() * std::mem::size_of::<f32>(),
+            Some(ExactRows::Paged(_)) => PAGED_HANDLE_BYTES,
+            None => 0,
+        };
+        codes + self.params.mem_bytes() + exact
+    }
+
+    pub(crate) fn codes_store_id(&self) -> Option<u64> {
+        match &self.codes {
+            QuantCodes::Paged(p) => Some(p.store_id()),
+            QuantCodes::Owned(_) => None,
+        }
+    }
+
+    pub(crate) fn exact_store_id(&self) -> Option<u64> {
+        match &self.exact {
+            Some(ExactRows::Paged(p)) => Some(p.store_id()),
+            _ => None,
+        }
+    }
+}
+
+/// Where a data structure's rows live: fully in memory, paged from
+/// disk through a [`BlockCache`], or scalar-quantized u8 codes (owned
+/// or paged) with the [`QuantParams`] sidecar.
 #[derive(Clone, Debug)]
 pub enum VectorStore {
     Owned(Vec<f32>),
     Paged(PagedRows),
+    Quantized(Box<QuantStore>),
 }
 
 #[cfg(test)]
@@ -704,6 +946,103 @@ mod tests {
         assert_eq!(cache.stats().hits, hits + 1);
         std::fs::remove_file(p1).ok();
         std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded_by_half_step() {
+        crate::util::prop::check("quant-roundtrip", 100, |rng: &mut crate::util::rng::Rng| {
+            let d = rng.below(48) + 1;
+            let rows = rng.below(30) + 2;
+            let data: Vec<f32> =
+                (0..rows * d).map(|_| rng.normal_f32() * (rng.below(10) as f32 + 0.5)).collect();
+            let mut fit = QuantFitter::new(d);
+            for r in 0..rows {
+                fit.observe(&data[r * d..(r + 1) * d]);
+            }
+            let params = fit.finish();
+            let (mut codes, mut back) = (Vec::new(), Vec::new());
+            for r in 0..rows {
+                let row = &data[r * d..(r + 1) * d];
+                params.encode_into(row, &mut codes);
+                params.decode_into(&codes, &mut back);
+                for j in 0..d {
+                    let err = (back[j] - row[j]).abs();
+                    // half a quantization step, plus f32 slack
+                    let bound = params.scale[j] / 2.0 + 1e-4 * row[j].abs().max(1.0);
+                    if err > bound {
+                        return crate::util::prop::assert_prop(
+                            false,
+                            format!(
+                                "dim {j}: err {err} > bound {bound} (scale {})",
+                                params.scale[j]
+                            ),
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_dimension_round_trips_exactly() {
+        let mut fit = QuantFitter::new(2);
+        fit.observe(&[7.5, 1.0]);
+        fit.observe(&[7.5, 3.0]);
+        let params = fit.finish();
+        assert_eq!(params.scale[0], 1.0, "degenerate dim falls back to unit scale");
+        let (mut codes, mut back) = (Vec::new(), Vec::new());
+        params.encode_into(&[7.5, 2.0], &mut codes);
+        assert_eq!(codes[0], 0);
+        params.decode_into(&codes, &mut back);
+        assert_eq!(back[0], 7.5);
+    }
+
+    #[test]
+    fn quant_store_owned_dist_and_rerank() {
+        let d = 8;
+        let data: Vec<f32> = (0..4 * d).map(|x| (x as f32 * 0.37).sin() * 5.0).collect();
+        let mut fit = QuantFitter::new(d);
+        for r in 0..4 {
+            fit.observe(&data[r * d..(r + 1) * d]);
+        }
+        let params = Arc::new(fit.finish());
+        let mut codes = Vec::new();
+        let mut all = Vec::with_capacity(4 * d);
+        for r in 0..4 {
+            params.encode_into(&data[r * d..(r + 1) * d], &mut codes);
+            all.extend_from_slice(&codes);
+        }
+        let qs = QuantStore {
+            d,
+            params: params.clone(),
+            codes: QuantCodes::Owned(all),
+            exact: Some(ExactRows::Owned(data.clone())),
+        };
+        assert_eq!(qs.rows(), 4);
+        let q = &data[0..d];
+        let mut qcodes = Vec::new();
+        params.encode_into(q, &mut qcodes);
+        // code-space self distance is zero
+        assert_eq!(qs.dist_to(Metric::L2, 0, q, &qcodes), 0.0);
+        // rerank uses the exact sidecar: matches the f32 kernel bit-exactly
+        let mut buf = Vec::new();
+        for i in 0..4 {
+            let want = crate::distance::distance(Metric::L2, &data[i * d..(i + 1) * d], q);
+            assert_eq!(qs.rerank_dist_to(Metric::L2, i, q, &mut buf), want);
+        }
+        // without exact rows, rerank falls back to dequantized codes:
+        // close to, but not exactly, the f32 value
+        let qs2 = QuantStore { exact: None, ..qs.clone() };
+        for i in 1..4 {
+            let want = crate::distance::distance(Metric::L2, &data[i * d..(i + 1) * d], q);
+            let got = qs2.rerank_dist_to(Metric::L2, i, q, &mut buf);
+            let tol = 0.05 * want.abs().max(1.0);
+            assert!((got - want).abs() <= tol, "i={i} got={got} want={want}");
+        }
+        // resident accounting: codes are 1 byte/dim + params + exact f32
+        assert_eq!(qs.resident_bytes(), 4 * d + 2 * d * 4 + 4 * d * 4);
+        assert_eq!(qs2.resident_bytes(), 4 * d + 2 * d * 4);
     }
 
     #[test]

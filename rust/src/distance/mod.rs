@@ -4,27 +4,43 @@
 //! PJRT path), the classic NN-Descent baseline, and ground-truth
 //! computation. The inner loops are written as chunked slice folds the
 //! compiler auto-vectorizes.
+//!
+//! Two kernel families:
+//!
+//! * **f32** ([`l2_sq`], [`dot`]) — 16-lane chunked folds over
+//!   full-precision rows; the exact kernels every build path and the
+//!   rerank phase of quantized serving use.
+//! * **u8 code space** ([`l2_sq_u8`], [`dot_u8`], [`dot_dequant`]) —
+//!   integer-accumulating kernels over scalar-quantized rows
+//!   ([`crate::dataset::store::QuantParams`]). A u8 row is 4x smaller
+//!   than its f32 original, so these kernels move 4x fewer bytes per
+//!   candidate — the lever of quantized serving's beam phase.
 
 use crate::config::Metric;
+
+/// Lane width of the chunked f32 folds: two 256-bit vectors (or one
+/// 512-bit) of independent accumulators, wide enough that the load is
+/// the bottleneck, not the reduction dependency chain.
+const LANES: usize = 16;
 
 /// Squared euclidean distance.
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // Process in 8-lane chunks with independent accumulators so LLVM can
-    // vectorize; tail handled scalar.
-    let mut acc = [0f32; 8];
-    let chunks = a.len() / 8;
+    // Process in LANES-wide chunks with independent accumulators so
+    // LLVM can vectorize; tail handled scalar.
+    let mut acc = [0f32; LANES];
+    let chunks = a.len() / LANES;
     for c in 0..chunks {
-        let ao = &a[c * 8..c * 8 + 8];
-        let bo = &b[c * 8..c * 8 + 8];
-        for i in 0..8 {
+        let ao = &a[c * LANES..c * LANES + LANES];
+        let bo = &b[c * LANES..c * LANES + LANES];
+        for i in 0..LANES {
             let d = ao[i] - bo[i];
             acc[i] += d * d;
         }
     }
     let mut sum: f32 = acc.iter().sum();
-    for i in chunks * 8..a.len() {
+    for i in chunks * LANES..a.len() {
         let d = a[i] - b[i];
         sum += d * d;
     }
@@ -35,18 +51,96 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let chunks = a.len() / 8;
+    let mut acc = [0f32; LANES];
+    let chunks = a.len() / LANES;
     for c in 0..chunks {
-        let ao = &a[c * 8..c * 8 + 8];
-        let bo = &b[c * 8..c * 8 + 8];
-        for i in 0..8 {
+        let ao = &a[c * LANES..c * LANES + LANES];
+        let bo = &b[c * LANES..c * LANES + LANES];
+        for i in 0..LANES {
             acc[i] += ao[i] * bo[i];
         }
     }
     let mut sum: f32 = acc.iter().sum();
-    for i in chunks * 8..a.len() {
+    for i in chunks * LANES..a.len() {
         sum += a[i] * b[i];
+    }
+    sum
+}
+
+/// Squared euclidean distance between two u8 code rows, accumulated in
+/// integers (no float rounding in the loop). The value is in *code
+/// space* — per-dimension differences are in quantization steps, not
+/// metric units — so it ranks candidates encoded with the same
+/// [`QuantParams`](crate::dataset::store::QuantParams) but is not
+/// comparable to an f32 [`l2_sq`]. Max per-dim term is 255² = 65 025;
+/// 16 u32 lane accumulators folded into a u64 keep the sum exact for
+/// any realistic dimensionality.
+#[inline]
+pub fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0u32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        let ao = &a[c * LANES..c * LANES + LANES];
+        let bo = &b[c * LANES..c * LANES + LANES];
+        for i in 0..LANES {
+            let d = ao[i] as i32 - bo[i] as i32;
+            acc[i] += (d * d) as u32;
+        }
+    }
+    let mut sum: u64 = acc.iter().map(|&x| x as u64).sum();
+    for i in chunks * LANES..a.len() {
+        let d = a[i] as i32 - b[i] as i32;
+        sum += (d * d) as u64;
+    }
+    sum
+}
+
+/// Integer inner product of two u8 code rows (code space, see
+/// [`l2_sq_u8`]).
+#[inline]
+pub fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0u32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        let ao = &a[c * LANES..c * LANES + LANES];
+        let bo = &b[c * LANES..c * LANES + LANES];
+        for i in 0..LANES {
+            acc[i] += ao[i] as u32 * bo[i] as u32;
+        }
+    }
+    let mut sum: u64 = acc.iter().map(|&x| x as u64).sum();
+    for i in chunks * LANES..a.len() {
+        sum += a[i] as u64 * b[i] as u64;
+    }
+    sum
+}
+
+/// Inner product of an f32 query against a u8 code row dequantized on
+/// the fly (`offset[i] + scale[i] * code[i]`). Per-dimension scales
+/// cannot be factored out of an integer dot, so inner-product metrics
+/// pay an f32 multiply-add per element — but still move only 1 byte of
+/// row data per dimension, which is the serving win.
+#[inline]
+pub fn dot_dequant(codes: &[u8], q: &[f32], scale: &[f32], offset: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    debug_assert_eq!(codes.len(), scale.len());
+    debug_assert_eq!(codes.len(), offset.len());
+    let mut acc = [0f32; LANES];
+    let chunks = codes.len() / LANES;
+    for c in 0..chunks {
+        let co = &codes[c * LANES..c * LANES + LANES];
+        let qo = &q[c * LANES..c * LANES + LANES];
+        let so = &scale[c * LANES..c * LANES + LANES];
+        let oo = &offset[c * LANES..c * LANES + LANES];
+        for i in 0..LANES {
+            acc[i] += qo[i] * (oo[i] + so[i] * co[i] as f32);
+        }
+    }
+    let mut sum: f32 = acc.iter().sum();
+    for i in chunks * LANES..codes.len() {
+        sum += q[i] * (offset[i] + scale[i] * codes[i] as f32);
     }
     sum
 }
@@ -107,6 +201,70 @@ mod tests {
             prop::assert_prop(
                 (dot(&a, &b) - want).abs() <= 1e-3 * want.abs().max(1.0),
                 "dot mismatch",
+            )
+        });
+    }
+
+    #[test]
+    fn l2_u8_matches_naive_all_lengths() {
+        // integer accumulation is exact, so the check is equality —
+        // including lengths straddling the 16-lane chunk boundary
+        prop::check("l2u8-vs-naive", 200, |rng: &mut Rng| {
+            let d = rng.below(70) + 1;
+            let a: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+            let b: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+            let want: u64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| {
+                    let diff = x as i64 - y as i64;
+                    (diff * diff) as u64
+                })
+                .sum();
+            prop::assert_prop(
+                l2_sq_u8(&a, &b) == want,
+                format!("d={d} got={} want={want}", l2_sq_u8(&a, &b)),
+            )
+        });
+    }
+
+    #[test]
+    fn dot_u8_matches_naive_all_lengths() {
+        prop::check("dotu8-vs-naive", 200, |rng: &mut Rng| {
+            let d = rng.below(70) + 1;
+            let a: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+            let b: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+            let want: u64 = a.iter().zip(&b).map(|(&x, &y)| x as u64 * y as u64).sum();
+            prop::assert_prop(dot_u8(&a, &b) == want, format!("d={d} dot_u8 mismatch"))
+        });
+    }
+
+    #[test]
+    fn u8_kernels_saturate_without_overflow() {
+        // worst case per dimension: 255 vs 0 (l2) and 255*255 (dot)
+        let d = 4096;
+        let hi = vec![255u8; d];
+        let lo = vec![0u8; d];
+        assert_eq!(l2_sq_u8(&hi, &lo), d as u64 * 255 * 255);
+        assert_eq!(dot_u8(&hi, &hi), d as u64 * 255 * 255);
+        assert_eq!(l2_sq_u8(&hi, &hi), 0);
+    }
+
+    #[test]
+    fn dot_dequant_matches_explicit_dequantize() {
+        prop::check("dot-dequant-vs-naive", 200, |rng: &mut Rng| {
+            let d = rng.below(70) + 1;
+            let codes: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let scale: Vec<f32> = (0..d).map(|_| rng.normal_f32().abs() * 0.1 + 1e-3).collect();
+            let offset: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let want: f32 = (0..d)
+                .map(|i| q[i] * (offset[i] + scale[i] * codes[i] as f32))
+                .sum();
+            let got = dot_dequant(&codes, &q, &scale, &offset);
+            prop::assert_prop(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                format!("d={d} got={got} want={want}"),
             )
         });
     }

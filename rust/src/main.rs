@@ -9,17 +9,20 @@
 //! gnnd build        --data data.dsb --out graph.knng [--config cfg] [--set k=v ...]
 //! gnnd merge        --data data.dsb --n1 N --g1 a.knng --g2 b.knng --out graph.knng
 //! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
+//!                   [--quantize true]
+//! gnnd quantize     <in.dsb out.dsb | shard-dir/>
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
 //! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
 //!                   [--memory-budget MB] [--residency shard|block] [--block-size KiB]
-//!                   [--search-threads N])
+//!                   [--search-threads N] [--quantize true])
 //!                   (--query-id N | --queries q.dsb [--out res.ivecs])
-//!                   [--k 10] [--ef 64] [--entries 8] [--entry-strategy random|kmeans]
+//!                   [--k 10] [--ef 64] [--rerank 1] [--entries 8]
+//!                   [--entry-strategy random|kmeans]
 //!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
 //! gnnd serve-bench  (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
 //!                   [--memory-budget MB] [--residency shard|block] [--block-size KiB]
-//!                   [--search-threads N] [--data data.dsb])
-//!                   [--k 10] [--ef 8,16,32,64,128]
+//!                   [--search-threads N] [--quantize true] [--data data.dsb])
+//!                   [--k 10] [--ef 8,16,32,64,128] [--rerank 1]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
 //!                   [--arrival-rate R] [--arrival poisson|uniform]
 //!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
@@ -53,6 +56,18 @@
 //! than one shard allowed, results bit-identical either way.
 //! `--search-threads <N>` fans the scatter phase across a persistent
 //! worker pool spawned once at open (0 clamps to 1 with a warning).
+//!
+//! Quantized serving: `gnnd quantize` converts a `.dsb` file (two
+//! positionals: in, out) or an `ooc-build` shard directory (one
+//! positional; writes `quant_<i>.dsb` sidecars next to the f32 shards)
+//! to u8 scalar-quantized codes — ~4x less vector payload per byte of
+//! residency budget. `--quantize true` on `search`/`serve-bench
+//! --shards` serves from the quantized sidecars (the f32 shards stay
+//! on disk as the exact-rerank source), and `--rerank R` re-scores the
+//! best `R*k` beam survivors at full f32 precision so recall recovers
+//! to within points of the f32 index while the beam itself runs on
+//! cheap integer distances. `ooc-build --quantize true` fits and
+//! writes the sidecars immediately after the build.
 //! `serve-bench --shards` prints the residency counters
 //! (hits/misses/evictions/hit rate, block fetches, bytes read,
 //! doorkeeper rejections) and folds them — plus the sweep rows as a
@@ -83,7 +98,7 @@ use gnnd::dataset::{groundtruth, io, synth};
 use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{
-    build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardStore, STATS_FILE,
+    build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore, STATS_FILE,
 };
 use gnnd::metrics::{recall_at, Report};
 use gnnd::search::sharded::{clamp_probe, clamp_search_threads, ShardedIndex};
@@ -134,14 +149,17 @@ impl Args {
     /// `search` takes a single value, `serve-bench` a CSV sweep.
     fn search_params(&self) -> anyhow::Result<SearchParams> {
         let d = SearchParams::default();
-        Ok(SearchParams {
+        let p = SearchParams {
             ef: d.ef,
             beam_width: self.parse_or("beam-width", d.beam_width)?,
             max_hops: self.parse_or("max-hops", d.max_hops)?,
             n_entry: self.parse_or("entries", d.n_entry)?,
             entry: self.parse_or("entry-strategy", d.entry)?,
             seed: self.parse_or("search-seed", d.seed)?,
-        })
+            rerank: self.parse_or("rerank", d.rerank)?,
+        };
+        p.validate()?;
+        Ok(p)
     }
 
     fn params(&self) -> anyhow::Result<GnndParams> {
@@ -171,7 +189,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "gnnd — GPU-architecture NN-Descent on a Rust+XLA stack\n\
-         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|eval|search|serve-bench|trace|experiment> [flags]\n\
+         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|quantize|eval|search|serve-bench|trace|experiment> [flags]\n\
          see rust/src/main.rs header or README.md for full flag reference"
     );
 }
@@ -261,6 +279,55 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             );
             println!("stats -> {}/{STATS_FILE}", args.req("dir")?);
             g.save(args.req("out")?)?;
+            if args.parse_or("quantize", false)? {
+                let qp = quantize_store(args.req("dir")?)?;
+                println!(
+                    "quantized {} shards (d={}) -> {}/quant_*.dsb",
+                    cfg.shards,
+                    qp.d(),
+                    args.req("dir")?
+                );
+            }
+        }
+        "quantize" => {
+            let input = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .context("usage: gnnd quantize <in.dsb> <out.dsb>  |  gnnd quantize <shard-dir>")?;
+            let t = Timer::start();
+            if std::path::Path::new(input).join("manifest.json").is_file() {
+                // an ooc-build shard directory: fit one shared code
+                // space over every shard, write quant_<i>.dsb sidecars
+                anyhow::ensure!(
+                    args.positional.len() == 1,
+                    "quantize <shard-dir> takes no output path (sidecars land in the directory)"
+                );
+                let qp = quantize_store(input)?;
+                println!(
+                    "quantized shard directory {input} (d={}) in {:.2}s -> {input}/quant_*.dsb",
+                    qp.d(),
+                    t.secs()
+                );
+            } else {
+                let out = args
+                    .positional
+                    .get(1)
+                    .map(|s| s.as_str())
+                    .context("quantize <in.dsb> needs an output path (second positional)")?;
+                let ds = io::read_dsb(input)?;
+                anyhow::ensure!(
+                    !ds.is_quantized(),
+                    "{input} is already quantized (q1 format)"
+                );
+                io::write_dsb_quantized(&ds, out)?;
+                println!(
+                    "quantized {input} ({} x {}) in {:.2}s -> {out} (u8 codes, ~4x smaller)",
+                    ds.len(),
+                    ds.d,
+                    t.secs()
+                );
+            }
         }
         "eval" => {
             let ds = io::read_dsb(args.req("data")?)?;
@@ -337,10 +404,22 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                     let index = open_sharded_index(&args, dir, cfg.params.clone())?;
                     // queries + ground truth come from the original
                     // corpus; without --data it is re-assembled from
-                    // the shards (identical rows, identical order)
+                    // the shards (identical rows, identical order —
+                    // except under --quantize, where re-assembly
+                    // dequantizes and the measured recall drifts from
+                    // the true-corpus number)
                     let ds = match args.get("data") {
                         Some(p) => io::read_dsb(p)?,
-                        None => index.concat_dataset()?,
+                        None => {
+                            if index.store().quantized() {
+                                telemetry::warn!(
+                                    "serve: no --data with a quantized store; queries and \
+                                     ground truth use dequantized rows — pass --data for \
+                                     true-corpus recall"
+                                );
+                            }
+                            index.concat_dataset()?
+                        }
                     };
                     let report = serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?;
                     // serve-time residency counters: printed and folded
@@ -486,9 +565,11 @@ fn write_metrics_jsonl(
 /// shard count — phantom shards clamp with a warning), `--memory-budget
 /// <MB>` (resident byte budget, 0 = unbounded), `--residency
 /// shard|block` with `--block-size <KiB>` (block-granular paging of
-/// shard files under the same budget) and `--search-threads <N>`
+/// shard files under the same budget), `--search-threads <N>`
 /// (persistent scatter pool participants, 1 = sequential; 0 clamps to
-/// 1 with a warning).
+/// 1 with a warning) and `--quantize true` (serve from the
+/// `quant_<i>.dsb` u8 sidecars written by `gnnd quantize`, with the
+/// f32 shards as the exact-rerank source — pair with `--rerank`).
 fn open_sharded_index(
     args: &Args,
     dir: &str,
@@ -527,7 +608,8 @@ fn open_sharded_index(
              clamped to {threads} (sequential scatter)"
         );
     }
-    let store = ShardStore::with_residency(dir, budget_bytes, mode)?;
+    let quantized: bool = args.parse_or("quantize", false)?;
+    let store = ShardStore::with_options(dir, budget_bytes, mode, quantized)?;
     let manifest = store.load_manifest()?;
     let probe: usize = args.parse_or("probe-shards", 0usize)?;
     let (probe, clamped) = clamp_probe(probe, manifest.shards);

@@ -27,7 +27,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use anyhow::Context;
 
 use crate::config::{GnndParams, Metric};
-use crate::dataset::store::{BlockCache, Doorkeeper, DEFAULT_BLOCK_BYTES};
+use crate::dataset::store::{BlockCache, Doorkeeper, QuantFitter, QuantParams, DEFAULT_BLOCK_BYTES};
 use crate::dataset::{io, Dataset};
 use crate::gnnd::{self, engine::CrossmatchEngine};
 use crate::graph::{KnnGraph, Neighbor};
@@ -152,6 +152,12 @@ pub struct ResidencyStats {
     /// probe set this stays *below* the total shard bytes — the
     /// partial-shard-read proof the ROADMAP asked for.
     pub bytes_read: u64,
+    /// Bytes the resident shards' *vector data* holds in memory right
+    /// now (graph bytes excluded). This is the number quantization
+    /// shrinks: u8 codes report ~1/4 the f32 figure under whole-shard
+    /// residency, which `resident_bytes` — dominated by graph rows —
+    /// would hide.
+    pub dataset_bytes: u64,
 }
 
 impl ResidencyStats {
@@ -181,6 +187,7 @@ impl ResidencyStats {
             .set("block_evictions", self.block_evictions)
             .set("rejected_admissions", self.rejected_admissions)
             .set("bytes_read", self.bytes_read)
+            .set("dataset_bytes", self.dataset_bytes)
     }
 
     pub fn from_json(j: &Json) -> crate::Result<ResidencyStats> {
@@ -216,6 +223,7 @@ impl ResidencyStats {
             block_evictions: u64_opt("block_evictions")?,
             rejected_admissions: u64_opt("rejected_admissions")?,
             bytes_read: u64_opt("bytes_read")?,
+            dataset_bytes: u64_opt("dataset_bytes")?,
         })
     }
 }
@@ -303,6 +311,12 @@ pub struct ShardStore {
     budget_bytes: usize,
     /// Residency granularity: whole shards or fixed-size blocks.
     mode: ResidencyMode,
+    /// Serve the u8-quantized shard files (`quant_<i>.dsb`, written by
+    /// [`quantize_store`]) instead of the f32 `shard_<i>.dsb` ones.
+    /// The f32 files stay on disk as the exact-rerank sidecar: resident
+    /// memory holds 1-byte codes, the rerank phase pages exact rows in
+    /// block by block through the shared [`BlockCache`].
+    quantized: bool,
     /// The shared block cache behind [`ResidencyMode::Block`] paged
     /// handles (constructed unbounded-and-unused in shard mode).
     blocks: Arc<BlockCache>,
@@ -335,17 +349,33 @@ impl ShardStore {
         budget_bytes: usize,
         mode: ResidencyMode,
     ) -> crate::Result<Self> {
+        Self::with_options(dir, budget_bytes, mode, false)
+    }
+
+    /// Open with every serving knob explicit. `quantized` switches
+    /// [`ShardStore::get_shard`] to the `quant_<i>.dsb` files written by
+    /// [`quantize_store`]: resident rows are 1-byte codes (~4x more
+    /// rows per byte of budget) and the f32 `shard_<i>.dsb` files are
+    /// attached as a paged exact-rows sidecar for the rerank phase.
+    pub fn with_options(
+        dir: impl AsRef<Path>,
+        budget_bytes: usize,
+        mode: ResidencyMode,
+        quantized: bool,
+    ) -> crate::Result<Self> {
         std::fs::create_dir_all(dir.as_ref())?;
         let blocks = match mode {
             ResidencyMode::Block { block_bytes } => BlockCache::new(budget_bytes, block_bytes),
-            // shard mode never pages; keep a placeholder cache so the
-            // stats merge below is unconditional
+            // shard mode pages nothing itself, but a quantized store
+            // still streams exact-rerank rows through this cache —
+            // unbounded here, the shard budget governs
             ResidencyMode::Shard => BlockCache::new(0, DEFAULT_BLOCK_BYTES),
         };
         Ok(ShardStore {
             dir: dir.as_ref().to_path_buf(),
             budget_bytes,
             mode,
+            quantized,
             blocks,
             cache: Mutex::new(ShardCache::default()),
             tele: ShardTele::new(),
@@ -365,6 +395,12 @@ impl ShardStore {
         self.mode
     }
 
+    /// Whether [`ShardStore::get_shard`] serves the quantized shard
+    /// files (see [`ShardStore::with_options`]).
+    pub fn quantized(&self) -> bool {
+        self.quantized
+    }
+
     /// The shared block cache (meaningful under [`ResidencyMode::Block`]).
     pub fn block_cache(&self) -> &Arc<BlockCache> {
         &self.blocks
@@ -376,6 +412,10 @@ impl ShardStore {
 
     fn graph_path(&self, i: usize) -> PathBuf {
         self.dir.join(format!("graph_{i}.knng"))
+    }
+
+    fn quant_path(&self, i: usize) -> PathBuf {
+        self.dir.join(format!("quant_{i}.dsb"))
     }
 
     pub fn save_shard(&self, i: usize, ds: &Dataset) -> crate::Result<()> {
@@ -445,14 +485,41 @@ impl ShardStore {
                     break;
                 }
             }
-            let read: crate::Result<(Dataset, KnnGraph)> = match self.mode {
-                ResidencyMode::Shard => (|| Ok((self.load_shard(i)?, self.load_graph(i)?)))(),
-                ResidencyMode::Block { .. } => (|| {
-                    Ok((
-                        io::read_dsb_paged(self.shard_path(i), &self.blocks)?,
-                        KnnGraph::load_paged(self.graph_path(i), &self.blocks)?,
-                    ))
-                })(),
+            let read: crate::Result<(Dataset, KnnGraph)> = if self.quantized {
+                (|| {
+                    // codes from quant_<i>.dsb (owned in shard mode,
+                    // paged in block mode); the f32 shard file — when
+                    // still present — rides along as the paged
+                    // exact-rows sidecar the rerank phase reads
+                    let exact = self.shard_path(i);
+                    let exact = exact.exists().then_some(exact);
+                    let ds = io::read_dsb_quantized(
+                        self.quant_path(i),
+                        exact.as_deref(),
+                        &self.blocks,
+                        matches!(self.mode, ResidencyMode::Block { .. }),
+                    )
+                    .with_context(|| {
+                        format!("shard {i}: no quantized shard file (run `gnnd quantize` first?)")
+                    })?;
+                    let graph = match self.mode {
+                        ResidencyMode::Shard => self.load_graph(i)?,
+                        ResidencyMode::Block { .. } => {
+                            KnnGraph::load_paged(self.graph_path(i), &self.blocks)?
+                        }
+                    };
+                    Ok((ds, graph))
+                })()
+            } else {
+                match self.mode {
+                    ResidencyMode::Shard => (|| Ok((self.load_shard(i)?, self.load_graph(i)?)))(),
+                    ResidencyMode::Block { .. } => (|| {
+                        Ok((
+                            io::read_dsb_paged(self.shard_path(i), &self.blocks)?,
+                            KnnGraph::load_paged(self.graph_path(i), &self.blocks)?,
+                        ))
+                    })(),
+                }
             };
             let mut c = self.cache.lock().unwrap();
             c.loading.remove(&i);
@@ -476,9 +543,14 @@ impl ShardStore {
             // payload bytes a materialized load pulled off disk (paged
             // handles read only headers here; their block fetches are
             // accounted by the block cache as they happen)
-            if !ds.is_paged() {
-                c.bytes_read += (ds.len() * ds.d * 4) as u64;
-                self.tele.bytes_read.add((ds.len() * ds.d * 4) as u64);
+            // materialized rows only: paged f32 rows and paged u8
+            // codes (`block_store_id` is Some) are accounted block by
+            // block by the cache as they fault in
+            if !ds.is_paged() && ds.block_store_id().is_none() {
+                // u8 codes cost 1 byte/dim off disk, f32 rows 4
+                let row = if ds.is_quantized() { ds.d } else { ds.d * 4 };
+                c.bytes_read += (ds.len() * row) as u64;
+                self.tele.bytes_read.add((ds.len() * row) as u64);
             }
             if !graph.is_paged() {
                 c.bytes_read += (graph.n() * graph.k() * 8) as u64;
@@ -539,9 +611,13 @@ impl ShardStore {
                 // store id) — drop them so orphans never consume the
                 // block budget. The victim had no outside pins
                 // (strong_count == 1), so no reader loses data.
-                for id in [e.shard.ds.block_store_id(), e.shard.graph.block_store_id()]
-                    .into_iter()
-                    .flatten()
+                for id in [
+                    e.shard.ds.block_store_id(),
+                    e.shard.ds.exact_block_store_id(),
+                    e.shard.graph.block_store_id(),
+                ]
+                .into_iter()
+                .flatten()
                 {
                     blocks.forget_store(id);
                 }
@@ -561,9 +637,13 @@ impl ShardStore {
             // drop them from the shared cache (live handles re-fetch
             // the new bytes; saving over a shard while paged handles
             // are live is unsupported, as documented on ResidentShard)
-            for id in [e.shard.ds.block_store_id(), e.shard.graph.block_store_id()]
-                .into_iter()
-                .flatten()
+            for id in [
+                e.shard.ds.block_store_id(),
+                e.shard.ds.exact_block_store_id(),
+                e.shard.graph.block_store_id(),
+            ]
+            .into_iter()
+            .flatten()
             {
                 self.blocks.forget_store(id);
             }
@@ -579,6 +659,11 @@ impl ShardStore {
     pub fn residency(&self) -> ResidencyStats {
         let b = self.blocks.stats();
         let c = self.cache.lock().unwrap();
+        let dataset_bytes: u64 = c
+            .resident
+            .values()
+            .map(|e| e.shard.ds.resident_bytes() as u64)
+            .sum();
         ResidencyStats {
             hits: c.hits,
             misses: c.misses,
@@ -593,6 +678,7 @@ impl ShardStore {
             block_evictions: b.evictions,
             rejected_admissions: c.rejected_admissions + b.rejected_admissions,
             bytes_read: c.bytes_read + b.bytes_read,
+            dataset_bytes,
         }
     }
 
@@ -662,6 +748,40 @@ impl ShardStore {
         std::fs::write(path, Json::Obj(fields).to_string())?;
         Ok(())
     }
+}
+
+/// Write the u8-quantized sidecar files (`quant_<i>.dsb`) of a built
+/// shard directory, so it can be opened with
+/// [`ShardStore::with_options`]`(.., quantized = true)`.
+///
+/// Quantization params are fit over the *union* of all shards (two
+/// streaming passes, one shard resident at a time): every shard shares
+/// one code space, so code-space distances of candidates from
+/// different shards stay comparable at the gather phase. The f32
+/// `shard_<i>.dsb` files are left in place — they are the exact-rows
+/// sidecar the rerank phase reads. Returns the fitted params.
+pub fn quantize_store(dir: impl AsRef<Path>) -> crate::Result<QuantParams> {
+    let store = ShardStore::new(&dir)?;
+    let manifest = store.load_manifest()?;
+    let mut fit = QuantFitter::new(manifest.d);
+    for s in 0..manifest.shards {
+        let ds = store.load_shard(s)?;
+        anyhow::ensure!(
+            !ds.is_quantized(),
+            "shard {s} of {:?} is already quantized",
+            store.dir()
+        );
+        for i in 0..ds.len() {
+            ds.with_vec(i, |row| fit.observe(row));
+        }
+    }
+    let params = fit.finish();
+    for s in 0..manifest.shards {
+        let ds = store.load_shard(s)?;
+        io::write_dsb_quantized_with(&ds, &params, store.quant_path(s))
+            .with_context(|| format!("quantizing shard {s}"))?;
+    }
+    Ok(params)
 }
 
 /// Geometry of a shard directory, persisted as `manifest.json` so a
@@ -1437,6 +1557,79 @@ mod tests {
     }
 
     #[test]
+    fn quantized_store_serves_both_residency_modes() {
+        let dir = tmpdir("quantstore");
+        let ds = synth::clustered(240, 6, 71);
+        let params = GnndParams::default().with_k(8).with_p(4).with_iters(3);
+        let cfg = OutOfCoreConfig { shards: 3, workers: 1, params };
+        build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+        // a quantized open before quantize-store ran names the missing
+        // file and the fix in its error
+        let early = ShardStore::with_options(&dir, 0, ResidencyMode::Shard, true).unwrap();
+        let err = format!("{:#}", early.get_shard(0).unwrap_err());
+        assert!(err.contains("gnnd quantize"), "unhelpful error: {err}");
+
+        let qp = quantize_store(&dir).unwrap();
+        assert_eq!(qp.d(), 6);
+        assert!(dir.join("quant_0.dsb").exists());
+
+        // shard mode: owned codes + paged exact sidecar
+        let f32_store = ShardStore::new(&dir).unwrap();
+        let qs = ShardStore::with_options(&dir, 0, ResidencyMode::Shard, true).unwrap();
+        let h = qs.get_shard(1).unwrap();
+        assert!(h.ds.is_quantized() && !h.graph.is_paged());
+        let want = f32_store.get_shard(1).unwrap();
+        // vector data shrinks vs the f32 store (codes + params vs f32
+        // rows); dataset_bytes isolates that from graph bytes. At this
+        // toy dimension the params/handle overhead keeps the ratio
+        // above the asymptotic ~0.25 (the CI smoke checks < 0.3x at a
+        // realistic d), so assert the conservative half
+        let (dq, df) = (qs.residency().dataset_bytes, f32_store.residency().dataset_bytes);
+        assert!(dq * 2 < df, "quantized dataset bytes {dq} not < 0.5x of f32 {df}");
+        // codes decode to within half a quantization step per dim
+        for i in [0usize, 7, 79] {
+            let (got, exact) = (h.ds.vector(i), want.ds.vector(i));
+            for j in 0..6 {
+                assert!(
+                    (got[j] - exact[j]).abs() <= qp.scale[j] / 2.0 + 1e-6,
+                    "row {i} dim {j}: {} vs {}",
+                    got[j],
+                    exact[j]
+                );
+            }
+        }
+        // the exact sidecar serves bit-exact f32 rerank rows
+        let mut buf = Vec::new();
+        let q = want.ds.vector(3);
+        let exact_d = h.ds.rerank_dist_to(12, &q, &mut buf);
+        assert_eq!(exact_d, want.ds.dist_to(12, &q));
+        // quantized codes read ~1/4 the payload bytes of an f32 load
+        let per_f32 = want.ds.len() as u64 * 6 * 4;
+        let loaded = qs.residency().bytes_read;
+        assert!(
+            loaded < per_f32,
+            "quantized load read {loaded} bytes, f32 load would read {per_f32}"
+        );
+        drop(h);
+        drop(want);
+
+        // block mode: codes paged through the block cache, bit-identical
+        // dequantized rows to the shard-mode open
+        let qb = ShardStore::with_options(&dir, 16 * 1024, ResidencyMode::block(), true).unwrap();
+        let hb = qb.get_shard(1).unwrap();
+        assert!(hb.ds.is_quantized() && hb.graph.is_paged());
+        let hs = qs.get_shard(1).unwrap();
+        for i in [0usize, 5, 41] {
+            assert_eq!(hb.ds.vector(i), hs.ds.vector(i), "shard vs block quantized row {i}");
+        }
+        assert!(qb.residency().block_fetches > 0);
+        drop(hb);
+        qb.evict_to_budget();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
     fn unbounded_store_caches_everything() {
         let dir = tmpdir("unbounded");
         write_shards(&dir, 3);
@@ -1489,6 +1682,7 @@ mod tests {
             block_evictions: 7,
             rejected_admissions: 3,
             bytes_read: 123_456,
+            dataset_bytes: 777,
         };
         let back =
             ResidencyStats::from_json(&Json::parse(&res.to_json().to_string()).unwrap()).unwrap();
@@ -1507,6 +1701,7 @@ mod tests {
         let old = ResidencyStats::from_json(&legacy).unwrap();
         assert_eq!(old.mode, "shard");
         assert_eq!((old.block_fetches, old.bytes_read, old.rejected_admissions), (0, 0, 0));
+        assert_eq!(old.dataset_bytes, 0);
 
         // the serve-time fold keeps the build stats readable and adds
         // the residency block to the same file

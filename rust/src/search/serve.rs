@@ -170,6 +170,11 @@ pub struct ServeStats {
     pub dist_evals: f64,
     /// Mean beam-search hops per query of the timing pass.
     pub hops: f64,
+    /// Mean exact f32 re-scores per query of the timing pass (0 unless
+    /// the index serves quantized rows with `rerank > 1`). Against
+    /// `dist_evals` this is the two-phase bargain in one row: how few
+    /// full-precision evaluations bought the reported recall.
+    pub rerank_evals: f64,
 }
 
 /// The sampled query stream: flat query matrix + the object ids the
@@ -334,6 +339,7 @@ pub fn run_point_traced(
     let collected_traces = Mutex::new(Vec::new());
     let tot_evals = AtomicU64::new(0);
     let tot_hops = AtomicU64::new(0);
+    let tot_rerank = AtomicU64::new(0);
     let h_service = telemetry::global().histogram("query.service_us");
     let h_queue = telemetry::global().histogram("query.queue_wait_us");
     let d = stream.d;
@@ -351,6 +357,7 @@ pub fn run_point_traced(
             let collected_traces = &collected_traces;
             let tot_evals = &tot_evals;
             let tot_hops = &tot_hops;
+            let tot_rerank = &tot_rerank;
             let h_service = &h_service;
             let h_queue = &h_queue;
             let wall = &wall;
@@ -362,6 +369,7 @@ pub fn run_point_traced(
                 let mut local_traces = Vec::new();
                 let mut local_evals = 0u64;
                 let mut local_hops = 0u64;
+                let mut local_rerank = 0u64;
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= total {
@@ -415,6 +423,7 @@ pub fn run_point_traced(
                     h_service.record(telemetry::us(service_secs));
                     local_evals += scratch.dist_evals as u64;
                     local_hops += scratch.hops as u64;
+                    local_rerank += scratch.rerank_evals as u64;
                     if traced {
                         scratch.trace.end();
                         local_traces.push(QueryTrace {
@@ -440,6 +449,7 @@ pub fn run_point_traced(
                 }
                 tot_evals.fetch_add(local_evals, Ordering::Relaxed);
                 tot_hops.fetch_add(local_hops, Ordering::Relaxed);
+                tot_rerank.fetch_add(local_rerank, Ordering::Relaxed);
             });
         }
     })
@@ -468,6 +478,7 @@ pub fn run_point_traced(
         overload: offered > 0.0 && qps < OVERLOAD_MARGIN * offered,
         dist_evals: tot_evals.load(Ordering::Relaxed) as f64 / total as f64,
         hops: tot_hops.load(Ordering::Relaxed) as f64 / total as f64,
+        rerank_evals: tot_rerank.load(Ordering::Relaxed) as f64 / total as f64,
     }
 }
 
@@ -585,6 +596,7 @@ pub fn run_sweep_with(
             .col("p99_ms", s.p99_ms)
             .col("dist_evals", s.dist_evals)
             .col("hops", s.hops)
+            .col("rerank_evals", s.rerank_evals)
             .col(&recall_col, s.recall);
         if cfg.arrival_rate > 0.0 {
             row = row
@@ -825,7 +837,7 @@ mod tests {
         assert_eq!(sinks.metrics_points[0].0, "ef=16");
         assert_eq!(sinks.metrics_points[1].0, "ef=32");
         for row in &report.rows {
-            for col in ["dist_evals", "hops"] {
+            for col in ["dist_evals", "hops", "rerank_evals"] {
                 assert!(row.cols.iter().any(|(n, _)| n == col), "row missing {col}");
             }
         }

@@ -18,7 +18,11 @@
 //!    across worker threads here and across processes/devices later;
 //! 3. **gather** — k-way merge the per-shard top-k lists (dedup by id:
 //!    a cross-shard edge and its home shard can propose the same
-//!    object) into the final ascending top-k.
+//!    object) into the final ascending top-k. On a quantized store
+//!    ([`ShardStore::quantized`]) the scatter beams score cheap u8
+//!    code-space distances, the merge keeps `rerank * k` distinct
+//!    survivors, and a final exact-rerank pass re-scores them against
+//!    the full-precision rows before the top-k cut.
 //!
 //! Shard *residency* is managed, not assumed: the index owns no shard
 //! data. Every query resolves pinned handles from the
@@ -239,6 +243,16 @@ impl ShardCore {
         let t_pin = tracing.then(Timer::start);
         let home = self.resolve(&mut scratch.shard_pins, s);
         let wait_ms = t_pin.map_or(0.0, |t| t.ms());
+        // code-space scoring on a quantized store: encode the query
+        // once per scratch — every shard shares the one code space
+        // `quantize_store` fitted, so the first shard's encode serves
+        // the whole scatter (and cross-shard scores stay comparable).
+        // On an f32 store this leaves `qcodes` empty and every
+        // `dist_to_quant` below falls through to the exact f32 path.
+        let mut qcodes = std::mem::take(&mut scratch.qcodes);
+        if qcodes.is_empty() {
+            home.ds.encode_query(q, &mut qcodes);
+        }
         let m = &self.meta[s];
         let lo = m.offset as u32;
         let hi = (m.offset + m.len) as u32;
@@ -248,7 +262,7 @@ impl ShardCore {
 
         for &e in &m.entries {
             if scratch.visited.insert(e) {
-                let d = home.ds.dist_to((e - lo) as usize, q);
+                let d = home.ds.dist_to_quant((e - lo) as usize, q, &qcodes);
                 scratch.dist_evals += 1;
                 scratch.frontier.push(Reverse((F32(d), e)));
                 if e != exclude {
@@ -285,7 +299,7 @@ impl ShardCore {
                     continue;
                 }
                 let dv = if (lo..hi).contains(&e.id) {
-                    home.ds.dist_to((e.id - lo) as usize, q)
+                    home.ds.dist_to_quant((e.id - lo) as usize, q, &qcodes)
                 } else {
                     // cross-shard edge: scored against its owning shard
                     // iff that shard is probed — the scoring universe is
@@ -295,7 +309,7 @@ impl ShardCore {
                         continue;
                     }
                     let sh = self.resolve(&mut scratch.shard_pins, o);
-                    sh.ds.dist_to(e.id as usize - self.meta[o].offset, q)
+                    sh.ds.dist_to_quant(e.id as usize - self.meta[o].offset, q, &qcodes)
                 };
                 scratch.dist_evals += 1;
                 if (lo..hi).contains(&e.id) {
@@ -324,6 +338,7 @@ impl ShardCore {
             }
         }
         scratch.hops += hops;
+        scratch.qcodes = qcodes;
 
         // drain this shard's result pool (max-heap pops worst-first) and
         // keep its best k for the gather phase
@@ -357,6 +372,8 @@ impl ShardCore {
         s.shard_topk.clear();
         s.dist_evals = 0;
         s.hops = 0;
+        s.rerank_evals = 0;
+        s.qcodes.clear();
         s
     }
 
@@ -377,6 +394,8 @@ impl ShardCore {
         scratch.shard_topk.clear();
         scratch.dist_evals = 0;
         scratch.hops = 0;
+        scratch.rerank_evals = 0;
+        scratch.qcodes.clear();
         scratch.trace.enabled = job.traced;
         scratch.trace.clear();
         self.begin_pins(scratch);
@@ -715,14 +734,20 @@ impl AnnIndex for ShardedIndex {
             }
             ResidencyMode::Shard => "shard".to_string(),
         };
+        let backing = if self.core.store.quantized() {
+            format!("u8-quantized(rerank={})", self.core.params.rerank.max(1))
+        } else {
+            "f32".to_string()
+        };
         format!(
-            "sharded(n={}, shards={}, probe={}, budget={}, residency={}, scatter_threads={}, \
-             pool_workers={})",
+            "sharded(n={}, shards={}, probe={}, budget={}, residency={}, backing={}, \
+             scatter_threads={}, pool_workers={})",
             self.core.total,
             self.core.meta.len(),
             self.probe(),
             budget,
             residency,
+            backing,
             self.scatter_threads(),
             self.pool_workers()
         )
@@ -743,9 +768,19 @@ impl AnnIndex for ShardedIndex {
         scratch: &mut SearchScratch,
         out: &mut Vec<(f32, u32)>,
     ) {
-        let ef = (if ef == 0 { self.core.params.ef } else { ef }).max(k).max(1);
+        // two-phase serving on a quantized store: the scatter beams run
+        // on cheap code-space distances and each shard returns its best
+        // `keep = rerank * k`, so the gather phase has enough distinct
+        // survivors to re-score at full precision before the top-k cut.
+        // On an f32 store rerank collapses to 1 and this is the exact
+        // pre-quantization pipeline (bit-identical results).
+        let rerank = if self.core.store.quantized() { self.core.params.rerank.max(1) } else { 1 };
+        let keep = k * rerank;
+        let ef = (if ef == 0 { self.core.params.ef } else { ef }).max(keep).max(1);
         scratch.dist_evals = 0;
         scratch.hops = 0;
+        scratch.rerank_evals = 0;
+        scratch.qcodes.clear();
         let traced = scratch.trace.enabled;
         if traced {
             scratch.trace.clear();
@@ -787,7 +822,7 @@ impl AnnIndex for ShardedIndex {
                 // fully busy pool to start making progress.
                 let order: Vec<usize> =
                     scratch.shard_rank[..probe].iter().map(|&(_, s)| s).collect();
-                let collected = pool.scatter(&self.core, q, k, ef, exclude, order, traced);
+                let collected = pool.scatter(&self.core, q, keep, ef, exclude, order, traced);
                 for mut part in collected {
                     scratch.dist_evals += part.dist_evals;
                     scratch.hops += part.hops;
@@ -803,7 +838,7 @@ impl AnnIndex for ShardedIndex {
                 }
                 for i in 0..probe {
                     let (_, s) = scratch.shard_rank[i];
-                    self.core.search_shard(s, q, k, ef, exclude, scratch);
+                    self.core.search_shard(s, q, keep, ef, exclude, scratch);
                 }
                 ShardCore::release_pins(scratch);
             }
@@ -814,7 +849,7 @@ impl AnnIndex for ShardedIndex {
         scratch.shard_topk.sort_unstable();
         out.clear();
         for &(F32(d), id) in scratch.shard_topk.iter() {
-            if out.len() >= k {
+            if out.len() >= keep {
                 break;
             }
             if out.iter().any(|&(_, have)| have == id) {
@@ -822,12 +857,33 @@ impl AnnIndex for ShardedIndex {
             }
             out.push((d, id));
         }
+        if rerank > 1 {
+            // exact rerank of the surviving candidates: the scatter
+            // pins were released, so re-acquire each survivor's owning
+            // shard (warm in the cache — the scatter just touched it)
+            // and re-score against the exact f32 rows. Code-space
+            // distances got the *set* right; this gets the order and
+            // the reported distances right.
+            self.core.begin_pins(scratch);
+            let mut fbuf = std::mem::take(&mut scratch.fbuf);
+            for (d, id) in out.iter_mut() {
+                let s = self.core.owner(*id);
+                let h = self.core.resolve(&mut scratch.shard_pins, s);
+                let local = *id as usize - self.core.meta[s].offset;
+                *d = h.ds.rerank_dist_to(local, q, &mut fbuf);
+                scratch.rerank_evals += 1;
+            }
+            scratch.fbuf = fbuf;
+            ShardCore::release_pins(scratch);
+            out.sort_by(|a, b| (F32(a.0), a.1).cmp(&(F32(b.0), b.1)));
+            out.truncate(k);
+        }
         if let Some(t) = &t_gather {
             scratch.trace.gather_ms = t.ms();
             // participants report in completion order under pooled
             // scatter; sort so a trace is deterministic either way
             scratch.trace.shards.sort_by_key(|sp| sp.shard);
         }
-        crate::telemetry::record_query(scratch.dist_evals, scratch.hops);
+        crate::telemetry::record_query(scratch.dist_evals, scratch.hops, scratch.rerank_evals);
     }
 }

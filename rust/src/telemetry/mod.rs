@@ -29,6 +29,8 @@
 //! | `query.count` | counter | queries served through any index |
 //! | `query.dist_evals` | histogram | distance evaluations per query |
 //! | `query.hops` | histogram | beam-search hops per query |
+//! | `query.rerank_evals` | histogram | exact f32 re-scores per query (quantized two-phase) |
+//! | `quant.bytes_saved` | counter | bytes kept off the heap by u8 codes vs f32 rows |
 //! | `query.service_us` | histogram | search wall time per query (µs) |
 //! | `query.queue_wait_us` | histogram | open-loop queue delay (µs) |
 //! | `scatter.jobs` | counter | scatter-gather jobs dispatched |
@@ -294,6 +296,7 @@ struct QueryMetrics {
     queries: Arc<Counter>,
     dist_evals: Arc<Histogram>,
     hops: Arc<Histogram>,
+    rerank_evals: Arc<Histogram>,
 }
 
 fn query_metrics() -> &'static QueryMetrics {
@@ -302,6 +305,7 @@ fn query_metrics() -> &'static QueryMetrics {
         queries: global().counter("query.count"),
         dist_evals: global().histogram("query.dist_evals"),
         hops: global().histogram("query.hops"),
+        rerank_evals: global().histogram("query.rerank_evals"),
     })
 }
 
@@ -309,11 +313,15 @@ fn query_metrics() -> &'static QueryMetrics {
 /// metric — into the global registry. Called by the [`crate::search::AnnIndex`]
 /// query entry points, *not* by raw beam search: the same walk runs
 /// inside graph construction, which must not pollute serving metrics.
-pub fn record_query(dist_evals: usize, hops: usize) {
+/// On a quantized index `dist_evals` counts cheap code-space
+/// evaluations and `rerank_evals` the full-precision re-scores; their
+/// ratio is the two-phase speedup argument, so both are exported.
+pub fn record_query(dist_evals: usize, hops: usize, rerank_evals: usize) {
     let m = query_metrics();
     m.queries.inc();
     m.dist_evals.record(dist_evals as u64);
     m.hops.record(hops as u64);
+    m.rerank_evals.record(rerank_evals as u64);
 }
 
 /// Microseconds of a duration in seconds, clamped non-negative — the
@@ -450,11 +458,12 @@ mod tests {
 
     #[test]
     fn record_query_feeds_global_histograms() {
-        record_query(123, 9);
+        record_query(123, 9, 17);
         let snap = global().snapshot();
         assert!(snap.counter("query.count").unwrap() >= 1);
         assert!(snap.hist("query.dist_evals").unwrap().sum >= 123);
         assert!(snap.hist("query.hops").unwrap().sum >= 9);
+        assert!(snap.hist("query.rerank_evals").unwrap().sum >= 17);
     }
 
     #[test]

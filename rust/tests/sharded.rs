@@ -12,8 +12,8 @@ use gnnd::gnnd::{GnndParams, NativeEngine};
 use gnnd::dataset::io;
 use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{
-    build_out_of_core, OutOfCoreConfig, ResidencyMode, ShardManifest, ShardStore, MANIFEST_FILE,
-    STATS_FILE,
+    build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardManifest, ShardStore,
+    MANIFEST_FILE, STATS_FILE,
 };
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{AnnIndex, SearchIndex, SearchParams};
@@ -527,6 +527,207 @@ fn block_residency_serves_v1_stores_identically() {
     }
     // v1 files cannot page: no block traffic, everything owned
     assert_eq!(v1.residency().block_fetches, 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Recall with the *original* f32 rows as queries (unlike
+/// [`recall_over`], which replays `index.vector(q)` — on a quantized
+/// index that would be the dequantized row, muddying the comparison
+/// against an f32 baseline).
+fn recall_with_f32_queries(
+    index: &dyn AnnIndex,
+    ds: &gnnd::dataset::Dataset,
+    qids: &[usize],
+    truth: &[Vec<u32>],
+    k: usize,
+) -> f64 {
+    let mut scratch = index.make_scratch();
+    let mut out = Vec::new();
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (row, &q) in truth.iter().zip(qids) {
+        index.search_ef_into_excluding(ds.vec(q), k, 0, q as u32, &mut scratch, &mut out);
+        let set: HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+        hit += row.iter().take(k).filter(|id| set.contains(id)).count();
+        total += row.len().min(k);
+    }
+    hit as f64 / total as f64
+}
+
+/// Quantized code-space distances preserve the f32 neighbor ordering:
+/// over sampled candidate pairs whose f32 distances differ by more
+/// than the quantization noise floor, the code distance agrees on the
+/// order — the rank correlation that lets a quantized beam plus exact
+/// rerank recover f32 recall.
+#[test]
+fn quant_rank_correlation_with_f32() {
+    let ds = synth::clustered(300, 8, 52);
+    let qds = ds.quantize();
+    let mut qcodes = Vec::new();
+    let (mut concordant, mut pairs) = (0usize, 0usize);
+    for q in (0..ds.len()).step_by(11) {
+        let qv = ds.vec(q).to_vec();
+        assert!(qds.encode_query(&qv, &mut qcodes), "quantized dataset must own a code space");
+        for i in (0..ds.len()).step_by(7) {
+            let j = (i * 131 + 17) % ds.len();
+            let (di, dj) = (ds.dist_to(i, &qv), ds.dist_to(j, &qv));
+            // near-ties may legitimately flip inside the quantization
+            // step; the property is about pairs with a real gap
+            if (di - dj).abs() <= 0.05 * di.abs().max(dj.abs()).max(1e-6) {
+                continue;
+            }
+            let qi = qds.dist_to_quant(i, &qv, &qcodes);
+            let qj = qds.dist_to_quant(j, &qv, &qcodes);
+            pairs += 1;
+            if (di < dj) == (qi < qj) {
+                concordant += 1;
+            }
+        }
+    }
+    assert!(pairs > 500, "tie filter ate the sample: only {pairs} pairs");
+    let frac = concordant as f64 / pairs as f64;
+    assert!(frac >= 0.9, "rank concordance {frac:.3} over {pairs} pairs too low");
+}
+
+/// The quantized serving grid: Shard-owned and Block-paged residency
+/// are *bit-identical* across probe x budget x rerank (same codes,
+/// same exact-rerank rows, order-independent gather sort), and
+/// `rerank=4` recovers to within 2 recall points of the f32 index
+/// over the same shard directory.
+#[test]
+fn quantized_parity_grid_and_rerank_recall() {
+    let ds = synth::clustered(480, 8, 54);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("quantgrid");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    quantize_store(&dir).unwrap();
+    let manifest = ShardStore::new(&dir).unwrap().load_manifest().unwrap();
+    let half = manifest.estimated_resident_bytes() / 2;
+
+    let (qids, truth) = groundtruth::sampled_truth(&ds, 120, 10, 13);
+    let f32_recall = {
+        let idx = ShardedIndex::open(&dir, SearchParams::default().with_ef(48), 0).unwrap();
+        recall_with_f32_queries(&idx, &ds, &qids, &truth, 10)
+    };
+
+    for rerank in [1usize, 4] {
+        let sp = SearchParams::default().with_ef(48).with_rerank(rerank);
+        for probe in [0usize, 2] {
+            for budget in [0usize, half] {
+                let owned = ShardedIndex::from_store(
+                    ShardStore::with_options(&dir, budget, ResidencyMode::Shard, true).unwrap(),
+                    sp.clone(),
+                    probe,
+                    1,
+                )
+                .unwrap();
+                let paged = ShardedIndex::from_store(
+                    ShardStore::with_options(&dir, budget, ResidencyMode::block(), true).unwrap(),
+                    sp.clone(),
+                    probe,
+                    1,
+                )
+                .unwrap();
+                assert!(
+                    owned.describe().contains("u8-quantized"),
+                    "describe must surface the backing: {}",
+                    owned.describe()
+                );
+                let mut s_own = owned.make_scratch();
+                let mut s_pg = paged.make_scratch();
+                let (mut o_own, mut o_pg) = (Vec::new(), Vec::new());
+                for q in (0..ds.len()).step_by(37) {
+                    owned.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_own,
+                        &mut o_own,
+                    );
+                    paged.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_pg,
+                        &mut o_pg,
+                    );
+                    assert_eq!(
+                        o_own, o_pg,
+                        "quantized residency modes diverged (rerank={rerank} probe={probe} \
+                         budget={budget}) on query {q}"
+                    );
+                    assert_eq!(
+                        s_own.dist_evals, s_pg.dist_evals,
+                        "code-space eval counts diverged on query {q}"
+                    );
+                    assert_eq!(
+                        s_own.rerank_evals, s_pg.rerank_evals,
+                        "rerank eval counts diverged on query {q}"
+                    );
+                    if rerank == 1 {
+                        assert_eq!(s_own.rerank_evals, 0, "rerank=1 must skip the exact pass");
+                    } else {
+                        assert!(
+                            s_own.rerank_evals > 0 && s_own.rerank_evals <= 10 * rerank,
+                            "rerank pass must score at most rerank*k candidates: {}",
+                            s_own.rerank_evals
+                        );
+                    }
+                }
+            }
+        }
+        let idx = ShardedIndex::from_store(
+            ShardStore::with_options(&dir, 0, ResidencyMode::Shard, true).unwrap(),
+            SearchParams::default().with_ef(48).with_rerank(rerank),
+            0,
+            1,
+        )
+        .unwrap();
+        let r = recall_with_f32_queries(&idx, &ds, &qids, &truth, 10);
+        if rerank == 4 {
+            assert!(
+                r >= f32_recall - 0.02,
+                "quantized rerank=4 recall {r} more than 2 points below f32 {f32_recall}"
+            );
+        } else {
+            assert!(r > 0.5, "quantized rerank=1 recall collapsed outright: {r}");
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Under the same block-residency budget and block size, serving the
+/// quantized codes pages in fewer blocks than serving f32 rows: a u8
+/// code block holds 4x the rows, so the same walks touch ~1/4 the
+/// data blocks (graph traffic is identical in both runs).
+#[test]
+fn quantized_block_store_fetches_fewer_blocks() {
+    let ds = synth::clustered(600, 8, 55);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("quantfetch");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    quantize_store(&dir).unwrap();
+
+    let fetches = |quantized: bool| {
+        let mode = ResidencyMode::Block { block_bytes: 1024 };
+        let store = ShardStore::with_options(&dir, 256 * 1024, mode, quantized).unwrap();
+        let idx =
+            ShardedIndex::from_store(store, SearchParams::default().with_ef(32), 1, 1).unwrap();
+        let mut scratch = idx.make_scratch();
+        let mut out = Vec::new();
+        for q in (0..ds.len()).step_by(17) {
+            idx.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut scratch, &mut out);
+            assert!(!out.is_empty());
+        }
+        idx.residency().block_fetches
+    };
+    let f = fetches(false);
+    let q = fetches(true);
+    assert!(q < f, "quantized block serving fetched {q} blocks, f32 fetched {f}");
     std::fs::remove_dir_all(dir).ok();
 }
 
