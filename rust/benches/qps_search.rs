@@ -10,7 +10,13 @@
 //! files, partial reads — bytes_read vs total payload printed), and a
 //! fifth compares sequential vs parallel scatter
 //! (`search_threads`, now a persistent pool) at a single serve worker,
-//! where per-query latency is the whole story. A final *open-loop*
+//! where per-query latency is the whole story. Hierarchy sweeps rerun
+//! the monolithic and sharded configurations with coarse-to-fine entry
+//! descent (+ adaptive `route_slack` shard pruning on the sharded
+//! ones) — flat-vs-hierarchy at equal ef is the entry-quality story,
+//! and those curves are additionally dumped machine-readable to
+//! `BENCH_8.json` at the repo root (recall@10 / qps / hops /
+//! dist_evals / probe_mean per sweep point). A final *open-loop*
 //! sweep probes the monolithic index's closed-loop capacity, then
 //! offers 60% and 150% of it on a seeded Poisson schedule — the
 //! underloaded point shows queue delays near zero, the overloaded one
@@ -28,10 +34,38 @@ use gnnd::gnnd::{GnndParams, NativeEngine};
 use gnnd::merge::outofcore::{
     build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore,
 };
+use gnnd::metrics::Report;
 use gnnd::search::serve::{self, ServeConfig};
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
+use gnnd::util::json::Json;
 use gnnd::util::timer::Timer;
+
+/// Reduce one sweep report to the `BENCH_8.json` point list: the
+/// operating-curve columns only (`recall@<k>` renamed to `recall` so
+/// downstream tooling doesn't need to know k).
+fn bench8_points(r: &Report) -> Json {
+    let keep = ["ef", "qps", "recall", "hops", "dist_evals", "rerank_evals", "probe_mean"];
+    let rows = r
+        .rows
+        .iter()
+        .map(|row| {
+            let mut o = Json::obj();
+            for (name, v) in &row.cols {
+                let key = if name.starts_with("recall@") {
+                    "recall"
+                } else {
+                    name.as_str()
+                };
+                if keep.contains(&key) {
+                    o = o.set(key, *v);
+                }
+            }
+            o
+        })
+        .collect();
+    Json::Arr(rows)
+}
 
 fn main() {
     let scale = gnnd::experiments::Scale::from_env();
@@ -58,6 +92,28 @@ fn main() {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
     }
+    let mut bench8 = vec![("mono-kmeans16", report)];
+
+    // ---- monolithic hierarchy entries: the same graph seeded by a
+    // coarse-to-fine descent instead of fixed k-means entries — equal-ef
+    // hops and dist_evals against the sweep above are the entry-quality
+    // story BENCH_8.json records ----
+    let cfg_mono_hier = ServeConfig {
+        params: SearchParams::default().with_entries(EntryStrategy::Hierarchy, 16),
+        ..cfg.clone()
+    };
+    let mono_hier =
+        SearchIndex::new(&ds, &graph, cfg_mono_hier.params.clone()).expect("hierarchy index");
+    let mut ds_mono_hier = ds.clone();
+    ds_mono_hier.name = format!("{} hierarchy", ds.name);
+    let report =
+        serve::run_sweep_on(&mono_hier, &ds_mono_hier, &cfg_mono_hier).expect("hierarchy sweep");
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    bench8.push(("mono-hierarchy16", report));
+    drop(mono_hier);
 
     // ---- sharded variant: same corpus, 4 out-of-core shards ----
     let dir = std::env::temp_dir().join(format!("gnnd-qps-shards-{}", std::process::id()));
@@ -80,6 +136,7 @@ fn main() {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
     }
+    bench8.push(("sharded-flat", report));
     drop(sharded);
 
     // ---- budget-constrained variant: ~50% of the store resident ----
@@ -153,6 +210,46 @@ fn main() {
     println!("residency at quantized block budget 50%: {}", res.to_json());
     drop(quant);
 
+    // ---- hierarchy entries + adaptive routing over the same shards:
+    // per-shard `hier_<s>.bin` sidecars (built on this first open,
+    // loaded byte-identically afterwards) seed every probed shard's
+    // beam near the query, and `route_slack = 1.2` prunes shards whose
+    // best routing centroid is > 1.2x the nearest shard's score — vs
+    // the probe-all sharded sweep above, recall holds while hops,
+    // dist_evals and probe_mean drop ----
+    let hier_params = SearchParams::default()
+        .with_entries(EntryStrategy::Hierarchy, 16)
+        .with_route_slack(1.2);
+    let cfg_hier = ServeConfig { params: hier_params.clone(), ..cfg.clone() };
+    let hier = ShardedIndex::open(&dir, hier_params.clone(), 0).expect("hierarchy sharded index");
+    let mut ds_hier = ds.clone();
+    ds_hier.name = format!("{} sharded hier slack1.2", ds.name);
+    let report = serve::run_sweep_on(&hier, &ds_hier, &cfg_hier).expect("hierarchy sharded sweep");
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    bench8.push(("sharded-hier-slack1.2", report));
+    drop(hier);
+
+    // ---- quantized + hierarchy + routing: the descent, the slack
+    // cutoff and the u8 code path compose — same budget/rerank as the
+    // quant50 sweep above, hierarchy sidecars reused from the f32 open
+    let qstore = ShardStore::with_options(&dir, budget, ResidencyMode::block(), true)
+        .expect("quantized store");
+    let quant_hier = ShardedIndex::from_store(qstore, hier_params.clone().with_rerank(4), 2, 1)
+        .expect("quantized hierarchy index");
+    let cfg_qh = ServeConfig { params: hier_params.clone().with_rerank(4), ..cfg.clone() };
+    let mut ds_qh = ds.clone();
+    ds_qh.name = format!("{} sharded quant50 hier rerank4", ds.name);
+    let report = serve::run_sweep_on(&quant_hier, &ds_qh, &cfg_qh).expect("quantized hier sweep");
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    bench8.push(("quant50-hier-slack1.2", report));
+    drop(quant_hier);
+
     // ---- sequential vs parallel scatter at 1 serve worker ----
     // with a single closed-loop worker, QPS is per-query latency:
     // fanning the probed shards across 4 scatter threads must beat the
@@ -216,5 +313,24 @@ fn main() {
     match report.save_json("results") {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+
+    // ---- BENCH_8.json: the flat-vs-hierarchy operating curves above,
+    // machine-readable at the repo root — the PR 8 artifact a driver
+    // (or a human) diffs without scraping the tables ----
+    let mut sweeps = Json::obj();
+    for (tag, r) in &bench8 {
+        sweeps = sweeps.set(tag, bench8_points(r));
+    }
+    let out = Json::obj()
+        .set("bench", "qps_search")
+        .set("scale", format!("{scale:?}"))
+        .set("n", n)
+        .set("k", cfg.k)
+        .set("sweeps", sweeps);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_8.json");
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => println!("[BENCH_8.json save failed: {e}]"),
     }
 }

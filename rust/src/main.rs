@@ -13,19 +13,21 @@
 //! gnnd quantize     <in.dsb out.dsb | shard-dir/>
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
 //! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
-//!                   [--memory-budget MB] [--residency shard|block] [--block-size KiB]
-//!                   [--search-threads N] [--quantize true])
+//!                   [--route-slack S] [--memory-budget MB] [--residency shard|block]
+//!                   [--block-size KiB] [--search-threads N] [--quantize true])
 //!                   (--query-id N | --queries q.dsb [--out res.ivecs])
 //!                   [--k 10] [--ef 64] [--rerank 1] [--entries 8]
-//!                   [--entry-strategy random|kmeans]
+//!                   [--entry-strategy random|kmeans|hierarchy]
 //!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
 //! gnnd serve-bench  (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
-//!                   [--memory-budget MB] [--residency shard|block] [--block-size KiB]
-//!                   [--search-threads N] [--quantize true] [--data data.dsb])
+//!                   [--route-slack S] [--memory-budget MB] [--residency shard|block]
+//!                   [--block-size KiB] [--search-threads N] [--quantize true]
+//!                   [--data data.dsb])
 //!                   [--k 10] [--ef 8,16,32,64,128] [--rerank 1]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
 //!                   [--arrival-rate R] [--arrival poisson|uniform]
-//!                   [--entries 8] [--entry-strategy random|kmeans] [--beam-width 0]
+//!                   [--entries 8] [--entry-strategy random|kmeans|hierarchy]
+//!                   [--beam-width 0]
 //!                   [--max-hops 0] [--search-seed S] [--seed S]
 //!                   [--trace-sample N] [--trace-out traces.jsonl] [--metrics-out m.jsonl]
 //! gnnd trace        traces.jsonl [--top 5]
@@ -68,6 +70,19 @@
 //! to within points of the f32 index while the beam itself runs on
 //! cheap integer distances. `ooc-build --quantize true` fits and
 //! writes the sidecars immediately after the build.
+//!
+//! Entry & routing: `--entry-strategy hierarchy` seeds every beam from
+//! a GGNN-style coarse-to-fine descent instead of fixed entries — the
+//! hierarchy persists as a `<graph>.hier.bin` sidecar next to a
+//! monolithic graph (`hier_<s>.bin` per shard in a shard directory)
+//! and is rebuilt automatically when stale. `--route-slack S` (sharded
+//! only, `S >= 1.0`) makes `--probe-shards` a *cap*: each query probes
+//! only the shards whose best route-centroid distance is within
+//! `S x d_best` of the nearest shard's. Shard manifests carry
+//! per-shard k-means `route_centroids` (fit by `ooc-build`; older
+//! manifests are backfilled by `gnnd quantize <shard-dir>` or fall
+//! back to the single mean centroid).
+//!
 //! `serve-bench --shards` prints the residency counters
 //! (hits/misses/evictions/hit rate, block fetches, bytes read,
 //! doorkeeper rejections) and folds them — plus the sweep rows as a
@@ -102,7 +117,9 @@ use gnnd::merge::outofcore::{
 };
 use gnnd::metrics::{recall_at, Report};
 use gnnd::search::sharded::{clamp_probe, clamp_search_threads, ShardedIndex};
-use gnnd::search::{batch::BatchExecutor, serve, AnnIndex, SearchIndex, SearchParams};
+use gnnd::search::{
+    batch::BatchExecutor, hierarchy, serve, AnnIndex, EntryStrategy, SearchIndex, SearchParams,
+};
 use gnnd::telemetry::{self, trace::read_traces, trace::render_report, trace::TraceWriter};
 use gnnd::util::json::Json;
 use gnnd::util::timer::Timer;
@@ -157,6 +174,7 @@ impl Args {
             entry: self.parse_or("entry-strategy", d.entry)?,
             seed: self.parse_or("search-seed", d.seed)?,
             rerank: self.parse_or("rerank", d.rerank)?,
+            route_slack: self.parse_or("route-slack", d.route_slack)?,
         };
         p.validate()?;
         Ok(p)
@@ -357,8 +375,9 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 }
                 None => {
                     let ds = io::read_dsb(args.req("data")?)?;
-                    let g = KnnGraph::load(args.req("graph")?)?;
-                    let index = SearchIndex::new(&ds, &g, params)?;
+                    let graph_path = args.req("graph")?;
+                    let g = KnnGraph::load(graph_path)?;
+                    let index = open_monolithic_index(&ds, &g, graph_path, params)?;
                     run_search(&args, &index, k)?;
                 }
             }
@@ -461,8 +480,9 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 }
                 None => {
                     let ds = io::read_dsb(args.req("data")?)?;
-                    let g = KnnGraph::load(args.req("graph")?)?;
-                    let index = SearchIndex::new(&ds, &g, cfg.params.clone())?;
+                    let graph_path = args.req("graph")?;
+                    let g = KnnGraph::load(graph_path)?;
+                    let index = open_monolithic_index(&ds, &g, graph_path, cfg.params.clone())?;
                     serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?
                 }
             };
@@ -558,6 +578,27 @@ fn write_metrics_jsonl(
     }
     w.flush().with_context(|| format!("flush {path}"))?;
     Ok(())
+}
+
+/// Open a monolithic index over `--data` + `--graph`. Under
+/// `--entry-strategy hierarchy` the entry hierarchy is loaded from (or
+/// built and persisted to) the `<graph>.hier.bin` sidecar — the same
+/// load-or-rebuild gate the sharded path applies to its per-shard
+/// `hier_<s>.bin` files.
+fn open_monolithic_index<'a>(
+    ds: &'a gnnd::dataset::Dataset,
+    g: &'a KnnGraph,
+    graph_path: &str,
+    params: SearchParams,
+) -> anyhow::Result<SearchIndex<'a>> {
+    if params.entry == EntryStrategy::Hierarchy {
+        let cfg = hierarchy::HierConfig { seed: params.seed, ..Default::default() };
+        let sidecar = format!("{graph_path}.hier.bin");
+        let hier = hierarchy::load_or_build(&sidecar, ds, &cfg);
+        SearchIndex::with_hierarchy(ds, g, params, std::sync::Arc::new(hier))
+    } else {
+        SearchIndex::new(ds, g, params)
+    }
 }
 
 /// Open `--shards <dir>` with the serving knobs shared by `search` and

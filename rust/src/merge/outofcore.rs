@@ -781,6 +781,17 @@ pub fn quantize_store(dir: impl AsRef<Path>) -> crate::Result<QuantParams> {
         io::write_dsb_quantized_with(&ds, &params, store.quant_path(s))
             .with_context(|| format!("quantizing shard {s}"))?;
     }
+    // opportunistic backfill: a pre-PR8 manifest (no route_centroids)
+    // passing through quantization is already streaming every shard,
+    // so fit the routing centroids now and upgrade the manifest in
+    // place — old stores gain adaptive routing without a rebuild
+    if manifest.route_centroids.iter().all(Vec::is_empty) {
+        let mut m = manifest;
+        m.route_centroids = (0..m.shards)
+            .map(|s| Ok(fit_route_centroids(&store.load_shard(s)?)))
+            .collect::<crate::Result<_>>()?;
+        store.save_manifest(&m)?;
+    }
     Ok(params)
 }
 
@@ -803,6 +814,13 @@ pub struct ShardManifest {
     pub offsets: Vec<usize>,
     /// Per-shard mean vectors (normalized under cosine).
     pub centroids: Vec<Vec<f32>>,
+    /// Per-shard k-means routing centroids ([`fit_route_centroids`]):
+    /// multi-centroid routing scores a shard by its *nearest* centroid,
+    /// so multi-modal shards route correctly where the single mean
+    /// misleads. Optional in serialized manifests — pre-PR8 stores
+    /// read back with one empty list per shard (serving then falls
+    /// back to `centroids`, bit-identical to the old route).
+    pub route_centroids: Vec<Vec<Vec<f32>>>,
 }
 
 fn jfield<'a>(j: &'a Json, key: &str) -> crate::Result<&'a Json> {
@@ -829,6 +847,17 @@ impl ShardManifest {
             .iter()
             .map(|c| Json::Arr(c.iter().map(|&x| Json::Num(x as f64)).collect()))
             .collect();
+        let route: Vec<Json> = self
+            .route_centroids
+            .iter()
+            .map(|cs| {
+                Json::Arr(
+                    cs.iter()
+                        .map(|c| Json::Arr(c.iter().map(|&x| Json::Num(x as f64)).collect()))
+                        .collect(),
+                )
+            })
+            .collect();
         Json::obj()
             .set("shards", self.shards)
             .set("total", self.total)
@@ -837,6 +866,7 @@ impl ShardManifest {
             .set("metric", self.metric.as_str())
             .set("offsets", Json::Arr(offsets))
             .set("centroids", Json::Arr(centroids))
+            .set("route_centroids", Json::Arr(route))
     }
 
     pub fn from_json(j: &Json) -> crate::Result<ShardManifest> {
@@ -864,7 +894,34 @@ impl ShardManifest {
                     .collect::<crate::Result<Vec<f32>>>()
             })
             .collect::<crate::Result<Vec<Vec<f32>>>>()?;
-        let m = ShardManifest {
+        // optional (pre-PR8 manifests): absent reads as one empty
+        // centroid list per shard — the single-centroid fallback
+        let route_centroids = match j.get("route_centroids") {
+            None => Vec::new(),
+            Some(r) => r
+                .as_arr()
+                .context("manifest field \"route_centroids\" is not an array")?
+                .iter()
+                .map(|cs| {
+                    cs.as_arr()
+                        .context("route_centroids entry is not an array")?
+                        .iter()
+                        .map(|c| {
+                            let row = c.as_arr().context("route centroid is not an array")?;
+                            row.iter()
+                                .map(|x| {
+                                    let v = x
+                                        .as_f64()
+                                        .context("route centroid component is not a number")?;
+                                    Ok(v as f32)
+                                })
+                                .collect::<crate::Result<Vec<f32>>>()
+                        })
+                        .collect::<crate::Result<Vec<Vec<f32>>>>()
+                })
+                .collect::<crate::Result<Vec<Vec<Vec<f32>>>>>()?,
+        };
+        let mut m = ShardManifest {
             shards: jusize(j, "shards")?,
             total: jusize(j, "total")?,
             d: jusize(j, "d")?,
@@ -872,12 +929,22 @@ impl ShardManifest {
             metric,
             offsets,
             centroids,
+            route_centroids,
         };
         anyhow::ensure!(
             m.offsets.len() == m.shards && m.centroids.len() == m.shards,
             "manifest lists {} offsets / {} centroids for {} shards",
             m.offsets.len(),
             m.centroids.len(),
+            m.shards
+        );
+        if m.route_centroids.is_empty() {
+            m.route_centroids = vec![Vec::new(); m.shards];
+        }
+        anyhow::ensure!(
+            m.route_centroids.len() == m.shards,
+            "manifest lists {} route_centroids entries for {} shards",
+            m.route_centroids.len(),
             m.shards
         );
         Ok(m)
@@ -926,6 +993,35 @@ pub fn shard_centroid(ds: &Dataset) -> Vec<f32> {
         crate::distance::normalize(&mut c);
     }
     c
+}
+
+/// Routing centroids per shard. A module constant rather than an
+/// [`OutOfCoreConfig`] field: every call site constructs the config as
+/// a full struct literal, and 4 centroids per shard is enough to
+/// separate the modes of a multi-modal shard while keeping the route
+/// phase O(shards × 4) distance evaluations.
+pub const ROUTE_CENTROIDS: usize = 4;
+
+/// Per-shard k-means routing centroids ([`ShardManifest`]
+/// `route_centroids`): [`ROUTE_CENTROIDS`] clusters fitted inside the
+/// shard (reusing [`crate::baselines::kmeans`], deterministic for any
+/// thread count), normalized under cosine like [`shard_centroid`].
+/// Accessor-based row copy, so it fits paged shards too.
+pub fn fit_route_centroids(ds: &Dataset) -> Vec<Vec<f32>> {
+    let k = ROUTE_CENTROIDS.min(ds.len()).max(1);
+    let mut data = Vec::with_capacity(ds.len() * ds.d);
+    ds.extend_flat_into(&mut data);
+    let threads = crate::util::num_threads();
+    let book = crate::baselines::kmeans::train(&data, ds.d, k, 6, ds.metric, 0x2085_0C5, threads);
+    (0..book.k)
+        .map(|c| {
+            let mut v = book.centroid(c).to_vec();
+            if ds.metric == Metric::Cosine {
+                crate::distance::normalize(&mut v);
+            }
+            v
+        })
+        .collect()
 }
 
 /// Round-robin tournament schedule: all C(s,2) pairs in `s-1` (or `s`)
@@ -1026,11 +1122,13 @@ pub fn build_out_of_core(
     let shards = ds.split(cfg.shards);
     let mut offsets = Vec::with_capacity(cfg.shards);
     let mut centroids = Vec::with_capacity(cfg.shards);
+    let mut route_centroids = Vec::with_capacity(cfg.shards);
     let mut off = 0usize;
     for (i, sh) in shards.iter().enumerate() {
         offsets.push(off);
         off += sh.len();
         centroids.push(shard_centroid(sh));
+        route_centroids.push(fit_route_centroids(sh));
         store.save_shard(i, sh)?;
     }
     drop(shards); // from here on, everything is re-read from disk
@@ -1042,6 +1140,7 @@ pub fn build_out_of_core(
         metric: ds.metric,
         offsets: offsets.clone(),
         centroids,
+        route_centroids,
     })?;
     stats.io_secs += t.secs();
 

@@ -1,0 +1,591 @@
+//! GGNN-style coarse-to-fine entry hierarchy over a finished graph
+//! (Groh et al., arXiv 1912.01059 — the multi-layer search structure
+//! PAPERS.md credits for cheap hop reduction at scale).
+//!
+//! A [`EntryHierarchy`] is a small pyramid of nested sampled points
+//! over the indexed objects: the finest level is a bounded sample of
+//! the dataset (`max_base` points, so construction cost and memory are
+//! O(sample), never O(n)), each coarser level a factor-`branch`
+//! subsample of the one below, until the top fits `top_cap` points.
+//! Every level carries an exact (brute-forced) k-NN graph over its
+//! points. At query time [`EntryHierarchy::descend`] brute-forces the
+//! top level, then greedily searches each finer level (via
+//! [`crate::search::beam_search`], the codebase's single greedy-search
+//! loop) seeded by the level above, and returns the best finest-level
+//! points as **entry seeds** for the base-graph beam. The hierarchy
+//! only changes *which* entries seed the beam — results still come
+//! from the base graph walk, so recall tracks the flat-entry index
+//! while the walk skips the "walk in from a random region" hops.
+//!
+//! Construction is deterministic from `(data, HierConfig)`: sampling
+//! uses a seeded [`Rng`], levels are stored sorted, and distances are
+//! evaluated in a fixed order — the same inputs produce a
+//! byte-identical `hier.bin` sidecar ([`EntryHierarchy::save`], HIR1
+//! format below), which is how [`load_or_build`] can trust a sidecar
+//! found on disk after validating its header.
+//!
+//! # `hier.bin` (HIR1) format
+//!
+//! All integers little-endian u32, all floats little-endian f32 — the
+//! same conventions as the `.dsb`/`.knng` formats in
+//! [`crate::dataset::io`].
+//!
+//! ```text
+//! offset  field
+//!      0  magic       0x4849_5231 ("HIR1")
+//!      4  d           vector dimensionality
+//!      8  n           dataset size the hierarchy was built over
+//!     12  metric      0 = l2, 1 = ip, 2 = cosine
+//!     16  m           finest-level sample size
+//!     20  levels      level count L (top/coarsest first)
+//!     24  degree      configured per-level graph degree
+//!     28  seed_lo     low 32 bits of the build seed
+//!     32  seed_hi     high 32 bits of the build seed
+//!     36  global_ids  m u32 (finest-local -> dataset id, ascending)
+//!          vectors    m * d f32 (finest-level rows, build order)
+//!          L levels:  len u32, lk u32 (effective degree),
+//!                     len u32 ids (finest-local, ascending),
+//!                     len * lk neighbor slots (u32 id, f32 dist;
+//!                     id = EMPTY pads short rows)
+//! ```
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::config::Metric;
+use crate::dataset::groundtruth::ordered::F32;
+use crate::dataset::Dataset;
+use crate::graph::{KnnGraph, Neighbor, EMPTY};
+use crate::util::rng::Rng;
+
+use super::{beam_search, QuerySpec, SearchScratch};
+
+const HIER_MAGIC: u32 = 0x4849_5231; // "HIR1"
+/// Fixed header length in bytes (9 u32 words).
+const HIER_HEADER: usize = 36;
+/// Sanity bounds for untrusted headers (a corrupt file must fail the
+/// parse, not drive a huge allocation).
+const MAX_SAMPLE: usize = 1 << 22;
+const MAX_LEVELS: usize = 64;
+
+/// Construction knobs of an [`EntryHierarchy`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HierConfig {
+    /// Finest-level sample cap: the hierarchy covers
+    /// `min(n, max_base)` points, bounding build cost (O(max_base^2)
+    /// distances) and memory independently of the dataset size.
+    pub max_base: usize,
+    /// Down-sampling factor between levels.
+    pub branch: usize,
+    /// Stop coarsening once a level fits this many points (the top
+    /// level is brute-forced per query, so it must stay small).
+    pub top_cap: usize,
+    /// Per-level exact k-NN graph degree.
+    pub degree: usize,
+    /// Sampling seed (fixed seed + data => byte-identical sidecar).
+    pub seed: u64,
+}
+
+impl Default for HierConfig {
+    fn default() -> Self {
+        HierConfig { max_base: 1024, branch: 8, top_cap: 32, degree: 8, seed: 0x5EA_6C4 }
+    }
+}
+
+/// One level of the pyramid: its member points (finest-local ids,
+/// ascending — a subset of every finer level, so a coarser point maps
+/// into the next level by binary search) and an exact k-NN graph over
+/// them (graph-local ids index into `ids`).
+struct HierLevel {
+    ids: Vec<u32>,
+    graph: KnnGraph,
+}
+
+/// A coarse-to-fine entry hierarchy (see the module docs). Owns an
+/// f32 copy of its finest-level sample rows, so descent never touches
+/// the (possibly paged or quantized) base dataset.
+pub struct EntryHierarchy {
+    /// Finest-level sample vectors (owned f32, `m` rows).
+    ds: Dataset,
+    /// Finest-local id -> dataset id (ascending).
+    global_ids: Vec<u32>,
+    /// Levels, coarsest (top) first; the last level covers the whole
+    /// sample (`ids = 0..m`).
+    levels: Vec<HierLevel>,
+    /// Dataset size the hierarchy was built over (validation).
+    n: usize,
+    /// Configured degree (validation; levels may clamp below it).
+    degree: usize,
+    seed: u64,
+}
+
+/// Exact k-NN graph over one level by brute force — levels are small
+/// (≤ `max_base`), so O(len^2) distances at build time buy exact
+/// navigability with zero tuning. Ties break by ascending id, so the
+/// result is deterministic.
+fn exact_level_graph(hds: &Dataset, ids: &[u32], degree: usize) -> KnnGraph {
+    let ln = ids.len();
+    let lk = degree.min(ln.saturating_sub(1)).max(1);
+    let mut g = KnnGraph::empty(ln, lk);
+    let mut cands: Vec<(F32, u32)> = Vec::with_capacity(ln);
+    for ul in 0..ln {
+        cands.clear();
+        for vl in 0..ln {
+            if vl != ul {
+                let d = hds.dist(ids[ul] as usize, ids[vl] as usize);
+                cands.push((F32(d), vl as u32));
+            }
+        }
+        cands.sort_unstable();
+        let list = g.list_mut(ul);
+        for (slot, &(F32(d), vl)) in cands.iter().take(lk).enumerate() {
+            list[slot] = Neighbor { id: vl, dist: d, new: false };
+        }
+    }
+    g
+}
+
+impl EntryHierarchy {
+    /// Build a hierarchy over `ds` (any backing — rows are copied out
+    /// through the accessor, so paged and quantized datasets build the
+    /// same structure as owned ones for identical row values).
+    pub fn build(ds: &Dataset, cfg: &HierConfig) -> EntryHierarchy {
+        assert!(ds.len() > 0, "cannot build a hierarchy over an empty dataset");
+        let n = ds.len();
+        let m = n.min(cfg.max_base.max(1));
+        let mut rng = Rng::new(cfg.seed ^ 0x41E7_A9C1);
+        // finest-level sample, ascending (stable file bytes + the
+        // binary-search id mapping below)
+        let global_ids: Vec<u32> = if m == n {
+            (0..n as u32).collect()
+        } else {
+            let mut picks = rng.distinct(n, m);
+            picks.sort_unstable();
+            picks.into_iter().map(|i| i as u32).collect()
+        };
+        let mut data = Vec::with_capacity(m * ds.d);
+        for &g in &global_ids {
+            ds.with_vec(g as usize, |row| data.extend_from_slice(row));
+        }
+        let hds = Dataset::new("hier", ds.d, ds.metric, data);
+        // nested levels, finest -> coarsest, then reversed to top-first
+        let branch = cfg.branch.max(2);
+        let mut level_ids: Vec<Vec<u32>> = vec![(0..m as u32).collect()];
+        while level_ids.last().unwrap().len() > cfg.top_cap.max(1) {
+            let prev = level_ids.last().unwrap();
+            let mc = (prev.len() / branch).max(1);
+            let picks = rng.distinct(prev.len(), mc);
+            let mut ids: Vec<u32> = picks.into_iter().map(|i| prev[i]).collect();
+            ids.sort_unstable();
+            level_ids.push(ids);
+        }
+        level_ids.reverse();
+        let levels = level_ids
+            .into_iter()
+            .map(|ids| {
+                let graph = exact_level_graph(&hds, &ids, cfg.degree);
+                HierLevel { ids, graph }
+            })
+            .collect();
+        EntryHierarchy { ds: hds, global_ids, levels, n, degree: cfg.degree, seed: cfg.seed }
+    }
+
+    /// True when a loaded sidecar describes this `(dataset, config)`
+    /// pair — the load-or-rebuild gate of [`load_or_build`].
+    pub fn matches(&self, ds: &Dataset, cfg: &HierConfig) -> bool {
+        self.ds.d == ds.d
+            && self.n == ds.len()
+            && self.ds.metric == ds.metric
+            && self.seed == cfg.seed
+            && self.degree == cfg.degree
+            && self.ds.len() == ds.len().min(cfg.max_base.max(1))
+    }
+
+    /// Finest-level sample size.
+    pub fn sample_len(&self) -> usize {
+        self.ds.len()
+    }
+
+    /// Level count (top/coarsest first).
+    pub fn level_count(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Level sizes, coarsest first.
+    pub fn level_sizes(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.ids.len()).collect()
+    }
+
+    /// Coarse-to-fine descent: brute-force the top level, greedily
+    /// search each finer level seeded by the one above, and write the
+    /// best `n_out` finest-level points into `out` as **dataset ids**
+    /// of the dataset the hierarchy was built over (shard-local for a
+    /// per-shard hierarchy). Returns the distance evaluations spent —
+    /// the caller folds them into its own `dist_evals` accounting
+    /// (beam hops on the *base* graph are reported separately; descent
+    /// expansions walk the tiny level graphs and are deliberately not
+    /// counted as base-graph hops).
+    ///
+    /// Uses the nested `scratch.hier` child scratch, so it can run
+    /// mid-query without clobbering the caller's accumulated counters.
+    pub fn descend(
+        &self,
+        q: &[f32],
+        n_out: usize,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<u32>,
+    ) -> usize {
+        out.clear();
+        if n_out == 0 || self.levels.is_empty() {
+            return 0;
+        }
+        let w = n_out;
+        let mut evals = 0usize;
+        let mut child = scratch.hier.take().unwrap_or_else(|| Box::new(SearchScratch::new()));
+        let mut best = std::mem::take(&mut child.hier_out);
+        let mut entries = std::mem::take(&mut child.entry_buf);
+        // ---- top level: score every point (it fits top_cap) ----
+        best.clear();
+        let top = &self.levels[0];
+        for &fl in &top.ids {
+            best.push((self.ds.dist_to(fl as usize, q), fl));
+        }
+        evals += top.ids.len();
+        best.sort_unstable_by(|a, b| (F32(a.0), a.1).cmp(&(F32(b.0), b.1)));
+        best.truncate(w);
+        // ---- finer levels: greedy beam seeded from the level above ----
+        for level in &self.levels[1..] {
+            entries.clear();
+            for &(_, fl) in best.iter() {
+                // levels are nested, so every coarser point exists in
+                // each finer level and the lookup cannot fail
+                let ll = level.ids.binary_search(&fl).expect("hierarchy levels not nested");
+                entries.push(ll as u32);
+            }
+            let spec = QuerySpec {
+                q,
+                k: w,
+                ef: w,
+                beam_width: 0,
+                max_hops: 0,
+                entries: &entries,
+                exclude: EMPTY,
+                rerank: 1,
+            };
+            beam_search(&self.ds, &level.graph, Some(&level.ids), &spec, &mut child, &mut best);
+            evals += child.dist_evals;
+        }
+        for &(_, fl) in best.iter().take(n_out) {
+            out.push(self.global_ids[fl as usize]);
+        }
+        child.hier_out = best;
+        child.entry_buf = entries;
+        scratch.hier = Some(child);
+        evals
+    }
+
+    /// Persist as a `hier.bin` sidecar (HIR1; see the module docs).
+    /// Deterministic: the same hierarchy writes the same bytes.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        let metric = match self.ds.metric {
+            Metric::L2 => 0u32,
+            Metric::Ip => 1,
+            Metric::Cosine => 2,
+        };
+        for word in [
+            HIER_MAGIC,
+            self.ds.d as u32,
+            self.n as u32,
+            metric,
+            self.ds.len() as u32,
+            self.levels.len() as u32,
+            self.degree as u32,
+            self.seed as u32,
+            (self.seed >> 32) as u32,
+        ] {
+            w.write_all(&word.to_le_bytes())?;
+        }
+        for &g in &self.global_ids {
+            w.write_all(&g.to_le_bytes())?;
+        }
+        for &x in self.ds.raw() {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        for level in &self.levels {
+            let lk = level.graph.k();
+            w.write_all(&(level.ids.len() as u32).to_le_bytes())?;
+            w.write_all(&(lk as u32).to_le_bytes())?;
+            for &id in &level.ids {
+                w.write_all(&id.to_le_bytes())?;
+            }
+            for u in 0..level.graph.n() {
+                let row = level.graph.list(u);
+                for slot in 0..lk {
+                    let e = row[slot];
+                    w.write_all(&e.id.to_le_bytes())?;
+                    w.write_all(&e.dist.to_le_bytes())?;
+                }
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read a `hier.bin` sidecar back. Fails (with the path and what
+    /// was wrong) on a bad magic, corrupt header geometry, or trailing
+    /// / missing bytes — callers treat any error as "rebuild".
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<EntryHierarchy> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .with_context(|| format!("read {path:?}"))?;
+        let mut off = 0usize;
+        let mut take_u32 = |bytes: &[u8]| -> crate::Result<u32> {
+            anyhow::ensure!(off + 4 <= bytes.len(), "truncated {path:?} at byte {off}");
+            let v = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+            Ok(v)
+        };
+        anyhow::ensure!(bytes.len() >= HIER_HEADER, "{path:?} too short for a HIR1 header");
+        let magic = take_u32(&bytes)?;
+        anyhow::ensure!(magic == HIER_MAGIC, "{path:?}: bad magic {magic:#x} (want HIR1)");
+        let d = take_u32(&bytes)? as usize;
+        let n = take_u32(&bytes)? as usize;
+        let metric = match take_u32(&bytes)? {
+            0 => Metric::L2,
+            1 => Metric::Ip,
+            2 => Metric::Cosine,
+            c => anyhow::bail!("{path:?}: bad metric code {c}"),
+        };
+        let m = take_u32(&bytes)? as usize;
+        let nlevels = take_u32(&bytes)? as usize;
+        let degree = take_u32(&bytes)? as usize;
+        let seed_lo = take_u32(&bytes)? as u64;
+        let seed_hi = take_u32(&bytes)? as u64;
+        let seed = seed_lo | (seed_hi << 32);
+        anyhow::ensure!(
+            d > 0 && m > 0 && m <= MAX_SAMPLE && nlevels >= 1 && nlevels <= MAX_LEVELS,
+            "{path:?}: implausible header (d={d}, m={m}, levels={nlevels})"
+        );
+        let mut global_ids = Vec::with_capacity(m);
+        for _ in 0..m {
+            global_ids.push(take_u32(&bytes)?);
+        }
+        let mut data = Vec::with_capacity(m * d);
+        for _ in 0..m * d {
+            data.push(f32::from_bits(take_u32(&bytes)?));
+        }
+        // The rows were written from a Dataset built at the same
+        // metric, so Dataset::new's cosine re-normalization is a no-op
+        // on them (rows are already unit-norm).
+        let hds = Dataset::new("hier", d, metric, data);
+        let mut levels = Vec::with_capacity(nlevels);
+        for _ in 0..nlevels {
+            let len = take_u32(&bytes)? as usize;
+            let lk = take_u32(&bytes)? as usize;
+            anyhow::ensure!(
+                len >= 1 && len <= m && lk >= 1 && lk <= m,
+                "{path:?}: implausible level (len={len}, lk={lk})"
+            );
+            let mut ids = Vec::with_capacity(len);
+            for _ in 0..len {
+                let id = take_u32(&bytes)?;
+                anyhow::ensure!((id as usize) < m, "{path:?}: level id {id} out of range");
+                ids.push(id);
+            }
+            let mut graph = KnnGraph::empty(len, lk);
+            for u in 0..len {
+                let row = graph.list_mut(u);
+                for slot in row.iter_mut().take(lk) {
+                    let id = take_u32(&bytes)?;
+                    let dist = f32::from_bits(take_u32(&bytes)?);
+                    if id != EMPTY {
+                        anyhow::ensure!(
+                            (id as usize) < len,
+                            "{path:?}: neighbor id {id} outside level (len={len})"
+                        );
+                        *slot = Neighbor { id, dist, new: false };
+                    }
+                }
+            }
+            levels.push(HierLevel { ids, graph });
+        }
+        anyhow::ensure!(
+            off == bytes.len(),
+            "{path:?}: {} trailing bytes after the last level",
+            bytes.len() - off
+        );
+        Ok(EntryHierarchy { ds: hds, global_ids, levels, n, degree, seed })
+    }
+}
+
+/// Load a validated sidecar from `path`, or (re)build from `ds` and
+/// persist it. A sidecar that fails to parse, or parses but describes
+/// a different `(dataset, config)` pair, is rebuilt with a warning; a
+/// failed save is also only a warning (the in-memory hierarchy serves
+/// either way — a read-only store directory must not break serving).
+pub fn load_or_build(
+    path: impl AsRef<Path>,
+    ds: &Dataset,
+    cfg: &HierConfig,
+) -> EntryHierarchy {
+    let path = path.as_ref();
+    if path.exists() {
+        match EntryHierarchy::load(path) {
+            Ok(h) if h.matches(ds, cfg) => return h,
+            Ok(_) => crate::telemetry::warn!(
+                "hierarchy: {path:?} is stale (different data/config); rebuilding"
+            ),
+            Err(e) => crate::telemetry::warn!(
+                "hierarchy: {path:?} unreadable ({e:#}); rebuilding"
+            ),
+        }
+    }
+    let h = EntryHierarchy::build(ds, cfg);
+    if let Err(e) = h.save(path) {
+        crate::telemetry::warn!("hierarchy: could not persist {path:?} ({e:#}); serving in-memory");
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "gnnd-hier-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn levels_are_nested_and_sized() {
+        let ds = synth::clustered(2_000, 8, 41);
+        let cfg = HierConfig { max_base: 512, branch: 4, top_cap: 16, degree: 6, seed: 7 };
+        let h = EntryHierarchy::build(&ds, &cfg);
+        assert_eq!(h.sample_len(), 512);
+        let sizes = h.level_sizes();
+        assert!(sizes.len() >= 2, "{sizes:?}");
+        assert_eq!(*sizes.last().unwrap(), 512, "finest level covers the sample");
+        assert!(sizes[0] <= 16, "top level over cap: {sizes:?}");
+        for w in sizes.windows(2) {
+            assert!(w[0] < w[1], "levels not strictly coarsening: {sizes:?}");
+        }
+        // nestedness: every coarser level ⊆ the next finer one
+        for lw in h.levels.windows(2) {
+            for id in &lw[0].ids {
+                assert!(lw[1].ids.binary_search(id).is_ok(), "level not nested");
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_writes_identical_sidecars() {
+        let ds = synth::clustered(1_500, 8, 42);
+        let cfg = HierConfig { max_base: 256, seed: 99, ..Default::default() };
+        let dir = tmpdir("det");
+        let (pa, pb) = (dir.join("a.bin"), dir.join("b.bin"));
+        EntryHierarchy::build(&ds, &cfg).save(&pa).unwrap();
+        EntryHierarchy::build(&ds, &cfg).save(&pb).unwrap();
+        let (a, b) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same (data, seed) must write byte-identical hier.bin");
+        // a different seed samples differently
+        let cfg2 = HierConfig { seed: 100, ..cfg };
+        let pc = dir.join("c.bin");
+        EntryHierarchy::build(&ds, &cfg2).save(&pc).unwrap();
+        assert_ne!(a, std::fs::read(&pc).unwrap(), "seed ignored");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_round_trips_and_descends_identically() {
+        let ds = synth::clustered(1_200, 8, 43);
+        let cfg = HierConfig { max_base: 300, seed: 5, ..Default::default() };
+        let built = EntryHierarchy::build(&ds, &cfg);
+        let dir = tmpdir("rt");
+        let p = dir.join("h.bin");
+        built.save(&p).unwrap();
+        let loaded = EntryHierarchy::load(&p).unwrap();
+        assert!(loaded.matches(&ds, &cfg));
+        assert_eq!(loaded.sample_len(), built.sample_len());
+        assert_eq!(loaded.level_sizes(), built.level_sizes());
+        let mut sa = SearchScratch::new();
+        let mut sb = SearchScratch::new();
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        for q in (0..ds.len()).step_by(97) {
+            let ea = built.descend(ds.vec(q), 8, &mut sa, &mut oa);
+            let eb = loaded.descend(ds.vec(q), 8, &mut sb, &mut ob);
+            assert_eq!(oa, ob, "loaded hierarchy diverged on query {q}");
+            assert_eq!(ea, eb, "descent work diverged on query {q}");
+            assert!(!oa.is_empty() && oa.len() <= 8);
+            assert!(oa.iter().all(|&g| (g as usize) < ds.len()));
+        }
+        // truncation must fail the parse, not panic or mis-load
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(EntryHierarchy::load(&p).is_err(), "truncated sidecar must not load");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn descent_entries_are_near_the_query() {
+        // the whole point: descent seeds must be much closer than
+        // random ids, on average
+        let ds = synth::clustered(3_000, 8, 44);
+        let cfg = HierConfig { max_base: 1024, seed: 3, ..Default::default() };
+        let h = EntryHierarchy::build(&ds, &cfg);
+        let mut scratch = SearchScratch::new();
+        let mut out = Vec::new();
+        let mut rng = Rng::new(11);
+        let (mut d_hier, mut d_rand) = (0.0f64, 0.0f64);
+        for q in (0..ds.len()).step_by(53) {
+            let evals = h.descend(ds.vec(q), 8, &mut scratch, &mut out);
+            assert!(evals > 0, "descent did no work");
+            for &g in &out {
+                d_hier += ds.dist_to(g as usize, ds.vec(q)) as f64;
+            }
+            for _ in 0..out.len() {
+                d_rand += ds.dist_to(rng.below(ds.len()), ds.vec(q)) as f64;
+            }
+        }
+        assert!(
+            d_hier < 0.5 * d_rand,
+            "descent seeds not meaningfully closer: hier {d_hier} vs random {d_rand}"
+        );
+    }
+
+    #[test]
+    fn load_or_build_persists_then_reuses() {
+        let ds = synth::clustered(800, 6, 45);
+        let cfg = HierConfig { max_base: 200, seed: 21, ..Default::default() };
+        let dir = tmpdir("lob");
+        let p = dir.join("hier_0.bin");
+        let _ = load_or_build(&p, &ds, &cfg);
+        assert!(p.is_file(), "sidecar not written");
+        let bytes = std::fs::read(&p).unwrap();
+        let _ = load_or_build(&p, &ds, &cfg);
+        assert_eq!(bytes, std::fs::read(&p).unwrap(), "reload must not rewrite");
+        // a different seed invalidates the sidecar and rebuilds it
+        let cfg2 = HierConfig { seed: 22, ..cfg };
+        let _ = load_or_build(&p, &ds, &cfg2);
+        assert_ne!(bytes, std::fs::read(&p).unwrap(), "stale sidecar not rebuilt");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

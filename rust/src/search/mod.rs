@@ -56,6 +56,7 @@
 //! ```
 
 pub mod batch;
+pub mod hierarchy;
 pub mod pool;
 pub mod serve;
 pub mod sharded;
@@ -82,6 +83,13 @@ pub enum EntryStrategy {
     /// dataset object nearest each centroid — entries spread across the
     /// cluster structure instead of landing in one region.
     KMeans,
+    /// GGNN-style coarse-to-fine descent ([`hierarchy`]): a small
+    /// pyramid of nested sampled levels is searched per query and its
+    /// best finest-level points seed the base-graph beam — entries land
+    /// *near the query* instead of at fixed medoids, cutting the
+    /// walk-in hops. The hierarchy persists as a `hier.bin` sidecar
+    /// next to a stored graph/shard.
+    Hierarchy,
 }
 
 impl std::fmt::Display for EntryStrategy {
@@ -89,6 +97,7 @@ impl std::fmt::Display for EntryStrategy {
         f.write_str(match self {
             EntryStrategy::Random => "random",
             EntryStrategy::KMeans => "kmeans",
+            EntryStrategy::Hierarchy => "hierarchy",
         })
     }
 }
@@ -99,7 +108,8 @@ impl FromStr for EntryStrategy {
         match s {
             "random" => Ok(EntryStrategy::Random),
             "kmeans" => Ok(EntryStrategy::KMeans),
-            _ => anyhow::bail!("unknown entry strategy {s:?} (expected random|kmeans)"),
+            "hierarchy" => Ok(EntryStrategy::Hierarchy),
+            _ => anyhow::bail!("unknown entry strategy {s:?} (expected random|kmeans|hierarchy)"),
         }
     }
 }
@@ -132,6 +142,15 @@ pub struct SearchParams {
     /// exact). Raising it trades a few exact evaluations for recall;
     /// `4` recovers f32-level recall on the benchmark corpora.
     pub rerank: usize,
+    /// Adaptive shard-routing slack ([`sharded::ShardedIndex`] only):
+    /// when `> 0`, the route phase probes only the shards whose best
+    /// route-centroid distance is within `route_slack × d_best` of the
+    /// nearest shard's (at least one, at most the `probe` cap — the
+    /// fixed `--probe-shards` count becomes an upper bound). `0`
+    /// disables the cutoff: exactly the fixed-probe behavior. Must be
+    /// `>= 1.0` when set (a slack below 1 could not even keep the best
+    /// shard).
+    pub route_slack: f64,
 }
 
 impl Default for SearchParams {
@@ -144,6 +163,7 @@ impl Default for SearchParams {
             entry: EntryStrategy::Random,
             seed: 0x5EA_6C4, // "sea-rch"
             rerank: 1,
+            route_slack: 0.0,
         }
     }
 }
@@ -153,6 +173,11 @@ impl SearchParams {
         anyhow::ensure!(self.ef > 0, "ef must be > 0");
         anyhow::ensure!(self.n_entry > 0, "n_entry must be > 0");
         anyhow::ensure!(self.rerank >= 1, "rerank must be >= 1 (1 = no rerank pass)");
+        anyhow::ensure!(
+            self.route_slack == 0.0 || self.route_slack >= 1.0,
+            "route_slack must be 0 (disabled) or >= 1.0, got {}",
+            self.route_slack
+        );
         Ok(())
     }
 
@@ -176,6 +201,10 @@ impl SearchParams {
     }
     pub fn with_rerank(mut self, rerank: usize) -> Self {
         self.rerank = rerank;
+        self
+    }
+    pub fn with_route_slack(mut self, slack: f64) -> Self {
+        self.route_slack = slack;
         self
     }
 }
@@ -256,6 +285,23 @@ pub struct SearchScratch {
     /// f32 staging buffer for the rerank phase (dequantize fallback
     /// when a quantized store has no exact-rows sidecar).
     pub(crate) fbuf: Vec<f32>,
+    /// Nested scratch for the entry-hierarchy descent
+    /// ([`hierarchy::EntryHierarchy::descend`]): the descent runs its
+    /// own beam searches over the tiny level graphs, and those must
+    /// not clobber this scratch's per-query counters. Lazily boxed —
+    /// flat-entry queries never allocate it.
+    pub(crate) hier: Option<Box<SearchScratch>>,
+    /// Per-query entry-seed staging buffer: descent output (or a copy
+    /// of the fixed entries) handed to [`beam_search`] as
+    /// `QuerySpec::entries`.
+    pub(crate) entry_buf: Vec<u32>,
+    /// `(dist, finest-local id)` staging buffer of the hierarchy
+    /// descent (lives on the *nested* scratch).
+    pub(crate) hier_out: Vec<(f32, u32)>,
+    /// Shards probed by the last query ([`sharded::ShardedIndex`]
+    /// only; 0 on a monolithic index). With adaptive routing
+    /// (`route_slack > 0`) this varies per query below the fixed cap.
+    pub shards_probed: usize,
     /// Distance evaluations performed by the last query. On a
     /// quantized backing these are *approximate* (code-space)
     /// evaluations; the full-precision ones are `rerank_evals`.
@@ -286,6 +332,10 @@ impl SearchScratch {
             shard_probed: Vec::new(),
             qcodes: Vec::new(),
             fbuf: Vec::new(),
+            hier: None,
+            entry_buf: Vec::new(),
+            hier_out: Vec::new(),
+            shards_probed: 0,
             dist_evals: 0,
             hops: 0,
             rerank_evals: 0,
@@ -555,10 +605,45 @@ pub struct SearchIndex<'a> {
     graph: &'a KnnGraph,
     params: SearchParams,
     entries: Vec<u32>,
+    /// Coarse-to-fine entry hierarchy ([`EntryStrategy::Hierarchy`]):
+    /// when set, `entries` is empty and every query descends the
+    /// hierarchy for its seeds. Shared (`Arc`) so `with_ef` clones and
+    /// sidecar-loaded hierarchies are free to hand around.
+    hier: Option<Arc<hierarchy::EntryHierarchy>>,
 }
 
 impl<'a> SearchIndex<'a> {
     pub fn new(ds: &'a Dataset, graph: &'a KnnGraph, params: SearchParams) -> crate::Result<Self> {
+        Self::check(ds, graph, &params)?;
+        let (entries, hier) = match params.entry {
+            EntryStrategy::Hierarchy => {
+                let cfg = hierarchy::HierConfig { seed: params.seed, ..Default::default() };
+                (Vec::new(), Some(Arc::new(hierarchy::EntryHierarchy::build(ds, &cfg))))
+            }
+            _ => (select_entries(ds, graph, &params), None),
+        };
+        Ok(SearchIndex { ds, graph, params, entries, hier })
+    }
+
+    /// Like [`SearchIndex::new`] with [`EntryStrategy::Hierarchy`],
+    /// but reusing an already-built (typically sidecar-loaded, see
+    /// [`hierarchy::load_or_build`]) hierarchy instead of building one.
+    pub fn with_hierarchy(
+        ds: &'a Dataset,
+        graph: &'a KnnGraph,
+        params: SearchParams,
+        hier: Arc<hierarchy::EntryHierarchy>,
+    ) -> crate::Result<Self> {
+        Self::check(ds, graph, &params)?;
+        anyhow::ensure!(
+            params.entry == EntryStrategy::Hierarchy,
+            "with_hierarchy requires EntryStrategy::Hierarchy, got {}",
+            params.entry
+        );
+        Ok(SearchIndex { ds, graph, params, entries: Vec::new(), hier: Some(hier) })
+    }
+
+    fn check(ds: &Dataset, graph: &KnnGraph, params: &SearchParams) -> crate::Result<()> {
         anyhow::ensure!(
             graph.n() == ds.len(),
             "graph covers {} objects but dataset has {}",
@@ -566,9 +651,7 @@ impl<'a> SearchIndex<'a> {
             ds.len()
         );
         anyhow::ensure!(graph.n() > 0, "empty graph");
-        params.validate()?;
-        let entries = select_entries(ds, graph, &params);
-        Ok(SearchIndex { ds, graph, params, entries })
+        params.validate()
     }
 
     pub fn dataset(&self) -> &Dataset {
@@ -583,9 +666,15 @@ impl<'a> SearchIndex<'a> {
         &self.params
     }
 
-    /// The fixed entry points (dataset object ids).
+    /// The fixed entry points (dataset object ids). Empty under
+    /// [`EntryStrategy::Hierarchy`] — seeds are selected per query.
     pub fn entries(&self) -> &[u32] {
         &self.entries
+    }
+
+    /// The entry hierarchy, when this index uses one.
+    pub fn hierarchy(&self) -> Option<&Arc<hierarchy::EntryHierarchy>> {
+        self.hier.as_ref()
     }
 
     /// The same index at a different `ef` operating point. Entry
@@ -598,6 +687,7 @@ impl<'a> SearchIndex<'a> {
             graph: self.graph,
             params: self.params.clone().with_ef(ef),
             entries: self.entries.clone(),
+            hier: self.hier.clone(),
         }
     }
 
@@ -640,18 +730,48 @@ impl<'a> SearchIndex<'a> {
         scratch: &mut SearchScratch,
         out: &mut Vec<(f32, u32)>,
     ) {
+        self.run_query(q, k, 0, exclude, scratch, out);
+    }
+
+    /// The one query path: seed the beam (fixed entries, or a
+    /// hierarchy descent under [`EntryStrategy::Hierarchy`]) and walk
+    /// the base graph. `ef = 0` uses the configured default. Descent
+    /// distance evaluations are folded into `scratch.dist_evals` (the
+    /// beam resets the counters at entry); descent expansions walk the
+    /// tiny level graphs only and are *not* counted as base-graph
+    /// `hops`.
+    fn run_query(
+        &self,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
         let p = &self.params;
+        let mut descent_evals = 0usize;
+        let mut entry_buf = std::mem::take(&mut scratch.entry_buf);
+        let entries: &[u32] = match &self.hier {
+            Some(h) => {
+                descent_evals = h.descend(q, p.n_entry, scratch, &mut entry_buf);
+                &entry_buf
+            }
+            None => &self.entries,
+        };
         let spec = QuerySpec {
             q,
             k,
-            ef: p.ef,
+            ef: if ef == 0 { p.ef } else { ef },
             beam_width: p.beam_width,
             max_hops: p.max_hops,
-            entries: &self.entries,
+            entries,
             exclude,
             rerank: p.rerank,
         };
         beam_search(self.ds, self.graph, None, &spec, scratch, out);
+        scratch.dist_evals += descent_evals;
+        scratch.entry_buf = entry_buf;
     }
 }
 
@@ -694,18 +814,7 @@ impl<'a> AnnIndex for SearchIndex<'a> {
         scratch: &mut SearchScratch,
         out: &mut Vec<(f32, u32)>,
     ) {
-        let p = &self.params;
-        let spec = QuerySpec {
-            q,
-            k,
-            ef: if ef == 0 { p.ef } else { ef },
-            beam_width: p.beam_width,
-            max_hops: p.max_hops,
-            entries: &self.entries,
-            exclude,
-            rerank: p.rerank,
-        };
-        beam_search(self.ds, self.graph, None, &spec, scratch, out);
+        self.run_query(q, k, ef, exclude, scratch, out);
         crate::telemetry::record_query(scratch.dist_evals, scratch.hops, scratch.rerank_evals);
     }
 }
@@ -721,22 +830,34 @@ fn select_entries(ds: &Dataset, graph: &KnnGraph, params: &SearchParams) -> Vec<
         }
         EntryStrategy::KMeans => {
             let threads = crate::util::num_threads();
-            // k-means training walks raw rows; a paged or quantized
-            // backing materializes a transient owned copy (one-time
-            // index-open cost, not per query)
-            let owned_copy;
-            let ds = if ds.is_owned() {
-                ds
+            // Bounded sample: training and the medoid scan below must
+            // not materialize a paged or quantized store (the old
+            // transient full `materialize()` copy defeated the whole
+            // point of block residency at index open). At most
+            // `KMEANS_SAMPLE` rows are copied out through the
+            // backing-agnostic accessor; when the dataset fits the cap
+            // the sample *is* the dataset, so small owned indices
+            // select exactly the entries they always did.
+            const KMEANS_SAMPLE: usize = 4096;
+            let sn = n.min(KMEANS_SAMPLE);
+            let sample_ids: Vec<u32> = if sn == n {
+                (0..n as u32).collect()
             } else {
-                owned_copy = ds.materialize();
-                &owned_copy
+                let mut rng = Rng::new(params.seed ^ 0x5A3_917);
+                let mut picks = rng.distinct(n, sn);
+                picks.sort_unstable();
+                picks.into_iter().map(|i| i as u32).collect()
             };
-            let book = kmeans::train(ds.raw(), ds.d, m, 6, ds.metric, params.seed, threads);
-            // One parallel pass over the dataset finding the nearest
+            let mut sample = Vec::with_capacity(sn * ds.d);
+            for &i in &sample_ids {
+                ds.with_vec(i as usize, |row| sample.extend_from_slice(row));
+            }
+            let book = kmeans::train(&sample, ds.d, m, 6, ds.metric, params.seed, threads);
+            // One parallel pass over the sample finding the nearest
             // object (medoid) of every centroid; per-range minima are
             // reduced with a (dist, id) tie-break so the result is
             // identical for any thread count.
-            let ranges = crate::util::split_ranges(n, threads);
+            let ranges = crate::util::split_ranges(sn, threads);
             let mut partials: Vec<Vec<(f32, u32)>> = Vec::new();
             crossbeam_utils::thread::scope(|s| {
                 let handles: Vec<_> = ranges
@@ -744,14 +865,16 @@ fn select_entries(ds: &Dataset, graph: &KnnGraph, params: &SearchParams) -> Vec<
                     .map(|r| {
                         let r = r.clone();
                         let book = &book;
+                        let sample = &sample;
+                        let sample_ids = &sample_ids;
                         s.spawn(move |_| {
                             let mut best = vec![(f32::INFINITY, 0u32); book.k];
                             for i in r {
-                                let v = ds.vec(i);
+                                let v = &sample[i * book.d..(i + 1) * book.d];
                                 for c in 0..book.k {
                                     let d = crate::distance::l2_sq(v, book.centroid(c));
                                     if d < best[c].0 {
-                                        best[c] = (d, i as u32);
+                                        best[c] = (d, sample_ids[i]);
                                     }
                                 }
                             }
@@ -787,6 +910,9 @@ fn select_entries(ds: &Dataset, graph: &KnnGraph, params: &SearchParams) -> Vec<
             }
             out
         }
+        // hierarchy indices have no fixed entries — seeds come from a
+        // per-query descent ([`hierarchy::EntryHierarchy::descend`])
+        EntryStrategy::Hierarchy => Vec::new(),
     }
 }
 
@@ -890,6 +1016,50 @@ mod tests {
             let set: std::collections::HashSet<u32> = a.entries().iter().copied().collect();
             assert_eq!(set.len(), 6, "{strategy} duplicate entries");
             assert!(a.entries().iter().all(|&e| (e as usize) < ds.len()));
+        }
+    }
+
+    #[test]
+    fn hierarchy_entry_holds_recall_and_is_deterministic() {
+        // the hierarchy only changes which entries seed the beam, so
+        // recall must track the flat-entry index (ISSUE 8 invariant:
+        // within 2 points) and identical params must serve identical
+        // results
+        let ds = synth::clustered(600, 8, 99);
+        let g = bruteforce::build_native(&ds, 8);
+        let truth = groundtruth::exact_topk(&ds, 10);
+        let recall_of = |index: &SearchIndex| -> f64 {
+            let mut scratch = index.make_scratch();
+            let mut out = Vec::new();
+            let (mut hits, mut total) = (0, 0);
+            for q in 0..ds.len() {
+                index.search_into_excluding(ds.vec(q), 10, q as u32, &mut scratch, &mut out);
+                let set: std::collections::HashSet<u32> =
+                    out.iter().map(|&(_, id)| id).collect();
+                hits += truth[q].iter().filter(|id| set.contains(id)).count();
+                total += truth[q].len().min(10);
+            }
+            hits as f64 / total as f64
+        };
+        let flat_params =
+            SearchParams::default().with_ef(64).with_entries(EntryStrategy::KMeans, 8);
+        let flat = SearchIndex::new(&ds, &g, flat_params).unwrap();
+        let params = SearchParams::default().with_ef(64).with_entries(EntryStrategy::Hierarchy, 8);
+        let a = SearchIndex::new(&ds, &g, params.clone()).unwrap();
+        assert!(a.entries().is_empty(), "hierarchy index has no fixed entries");
+        assert!(a.hierarchy().is_some());
+        let (rf, rh) = (recall_of(&flat), recall_of(&a));
+        assert!(rh >= rf - 0.02, "hierarchy recall {rh} fell >2 points below flat {rf}");
+        // determinism across instances, and descent work is accounted
+        let b = SearchIndex::new(&ds, &g, params).unwrap();
+        let (mut sa, mut sb) = (a.make_scratch(), b.make_scratch());
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        for q in (0..ds.len()).step_by(17) {
+            a.search_into_excluding(ds.vec(q), 10, q as u32, &mut sa, &mut oa);
+            b.search_into_excluding(ds.vec(q), 10, q as u32, &mut sb, &mut ob);
+            assert_eq!(oa, ob, "hierarchy index not deterministic on query {q}");
+            assert_eq!(sa.dist_evals, sb.dist_evals, "work diverged on query {q}");
+            assert!(sa.dist_evals > 0);
         }
     }
 

@@ -175,6 +175,11 @@ pub struct ServeStats {
     /// `dist_evals` this is the two-phase bargain in one row: how few
     /// full-precision evaluations bought the reported recall.
     pub rerank_evals: f64,
+    /// Mean shards probed per query of the timing pass (0 for
+    /// monolithic indexes, which have no route phase). With adaptive
+    /// routing (`--route-slack`) this falls below the `--probe-shards`
+    /// cap whenever the router prunes; at slack 0 it equals the cap.
+    pub probe_mean: f64,
 }
 
 /// The sampled query stream: flat query matrix + the object ids the
@@ -340,6 +345,7 @@ pub fn run_point_traced(
     let tot_evals = AtomicU64::new(0);
     let tot_hops = AtomicU64::new(0);
     let tot_rerank = AtomicU64::new(0);
+    let tot_probe = AtomicU64::new(0);
     let h_service = telemetry::global().histogram("query.service_us");
     let h_queue = telemetry::global().histogram("query.queue_wait_us");
     let d = stream.d;
@@ -358,6 +364,7 @@ pub fn run_point_traced(
             let tot_evals = &tot_evals;
             let tot_hops = &tot_hops;
             let tot_rerank = &tot_rerank;
+            let tot_probe = &tot_probe;
             let h_service = &h_service;
             let h_queue = &h_queue;
             let wall = &wall;
@@ -370,6 +377,7 @@ pub fn run_point_traced(
                 let mut local_evals = 0u64;
                 let mut local_hops = 0u64;
                 let mut local_rerank = 0u64;
+                let mut local_probe = 0u64;
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= total {
@@ -424,6 +432,7 @@ pub fn run_point_traced(
                     local_evals += scratch.dist_evals as u64;
                     local_hops += scratch.hops as u64;
                     local_rerank += scratch.rerank_evals as u64;
+                    local_probe += scratch.shards_probed as u64;
                     if traced {
                         scratch.trace.end();
                         local_traces.push(QueryTrace {
@@ -450,6 +459,7 @@ pub fn run_point_traced(
                 tot_evals.fetch_add(local_evals, Ordering::Relaxed);
                 tot_hops.fetch_add(local_hops, Ordering::Relaxed);
                 tot_rerank.fetch_add(local_rerank, Ordering::Relaxed);
+                tot_probe.fetch_add(local_probe, Ordering::Relaxed);
             });
         }
     })
@@ -479,6 +489,7 @@ pub fn run_point_traced(
         dist_evals: tot_evals.load(Ordering::Relaxed) as f64 / total as f64,
         hops: tot_hops.load(Ordering::Relaxed) as f64 / total as f64,
         rerank_evals: tot_rerank.load(Ordering::Relaxed) as f64 / total as f64,
+        probe_mean: tot_probe.load(Ordering::Relaxed) as f64 / total as f64,
     }
 }
 
@@ -597,6 +608,7 @@ pub fn run_sweep_with(
             .col("dist_evals", s.dist_evals)
             .col("hops", s.hops)
             .col("rerank_evals", s.rerank_evals)
+            .col("probe_mean", s.probe_mean)
             .col(&recall_col, s.recall);
         if cfg.arrival_rate > 0.0 {
             row = row
@@ -837,7 +849,7 @@ mod tests {
         assert_eq!(sinks.metrics_points[0].0, "ef=16");
         assert_eq!(sinks.metrics_points[1].0, "ef=32");
         for row in &report.rows {
-            for col in ["dist_evals", "hops", "rerank_evals"] {
+            for col in ["dist_evals", "hops", "rerank_evals", "probe_mean"] {
                 assert!(row.cols.iter().any(|(n, _)| n == col), "row missing {col}");
             }
         }

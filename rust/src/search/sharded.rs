@@ -69,7 +69,7 @@ use crate::telemetry::trace::ShardSpan;
 use crate::util::timer::Timer;
 
 use super::pool::{ScatterJob, ScatterPool};
-use super::{select_entries, AnnIndex, EntryStrategy, SearchParams, SearchScratch};
+use super::{hierarchy, select_entries, AnnIndex, EntryStrategy, SearchParams, SearchScratch};
 
 /// One scatter participant's contribution to a query: its work
 /// counters, the per-shard top-k entries it accumulated, and — when
@@ -84,13 +84,25 @@ pub(crate) struct ScatterOut {
 
 /// Serving metadata of one shard — everything a query needs *before*
 /// touching the shard's data: geometry, fixed entry points (global
-/// ids) and the routing centroid. Vectors and graph are resolved
+/// ids) and the routing centroid(s). Vectors and graph are resolved
 /// through the [`ShardStore`] cache per query.
 struct ShardMeta {
     offset: usize,
     len: usize,
+    /// Fixed entry points (empty under [`EntryStrategy::Hierarchy`] —
+    /// seeds come from `hier` per query).
     entries: Vec<u32>,
+    /// Mean-vector routing centroid (every manifest has one).
     centroid: Vec<f32>,
+    /// Multi-centroid routing: per-shard k-means centroids from the
+    /// manifest (`route_centroids`). Empty for pre-PR8 manifests —
+    /// routing then falls back to `centroid`, bit-identical to the
+    /// old single-centroid ranking.
+    route_centroids: Vec<Vec<f32>>,
+    /// Per-shard entry hierarchy ([`EntryStrategy::Hierarchy`]):
+    /// loaded from (or persisted to) a `hier_<s>.bin` sidecar in the
+    /// store directory at open.
+    hier: Option<Arc<hierarchy::EntryHierarchy>>,
 }
 
 /// Resolve (and pin) shard `s` into a query's pin table
@@ -173,6 +185,27 @@ impl ShardCore {
     #[inline]
     fn owner(&self, gid: u32) -> usize {
         self.offsets.partition_point(|&off| off <= gid as usize) - 1
+    }
+
+    /// Route distance of a query to one shard: the minimum over the
+    /// shard's `route_centroids` (a query near *any* cluster of the
+    /// shard routes there — the single mean of a multi-modal shard
+    /// sits between its clusters and misroutes). Falls back to the
+    /// mean centroid when the manifest predates `route_centroids`,
+    /// which keeps the fallback ranking bit-identical to the old
+    /// single-centroid route.
+    fn route_score(&self, q: &[f32], m: &ShardMeta) -> f32 {
+        if m.route_centroids.is_empty() {
+            return crate::distance::distance(self.metric, q, &m.centroid);
+        }
+        let mut best = f32::INFINITY;
+        for c in &m.route_centroids {
+            let d = crate::distance::distance(self.metric, q, c);
+            if d < best {
+                best = d;
+            }
+        }
+        best
     }
 
     /// Resolve shard `s` for the current query: the permanent pin when
@@ -260,7 +293,23 @@ impl ShardCore {
         scratch.frontier.clear();
         scratch.results.clear();
 
-        for &e in &m.entries {
+        // seed the beam: fixed per-shard entries, or a per-query
+        // coarse-to-fine descent (shard-local seeds mapped to global
+        // ids; descent distance work counts toward this shard's evals,
+        // but its walks over the tiny level graphs are not base-graph
+        // hops)
+        let mut entry_buf = std::mem::take(&mut scratch.entry_buf);
+        if let Some(h) = &m.hier {
+            let devals = h.descend(q, self.params.n_entry, scratch, &mut entry_buf);
+            scratch.dist_evals += devals;
+            for e in entry_buf.iter_mut() {
+                *e += lo;
+            }
+        } else {
+            entry_buf.clear();
+            entry_buf.extend_from_slice(&m.entries);
+        }
+        for &e in &entry_buf {
             if scratch.visited.insert(e) {
                 let d = home.ds.dist_to_quant((e - lo) as usize, q, &qcodes);
                 scratch.dist_evals += 1;
@@ -273,6 +322,7 @@ impl ShardCore {
                 }
             }
         }
+        scratch.entry_buf = entry_buf;
 
         let beam_width = self.params.beam_width;
         let max_hops = self.params.max_hops;
@@ -539,29 +589,41 @@ impl ShardedIndex {
                     .map_err(|e| e.context(format!("shard {s} graph")))?;
             }
             // per-shard entry selection (shard-local ids -> global);
-            // decorrelate the per-shard RNG streams with the shard id
+            // decorrelate the per-shard RNG streams with the shard id.
+            // select_entries is backing-agnostic (bounded-sample
+            // k-means reads rows through the accessor), so paged and
+            // owned shards pick identical entries with no transient
+            // materialized copy.
             let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             let sp = params.clone().with_seed(params.seed ^ salt);
-            // k-means entry training needs the full shard matrix; for a
-            // paged shard, materialize a transient owned copy (open-time
-            // only — the random strategy, the default, reads no rows).
-            // The seeded RNG makes both routes pick identical entries
-            // for identical data, preserving owned-vs-paged parity.
-            let mut entries = if ds.is_paged() && sp.entry == EntryStrategy::KMeans {
-                let owned = ds.materialize();
-                select_entries(&owned, graph, &sp)
-            } else {
-                select_entries(ds, graph, &sp)
-            };
+            let mut entries = select_entries(ds, graph, &sp);
             for e in entries.iter_mut() {
                 *e += offset as u32;
             }
+            // per-shard entry hierarchy: load the hier_<s>.bin sidecar
+            // (or build + persist it on first open) — later opens pay
+            // one file read, not the O(sample^2) build
+            let hier = if sp.entry == EntryStrategy::Hierarchy {
+                let cfg = hierarchy::HierConfig { seed: sp.seed, ..Default::default() };
+                let path = store.dir().join(format!("hier_{s}.bin"));
+                Some(Arc::new(hierarchy::load_or_build(&path, ds, &cfg)))
+            } else {
+                None
+            };
             let centroid = match manifest.centroids.get(s) {
                 Some(c) if !c.is_empty() => c.clone(),
                 _ => shard_centroid(ds),
             };
+            let route_centroids = manifest.route_centroids.get(s).cloned().unwrap_or_default();
             offsets.push(offset);
-            meta.push(ShardMeta { offset, len: ds.len(), entries, centroid });
+            meta.push(ShardMeta {
+                offset,
+                len: ds.len(),
+                entries,
+                centroid,
+                route_centroids,
+                hier,
+            });
             if store.budget_bytes() == 0 {
                 // unbounded: nothing will ever be evicted, so pin every
                 // shard permanently and skip the cache mutex per query
@@ -573,6 +635,14 @@ impl ShardedIndex {
             "manifest total {} != sum of shard sizes {expect}",
             manifest.total
         );
+        if params.route_slack > 0.0 && meta.iter().all(|m| m.route_centroids.is_empty()) {
+            crate::telemetry::warn!(
+                "route_slack {} requested but the manifest carries no route_centroids \
+                 (pre-PR8 store?): adaptive routing falls back to one mean centroid per \
+                 shard — run `quantize` on the store (or rebuild it) to backfill",
+                params.route_slack
+            );
+        }
         // the validation sweep pinned shards one at a time; shed the
         // cache back down to the budget before serving starts
         store.evict_to_budget();
@@ -788,19 +858,41 @@ impl AnnIndex for ShardedIndex {
 
         // ---- route ----
         let t_route = traced.then(Timer::start);
-        let probe = self.probe();
+        let probe_cap = self.probe();
+        let slack = self.core.params.route_slack;
         scratch.shard_rank.clear();
-        if probe < self.core.meta.len() {
+        let probe = if probe_cap < self.core.meta.len() || slack > 0.0 {
             for (s, m) in self.core.meta.iter().enumerate() {
-                let d = crate::distance::distance(self.core.metric, q, &m.centroid);
-                scratch.shard_rank.push((F32(d), s));
+                scratch.shard_rank.push((F32(self.core.route_score(q, m)), s));
             }
             scratch.shard_rank.sort_unstable();
+            if slack > 0.0 {
+                // adaptive cutoff: probe every shard whose best
+                // centroid is within `route_slack x d_best` (Ip scores
+                // can be negative — divide there so the bound still
+                // widens), capped by the fixed probe count and never
+                // below one shard
+                let F32(d_best) = scratch.shard_rank[0].0;
+                let thr = if d_best >= 0.0 {
+                    d_best as f64 * slack
+                } else {
+                    d_best as f64 / slack
+                };
+                scratch.shard_rank[..probe_cap]
+                    .iter()
+                    .take_while(|&&(F32(d), _)| d as f64 <= thr)
+                    .count()
+                    .max(1)
+            } else {
+                probe_cap
+            }
         } else {
             for s in 0..self.core.meta.len() {
                 scratch.shard_rank.push((F32(0.0), s));
             }
-        }
+            probe_cap
+        };
+        scratch.shards_probed = probe;
         if let Some(t) = &t_route {
             scratch.trace.route_ms = t.ms();
         }
@@ -885,5 +977,6 @@ impl AnnIndex for ShardedIndex {
             scratch.trace.shards.sort_by_key(|sp| sp.shard);
         }
         crate::telemetry::record_query(scratch.dist_evals, scratch.hops, scratch.rerank_evals);
+        crate::telemetry::record_probe(scratch.shards_probed);
     }
 }

@@ -324,6 +324,21 @@ pub fn record_query(dist_evals: usize, hops: usize, rerank_evals: usize) {
     m.rerank_evals.record(rerank_evals as u64);
 }
 
+fn probe_metrics() -> &'static Arc<Histogram> {
+    static M: OnceLock<Arc<Histogram>> = OnceLock::new();
+    M.get_or_init(|| global().histogram("query.shards_probed"))
+}
+
+/// Record how many shards one sharded query probed. Separate from
+/// [`record_query`] because only the scatter-gather path has a probe
+/// phase — a monolithic index never touches this histogram. With
+/// adaptive routing (`route_slack > 0`) the distribution below the
+/// fixed `--probe-shards` cap *is* the routing win; with fixed probing
+/// it degenerates to a single bucket.
+pub fn record_probe(shards_probed: usize) {
+    probe_metrics().record(shards_probed as u64);
+}
+
 /// Microseconds of a duration in seconds, clamped non-negative — the
 /// unit every `*_us` histogram records.
 pub fn us(secs: f64) -> u64 {

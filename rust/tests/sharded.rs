@@ -7,16 +7,16 @@ use std::collections::HashSet;
 use std::path::PathBuf;
 
 use gnnd::config::Metric;
+use gnnd::dataset::io;
 use gnnd::dataset::{groundtruth, synth};
 use gnnd::gnnd::{GnndParams, NativeEngine};
-use gnnd::dataset::io;
 use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{
     build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardManifest, ShardStore,
     MANIFEST_FILE, STATS_FILE,
 };
 use gnnd::search::sharded::ShardedIndex;
-use gnnd::search::{AnnIndex, SearchIndex, SearchParams};
+use gnnd::search::{AnnIndex, EntryStrategy, SearchIndex, SearchParams};
 use gnnd::util::json::Json;
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -48,12 +48,27 @@ fn manifest_roundtrip() {
             vec![0.1, -0.2, 0.3, -0.4],
             vec![7.75, 0.0, -1.5, 2.125],
         ],
+        route_centroids: vec![
+            vec![vec![0.5, 1.0, -2.25, 3.0], vec![0.25, 0.5, -1.0, 1.5]],
+            vec![vec![0.1, -0.2, 0.3, -0.4]],
+            vec![],
+        ],
     };
     store.save_manifest(&m).unwrap();
     let back = store.load_manifest().unwrap();
     assert_eq!(back, m);
-    // a manifest missing a field is rejected with a useful error
+    // a manifest written before route_centroids existed still loads,
+    // defaulting to one empty centroid list per shard
     let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    if let Json::Obj(fields) = &mut j {
+        fields.retain(|(k, _)| k != "route_centroids");
+    }
+    std::fs::write(dir.join(MANIFEST_FILE), j.to_string()).unwrap();
+    let old = store.load_manifest().unwrap();
+    assert_eq!(old.route_centroids, vec![Vec::<Vec<f32>>::new(); 3]);
+    assert_eq!(old.centroids, m.centroids);
+    // a manifest missing a required field is rejected with a useful error
     let mut j = Json::parse(&text).unwrap();
     if let Json::Obj(fields) = &mut j {
         fields.retain(|(k, _)| k != "offsets");
@@ -728,6 +743,139 @@ fn quantized_block_store_fetches_fewer_blocks() {
     let f = fetches(false);
     let q = fetches(true);
     assert!(q < f, "quantized block serving fetched {q} blocks, f32 fetched {f}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Adaptive routing invariants: with `route_slack` disabled the route
+/// phase is bit-identical to the fixed-probe ranking, a manifest
+/// stripped of `route_centroids` (a pre-routing store) serves the same
+/// results through the single-centroid fallback, and an effectively
+/// infinite slack degenerates to probing the full cap.
+#[test]
+fn adaptive_routing_zero_slack_and_old_manifest_parity() {
+    let ds = synth::clustered(480, 8, 56);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("routeparity");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    let store = ShardStore::new(&dir).unwrap();
+    let manifest = store.load_manifest().unwrap();
+    assert!(
+        manifest.route_centroids.iter().all(|c| !c.is_empty()),
+        "ooc-build must fit route centroids per shard"
+    );
+
+    let fixed = ShardedIndex::open(&dir, SearchParams::default().with_ef(48), 2).unwrap();
+    let loose = ShardedIndex::open(
+        &dir,
+        SearchParams::default().with_ef(48).with_route_slack(1e9),
+        2,
+    )
+    .unwrap();
+    let mut s_fix = fixed.make_scratch();
+    let mut s_loose = loose.make_scratch();
+    let (mut o_fix, mut o_loose) = (Vec::new(), Vec::new());
+    for q in (0..ds.len()).step_by(29) {
+        fixed.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s_fix, &mut o_fix);
+        assert_eq!(s_fix.shards_probed, 2, "slack=0 must probe exactly the cap");
+        loose.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s_loose, &mut o_loose);
+        assert_eq!(s_loose.shards_probed, 2, "huge slack must degenerate to the cap");
+        assert_eq!(o_fix, o_loose, "huge slack diverged from fixed probe on query {q}");
+    }
+
+    // the empty-route_centroids fallback routes by the mean centroid:
+    // a manifest carrying exactly [[mean]] per shard and a manifest
+    // stripped of route_centroids must rank (and serve) identically
+    let mut single = manifest.clone();
+    single.route_centroids = single.centroids.iter().map(|c| vec![c.clone()]).collect();
+    store.save_manifest(&single).unwrap();
+    let explicit = ShardedIndex::open(&dir, SearchParams::default().with_ef(48), 2).unwrap();
+    let mut stripped = manifest.clone();
+    stripped.route_centroids = vec![Vec::new(); stripped.shards];
+    store.save_manifest(&stripped).unwrap();
+    let old = ShardedIndex::open(&dir, SearchParams::default().with_ef(48), 2).unwrap();
+    let mut s_exp = explicit.make_scratch();
+    let mut s_old = old.make_scratch();
+    let (mut o_exp, mut o_old) = (Vec::new(), Vec::new());
+    for q in (0..ds.len()).step_by(29) {
+        explicit.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s_exp, &mut o_exp);
+        old.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut s_old, &mut o_old);
+        assert_eq!(o_exp, o_old, "centroid fallback diverged on query {q}");
+        assert_eq!(s_exp.dist_evals, s_old.dist_evals, "fallback walk diverged on query {q}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A tight slack prunes: per-query probed counts stay within [1, cap],
+/// and the adaptive index still fills k from whatever it probes.
+#[test]
+fn adaptive_slack_probes_within_bounds() {
+    let ds = synth::clustered(500, 8, 57);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("slackbounds");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let sp = SearchParams::default().with_ef(48).with_route_slack(1.0);
+    let idx = ShardedIndex::open(&dir, sp, 0).unwrap();
+    let mut scratch = idx.make_scratch();
+    let mut out = Vec::new();
+    let mut min_probed = usize::MAX;
+    for q in (0..ds.len()).step_by(23) {
+        idx.search_ef_into_excluding(ds.vec(q), 10, 0, q as u32, &mut scratch, &mut out);
+        assert!(
+            (1..=4).contains(&scratch.shards_probed),
+            "query {q} probed {} shards",
+            scratch.shards_probed
+        );
+        min_probed = min_probed.min(scratch.shards_probed);
+        assert_eq!(out.len(), 10, "adaptive probe must still fill k for {q}");
+    }
+    assert!(min_probed < 4, "slack=1.0 never pruned a shard — cutoff is inert");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Hierarchy entries over a shard store: per-shard `hier_<s>.bin`
+/// sidecars are written once, reused byte-identically on reopen, and
+/// serving with hierarchy entries stays within 2 recall points of the
+/// flat k-means entries over the same store.
+#[test]
+fn sharded_hierarchy_sidecars_persist_and_hold_recall() {
+    let ds = synth::clustered(600, 8, 58);
+    let params = GnndParams::default().with_k(12).with_p(6).with_iters(8);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("hiershard");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+
+    let flat_sp = SearchParams::default().with_ef(64);
+    let hier_sp = SearchParams::default()
+        .with_ef(64)
+        .with_entries(EntryStrategy::Hierarchy, 16);
+    let flat = ShardedIndex::open(&dir, flat_sp, 0).unwrap();
+    let hier = ShardedIndex::open(&dir, hier_sp.clone(), 0).unwrap();
+    let sidecars: Vec<Vec<u8>> = (0..4)
+        .map(|s| std::fs::read(dir.join(format!("hier_{s}.bin"))).unwrap())
+        .collect();
+
+    let (qids, truth) = groundtruth::sampled_truth(&ds, 120, 10, 11);
+    let r_flat = recall_over(&flat, &qids, &truth, 10);
+    let r_hier = recall_over(&hier, &qids, &truth, 10);
+    assert!(
+        r_hier >= r_flat - 0.02,
+        "hierarchy recall {r_hier} more than 2 points below flat {r_flat}"
+    );
+    drop(hier);
+
+    // reopen: sidecars load (not rebuild) and stay byte-identical
+    let again = ShardedIndex::open(&dir, hier_sp, 0).unwrap();
+    for (s, bytes) in sidecars.iter().enumerate() {
+        let back = std::fs::read(dir.join(format!("hier_{s}.bin"))).unwrap();
+        assert_eq!(&back, bytes, "hier_{s}.bin changed across opens");
+    }
+    let mut s1 = again.make_scratch();
+    let mut out = Vec::new();
+    again.search_ef_into_excluding(ds.vec(5), 10, 0, 5, &mut s1, &mut out);
+    assert_eq!(out.len(), 10);
     std::fs::remove_dir_all(dir).ok();
 }
 
