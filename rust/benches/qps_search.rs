@@ -21,7 +21,11 @@
 //! offers 60% and 150% of it on a seeded Poisson schedule — the
 //! underloaded point shows queue delays near zero, the overloaded one
 //! trips the overload flag and shows the queueing tail the closed
-//! loop structurally cannot see.
+//! loop structurally cannot see. Last, the monolithic index is served
+//! over loopback TCP behind the `gnnd serve` front end at coalescing
+//! windows {0, 200, 1000}µs — network-vs-in-process QPS at identical
+//! recall is the cost of the wire, and the window sweep the batching
+//! payback.
 //!
 //! ```bash
 //! cargo bench --bench qps_search                 # standard scale
@@ -36,6 +40,7 @@ use gnnd::merge::outofcore::{
 };
 use gnnd::metrics::Report;
 use gnnd::search::serve::{self, ServeConfig};
+use gnnd::search::server::{RemoteIndex, Server, ServerConfig};
 use gnnd::search::sharded::ShardedIndex;
 use gnnd::search::{EntryStrategy, SearchIndex, SearchParams};
 use gnnd::util::json::Json;
@@ -313,6 +318,42 @@ fn main() {
     match report.save_json("results") {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+
+    // ---- loopback TCP serving: the same monolithic index behind the
+    // `gnnd serve` front end, swept through a `RemoteIndex` client at
+    // three coalescing windows. Framing + the loopback hop cost QPS
+    // against the in-process curve above; a wider window claws some
+    // back by folding concurrent requests into one executor pass ----
+    for window_us in [0u64, 200, 1000] {
+        let scfg = ServerConfig { coalesce_window_us: window_us, ..ServerConfig::default() };
+        let srv = Server::bind("127.0.0.1:0", scfg).expect("bind loopback server");
+        let addr = srv.local_addr().expect("server addr").to_string();
+        let handle = srv.handle().expect("server handle");
+        crossbeam_utils::thread::scope(|s| {
+            s.builder()
+                .name("bench-server".into())
+                .spawn(|_| srv.run(&index).expect("server run"))
+                .expect("spawn server");
+            let remote = RemoteIndex::connect(&addr).expect("connect to loopback server");
+            let mut ds_net = ds.clone();
+            ds_net.name = format!("{} tcp window{window_us}us", ds.name);
+            let net_cfg = ServeConfig {
+                ef_sweep: vec![32, 128],
+                n_queries: 1_000.min(n),
+                distinct_queries: 500.min(n),
+                threads: 4,
+                ..cfg.clone()
+            };
+            let report = serve::run_sweep_on(&remote, &ds_net, &net_cfg).expect("tcp sweep");
+            match report.save_json("results") {
+                Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+                Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+            }
+            drop(remote); // close the pooled connections before shutdown
+            handle.shutdown();
+        })
+        .expect("server scope");
     }
 
     // ---- BENCH_8.json: the flat-vs-hierarchy operating curves above,

@@ -30,9 +30,34 @@
 //!                   [--beam-width 0]
 //!                   [--max-hops 0] [--search-seed S] [--seed S]
 //!                   [--trace-sample N] [--trace-out traces.jsonl] [--metrics-out m.jsonl]
+//! gnnd serve        (--data data.dsb --graph graph.knng | --shards dir/ [shard flags])
+//!                   --listen 127.0.0.1:7700 [--coalesce-window 100] [--queue-limit 1024]
+//!                   [--exec-threads 0] [--ef 64] [--k-flags as search]
+//!                   [--stats-out stats.json] [--debug-slow-shard-ms 0]
+//! gnnd capacity     (--target host:port --data data.dsb
+//!                   | --data data.dsb --graph graph.knng | --shards dir/)
+//!                   [--slo-ms 50] [--iters 7] [--ef 64] [--k 10] [--queries 2000]
+//!                   [--distinct 1000] [--threads 0] [--arrival poisson|uniform] [--seed S]
 //! gnnd trace        traces.jsonl [--top 5]
 //! gnnd experiment   fig4|fig5|fig6|fig7|table2|all [--scale quick|standard|full]
 //! ```
+//!
+//! `serve` runs the real network front end: a TCP listener speaking
+//! the length-prefixed binary protocol of `gnnd::search::proto`,
+//! coalescing queries that arrive within `--coalesce-window <µs>` into
+//! one batched executor pass (bit-identical to serving them one at a
+//! time) and shedding load with an explicit `overloaded` response once
+//! the pending-query queue hits `--queue-limit` (0 = unbounded). It
+//! serves the same index layouts as `search` and takes the same search
+//! knobs; `--stats-out <file>` keeps an atomically-rewritten telemetry
+//! snapshot on disk (refreshed twice a second, so it survives a hard
+//! kill). `serve-bench --target <addr>` repoints the whole bench
+//! harness at such a live server as a network client (requires
+//! `--data` for queries and ground truth — the corpus stays local),
+//! and `gnnd capacity` binary-searches the highest offered arrival
+//! rate whose accepted-query `queue_p99` stays under `--slo-ms`
+//! without overload or shedding, printing a parseable
+//! `capacity_qps=<rate>` line.
 //!
 //! `search` answers ANN queries over a finished graph (single query or
 //! a batched `.dsb` query file); `serve-bench` replays a query stream
@@ -116,6 +141,7 @@ use gnnd::merge::outofcore::{
     build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore, STATS_FILE,
 };
 use gnnd::metrics::{recall_at, Report};
+use gnnd::search::server::{self, RemoteIndex, Server};
 use gnnd::search::sharded::{clamp_probe, clamp_search_threads, ShardedIndex};
 use gnnd::search::{
     batch::BatchExecutor, hierarchy, serve, AnnIndex, EntryStrategy, SearchIndex, SearchParams,
@@ -207,7 +233,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "gnnd — GPU-architecture NN-Descent on a Rust+XLA stack\n\
-         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|quantize|eval|search|serve-bench|trace|experiment> [flags]\n\
+         usage: gnnd <gen-data|ground-truth|build|merge|ooc-build|quantize|eval|search|serve|capacity|serve-bench|trace|experiment> [flags]\n\
          see rust/src/main.rs header or README.md for full flag reference"
     );
 }
@@ -382,6 +408,91 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 }
             }
         }
+        "serve" => {
+            let listen = args.req("listen")?;
+            let params = args.search_params()?.with_ef(args.parse_or("ef", 64usize)?);
+            let dcfg = server::ServerConfig::default();
+            let window_us: u64 = args.parse_or("coalesce-window", dcfg.coalesce_window_us)?;
+            let scfg = server::ServerConfig {
+                coalesce_window_us: server::clamp_coalesce_window_warn(window_us),
+                queue_limit: args.parse_or("queue-limit", dcfg.queue_limit)?,
+                exec_threads: args.parse_or("exec-threads", dcfg.exec_threads)?,
+                debug_slow_shard_ms: args.parse_or("debug-slow-shard-ms", 0u64)?,
+                stats_out: args.get("stats-out").map(|s| s.to_string()),
+            };
+            match args.get("shards") {
+                Some(dir) => {
+                    let index = open_sharded_index(&args, dir, params)?;
+                    run_serve(listen, scfg, &index)?;
+                }
+                None => {
+                    let ds = io::read_dsb(args.req("data")?)?;
+                    let graph_path = args.req("graph")?;
+                    let g = KnnGraph::load(graph_path)?;
+                    let index = open_monolithic_index(&ds, &g, graph_path, params)?;
+                    run_serve(listen, scfg, &index)?;
+                }
+            }
+        }
+        "capacity" => {
+            let dcfg = serve::ServeConfig::default();
+            let slo_ms: f64 = args.parse_or("slo-ms", 50.0f64)?;
+            anyhow::ensure!(
+                slo_ms > 0.0 && slo_ms.is_finite(),
+                "--slo-ms must be a positive finite latency bound in ms, got {slo_ms}"
+            );
+            let iters: usize = args.parse_or("iters", 7usize)?;
+            anyhow::ensure!(iters >= 1, "--iters must be >= 1 (bisection needs a probe)");
+            let cfg = serve::ServeConfig {
+                k: args.parse_or("k", dcfg.k)?,
+                ef_sweep: vec![args.parse_or("ef", 64usize)?],
+                n_queries: args.parse_or("queries", dcfg.n_queries)?,
+                distinct_queries: args.parse_or("distinct", dcfg.distinct_queries)?,
+                threads: args.parse_or("threads", dcfg.threads)?,
+                params: args.search_params()?,
+                seed: args.parse_or("seed", dcfg.seed)?,
+                arrival_rate: 0.0, // each bisection probe sets its own
+                arrival: args.parse_or("arrival", dcfg.arrival)?,
+                trace_sample: 0,
+            };
+            let res = if let Some(target) = args.get("target") {
+                anyhow::ensure!(
+                    args.get("shards").is_none() && args.get("graph").is_none(),
+                    "--target is mutually exclusive with --shards/--graph \
+                     (the server owns the index)"
+                );
+                let ds = io::read_dsb(args.req("data").context(
+                    "--target needs --data for queries and ground truth \
+                     (the corpus stays local)",
+                )?)?;
+                let index =
+                    RemoteIndex::connect_with_retries(target, std::time::Duration::from_secs(10))?;
+                serve::capacity_search(&index, &ds, &cfg, slo_ms, iters)?
+            } else {
+                match args.get("shards") {
+                    Some(dir) => {
+                        let index = open_sharded_index(&args, dir, cfg.params.clone())?;
+                        let ds = match args.get("data") {
+                            Some(p) => io::read_dsb(p)?,
+                            None => index.concat_dataset()?,
+                        };
+                        serve::capacity_search(&index, &ds, &cfg, slo_ms, iters)?
+                    }
+                    None => {
+                        let ds = io::read_dsb(args.req("data")?)?;
+                        let graph_path = args.req("graph")?;
+                        let g = KnnGraph::load(graph_path)?;
+                        let index =
+                            open_monolithic_index(&ds, &g, graph_path, cfg.params.clone())?;
+                        serve::capacity_search(&index, &ds, &cfg, slo_ms, iters)?
+                    }
+                }
+            };
+            println!("{}", res.report.render());
+            println!("closed_loop_qps={:.1}", res.closed_loop_qps);
+            // the line CI greps: highest SLO-feasible offered rate
+            println!("capacity_qps={:.1}", res.max_rate);
+        }
         "serve-bench" => {
             let dcfg = serve::ServeConfig::default();
             let ef_sweep = match args.get("ef") {
@@ -418,72 +529,91 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 sinks.trace = Some(TraceWriter::append_to(trace_out)?);
             }
             let t = Timer::start();
-            let report = match args.get("shards") {
-                Some(dir) => {
-                    let index = open_sharded_index(&args, dir, cfg.params.clone())?;
-                    // queries + ground truth come from the original
-                    // corpus; without --data it is re-assembled from
-                    // the shards (identical rows, identical order —
-                    // except under --quantize, where re-assembly
-                    // dequantizes and the measured recall drifts from
-                    // the true-corpus number)
-                    let ds = match args.get("data") {
-                        Some(p) => io::read_dsb(p)?,
-                        None => {
-                            if index.store().quantized() {
-                                telemetry::warn!(
-                                    "serve: no --data with a quantized store; queries and \
-                                     ground truth use dequantized rows — pass --data for \
-                                     true-corpus recall"
-                                );
+            let report = if let Some(target) = args.get("target") {
+                // network-client mode: the index lives in a running
+                // `gnnd serve` process; this side supplies queries and
+                // ground truth, so the corpus must be local
+                anyhow::ensure!(
+                    args.get("shards").is_none() && args.get("graph").is_none(),
+                    "--target is mutually exclusive with --shards/--graph \
+                     (the server owns the index)"
+                );
+                let ds = io::read_dsb(args.req("data").context(
+                    "--target needs --data for queries and ground truth \
+                     (the corpus stays local)",
+                )?)?;
+                let index =
+                    RemoteIndex::connect_with_retries(target, std::time::Duration::from_secs(10))?;
+                serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?
+            } else {
+                match args.get("shards") {
+                    Some(dir) => {
+                        let index = open_sharded_index(&args, dir, cfg.params.clone())?;
+                        // queries + ground truth come from the original
+                        // corpus; without --data it is re-assembled from
+                        // the shards (identical rows, identical order —
+                        // except under --quantize, where re-assembly
+                        // dequantizes and the measured recall drifts from
+                        // the true-corpus number)
+                        let ds = match args.get("data") {
+                            Some(p) => io::read_dsb(p)?,
+                            None => {
+                                if index.store().quantized() {
+                                    telemetry::warn!(
+                                        "serve: no --data with a quantized store; queries and \
+                                         ground truth use dequantized rows — pass --data for \
+                                         true-corpus recall"
+                                    );
+                                }
+                                index.concat_dataset()?
                             }
-                            index.concat_dataset()?
+                        };
+                        let report = serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?;
+                        // serve-time residency counters: printed and folded
+                        // into the directory's stats.json next to the
+                        // build stats. The last queries' pins have released
+                        // but no eviction pass has run since — shed to the
+                        // budget first so the snapshot reflects steady state
+                        index.store().evict_to_budget();
+                        let res = index.residency();
+                        println!("residency: {}", res.to_json());
+                        // a side-file problem should not discard the sweep
+                        match index.store().save_stats_with_residency(&res) {
+                            Ok(()) => println!("[residency folded into {dir}/{STATS_FILE}]"),
+                            Err(e) => telemetry::warn!(
+                                "serve: residency not folded into stats.json: {e:#}"
+                            ),
                         }
-                    };
-                    let report = serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?;
-                    // serve-time residency counters: printed and folded
-                    // into the directory's stats.json next to the
-                    // build stats. The last queries' pins have released
-                    // but no eviction pass has run since — shed to the
-                    // budget first so the snapshot reflects steady state
-                    index.store().evict_to_budget();
-                    let res = index.residency();
-                    println!("residency: {}", res.to_json());
-                    // a side-file problem should not discard the sweep
-                    match index.store().save_stats_with_residency(&res) {
-                        Ok(()) => println!("[residency folded into {dir}/{STATS_FILE}]"),
-                        Err(e) => telemetry::warn!(
-                            "serve: residency not folded into stats.json: {e:#}"
-                        ),
+                        // the sweep rows themselves (including the open-loop
+                        // rate/queue_p50_ms/queue_p99_ms/overload columns)
+                        // also land in stats.json, so one file carries the
+                        // build cost, cache behavior and operating curve
+                        let block = serve_block(&report, &cfg);
+                        match index.store().save_stats_with_block("serve", block) {
+                            Ok(()) => println!("[serve sweep folded into {dir}/{STATS_FILE}]"),
+                            Err(e) => telemetry::warn!(
+                                "serve: sweep not folded into stats.json: {e:#}"
+                            ),
+                        }
+                        // and the registry itself — counters, gauges and
+                        // histograms for the whole sweep in one snapshot
+                        let snap = telemetry::global().snapshot().to_json();
+                        match index.store().save_stats_with_block("telemetry", snap) {
+                            Ok(()) => println!("[telemetry folded into {dir}/{STATS_FILE}]"),
+                            Err(e) => telemetry::warn!(
+                                "serve: telemetry not folded into stats.json: {e:#}"
+                            ),
+                        }
+                        report
                     }
-                    // the sweep rows themselves (including the open-loop
-                    // rate/queue_p50_ms/queue_p99_ms/overload columns)
-                    // also land in stats.json, so one file carries the
-                    // build cost, cache behavior and operating curve
-                    let block = serve_block(&report, &cfg);
-                    match index.store().save_stats_with_block("serve", block) {
-                        Ok(()) => println!("[serve sweep folded into {dir}/{STATS_FILE}]"),
-                        Err(e) => telemetry::warn!(
-                            "serve: sweep not folded into stats.json: {e:#}"
-                        ),
+                    None => {
+                        let ds = io::read_dsb(args.req("data")?)?;
+                        let graph_path = args.req("graph")?;
+                        let g = KnnGraph::load(graph_path)?;
+                        let index =
+                            open_monolithic_index(&ds, &g, graph_path, cfg.params.clone())?;
+                        serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?
                     }
-                    // and the registry itself — counters, gauges and
-                    // histograms for the whole sweep in one snapshot
-                    let snap = telemetry::global().snapshot().to_json();
-                    match index.store().save_stats_with_block("telemetry", snap) {
-                        Ok(()) => println!("[telemetry folded into {dir}/{STATS_FILE}]"),
-                        Err(e) => telemetry::warn!(
-                            "serve: telemetry not folded into stats.json: {e:#}"
-                        ),
-                    }
-                    report
-                }
-                None => {
-                    let ds = io::read_dsb(args.req("data")?)?;
-                    let graph_path = args.req("graph")?;
-                    let g = KnnGraph::load(graph_path)?;
-                    let index = open_monolithic_index(&ds, &g, graph_path, cfg.params.clone())?;
-                    serve::run_sweep_with(&index, &ds, &cfg, &mut sinks)?
                 }
             };
             println!("{}", report.render());
@@ -578,6 +708,23 @@ fn write_metrics_jsonl(
     }
     w.flush().with_context(|| format!("flush {path}"))?;
     Ok(())
+}
+
+/// The `gnnd serve` body: bind, announce the resolved address on a
+/// flushed stdout line (scripts race the listener and parse this —
+/// under a pipe stdout is block-buffered, so an unflushed line would
+/// sit invisible until exit), then serve until killed.
+fn run_serve(
+    listen: &str,
+    cfg: server::ServerConfig,
+    index: &dyn AnnIndex,
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let srv = Server::bind(listen, cfg)?;
+    println!("listening on {}", srv.local_addr()?);
+    println!("index: {}", index.describe());
+    std::io::stdout().flush().context("flush stdout")?;
+    srv.run(index)
 }
 
 /// Open a monolithic index over `--data` + `--graph`. Under

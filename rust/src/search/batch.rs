@@ -16,6 +16,21 @@ use crate::util::split_ranges;
 
 use super::AnnIndex;
 
+/// One query of a heterogeneous batch: its own `k`/`ef`/exclusion,
+/// borrowing the query row. The network server's coalescing window
+/// produces these — queries landing in the same window may come from
+/// different clients with different parameters, yet still ride one
+/// scatter pass ([`BatchExecutor::run_jobs`]).
+pub struct QueryJob<'q> {
+    pub q: &'q [f32],
+    pub k: usize,
+    /// 0 = use the executor's `ef` (which itself falls back to the
+    /// index default when 0).
+    pub ef: usize,
+    /// Object id excluded from this query's results ([`EMPTY`] = none).
+    pub exclude: u32,
+}
+
 /// Multi-query executor over any [`AnnIndex`].
 pub struct BatchExecutor<'i> {
     index: &'i dyn AnnIndex,
@@ -60,8 +75,37 @@ impl<'i> BatchExecutor<'i> {
     ) -> Vec<Vec<(f32, u32)>> {
         assert!(d > 0 && queries.len() % d == 0, "queries must be [nq][{d}] row-major");
         let nq = queries.len() / d;
+        let jobs: Vec<QueryJob<'_>> = (0..nq)
+            .map(|qi| QueryJob {
+                q: &queries[qi * d..(qi + 1) * d],
+                k,
+                ef: 0,
+                exclude: exclude.get(qi).copied().unwrap_or(EMPTY),
+            })
+            .collect();
+        self.run_jobs(&jobs)
+    }
+
+    /// Search a heterogeneous batch (per-query `k`/`ef`/exclusion), in
+    /// job order. Queries are independent, so results are bit-identical
+    /// to running each job alone — the property the server's coalescing
+    /// parity grid enforces across window sizes.
+    pub fn run_jobs(&self, jobs: &[QueryJob<'_>]) -> Vec<Vec<(f32, u32)>> {
+        let nq = jobs.len();
         let mut out: Vec<Vec<(f32, u32)>> = vec![Vec::new(); nq];
         if nq == 0 {
+            return out;
+        }
+        let base_ef = self.ef;
+        if self.threads <= 1 || nq == 1 {
+            // inline fast path: no scope setup for the common
+            // single-query / single-thread case
+            let mut scratch = self.index.make_scratch();
+            for (slot, job) in out.iter_mut().zip(jobs) {
+                let ef = if job.ef != 0 { job.ef } else { base_ef };
+                self.index
+                    .search_ef_into_excluding(job.q, job.k, ef, job.exclude, &mut scratch, slot);
+            }
             return out;
         }
         let ranges = split_ranges(nq, self.threads);
@@ -76,7 +120,6 @@ impl<'i> BatchExecutor<'i> {
             v
         };
         let index = self.index;
-        let ef = self.ef;
         crossbeam_utils::thread::scope(|s| {
             for (r, chunk) in ranges.iter().zip(chunks) {
                 let r = r.clone();
@@ -84,10 +127,17 @@ impl<'i> BatchExecutor<'i> {
                     // per-thread scratch, warm across this range
                     let mut scratch = index.make_scratch();
                     for (slot, qi) in r.enumerate() {
-                        let q = &queries[qi * d..(qi + 1) * d];
-                        let ex = exclude.get(qi).copied().unwrap_or(EMPTY);
+                        let job = &jobs[qi];
+                        let ef = if job.ef != 0 { job.ef } else { base_ef };
                         let out = &mut chunk[slot];
-                        index.search_ef_into_excluding(q, k, ef, ex, &mut scratch, out);
+                        index.search_ef_into_excluding(
+                            job.q,
+                            job.k,
+                            ef,
+                            job.exclude,
+                            &mut scratch,
+                            out,
+                        );
                     }
                 });
             }

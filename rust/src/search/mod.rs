@@ -33,7 +33,13 @@
 //!   fast as they can) or open-loop mode (a seeded Poisson or
 //!   fixed-interval arrival schedule, recording queue delay and
 //!   service time separately — the regime where tail latency under
-//!   load actually lives).
+//!   load actually lives);
+//! * [`proto`] / [`server`] — the network front end: a length-prefixed
+//!   binary wire protocol and a pure-std TCP server with a request
+//!   coalescing window and queue-depth admission control, plus
+//!   [`server::RemoteIndex`] — an [`AnnIndex`] over the wire, so the
+//!   serve harness doubles as the network load generator
+//!   (`serve-bench --target`).
 //!
 //! The free function [`beam_search`] is the greedy-search loop of the
 //! monolithic path: [`crate::baselines::ggnn`] delegates its hierarchy
@@ -58,7 +64,9 @@
 pub mod batch;
 pub mod hierarchy;
 pub mod pool;
+pub mod proto;
 pub mod serve;
+pub mod server;
 pub mod sharded;
 
 use std::cmp::Reverse;

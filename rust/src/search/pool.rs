@@ -39,18 +39,21 @@
 //!   thread (matching the old scoped-thread behavior), and the worker
 //!   survives to serve later queries with a cleaned scratch.
 //!
-//! The job queue is a hand-rolled `Mutex<VecDeque>` + `Condvar` MPMC
-//! channel: the vendored dependency closure has no channel crate, and
-//! the queue operations are two comparisons and a pointer push — far
-//! off the hot path (one send per woken worker per query).
+//! The job queue is the shared closeable MPMC channel from
+//! [`crate::util::mpmc`] (hand-rolled `Mutex<VecDeque>` + `Condvar`:
+//! the vendored dependency closure has no channel crate), wrapped here
+//! only to keep the live `scatter.queue_depth` gauge at the push/pop
+//! transitions — far off the hot path (one send per woken worker per
+//! query). The network front end ([`super::server`]) parks its
+//! coalescing batcher on the same queue type.
 
-use std::collections::VecDeque;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::telemetry;
+use crate::util::mpmc;
 use crate::util::timer::Timer;
 
 use super::sharded::{ScatterOut, ShardCore};
@@ -183,55 +186,41 @@ impl ScatterJob {
     }
 }
 
-/// Minimal MPMC job channel: senders push + wake one sleeper; closing
-/// wakes everyone so workers drain the queue and exit.
+/// The shared MPMC channel plus the live `scatter.queue_depth` gauge:
+/// job copies pushed but not yet popped (adjusted at queue
+/// transitions, off the search path). Senders push + wake one sleeper;
+/// closing wakes everyone so workers drain the queue and exit.
 struct JobQueue {
-    state: Mutex<QueueState>,
-    ready: Condvar,
-    /// Live `scatter.queue_depth` gauge: job copies pushed but not yet
-    /// popped (adjusted at queue transitions, off the search path).
+    inner: mpmc::Queue<Arc<ScatterJob>>,
     depth: Arc<telemetry::Gauge>,
-}
-
-struct QueueState {
-    jobs: VecDeque<Arc<ScatterJob>>,
-    shutdown: bool,
 }
 
 impl JobQueue {
     fn new() -> Self {
         JobQueue {
-            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
-            ready: Condvar::new(),
+            inner: mpmc::Queue::new(),
             depth: telemetry::global().gauge("scatter.queue_depth"),
         }
     }
 
     fn push(&self, job: Arc<ScatterJob>) {
-        self.state.lock().unwrap().jobs.push_back(job);
-        self.depth.add(1);
-        self.ready.notify_one();
+        if self.inner.push(job) {
+            self.depth.add(1);
+        }
     }
 
     /// Next job, blocking while the queue is open and empty; `None`
     /// once the queue is closed and drained.
     fn pop(&self) -> Option<Arc<ScatterJob>> {
-        let mut s = self.state.lock().unwrap();
-        loop {
-            if let Some(job) = s.jobs.pop_front() {
-                self.depth.add(-1);
-                return Some(job);
-            }
-            if s.shutdown {
-                return None;
-            }
-            s = self.ready.wait(s).unwrap();
+        let job = self.inner.pop();
+        if job.is_some() {
+            self.depth.add(-1);
         }
+        job
     }
 
     fn close(&self) {
-        self.state.lock().unwrap().shutdown = true;
-        self.ready.notify_all();
+        self.inner.close();
     }
 }
 

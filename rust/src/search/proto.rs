@@ -1,0 +1,679 @@
+//! Length-prefixed binary wire protocol for `gnnd serve`.
+//!
+//! Every frame on the wire is a little-endian `u32` payload length followed
+//! by the payload. The payload starts with an 8-byte header — magic (`u32`),
+//! protocol version (`u16`), message kind (`u16`) — then a kind-specific
+//! body. Requests use magic `"GNNQ"`, responses `"GNNR"`.
+//!
+//! Kinds:
+//!
+//! | kind | request body                          | response body |
+//! |------|---------------------------------------|---------------|
+//! | 1    | `Info` (empty)                        | n `u64`, d `u32`, default_ef `u32`, metric str, describe str |
+//! | 2    | `Search`: k/ef/rerank/d/nq `u32`, nq·d `f32` rows, nq `u32` exclude ids | k `u32`, nq `u32`, per query cnt `u32` + cnt × (`f32` dist, `u32` id) |
+//! | 3    | —                                     | `Error`: status `u16`, message str |
+//!
+//! Strings are a `u16` length + UTF-8 bytes. An exclude id of `u32::MAX`
+//! means "exclude nothing" (the bench client uses real ids so self-hits are
+//! excluded exactly as the in-process replay does). `ef == 0` asks the
+//! server to use its default. `f32` values travel via `to_le_bytes`, so
+//! results round-trip bit-exactly.
+//!
+//! Decoding mirrors the untrusted-header discipline of
+//! [`crate::dataset::io`]: every length is bounds-checked against the
+//! payload before use and errors say what was expected versus present, so a
+//! truncated, oversized, or corrupt frame produces a typed error instead of
+//! a panic or over-allocation.
+
+use anyhow::{bail, ensure, Result};
+use std::io::{Read, Write};
+
+/// Request magic: `"GNNQ"` little-endian.
+pub const MAGIC_REQ: u32 = u32::from_le_bytes(*b"GNNQ");
+/// Response magic: `"GNNR"` little-endian.
+pub const MAGIC_RESP: u32 = u32::from_le_bytes(*b"GNNR");
+/// Protocol version spoken by this build.
+pub const VERSION: u16 = 1;
+/// Hard cap on payload size; larger length prefixes are rejected before any
+/// allocation happens.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+/// Payload header: magic `u32` + version `u16` + kind `u16`.
+pub const HEADER_BYTES: usize = 8;
+
+pub const KIND_INFO: u16 = 1;
+pub const KIND_SEARCH: u16 = 2;
+pub const KIND_ERROR: u16 = 3;
+
+/// Error status codes carried by kind-3 responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Admission control shed the request; retry later at a lower rate.
+    Overloaded,
+    /// The request was malformed or inconsistent with the served index.
+    BadRequest,
+    /// The server failed internally while executing the request.
+    Internal,
+}
+
+impl Status {
+    pub fn code(self) -> u16 {
+        match self {
+            Status::Overloaded => 1,
+            Status::BadRequest => 2,
+            Status::Internal => 3,
+        }
+    }
+
+    pub fn from_code(code: u16) -> Result<Status> {
+        Ok(match code {
+            1 => Status::Overloaded,
+            2 => Status::BadRequest,
+            3 => Status::Internal,
+            other => bail!("bad frame: unknown error status code {other}"),
+        })
+    }
+}
+
+impl std::fmt::Display for Status {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Status::Overloaded => "overloaded",
+            Status::BadRequest => "bad-request",
+            Status::Internal => "internal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Info,
+    Search(SearchRequest),
+}
+
+/// Body of a kind-2 request: a batch of `nq` queries sharing k/ef/rerank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRequest {
+    pub k: u32,
+    /// Candidate-list width; `0` means "use the server default".
+    pub ef: u32,
+    /// Advisory rerank depth (quantized stores rerank server-side already).
+    pub rerank: u32,
+    pub d: u32,
+    /// `nq * d` row-major query components.
+    pub queries: Vec<f32>,
+    /// One id per query; `u32::MAX` excludes nothing.
+    pub exclude: Vec<u32>,
+}
+
+/// A server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Info(InfoResponse),
+    Search(SearchResponse),
+    Error(ErrorResponse),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InfoResponse {
+    pub n: u64,
+    pub d: u32,
+    pub default_ef: u32,
+    pub metric: String,
+    pub describe: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchResponse {
+    pub k: u32,
+    /// One `(distance, id)` list per query, at most `k` entries each.
+    pub results: Vec<Vec<(f32, u32)>>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorResponse {
+    pub status: Status,
+    pub msg: String,
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let len = s.len().min(u16::MAX as usize);
+    buf.extend_from_slice(&(len as u16).to_le_bytes());
+    buf.extend_from_slice(&s.as_bytes()[..len]);
+}
+
+fn frame(magic: u32, kind: u16, body: &[u8]) -> Vec<u8> {
+    let payload_len = HEADER_BYTES + body.len();
+    let mut out = Vec::with_capacity(4 + payload_len);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&magic.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Encode a request as a complete frame (length prefix included).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Info => frame(MAGIC_REQ, KIND_INFO, &[]),
+        Request::Search(s) => {
+            assert_eq!(
+                s.queries.len(),
+                s.d as usize * s.exclude.len(),
+                "queries must hold nq * d components"
+            );
+            let nq = s.exclude.len() as u32;
+            let mut body = Vec::with_capacity(20 + s.queries.len() * 4 + s.exclude.len() * 4);
+            body.extend_from_slice(&s.k.to_le_bytes());
+            body.extend_from_slice(&s.ef.to_le_bytes());
+            body.extend_from_slice(&s.rerank.to_le_bytes());
+            body.extend_from_slice(&s.d.to_le_bytes());
+            body.extend_from_slice(&nq.to_le_bytes());
+            for v in &s.queries {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            for id in &s.exclude {
+                body.extend_from_slice(&id.to_le_bytes());
+            }
+            frame(MAGIC_REQ, KIND_SEARCH, &body)
+        }
+    }
+}
+
+/// Encode a response as a complete frame (length prefix included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::Info(i) => {
+            let mut body = Vec::with_capacity(16 + i.metric.len() + i.describe.len() + 4);
+            body.extend_from_slice(&i.n.to_le_bytes());
+            body.extend_from_slice(&i.d.to_le_bytes());
+            body.extend_from_slice(&i.default_ef.to_le_bytes());
+            put_str(&mut body, &i.metric);
+            put_str(&mut body, &i.describe);
+            frame(MAGIC_RESP, KIND_INFO, &body)
+        }
+        Response::Search(s) => {
+            let per: usize = s.results.iter().map(|r| 4 + r.len() * 8).sum();
+            let mut body = Vec::with_capacity(8 + per);
+            body.extend_from_slice(&s.k.to_le_bytes());
+            body.extend_from_slice(&(s.results.len() as u32).to_le_bytes());
+            for row in &s.results {
+                body.extend_from_slice(&(row.len() as u32).to_le_bytes());
+                for &(dist, id) in row {
+                    body.extend_from_slice(&dist.to_le_bytes());
+                    body.extend_from_slice(&id.to_le_bytes());
+                }
+            }
+            frame(MAGIC_RESP, KIND_SEARCH, &body)
+        }
+        Response::Error(e) => {
+            let mut body = Vec::with_capacity(4 + e.msg.len());
+            body.extend_from_slice(&e.status.code().to_le_bytes());
+            put_str(&mut body, &e.msg);
+            frame(MAGIC_RESP, KIND_ERROR, &body)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over an untrusted payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let remain = self.buf.len() - self.pos;
+        ensure!(
+            remain >= n,
+            "truncated frame: {what} needs {n} bytes, payload has {remain} left"
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        let b = self.take(4, what)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn string(&mut self, what: &str) -> Result<String> {
+        let len = self.u16(what)? as usize;
+        let b = self.take(len, what)?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|e| anyhow::anyhow!("bad frame: {what} is not UTF-8: {e}"))?
+            .to_string())
+    }
+
+    fn finish(&self, what: &str) -> Result<()> {
+        let extra = self.buf.len() - self.pos;
+        ensure!(
+            extra == 0,
+            "bad frame: {what} has {extra} trailing bytes past the message body"
+        );
+        Ok(())
+    }
+}
+
+fn check_header(cur: &mut Cursor<'_>, magic: u32, side: &str) -> Result<u16> {
+    let got_magic = cur.u32("magic")?;
+    ensure!(
+        got_magic == magic,
+        "bad frame: {side} magic {got_magic:#010x}, expected {magic:#010x}"
+    );
+    let ver = cur.u16("version")?;
+    ensure!(
+        ver == VERSION,
+        "bad frame: protocol version {ver}, this build speaks {VERSION}"
+    );
+    cur.u16("kind")
+}
+
+/// Decode a request payload (the bytes after the length prefix).
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut cur = Cursor::new(payload);
+    let kind = check_header(&mut cur, MAGIC_REQ, "request")?;
+    match kind {
+        KIND_INFO => {
+            cur.finish("info request")?;
+            Ok(Request::Info)
+        }
+        KIND_SEARCH => {
+            let k = cur.u32("k")?;
+            let ef = cur.u32("ef")?;
+            let rerank = cur.u32("rerank")?;
+            let d = cur.u32("d")?;
+            let nq = cur.u32("nq")?;
+            ensure!(k >= 1, "bad frame: search request k must be >= 1");
+            ensure!(d >= 1, "bad frame: search request d must be >= 1");
+            ensure!(nq >= 1, "bad frame: search request nq must be >= 1");
+            let comps = (nq as u64) * (d as u64);
+            let need = comps * 4 + (nq as u64) * 4;
+            let remain = (payload.len() - cur.pos) as u64;
+            ensure!(
+                remain == need,
+                "truncated frame: nq={nq} d={d} implies {need} body bytes, payload has {remain}"
+            );
+            let mut queries = Vec::with_capacity(comps as usize);
+            for _ in 0..comps {
+                queries.push(cur.f32("query component")?);
+            }
+            let mut exclude = Vec::with_capacity(nq as usize);
+            for _ in 0..nq {
+                exclude.push(cur.u32("exclude id")?);
+            }
+            cur.finish("search request")?;
+            Ok(Request::Search(SearchRequest {
+                k,
+                ef,
+                rerank,
+                d,
+                queries,
+                exclude,
+            }))
+        }
+        other => bail!("bad frame: unknown request kind {other}"),
+    }
+}
+
+/// Decode a response payload (the bytes after the length prefix).
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    let mut cur = Cursor::new(payload);
+    let kind = check_header(&mut cur, MAGIC_RESP, "response")?;
+    match kind {
+        KIND_INFO => {
+            let n = cur.u64("n")?;
+            let d = cur.u32("d")?;
+            let default_ef = cur.u32("default_ef")?;
+            let metric = cur.string("metric")?;
+            let describe = cur.string("describe")?;
+            cur.finish("info response")?;
+            Ok(Response::Info(InfoResponse {
+                n,
+                d,
+                default_ef,
+                metric,
+                describe,
+            }))
+        }
+        KIND_SEARCH => {
+            let k = cur.u32("k")?;
+            let nq = cur.u32("nq")? as usize;
+            // Each query contributes at least a 4-byte count; bound nq by
+            // the remaining bytes before allocating.
+            let remain = payload.len() - cur.pos;
+            ensure!(
+                nq <= remain / 4,
+                "truncated frame: nq={nq} result lists cannot fit in {remain} bytes"
+            );
+            let mut results = Vec::with_capacity(nq);
+            for qi in 0..nq {
+                let cnt = cur.u32("result count")? as usize;
+                let left = payload.len() - cur.pos;
+                ensure!(
+                    cnt <= left / 8,
+                    "truncated frame: query {qi} claims {cnt} results, {left} bytes left"
+                );
+                let mut row = Vec::with_capacity(cnt);
+                for _ in 0..cnt {
+                    let dist = cur.f32("result distance")?;
+                    let id = cur.u32("result id")?;
+                    row.push((dist, id));
+                }
+                results.push(row);
+            }
+            cur.finish("search response")?;
+            Ok(Response::Search(SearchResponse { k, results }))
+        }
+        KIND_ERROR => {
+            let status = Status::from_code(cur.u16("status")?)?;
+            let msg = cur.string("error message")?;
+            cur.finish("error response")?;
+            Ok(Response::Error(ErrorResponse { status, msg }))
+        }
+        other => bail!("bad frame: unknown response kind {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framed IO
+// ---------------------------------------------------------------------------
+
+/// Write one already-encoded frame.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Read one frame payload. Returns `Ok(None)` on clean EOF at a frame
+/// boundary; mid-frame EOF and oversized length prefixes are errors.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    read_frame_with(r, || true)
+}
+
+/// Like [`read_frame`], but tolerant of read timeouts: on
+/// `WouldBlock`/`TimedOut` the `keep_going` predicate decides whether to
+/// retry (partial bytes already read are preserved) or give up with
+/// `Ok(None)`. This lets a server poll a stop flag while blocked on a read.
+pub fn read_frame_with(r: &mut impl Read, keep_going: impl Fn() -> bool) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match read_full(r, &mut len_buf, &keep_going)? {
+        Filled::Eof => return Ok(None),
+        Filled::Stopped => return Ok(None),
+        Filled::PartialEof(got) => {
+            bail!("truncated frame: EOF after {got} of 4 length-prefix bytes")
+        }
+        Filled::Done => {}
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!(
+        len >= HEADER_BYTES,
+        "bad frame: payload length {len} below minimum header size {HEADER_BYTES}"
+    );
+    ensure!(
+        len <= MAX_FRAME_BYTES,
+        "oversized frame: payload length {len} exceeds cap {MAX_FRAME_BYTES}"
+    );
+    let mut payload = vec![0u8; len];
+    match read_full(r, &mut payload, &keep_going)? {
+        Filled::Done => Ok(Some(payload)),
+        Filled::Stopped => Ok(None),
+        Filled::Eof | Filled::PartialEof(_) => {
+            bail!("truncated frame: EOF before {len} payload bytes arrived")
+        }
+    }
+}
+
+enum Filled {
+    Done,
+    Eof,
+    PartialEof(usize),
+    Stopped,
+}
+
+fn read_full(r: &mut impl Read, buf: &mut [u8], keep_going: &impl Fn() -> bool) -> Result<Filled> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Ok(if got == 0 {
+                    Filled::Eof
+                } else {
+                    Filled::PartialEof(got)
+                });
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if !keep_going() {
+                    return Ok(Filled::Stopped);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Filled::Done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn gen_search_request(rng: &mut Rng) -> SearchRequest {
+        let d = 1 + (rng.next_u64() % 16) as u32;
+        let nq = 1 + (rng.next_u64() % 8) as u32;
+        let k = 1 + (rng.next_u64() % 32) as u32;
+        let queries: Vec<f32> = (0..(d * nq)).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        let exclude: Vec<u32> = (0..nq)
+            .map(|_| {
+                if rng.next_u64() % 4 == 0 {
+                    u32::MAX
+                } else {
+                    (rng.next_u64() % 10_000) as u32
+                }
+            })
+            .collect();
+        SearchRequest {
+            k,
+            ef: (rng.next_u64() % 256) as u32,
+            rerank: (rng.next_u64() % 64) as u32,
+            d,
+            queries,
+            exclude,
+        }
+    }
+
+    fn gen_response(rng: &mut Rng) -> Response {
+        match rng.next_u64() % 3 {
+            0 => Response::Info(InfoResponse {
+                n: rng.next_u64(),
+                d: (rng.next_u64() % 512) as u32,
+                default_ef: (rng.next_u64() % 256) as u32,
+                metric: ["l2", "ip", "cosine"][(rng.next_u64() % 3) as usize].to_string(),
+                describe: format!("sharded(shards={})", rng.next_u64() % 32),
+            }),
+            1 => {
+                let nq = (rng.next_u64() % 6) as usize;
+                let results = (0..nq)
+                    .map(|_| {
+                        let cnt = (rng.next_u64() % 12) as usize;
+                        (0..cnt)
+                            .map(|_| (rng.f32() * 100.0, (rng.next_u64() % 50_000) as u32))
+                            .collect()
+                    })
+                    .collect();
+                Response::Search(SearchResponse {
+                    k: 1 + (rng.next_u64() % 32) as u32,
+                    results,
+                })
+            }
+            _ => Response::Error(ErrorResponse {
+                status: [Status::Overloaded, Status::BadRequest, Status::Internal]
+                    [(rng.next_u64() % 3) as usize],
+                msg: format!("case {}", rng.next_u64() % 1000),
+            }),
+        }
+    }
+
+    /// Round-trip a frame through the streaming reader and the decoder.
+    fn round_trip_req(req: &Request) -> Request {
+        let bytes = encode_request(req);
+        let mut r = &bytes[..];
+        let payload = read_frame(&mut r).unwrap().expect("one frame present");
+        assert!(r.is_empty(), "reader must consume the exact frame");
+        decode_request(&payload).unwrap()
+    }
+
+    #[test]
+    fn prop_request_round_trip() {
+        prop::check("proto_request_round_trip", 64, |rng| {
+            let req = Request::Search(gen_search_request(rng));
+            let back = round_trip_req(&req);
+            prop::assert_prop(back == req, "decoded request differs from original")
+        });
+    }
+
+    #[test]
+    fn prop_response_round_trip() {
+        prop::check("proto_response_round_trip", 64, |rng| {
+            let resp = gen_response(rng);
+            let bytes = encode_response(&resp);
+            let mut r = &bytes[..];
+            let payload = read_frame(&mut r).unwrap().expect("one frame present");
+            let back = decode_response(&payload).unwrap();
+            prop::assert_prop(back == resp, "decoded response differs from original")
+        });
+    }
+
+    #[test]
+    fn info_round_trip_and_eof() {
+        assert_eq!(round_trip_req(&Request::Info), Request::Info);
+        let mut empty: &[u8] = &[];
+        assert!(read_frame(&mut empty).unwrap().is_none(), "clean EOF is None");
+    }
+
+    #[test]
+    fn prop_truncation_never_panics_and_errors() {
+        prop::check("proto_truncation_rejected", 64, |rng| {
+            let req = Request::Search(gen_search_request(rng));
+            let bytes = encode_request(&req);
+            // Cut anywhere strictly inside the frame (after byte 0 so the
+            // reader sees a partial frame, not clean EOF).
+            let cut = 1 + (rng.next_u64() as usize) % (bytes.len() - 1);
+            let mut r = &bytes[..cut];
+            let res = read_frame(&mut r);
+            let ok = match res {
+                Err(e) => e.to_string().contains("truncated frame"),
+                // A cut exactly at the 4-byte prefix boundary with len==0
+                // can't happen (header is mandatory), so any Ok(Some) here
+                // would be a bug; Ok(None) only for cut < 1 which we avoid.
+                Ok(_) => false,
+            };
+            prop::assert_prop(ok, "truncated frame must yield a 'truncated frame' error")
+        });
+    }
+
+    #[test]
+    fn oversized_and_garbage_frames_rejected() {
+        // Oversized length prefix: rejected before allocation.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(((MAX_FRAME_BYTES + 1) as u32).to_le_bytes()));
+        let mut r = &bytes[..];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("oversized frame"), "got: {err}");
+
+        // Length below the mandatory header.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&[0; 4]);
+        let mut r = &bytes[..];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("below minimum header"), "got: {err}");
+
+        // Bad magic.
+        let mut frame = encode_request(&Request::Info);
+        frame[4] ^= 0xFF;
+        let mut r = &frame[..];
+        let payload = read_frame(&mut r).unwrap().unwrap();
+        let err = decode_request(&payload).unwrap_err().to_string();
+        assert!(err.contains("magic"), "got: {err}");
+
+        // Bad version.
+        let mut frame = encode_request(&Request::Info);
+        frame[8] = 0x7F;
+        let mut r = &frame[..];
+        let payload = read_frame(&mut r).unwrap().unwrap();
+        let err = decode_request(&payload).unwrap_err().to_string();
+        assert!(err.contains("protocol version"), "got: {err}");
+
+        // Unknown kind.
+        let mut frame = encode_request(&Request::Info);
+        frame[10] = 0x77;
+        let mut r = &frame[..];
+        let payload = read_frame(&mut r).unwrap().unwrap();
+        let err = decode_request(&payload).unwrap_err().to_string();
+        assert!(err.contains("unknown request kind"), "got: {err}");
+
+        // Body length inconsistent with nq/d: claims 2 queries, carries 1.
+        let req = SearchRequest {
+            k: 5,
+            ef: 0,
+            rerank: 0,
+            d: 4,
+            queries: vec![0.0; 4],
+            exclude: vec![u32::MAX],
+        };
+        let mut frame = encode_request(&Request::Search(req));
+        let nq_off = 4 + HEADER_BYTES + 12; // prefix + header + k/ef/rerank
+        frame[nq_off + 4] = 2; // bump nq from 1 to 2 (d at nq_off, nq next)
+        let mut r = &frame[..];
+        let payload = read_frame(&mut r).unwrap().unwrap();
+        let err = decode_request(&payload).unwrap_err().to_string();
+        assert!(err.contains("implies"), "got: {err}");
+    }
+
+    #[test]
+    fn status_codes_round_trip() {
+        for s in [Status::Overloaded, Status::BadRequest, Status::Internal] {
+            assert_eq!(Status::from_code(s.code()).unwrap(), s);
+        }
+        assert!(Status::from_code(42).is_err());
+    }
+}

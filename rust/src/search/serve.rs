@@ -180,6 +180,10 @@ pub struct ServeStats {
     /// routing (`--route-slack`) this falls below the `--probe-shards`
     /// cap whenever the router prunes; at slack 0 it equals the cap.
     pub probe_mean: f64,
+    /// Queries of the timing pass shed by a remote server's admission
+    /// control (`client.shed_total` delta; always 0 against an
+    /// in-process index — only [`super::server::RemoteIndex`] sheds).
+    pub shed: u64,
 }
 
 /// The sampled query stream: flat query matrix + the object ids the
@@ -348,6 +352,11 @@ pub fn run_point_traced(
     let tot_probe = AtomicU64::new(0);
     let h_service = telemetry::global().histogram("query.service_us");
     let h_queue = telemetry::global().histogram("query.queue_wait_us");
+    // sheds observed by the timing pass only (the quality pass above
+    // may also shed against a remote target; that shows up as recall
+    // loss there, not in this column)
+    let c_shed = telemetry::global().counter("client.shed_total");
+    let shed_before = c_shed.get();
     let d = stream.d;
     let k = cfg.k;
     let trace_sample = cfg.trace_sample;
@@ -490,6 +499,7 @@ pub fn run_point_traced(
         hops: tot_hops.load(Ordering::Relaxed) as f64 / total as f64,
         rerank_evals: tot_rerank.load(Ordering::Relaxed) as f64 / total as f64,
         probe_mean: tot_probe.load(Ordering::Relaxed) as f64 / total as f64,
+        shed: c_shed.get().saturating_sub(shed_before),
     }
 }
 
@@ -609,6 +619,7 @@ pub fn run_sweep_with(
             .col("hops", s.hops)
             .col("rerank_evals", s.rerank_evals)
             .col("probe_mean", s.probe_mean)
+            .col("shed", s.shed as f64)
             .col(&recall_col, s.recall);
         if cfg.arrival_rate > 0.0 {
             row = row
@@ -620,6 +631,90 @@ pub fn run_sweep_with(
         report.push(row);
     }
     Ok(report)
+}
+
+/// Outcome of a [`capacity_search`].
+#[derive(Clone, Debug)]
+pub struct CapacityResult {
+    /// Highest probed offered rate (qps) that met the SLO: not
+    /// overloaded, accepted-query `queue_p99` within `slo_ms`, zero
+    /// sheds. 0 when even the lowest probe failed.
+    pub max_rate: f64,
+    /// Closed-loop throughput that seeded the bisection bracket.
+    pub closed_loop_qps: f64,
+    /// One row per probed operating point, in probe order.
+    pub report: Report,
+}
+
+/// `gnnd capacity`: binary-search the highest offered arrival rate
+/// whose open-loop `queue_p99` stays under `slo_ms` (and which neither
+/// overloads nor sheds — sheds only occur against a remote server's
+/// admission control). A closed-loop point measures raw throughput
+/// `C`, then `iters` open-loop probes bisect `[0, 1.25 C]` — the +25%
+/// headroom lets the search prove an SLO-feasible rate *above* the
+/// closed-loop estimate when queueing is cheap. Runs at the first `ef`
+/// of `cfg.ef_sweep`; `cfg.arrival_rate` is ignored (each probe sets
+/// its own).
+pub fn capacity_search(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    cfg: &ServeConfig,
+    slo_ms: f64,
+    iters: usize,
+) -> crate::Result<CapacityResult> {
+    anyhow::ensure!(
+        slo_ms > 0.0 && slo_ms.is_finite(),
+        "slo_ms must be positive and finite, got {slo_ms}"
+    );
+    anyhow::ensure!(!cfg.ef_sweep.is_empty(), "ef_sweep is empty");
+    anyhow::ensure!(cfg.k > 0, "k must be > 0");
+    let ef = cfg.ef_sweep[0];
+    let stream = sample_queries(ds, cfg.distinct_queries, cfg.k, cfg.seed);
+    let mut closed_cfg = cfg.clone();
+    closed_cfg.arrival_rate = 0.0;
+    let closed = run_point(index, &stream, &closed_cfg, ef);
+    let mut report = Report::new(format!("Capacity search: {}", ds.name))
+        .meta("index", index.describe())
+        .meta("ef", closed.ef)
+        .meta("k", cfg.k)
+        .meta("slo_ms", slo_ms)
+        .meta("arrival", cfg.arrival.to_string())
+        .meta("queries", format!("{} distinct, {} replayed", stream.qids.len(), cfg.n_queries));
+    report.push(
+        Row::new("closed")
+            .col("rate", 0.0)
+            .col("qps", closed.qps)
+            .col("p99_ms", closed.p99_ms)
+            .col("queue_p99_ms", 0.0)
+            .col("shed", 0.0)
+            .col("feasible", 1.0),
+    );
+    let feasible = |s: &ServeStats| !s.overload && s.queue_p99_ms <= slo_ms && s.shed == 0;
+    // bisect on the highest feasible rate; `lo` is always known-good
+    let mut lo = 0.0f64;
+    let mut hi = closed.qps * 1.25;
+    for i in 0..iters.max(1) {
+        let rate = 0.5 * (lo + hi);
+        let mut point_cfg = cfg.clone();
+        point_cfg.arrival_rate = rate;
+        let s = run_point(index, &stream, &point_cfg, ef);
+        let ok = feasible(&s);
+        report.push(
+            Row::new(format!("probe{i}"))
+                .col("rate", rate)
+                .col("qps", s.qps)
+                .col("p99_ms", s.p99_ms)
+                .col("queue_p99_ms", s.queue_p99_ms)
+                .col("shed", s.shed as f64)
+                .col("feasible", if ok { 1.0 } else { 0.0 }),
+        );
+        if ok {
+            lo = rate;
+        } else {
+            hi = rate;
+        }
+    }
+    Ok(CapacityResult { max_rate: lo, closed_loop_qps: closed.qps, report })
 }
 
 #[cfg(test)]
@@ -829,6 +924,34 @@ mod tests {
         // run_point (the untraced wrapper) still works and reports means
         let s2 = run_point(&flat, &stream, &cfg, 16);
         assert_eq!(s2.ef, 16);
+    }
+
+    #[test]
+    fn capacity_search_bisects_within_bracket_and_rejects_bad_slo() {
+        let ds = synth::uniform(60, 4, 13);
+        let corpus = ds.clone();
+        let flat = Flat { ds };
+        let cfg = ServeConfig {
+            ef_sweep: vec![16],
+            n_queries: 20,
+            distinct_queries: 20,
+            threads: 2,
+            ..Default::default()
+        };
+        let cap = capacity_search(&flat, &corpus, &cfg, 50.0, 4).unwrap();
+        assert!(cap.closed_loop_qps > 0.0);
+        assert!(cap.max_rate >= 0.0);
+        assert!(cap.max_rate <= cap.closed_loop_qps * 1.25);
+        assert_eq!(cap.report.rows.len(), 5, "closed point + 4 probes");
+        assert_eq!(cap.report.rows[0].label, "closed");
+        assert!(capacity_search(&flat, &corpus, &cfg, 0.0, 2).is_err(), "slo 0 must be rejected");
+        assert!(
+            capacity_search(&flat, &corpus, &cfg, f64::NAN, 2).is_err(),
+            "non-finite slo must be rejected"
+        );
+        // in-process serving never sheds: the column exists and is 0
+        let s = run_point(&flat, &sample_queries(&corpus, 10, 10, 1), &cfg, 16);
+        assert_eq!(s.shed, 0);
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! `gnnd serve`: a TCP front end over any [`AnnIndex`].
+//!
+//! The serving stack so far ends at an in-process bench harness
+//! ([`super::serve`]); this module is the missing network layer — a
+//! pure-std [`TcpListener`] speaking the length-prefixed binary
+//! protocol of [`super::proto`], with two serving policies layered on
+//! the connection handling:
+//!
+//! * **Request coalescing.** GGNN (Groh et al.) gets its GPU
+//!   throughput by batching queries into one pass; the same idea one
+//!   level up: queries arriving within `--coalesce-window <µs>` of the
+//!   first are drained into a single [`BatchExecutor::run_jobs`] /
+//!   scatter pass instead of fanning out per query. Queries are
+//!   independent, so coalescing is **bit-identical** to serving them
+//!   one at a time (enforced by the parity grid in `tests/server.rs`).
+//! * **Admission control.** The pending-query queue is depth-bounded
+//!   (`--queue-limit`); a request that would overflow it is shed with
+//!   an explicit [`Status::Overloaded`] response instead of letting
+//!   queue delay run away. The bound is enforced all-or-nothing under
+//!   one lock ([`mpmc::Queue::push_all_within`]), so depth never
+//!   overshoots and `server.shed_total` reconciles exactly with
+//!   client-observed sheds.
+//!
+//! Threading: `run` parks a single batcher thread on the pending
+//! queue, spawns one thread per accepted connection (each request
+//! blocks its connection until its queries complete — pipelining
+//! happens across connections), and keeps the accept loop on the
+//! calling thread. Shutdown ([`ServerHandle::shutdown`]) sets a stop
+//! flag and self-connects to wake the blocking accept; connection
+//! reads poll the flag on a short timeout, and the queue close
+//! releases the batcher once drained.
+//!
+//! [`RemoteIndex`] is the client half: it implements [`AnnIndex`] over
+//! a connection pool, so the whole serve harness (arrival schedules,
+//! queue/service percentiles, recall) repoints at a live server with
+//! `serve-bench --target <addr>` — the bench numbers become numbers
+//! about a thing users can run.
+//!
+//! Registered metrics (doc table in [`crate::telemetry`]):
+//! `server.accepted` / `server.shed_total` / `server.connections`
+//! (counters, per request), `server.coalesced_batch_size` /
+//! `server.queue_wait_us` (histograms, per batch / per query), and on
+//! the client side `client.shed_total`.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::graph::EMPTY;
+use crate::telemetry;
+use crate::util::mpmc;
+
+use super::batch::{BatchExecutor, QueryJob};
+use super::proto::{
+    self, ErrorResponse, InfoResponse, Request, Response, SearchRequest, SearchResponse, Status,
+};
+use super::{AnnIndex, SearchScratch};
+
+/// Cap on queries drained into one coalesced batch: bounds both the
+/// response latency of the first query in a batch and the transient
+/// memory of a batch under a hot queue.
+pub const MAX_BATCH: usize = 256;
+
+/// Cap on the coalescing window: a window above one second is a
+/// misconfiguration (every query would pay it in added latency), not a
+/// throughput choice.
+pub const MAX_COALESCE_WINDOW_US: u64 = 1_000_000;
+
+/// Clamp a requested coalescing window to [`MAX_COALESCE_WINDOW_US`];
+/// the bool reports whether clamping occurred (mirrors
+/// `serve::clamp_ef` / `sharded` probe clamping).
+pub fn clamp_coalesce_window(us: u64) -> (u64, bool) {
+    if us > MAX_COALESCE_WINDOW_US {
+        (MAX_COALESCE_WINDOW_US, true)
+    } else {
+        (us, false)
+    }
+}
+
+/// [`clamp_coalesce_window`] + the operator warning the CLI emits.
+pub fn clamp_coalesce_window_warn(us: u64) -> u64 {
+    let (v, clamped) = clamp_coalesce_window(us);
+    if clamped {
+        telemetry::warn!(
+            "serve: --coalesce-window {us}µs exceeds the {MAX_COALESCE_WINDOW_US}µs cap; \
+             clamped to {v}µs"
+        );
+    }
+    v
+}
+
+/// Serving-policy knobs of a [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Batching window in µs: queries arriving within this window of
+    /// the first pending query ride one executor pass. 0 = no waiting
+    /// (still drains whatever is already queued).
+    pub coalesce_window_us: u64,
+    /// Admission bound on pending queries; a request whose queries
+    /// would overflow it is shed with `Overloaded`. 0 = unbounded.
+    pub queue_limit: usize,
+    /// Executor threads per batch (0 = auto).
+    pub exec_threads: usize,
+    /// Test-only fault injection: sleep this long before executing
+    /// every batch, so admission-control tests fill the queue
+    /// deterministically. 0 = disabled.
+    pub debug_slow_shard_ms: u64,
+    /// When set, a background thread rewrites this path (atomic
+    /// tmp+rename) with the global telemetry snapshot twice a second —
+    /// the server's metrics survive even a hard kill.
+    pub stats_out: Option<String>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            coalesce_window_us: 100,
+            queue_limit: 1024,
+            exec_threads: 0,
+            debug_slow_shard_ms: 0,
+            stats_out: None,
+        }
+    }
+}
+
+/// One admitted query waiting for the batcher: owns its row, knows its
+/// response slot.
+struct PendingQuery {
+    q: Vec<f32>,
+    k: usize,
+    /// 0 = server default (the executor resolves it).
+    ef: usize,
+    exclude: u32,
+    enqueued: Instant,
+    slot: Arc<ResultSlot>,
+    idx: usize,
+}
+
+struct SlotState {
+    remaining: usize,
+    failed: bool,
+    results: Vec<Vec<(f32, u32)>>,
+}
+
+/// Rendezvous between a connection thread and the batcher: the
+/// connection blocks in [`ResultSlot::wait`] until every query of its
+/// request has been filled (or the batch poisoned).
+struct ResultSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl ResultSlot {
+    fn new(nq: usize) -> Arc<Self> {
+        Arc::new(ResultSlot {
+            state: Mutex::new(SlotState {
+                remaining: nq,
+                failed: false,
+                results: vec![Vec::new(); nq],
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SlotState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn fill(&self, idx: usize, res: Vec<(f32, u32)>) {
+        let mut st = self.lock();
+        st.results[idx] = res;
+        st.remaining -= 1;
+        let done = st.remaining == 0;
+        drop(st);
+        if done {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Poison the slot (batch execution panicked): the waiting
+    /// connection answers `Internal` instead of hanging forever.
+    fn fail(&self) {
+        let mut st = self.lock();
+        st.failed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> std::result::Result<Vec<Vec<(f32, u32)>>, ()> {
+        let mut st = self.lock();
+        while st.remaining > 0 && !st.failed {
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        if st.failed {
+            Err(())
+        } else {
+            Ok(std::mem::take(&mut st.results))
+        }
+    }
+}
+
+/// Cached handles to the server's registered metrics.
+struct ServerMetrics {
+    accepted: Arc<telemetry::Counter>,
+    shed_total: Arc<telemetry::Counter>,
+    connections: Arc<telemetry::Counter>,
+    coalesced_batch_size: Arc<telemetry::Histogram>,
+    queue_wait_us: Arc<telemetry::Histogram>,
+}
+
+impl ServerMetrics {
+    fn new() -> Self {
+        let g = telemetry::global();
+        ServerMetrics {
+            accepted: g.counter("server.accepted"),
+            shed_total: g.counter("server.shed_total"),
+            connections: g.counter("server.connections"),
+            coalesced_batch_size: g.histogram("server.coalesced_batch_size"),
+            queue_wait_us: g.histogram("server.queue_wait_us"),
+        }
+    }
+}
+
+/// Handle for stopping a running [`Server`] from another thread.
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Request shutdown: sets the stop flag and self-connects to wake
+    /// the blocking accept loop. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// The TCP front end: bind once, then [`Server::run`] until shutdown.
+pub struct Server {
+    listener: TcpListener,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port). The
+    /// coalescing window is clamp-validated here too, so programmatic
+    /// users get the same bound the CLI enforces.
+    pub fn bind(addr: &str, mut cfg: ServerConfig) -> Result<Server> {
+        cfg.coalesce_window_us = clamp_coalesce_window(cfg.coalesce_window_us).0;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind server listener on {addr}"))?;
+        Ok(Server { listener, cfg, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A shutdown handle usable from any thread.
+    pub fn handle(&self) -> Result<ServerHandle> {
+        Ok(ServerHandle { addr: self.local_addr()?, stop: Arc::clone(&self.stop) })
+    }
+
+    /// Serve `index` until [`ServerHandle::shutdown`]: accept loop on
+    /// the calling thread, one batcher thread, one thread per
+    /// connection. Returns after every connection and the batcher have
+    /// drained.
+    pub fn run(&self, index: &dyn AnnIndex) -> Result<()> {
+        let queue: mpmc::Queue<PendingQuery> = mpmc::Queue::new();
+        let metrics = ServerMetrics::new();
+        let stop: &AtomicBool = &self.stop;
+        let cfg = &self.cfg;
+        crossbeam_utils::thread::scope(|s| {
+            let queue = &queue;
+            let metrics = &metrics;
+            s.builder()
+                .name("gnnd-batcher".to_string())
+                .spawn(move |_| batcher_loop(index, queue, cfg, metrics))
+                .expect("spawn batcher thread");
+            if let Some(path) = cfg.stats_out.as_deref() {
+                s.builder()
+                    .name("gnnd-stats".to_string())
+                    .spawn(move |_| stats_loop(path, stop))
+                    .expect("spawn stats thread");
+            }
+            for conn in self.listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                s.spawn(move |_| handle_conn(stream, index, queue, cfg, stop, metrics));
+            }
+            // release the batcher (it drains admitted queries first, so
+            // no connection is left waiting on an unfilled slot)
+            queue.close();
+        })
+        .unwrap();
+        if let Some(path) = self.cfg.stats_out.as_deref() {
+            write_stats_file(path);
+        }
+        Ok(())
+    }
+}
+
+/// The coalescing batcher: pop the first pending query, drain
+/// followers within the window (or whatever is already queued when the
+/// window is 0), execute the batch in one pass, fill every slot.
+fn batcher_loop(
+    index: &dyn AnnIndex,
+    queue: &mpmc::Queue<PendingQuery>,
+    cfg: &ServerConfig,
+    m: &ServerMetrics,
+) {
+    let exec = BatchExecutor::new(index, cfg.exec_threads);
+    let window = Duration::from_micros(cfg.coalesce_window_us);
+    while let Some(first) = queue.pop() {
+        let mut batch = vec![first];
+        if window.is_zero() {
+            while batch.len() < MAX_BATCH {
+                match queue.try_pop() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+        } else {
+            let deadline = Instant::now() + window;
+            while batch.len() < MAX_BATCH {
+                match queue.pop_deadline(deadline) {
+                    mpmc::Pop::Item(p) => batch.push(p),
+                    mpmc::Pop::TimedOut | mpmc::Pop::Closed => break,
+                }
+            }
+        }
+        let drained = Instant::now();
+        for p in &batch {
+            let waited = drained.saturating_duration_since(p.enqueued);
+            m.queue_wait_us.record(telemetry::us(waited.as_secs_f64()));
+        }
+        m.coalesced_batch_size.record(batch.len() as u64);
+        if cfg.debug_slow_shard_ms > 0 {
+            std::thread::sleep(Duration::from_millis(cfg.debug_slow_shard_ms));
+        }
+        let jobs: Vec<QueryJob<'_>> = batch
+            .iter()
+            .map(|p| QueryJob { q: &p.q, k: p.k, ef: p.ef, exclude: p.exclude })
+            .collect();
+        // a poisoned batch (e.g. the store vanished mid-query) must
+        // answer Internal on every affected connection, not kill the
+        // batcher and hang the server
+        match panic::catch_unwind(AssertUnwindSafe(|| exec.run_jobs(&jobs))) {
+            Ok(results) => {
+                for (p, r) in batch.iter().zip(results) {
+                    p.slot.fill(p.idx, r);
+                }
+            }
+            Err(_) => {
+                for p in &batch {
+                    p.slot.fail();
+                }
+            }
+        }
+    }
+}
+
+/// One connection: framed request/response loop until EOF, a protocol
+/// violation, or shutdown. Malformed frames answer a typed
+/// `BadRequest` and close; the server never panics on client bytes.
+fn handle_conn(
+    mut stream: TcpStream,
+    index: &dyn AnnIndex,
+    queue: &mpmc::Queue<PendingQuery>,
+    cfg: &ServerConfig,
+    stop: &AtomicBool,
+    m: &ServerMetrics,
+) {
+    m.connections.inc();
+    let _ = stream.set_nodelay(true);
+    // short read timeout so a parked connection notices shutdown
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    loop {
+        let payload = match proto::read_frame_with(&mut stream, || !stop.load(Ordering::Relaxed)) {
+            Ok(Some(p)) => p,
+            Ok(None) => break, // clean EOF or shutdown
+            Err(e) => {
+                respond_error(&mut stream, Status::BadRequest, &format!("{e:#}"));
+                break;
+            }
+        };
+        let req = match proto::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                respond_error(&mut stream, Status::BadRequest, &format!("{e:#}"));
+                break;
+            }
+        };
+        match req {
+            Request::Info => {
+                let resp = Response::Info(InfoResponse {
+                    n: index.len() as u64,
+                    d: index.dim() as u32,
+                    default_ef: index.default_ef() as u32,
+                    metric: index.metric().to_string(),
+                    describe: index.describe(),
+                });
+                if proto::write_frame(&mut stream, &proto::encode_response(&resp)).is_err() {
+                    break;
+                }
+            }
+            Request::Search(s) => {
+                if s.d as usize != index.dim() {
+                    // well-formed but inconsistent: answer and keep the
+                    // connection
+                    respond_error(
+                        &mut stream,
+                        Status::BadRequest,
+                        &format!("query dimension {} but index dimension {}", s.d, index.dim()),
+                    );
+                    continue;
+                }
+                let d = s.d as usize;
+                let nq = s.exclude.len();
+                let slot = ResultSlot::new(nq);
+                let enqueued = Instant::now();
+                let pending: Vec<PendingQuery> = (0..nq)
+                    .map(|i| PendingQuery {
+                        q: s.queries[i * d..(i + 1) * d].to_vec(),
+                        k: s.k as usize,
+                        ef: s.ef as usize,
+                        exclude: if s.exclude[i] == u32::MAX { EMPTY } else { s.exclude[i] },
+                        enqueued,
+                        slot: Arc::clone(&slot),
+                        idx: i,
+                    })
+                    .collect();
+                match queue.push_all_within(pending, cfg.queue_limit) {
+                    mpmc::PushOutcome::Pushed => {
+                        m.accepted.inc();
+                        match slot.wait() {
+                            Ok(results) => {
+                                let resp =
+                                    Response::Search(SearchResponse { k: s.k, results });
+                                if proto::write_frame(
+                                    &mut stream,
+                                    &proto::encode_response(&resp),
+                                )
+                                .is_err()
+                                {
+                                    break;
+                                }
+                            }
+                            Err(()) => {
+                                respond_error(
+                                    &mut stream,
+                                    Status::Internal,
+                                    "batch execution failed",
+                                );
+                                break;
+                            }
+                        }
+                    }
+                    mpmc::PushOutcome::OverLimit => {
+                        m.shed_total.inc();
+                        respond_error(
+                            &mut stream,
+                            Status::Overloaded,
+                            &format!("pending-query queue at limit {}", cfg.queue_limit),
+                        );
+                    }
+                    mpmc::PushOutcome::Closed => {
+                        respond_error(&mut stream, Status::Internal, "server shutting down");
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn respond_error(stream: &mut TcpStream, status: Status, msg: &str) {
+    let resp = Response::Error(ErrorResponse { status, msg: msg.to_string() });
+    let _ = proto::write_frame(stream, &proto::encode_response(&resp));
+}
+
+/// Atomically (tmp + rename) rewrite `path` with the global telemetry
+/// snapshot.
+fn write_stats_file(path: &str) {
+    let json = telemetry::global().snapshot().to_json().to_string();
+    let tmp = format!("{path}.tmp");
+    if std::fs::write(&tmp, &json).is_ok() {
+        let _ = std::fs::rename(&tmp, path);
+    }
+}
+
+fn stats_loop(path: &str, stop: &AtomicBool) {
+    write_stats_file(path);
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(500));
+        write_stats_file(path);
+    }
+    write_stats_file(path);
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// An [`AnnIndex`] served over the wire: each search sends one
+/// single-query frame on a pooled connection and blocks for the
+/// response, so the in-process serve harness (arrival schedules,
+/// percentiles, recall) drives a live server unchanged via
+/// `serve-bench --target`.
+///
+/// Work counters (`dist_evals`, `hops`, `rerank_evals`,
+/// `shards_probed`) read 0 through a remote index — they happen on the
+/// server, which exports them through its own telemetry. A shed query
+/// (`Overloaded`) returns an *empty* result list and bumps the global
+/// `client.shed_total` counter; transport and protocol errors panic
+/// (the bench treats a broken target as fatal, and [`AnnIndex`]
+/// returns no `Result`).
+pub struct RemoteIndex {
+    addr: String,
+    info: InfoResponse,
+    metric: crate::config::Metric,
+    pool: Mutex<Vec<TcpStream>>,
+    shed: Arc<telemetry::Counter>,
+}
+
+impl RemoteIndex {
+    /// Connect and exchange `Info` with the server at `addr`.
+    pub fn connect(addr: &str) -> Result<RemoteIndex> {
+        let mut stream = dial(addr)?;
+        proto::write_frame(&mut stream, &proto::encode_request(&Request::Info))
+            .with_context(|| format!("send info request to {addr}"))?;
+        let payload = proto::read_frame(&mut stream)?
+            .ok_or_else(|| anyhow!("server {addr} closed before answering info"))?;
+        let info = match proto::decode_response(&payload)? {
+            Response::Info(i) => i,
+            Response::Error(e) => {
+                return Err(anyhow!("server {addr} answered info with {}: {}", e.status, e.msg))
+            }
+            Response::Search(_) => {
+                return Err(anyhow!("server {addr} answered info with a search response"))
+            }
+        };
+        let metric = info
+            .metric
+            .parse::<crate::config::Metric>()
+            .with_context(|| format!("server {addr} reported metric {:?}", info.metric))?;
+        Ok(RemoteIndex {
+            addr: addr.to_string(),
+            info,
+            metric,
+            pool: Mutex::new(vec![stream]),
+            shed: telemetry::global().counter("client.shed_total"),
+        })
+    }
+
+    /// [`RemoteIndex::connect`], retrying refused connections until
+    /// `timeout` — for racing a just-spawned server process.
+    pub fn connect_with_retries(addr: &str, timeout: Duration) -> Result<RemoteIndex> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Self::connect(addr) {
+                Ok(r) => return Ok(r),
+                Err(e) if Instant::now() < deadline => {
+                    let _ = e; // refused or reset while the server starts
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// The server's `Info` answer.
+    pub fn info(&self) -> &InfoResponse {
+        &self.info
+    }
+
+    fn take_conn(&self) -> Result<TcpStream> {
+        if let Some(s) = self.pool.lock().unwrap_or_else(PoisonError::into_inner).pop() {
+            return Ok(s);
+        }
+        dial(&self.addr)
+    }
+
+    fn put_conn(&self, s: TcpStream) {
+        self.pool.lock().unwrap_or_else(PoisonError::into_inner).push(s);
+    }
+}
+
+fn dial(addr: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect to {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+impl AnnIndex for RemoteIndex {
+    fn len(&self) -> usize {
+        self.info.n as usize
+    }
+
+    fn dim(&self) -> usize {
+        self.info.d as usize
+    }
+
+    fn metric(&self) -> crate::config::Metric {
+        self.metric
+    }
+
+    fn vector(&self, id: u32) -> Vec<f32> {
+        panic!("RemoteIndex cannot fetch vectors (id {id}); keep the corpus local (--data)")
+    }
+
+    fn default_ef(&self) -> usize {
+        self.info.default_ef as usize
+    }
+
+    fn describe(&self) -> String {
+        format!("remote({}, {})", self.addr, self.info.describe)
+    }
+
+    fn make_scratch(&self) -> SearchScratch {
+        SearchScratch::new()
+    }
+
+    fn search_ef_into_excluding(
+        &self,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: u32,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        // the work happens server-side; a remote query reports none
+        scratch.dist_evals = 0;
+        scratch.hops = 0;
+        scratch.rerank_evals = 0;
+        scratch.shards_probed = 0;
+        out.clear();
+        let req = Request::Search(SearchRequest {
+            k: k as u32,
+            ef: ef as u32,
+            rerank: 0,
+            d: self.info.d,
+            queries: q.to_vec(),
+            exclude: vec![if exclude == EMPTY { u32::MAX } else { exclude }],
+        });
+        let mut stream = self.take_conn().expect("dial remote index");
+        let exchanged = (|| -> Result<Response> {
+            proto::write_frame(&mut stream, &proto::encode_request(&req))?;
+            let payload = proto::read_frame(&mut stream)?
+                .ok_or_else(|| anyhow!("server closed the connection mid-search"))?;
+            proto::decode_response(&payload)
+        })();
+        match exchanged {
+            Ok(Response::Search(mut s)) => {
+                assert_eq!(s.results.len(), 1, "one result list per single-query request");
+                self.put_conn(stream);
+                out.append(&mut s.results[0]);
+            }
+            Ok(Response::Error(e)) if e.status == Status::Overloaded => {
+                // shed: empty results, counted for shed-reconciliation
+                self.put_conn(stream);
+                self.shed.inc();
+            }
+            Ok(Response::Error(e)) => panic!("server error ({}): {}", e.status, e.msg),
+            Ok(Response::Info(_)) => panic!("unexpected info response to a search"),
+            Err(e) => panic!("remote search against {} failed: {e:#}", self.addr),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesce_window_clamps_with_flag() {
+        assert_eq!(clamp_coalesce_window(0), (0, false));
+        assert_eq!(clamp_coalesce_window(100), (100, false));
+        assert_eq!(
+            clamp_coalesce_window(MAX_COALESCE_WINDOW_US),
+            (MAX_COALESCE_WINDOW_US, false)
+        );
+        assert_eq!(
+            clamp_coalesce_window(MAX_COALESCE_WINDOW_US + 1),
+            (MAX_COALESCE_WINDOW_US, true)
+        );
+        let before = telemetry::warnings_total();
+        assert_eq!(clamp_coalesce_window_warn(u64::MAX), MAX_COALESCE_WINDOW_US);
+        assert!(telemetry::warnings_total() > before, "clamp must warn");
+    }
+
+    #[test]
+    fn result_slot_fills_out_of_order_and_poisons() {
+        let slot = ResultSlot::new(2);
+        slot.fill(1, vec![(2.0, 7)]);
+        slot.fill(0, vec![(1.0, 3)]);
+        let got = slot.wait().expect("filled slot");
+        assert_eq!(got, vec![vec![(1.0, 3)], vec![(2.0, 7)]]);
+
+        let slot = ResultSlot::new(2);
+        slot.fill(0, vec![]);
+        slot.fail();
+        assert!(slot.wait().is_err(), "poisoned slot must report failure");
+    }
+
+    #[test]
+    fn server_config_defaults_are_sane() {
+        let cfg = ServerConfig::default();
+        assert!(cfg.coalesce_window_us <= MAX_COALESCE_WINDOW_US);
+        assert!(cfg.queue_limit > 0);
+        assert_eq!(cfg.debug_slow_shard_ms, 0);
+    }
+}

@@ -44,6 +44,12 @@
 //! | `block_cache.bytes_read` | counter | bytes faulted from disk |
 //! | `block_cache.resident_bytes` | gauge | bytes currently cached |
 //! | `shard_cache.hits` / `.misses` / `.evictions` / `.rejected_admissions` / `.bytes_read` | counter | whole-shard residency, same meanings |
+//! | `server.accepted` | counter | requests admitted by the TCP front end |
+//! | `server.shed_total` | counter | requests shed with `Overloaded` (queue at `--queue-limit`) |
+//! | `server.connections` | counter | TCP connections accepted |
+//! | `server.coalesced_batch_size` | histogram | queries per coalesced executor batch |
+//! | `server.queue_wait_us` | histogram | pending-queue wait per admitted query (µs) |
+//! | `client.shed_total` | counter | `Overloaded` responses a `RemoteIndex` client observed |
 //! | `warnings_total` | counter | operator warnings emitted ([`warn!`]) |
 
 pub mod hist;

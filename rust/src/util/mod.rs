@@ -4,9 +4,12 @@
 //! closure vendored, so the crate hand-rolls the few pieces that would
 //! normally come from crates.io: a counter-free PRNG ([`rng::Rng`]),
 //! wall-clock timers ([`timer`]), a minimal JSON writer ([`json`]), and a
-//! tiny property-testing harness ([`prop`]) used across the test suite.
+//! tiny property-testing harness ([`prop`]) used across the test suite, and
+//! a closeable MPMC queue ([`mpmc`]) shared by the scatter pool and the
+//! network server.
 
 pub mod json;
+pub mod mpmc;
 pub mod prop;
 pub mod rng;
 pub mod timer;

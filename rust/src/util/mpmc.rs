@@ -1,0 +1,241 @@
+//! A tiny closeable multi-producer/multi-consumer queue.
+//!
+//! Hand-rolled on `Mutex` + `Condvar` (no channel crate in the dependency
+//! closure). The scatter pool ([`crate::search::pool`]) and the network
+//! server ([`crate::search::server`]) both sit on top of it: producers push
+//! work items, a set of consumer threads block in [`Queue::pop`] (or
+//! [`Queue::pop_deadline`] for the server's coalescing window), and
+//! [`Queue::close`] drains the queue then releases every blocked consumer.
+//!
+//! [`Queue::push_all_within`] is the admission-control primitive: it accepts
+//! a whole batch only if the post-push depth stays within a limit, under a
+//! single lock acquisition, so the observable queue depth never overshoots
+//! the configured bound.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, PoisonError};
+use std::time::Instant;
+
+/// Outcome of a bounded push ([`Queue::push_all_within`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// All items were enqueued.
+    Pushed,
+    /// Enqueuing would exceed the depth limit; nothing was enqueued.
+    OverLimit,
+    /// The queue has been closed; nothing was enqueued.
+    Closed,
+}
+
+/// Outcome of a deadline-bounded pop ([`Queue::pop_deadline`]).
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The deadline passed with the queue still empty.
+    TimedOut,
+    /// The queue is closed and drained.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Closeable MPMC FIFO queue.
+pub struct Queue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+}
+
+impl<T> Default for Queue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Queue<T> {
+    pub fn new() -> Self {
+        Queue {
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Enqueue one item. Returns `false` (dropping the item) if the queue is
+    /// closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.lock();
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Enqueue all of `items` iff the resulting depth stays `<= limit`
+    /// (`limit == 0` means unbounded). All-or-nothing under one lock.
+    pub fn push_all_within(&self, items: Vec<T>, limit: usize) -> PushOutcome {
+        let n = items.len();
+        let mut st = self.lock();
+        if st.closed {
+            return PushOutcome::Closed;
+        }
+        if limit > 0 && st.items.len() + n > limit {
+            return PushOutcome::OverLimit;
+        }
+        st.items.extend(items);
+        drop(st);
+        if n == 1 {
+            self.ready.notify_one();
+        } else if n > 1 {
+            self.ready.notify_all();
+        }
+        PushOutcome::Pushed
+    }
+
+    /// Blocking dequeue. Returns `None` once the queue is closed *and*
+    /// drained (items pushed before `close` are still delivered).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking dequeue.
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().items.pop_front()
+    }
+
+    /// Dequeue, waiting until `deadline` at most.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _timeout) = self
+                .ready
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+
+    /// Close the queue: future pushes are rejected; consumers drain the
+    /// remaining items and then observe closure.
+    pub fn close(&self) {
+        let mut st = self.lock();
+        st.closed = true;
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_close_drains() {
+        let q = Queue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.close();
+        assert!(!q.push(3), "push after close must be rejected");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_all_within_is_all_or_nothing() {
+        let q = Queue::new();
+        assert_eq!(q.push_all_within(vec![1, 2, 3], 4), PushOutcome::Pushed);
+        assert_eq!(q.push_all_within(vec![4, 5], 4), PushOutcome::OverLimit);
+        assert_eq!(q.len(), 3, "rejected batch must not be partially enqueued");
+        assert_eq!(q.push_all_within(vec![4], 4), PushOutcome::Pushed);
+        assert_eq!(q.push_all_within(vec![5], 0), PushOutcome::Pushed);
+        q.close();
+        assert_eq!(q.push_all_within(vec![6], 0), PushOutcome::Closed);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_then_delivers() {
+        let q: Queue<u32> = Queue::new();
+        let t0 = Instant::now();
+        match q.pop_deadline(t0 + Duration::from_millis(10)) {
+            Pop::TimedOut => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        q.push(7);
+        match q.pop_deadline(Instant::now() + Duration::from_millis(10)) {
+            Pop::Item(v) => assert_eq!(v, 7),
+            other => panic!("expected Item, got {other:?}"),
+        }
+        q.close();
+        match q.pop_deadline(Instant::now() + Duration::from_millis(10)) {
+            Pop::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blocking_pop_wakes_across_threads() {
+        let q: Arc<Queue<usize>> = Arc::new(Queue::new());
+        let n = 64;
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = 0usize;
+                    while q.pop().is_some() {
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..n {
+            assert!(q.push(i));
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, n, "every pushed item is delivered exactly once");
+    }
+}

@@ -407,6 +407,119 @@ fn cli_telemetry_trace_and_metrics_export() {
     std::fs::remove_dir_all(dir).ok();
 }
 
+/// Kills the `gnnd serve` child even when an assertion fails mid-test.
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn cli_serve_capacity_and_network_bench() {
+    let dir = tmpdir();
+    let data = dir.join("d.dsb").to_string_lossy().into_owned();
+    let graph = dir.join("g.knng").to_string_lossy().into_owned();
+    let stats = dir.join("server_stats.json").to_string_lossy().into_owned();
+
+    let (ok, out) = run(&["gen-data", "--name", "clustered", "--n", "500", "--out", &data]);
+    assert!(ok, "gen-data failed: {out}");
+    let (ok, out) = run(&[
+        "build", "--data", &data, "--out", &graph, "--set", "k=10", "--set", "p=5",
+        "--set", "max_iter=5",
+    ]);
+    assert!(ok, "build failed: {out}");
+
+    // bad values are rejected before any socket is bound
+    let (ok, out) = run(&[
+        "serve", "--data", &data, "--graph", &graph, "--listen", "127.0.0.1:0",
+        "--coalesce-window", "abc",
+    ]);
+    assert!(!ok, "non-numeric --coalesce-window must be rejected: {out}");
+    let (ok, out) = run(&[
+        "serve", "--data", &data, "--graph", &graph, "--listen", "127.0.0.1:0",
+        "--queue-limit", "-3",
+    ]);
+    assert!(!ok, "negative --queue-limit must be rejected: {out}");
+    let (ok, out) = run(&["capacity", "--data", &data, "--graph", &graph, "--slo-ms", "0"]);
+    assert!(!ok, "--slo-ms 0 must be rejected: {out}");
+    assert!(out.contains("slo-ms"), "unhelpful error: {out}");
+    let (ok, out) = run(&["capacity", "--data", &data, "--graph", &graph, "--iters", "0"]);
+    assert!(!ok, "--iters 0 must be rejected: {out}");
+    let (ok, out) = run(&["serve-bench", "--target", "127.0.0.1:1", "--ef", "32"]);
+    assert!(!ok, "--target without --data must be rejected: {out}");
+    assert!(out.contains("--data"), "unhelpful error: {out}");
+    let (ok, out) = run(&[
+        "serve-bench", "--target", "127.0.0.1:1", "--data", &data, "--shards", "/nope",
+    ]);
+    assert!(!ok, "--target with --shards must be rejected: {out}");
+
+    // in-process capacity search prints the parseable rate lines
+    let (ok, out) = run(&[
+        "capacity", "--data", &data, "--graph", &graph, "--ef", "32", "--queries", "40",
+        "--distinct", "20", "--threads", "2", "--iters", "2", "--slo-ms", "100",
+    ]);
+    assert!(ok, "capacity failed: {out}");
+    assert!(out.contains("capacity_qps="), "no capacity line: {out}");
+    assert!(out.contains("closed_loop_qps="), "no closed-loop line: {out}");
+
+    // a real server process on an ephemeral port, announced on stdout
+    let mut child = std::process::Command::new(bin())
+        .args([
+            "serve", "--data", &data, "--graph", &graph, "--listen", "127.0.0.1:0",
+            "--coalesce-window", "200", "--queue-limit", "256", "--stats-out", &stats,
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn gnnd serve");
+    let mut lines = std::io::BufReader::new(child.stdout.take().unwrap());
+    let child = KillOnDrop(child);
+    let addr = {
+        use std::io::BufRead;
+        let mut addr = None;
+        for _ in 0..10 {
+            let mut line = String::new();
+            if lines.read_line(&mut line).unwrap() == 0 {
+                break;
+            }
+            if let Some(rest) = line.trim().strip_prefix("listening on ") {
+                addr = Some(rest.to_string());
+                break;
+            }
+        }
+        addr.expect("server never announced its address")
+    };
+
+    // the bench harness as a network client of the live server
+    let (ok, out) = run(&[
+        "serve-bench", "--target", &addr, "--data", &data, "--ef", "32", "--queries",
+        "60", "--distinct", "30", "--threads", "2",
+    ]);
+    assert!(ok, "serve-bench --target failed: {out}");
+    assert!(out.contains("recall@10"), "no recall column: {out}");
+    assert!(out.contains("ef=32"), "missing row: {out}");
+    assert!(out.contains("remote("), "index description must show the remote: {out}");
+    assert!(out.contains("shed"), "no shed column: {out}");
+
+    // capacity against the live server
+    let (ok, out) = run(&[
+        "capacity", "--target", &addr, "--data", &data, "--ef", "32", "--queries", "30",
+        "--distinct", "15", "--threads", "2", "--iters", "1", "--slo-ms", "200",
+    ]);
+    assert!(ok, "capacity --target failed: {out}");
+    assert!(out.contains("capacity_qps="), "no capacity line: {out}");
+
+    // the stats sidecar survives a hard kill of the server process
+    std::thread::sleep(std::time::Duration::from_millis(700));
+    drop(child);
+    let text = std::fs::read_to_string(&stats).expect("server wrote no stats file");
+    assert!(text.contains("server.accepted"), "stats missing server counters: {text}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
 #[test]
 fn cli_rejects_bad_input() {
     let (ok, _) = run(&["bogus-subcommand"]);

@@ -1,0 +1,516 @@
+//! Integration: the `gnnd serve` TCP front end — protocol-level
+//! request/response over a real loopback socket, typed rejection of
+//! malformed frames (the server must never panic on client bytes),
+//! coalescing-window parity against the sequential sharded path, and
+//! deterministic admission control with exact shed reconciliation.
+//!
+//! Tests that create servers all serialize on [`GATE`]: the telemetry
+//! registry is process-global, and the admission test asserts *exact*
+//! `server.accepted` / `server.shed_total` / `client.shed_total`
+//! deltas — a server running in a parallel test would skew them.
+
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex, PoisonError};
+
+use gnnd::config::Metric;
+use gnnd::dataset::{synth, Dataset};
+use gnnd::gnnd::{GnndParams, NativeEngine};
+use gnnd::graph::EMPTY;
+use gnnd::merge::outofcore::{
+    build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore,
+};
+use gnnd::search::proto::{self, Request, Response, SearchRequest, Status};
+use gnnd::search::server::{RemoteIndex, Server, ServerConfig, ServerHandle};
+use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::{AnnIndex, SearchParams, SearchScratch};
+use gnnd::telemetry;
+use gnnd::util::json::Json;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-server-{tag}-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A trait-only exact-scan index (the same shape as serve.rs's test
+/// double): cheap to build, exactly verifiable, and a layout the
+/// server module never heard of.
+struct FlatIndex {
+    ds: Dataset,
+}
+
+impl AnnIndex for FlatIndex {
+    fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.d
+    }
+
+    fn metric(&self) -> Metric {
+        self.ds.metric
+    }
+
+    fn vector(&self, id: u32) -> Vec<f32> {
+        self.ds.vec(id as usize).to_vec()
+    }
+
+    fn default_ef(&self) -> usize {
+        32
+    }
+
+    fn describe(&self) -> String {
+        format!("flat-exact({} x {})", self.ds.len(), self.ds.d)
+    }
+
+    fn make_scratch(&self) -> SearchScratch {
+        SearchScratch::new()
+    }
+
+    fn search_ef_into_excluding(
+        &self,
+        q: &[f32],
+        k: usize,
+        _ef: usize,
+        exclude: u32,
+        _scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let mut all: Vec<(f32, u32)> = (0..self.ds.len() as u32)
+            .filter(|&i| i != exclude)
+            .map(|i| (self.ds.dist_to(i as usize, q), i))
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.clear();
+        out.extend(all.into_iter().take(k));
+    }
+}
+
+/// Run `f` against a live loopback server over `index`. The shutdown
+/// guard fires even when `f` panics, so a failing assertion fails the
+/// test instead of hanging the accept loop forever.
+fn with_server<F: FnOnce(SocketAddr)>(index: &dyn AnnIndex, cfg: ServerConfig, f: F) {
+    struct Guard(ServerHandle);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            self.0.shutdown();
+        }
+    }
+    let srv = Server::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = srv.local_addr().unwrap();
+    let handle = srv.handle().unwrap();
+    crossbeam_utils::thread::scope(|s| {
+        let srv = &srv;
+        s.builder()
+            .name("test-server".to_string())
+            .spawn(move |_| srv.run(index).unwrap())
+            .unwrap();
+        let _guard = Guard(handle);
+        f(addr);
+    })
+    .unwrap();
+}
+
+fn exact(flat: &FlatIndex, q: usize, k: usize, exclude: u32) -> Vec<(f32, u32)> {
+    let mut out = Vec::new();
+    flat.search_ef_into_excluding(
+        flat.ds.vec(q),
+        k,
+        0,
+        exclude,
+        &mut flat.make_scratch(),
+        &mut out,
+    );
+    out
+}
+
+#[test]
+fn info_and_multi_query_search_over_loopback() {
+    let _gate = gate();
+    let flat = FlatIndex { ds: synth::uniform(150, 5, 60) };
+    with_server(&flat, ServerConfig::default(), |addr| {
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_frame(&mut s, &proto::encode_request(&Request::Info)).unwrap();
+        let payload = proto::read_frame(&mut s).unwrap().expect("info response frame");
+        let info = match proto::decode_response(&payload).unwrap() {
+            Response::Info(i) => i,
+            other => panic!("expected info response, got {other:?}"),
+        };
+        assert_eq!(info.n, 150);
+        assert_eq!(info.d, 5);
+        assert_eq!(info.default_ef, 32);
+        assert_eq!(info.metric, flat.ds.metric.to_string());
+        assert!(info.describe.contains("flat-exact"), "describe: {}", info.describe);
+
+        // a multi-query frame (RemoteIndex never sends one) rides a
+        // single coalesced pass; row 1 excludes itself
+        let rows = [3usize, 77, 149];
+        let mut queries = Vec::new();
+        for &q in &rows {
+            queries.extend_from_slice(flat.ds.vec(q));
+        }
+        let req = Request::Search(SearchRequest {
+            k: 4,
+            ef: 0,
+            rerank: 0,
+            d: 5,
+            queries,
+            exclude: vec![u32::MAX, 77, u32::MAX],
+        });
+        proto::write_frame(&mut s, &proto::encode_request(&req)).unwrap();
+        let payload = proto::read_frame(&mut s).unwrap().expect("search response frame");
+        let resp = match proto::decode_response(&payload).unwrap() {
+            Response::Search(r) => r,
+            other => panic!("expected search response, got {other:?}"),
+        };
+        assert_eq!(resp.k, 4);
+        assert_eq!(resp.results.len(), 3);
+        for (i, &q) in rows.iter().enumerate() {
+            let exclude = if i == 1 { 77 } else { EMPTY };
+            assert_eq!(
+                resp.results[i],
+                exact(&flat, q, 4, exclude),
+                "server answer diverged from exact scan on row {i}"
+            );
+        }
+
+        // well-formed but inconsistent: typed BadRequest, and the
+        // connection survives to serve the next request
+        let bad = Request::Search(SearchRequest {
+            k: 2,
+            ef: 0,
+            rerank: 0,
+            d: 4,
+            queries: vec![0.0; 4],
+            exclude: vec![u32::MAX],
+        });
+        proto::write_frame(&mut s, &proto::encode_request(&bad)).unwrap();
+        let payload = proto::read_frame(&mut s).unwrap().expect("error response frame");
+        match proto::decode_response(&payload).unwrap() {
+            Response::Error(e) => {
+                assert_eq!(e.status, Status::BadRequest);
+                assert!(e.msg.contains("dimension"), "unhelpful error: {}", e.msg);
+            }
+            other => panic!("expected error response, got {other:?}"),
+        }
+        proto::write_frame(&mut s, &proto::encode_request(&Request::Info)).unwrap();
+        assert!(
+            proto::read_frame(&mut s).unwrap().is_some(),
+            "dimension mismatch must not kill the connection"
+        );
+    });
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_server_survives() {
+    let _gate = gate();
+    let flat = FlatIndex { ds: synth::uniform(80, 4, 61) };
+    with_server(&flat, ServerConfig::default(), |addr| {
+        // every case gets a fresh connection (the server closes after a
+        // protocol violation) and must read back a typed BadRequest —
+        // never a hang, never a server panic
+        let expect_bad = |bytes: &[u8], half_close: bool, tag: &str| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            {
+                use std::io::Write;
+                s.write_all(bytes).unwrap();
+                s.flush().unwrap();
+            }
+            if half_close {
+                s.shutdown(std::net::Shutdown::Write).unwrap();
+            }
+            let payload = proto::read_frame(&mut s)
+                .unwrap()
+                .unwrap_or_else(|| panic!("{tag}: server closed without a typed error"));
+            match proto::decode_response(&payload).unwrap() {
+                Response::Error(e) => {
+                    assert_eq!(e.status, Status::BadRequest, "{tag}: wrong status: {}", e.msg)
+                }
+                other => panic!("{tag}: expected error response, got {other:?}"),
+            }
+        };
+
+        // oversized length prefix: rejected before any allocation
+        expect_bad(
+            &((proto::MAX_FRAME_BYTES + 1) as u32).to_le_bytes(),
+            false,
+            "oversized",
+        );
+        // length below the mandatory 8-byte payload header
+        expect_bad(&4u32.to_le_bytes(), false, "sub-header length");
+        // frame cut mid-payload, then EOF
+        let good = proto::encode_request(&Request::Search(SearchRequest {
+            k: 3,
+            ef: 0,
+            rerank: 0,
+            d: 4,
+            queries: vec![0.5; 8],
+            exclude: vec![u32::MAX, u32::MAX],
+        }));
+        expect_bad(&good[..good.len() / 2], true, "truncated");
+        // bad magic / bad version / unknown kind, each in a full frame
+        let mut bad_magic = good.clone();
+        bad_magic[4] ^= 0xFF;
+        expect_bad(&bad_magic, false, "bad magic");
+        let mut bad_version = good.clone();
+        bad_version[8] = 0x7F;
+        expect_bad(&bad_version, false, "bad version");
+        let mut bad_kind = good.clone();
+        bad_kind[10] = 0x77;
+        expect_bad(&bad_kind, false, "unknown kind");
+        // nq inflated past the bytes actually present (lying counts)
+        let mut inflated = good.clone();
+        let nq_off = 4 + proto::HEADER_BYTES + 12 + 4; // prefix+header+k/ef/rerank+d
+        inflated[nq_off] = 200;
+        expect_bad(&inflated, false, "nq inflation");
+
+        // after all that abuse a fresh connection still serves
+        let mut s = TcpStream::connect(addr).unwrap();
+        proto::write_frame(&mut s, &proto::encode_request(&Request::Info)).unwrap();
+        let payload = proto::read_frame(&mut s).unwrap().expect("server died on garbage");
+        assert!(matches!(
+            proto::decode_response(&payload).unwrap(),
+            Response::Info(_)
+        ));
+    });
+}
+
+/// The tentpole acceptance grid: server answers are **bit-identical**
+/// to the sequential in-process `ShardedIndex` at every coalescing
+/// window — across probe caps, executor thread counts, and the
+/// quantized-with-rerank backing — while concurrent client connections
+/// force real coalescing. Extends the pool-parity grid of
+/// `tests/sharded.rs` one layer up, through the socket.
+#[test]
+fn coalescing_parity_grid_matches_sequential_sharded() {
+    let _gate = gate();
+    let ds = synth::clustered(480, 8, 62);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("paritygrid");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    quantize_store(&dir).unwrap();
+
+    let qids: Vec<usize> = (0..ds.len()).step_by(37).collect();
+    for (quantize, rerank) in [(false, 1usize), (true, 4)] {
+        for probe in [0usize, 2] {
+            let sp = SearchParams::default().with_ef(48).with_rerank(rerank);
+            let store =
+                ShardStore::with_options(&dir, 0, ResidencyMode::Shard, quantize).unwrap();
+            let index = ShardedIndex::from_store(store, sp, probe, 1).unwrap();
+            // sequential in-process expectations
+            let mut scratch = index.make_scratch();
+            let mut out = Vec::new();
+            let expected: Vec<Vec<(f32, u32)>> = qids
+                .iter()
+                .map(|&q| {
+                    index.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut scratch,
+                        &mut out,
+                    );
+                    out.clone()
+                })
+                .collect();
+            for window_us in [0u64, 100, 5000] {
+                for exec_threads in [1usize, 4] {
+                    let scfg = ServerConfig {
+                        coalesce_window_us: window_us,
+                        queue_limit: 4096,
+                        exec_threads,
+                        debug_slow_shard_ms: 0,
+                        stats_out: None,
+                    };
+                    with_server(&index, scfg, |addr| {
+                        let remote = RemoteIndex::connect(&addr.to_string()).unwrap();
+                        let mut got: Vec<Vec<(f32, u32)>> = vec![Vec::new(); qids.len()];
+                        crossbeam_utils::thread::scope(|s| {
+                            let handles: Vec<_> = (0..3)
+                                .map(|chunk| {
+                                    let remote = &remote;
+                                    let qids = &qids;
+                                    let ds = &ds;
+                                    s.spawn(move |_| {
+                                        let mut scratch = remote.make_scratch();
+                                        let mut out = Vec::new();
+                                        let mut mine = Vec::new();
+                                        for (i, &q) in qids.iter().enumerate() {
+                                            if i % 3 != chunk {
+                                                continue;
+                                            }
+                                            remote.search_ef_into_excluding(
+                                                ds.vec(q),
+                                                10,
+                                                0,
+                                                q as u32,
+                                                &mut scratch,
+                                                &mut out,
+                                            );
+                                            assert_eq!(
+                                                scratch.dist_evals, 0,
+                                                "remote work counters must read 0"
+                                            );
+                                            mine.push((i, out.clone()));
+                                        }
+                                        mine
+                                    })
+                                })
+                                .collect();
+                            for h in handles {
+                                for (i, r) in h.join().unwrap() {
+                                    got[i] = r;
+                                }
+                            }
+                        })
+                        .unwrap();
+                        for (i, exp) in expected.iter().enumerate() {
+                            assert_eq!(
+                                &got[i], exp,
+                                "server diverged from sequential (quantize={quantize} \
+                                 rerank={rerank} probe={probe} window={window_us}µs \
+                                 exec_threads={exec_threads}) on query {}",
+                                qids[i]
+                            );
+                        }
+                    });
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Admission control under a deterministically slow batcher
+/// (`debug_slow_shard_ms`): shed requests answer `Overloaded` (surfacing
+/// as empty result lists through [`RemoteIndex`]), accepted requests
+/// answer exactly, and the server-side `shed_total` reconciles **exactly**
+/// with the sheds the clients observed.
+#[test]
+fn admission_control_sheds_with_exact_reconciliation() {
+    let _gate = gate();
+    let flat = FlatIndex { ds: synth::uniform(200, 6, 63) };
+    let scfg = ServerConfig {
+        coalesce_window_us: 0,
+        queue_limit: 1,
+        exec_threads: 1,
+        debug_slow_shard_ms: 100,
+        stats_out: None,
+    };
+    let g = telemetry::global();
+    let acc0 = g.counter("server.accepted").get();
+    let shed0 = g.counter("server.shed_total").get();
+    let cshed0 = g.counter("client.shed_total").get();
+
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 3;
+    let observed_shed = AtomicUsize::new(0);
+    let observed_ok = AtomicUsize::new(0);
+    with_server(&flat, scfg, |addr| {
+        let remote = RemoteIndex::connect(&addr.to_string()).unwrap();
+        let barrier = Barrier::new(CLIENTS);
+        crossbeam_utils::thread::scope(|s| {
+            for t in 0..CLIENTS {
+                let remote = &remote;
+                let barrier = &barrier;
+                let flat = &flat;
+                let observed_shed = &observed_shed;
+                let observed_ok = &observed_ok;
+                s.spawn(move |_| {
+                    let mut scratch = remote.make_scratch();
+                    let mut out = Vec::new();
+                    barrier.wait();
+                    for i in 0..PER_CLIENT {
+                        let q = (t * 17 + i * 5) % flat.ds.len();
+                        remote.search_ef_into_excluding(
+                            flat.ds.vec(q),
+                            5,
+                            0,
+                            EMPTY,
+                            &mut scratch,
+                            &mut out,
+                        );
+                        if out.is_empty() {
+                            observed_shed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            assert_eq!(
+                                out,
+                                exact(flat, q, 5, EMPTY),
+                                "accepted query {q} answered wrong under load"
+                            );
+                            observed_ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+    });
+
+    let shed = observed_shed.load(Ordering::Relaxed) as u64;
+    let ok = observed_ok.load(Ordering::Relaxed) as u64;
+    assert_eq!(shed + ok, (CLIENTS * PER_CLIENT) as u64, "every request must resolve");
+    assert!(shed > 0, "queue_limit=1 under {CLIENTS} concurrent clients must shed");
+    assert!(ok > 0, "the first push into an empty queue is always admitted");
+    assert_eq!(
+        g.counter("server.shed_total").get() - shed0,
+        shed,
+        "server sheds must reconcile exactly with client-observed sheds"
+    );
+    assert_eq!(
+        g.counter("client.shed_total").get() - cshed0,
+        shed,
+        "RemoteIndex must count exactly the Overloaded responses it saw"
+    );
+    assert_eq!(
+        g.counter("server.accepted").get() - acc0,
+        ok,
+        "accepted count must match successfully answered requests"
+    );
+}
+
+/// `--stats-out`: the server keeps an atomically-rewritten telemetry
+/// snapshot on disk; after shutdown it parses and carries the server
+/// metrics (this is what CI reads after killing the serve process).
+#[test]
+fn stats_out_snapshot_parses_and_carries_server_metrics() {
+    let _gate = gate();
+    let flat = FlatIndex { ds: synth::uniform(100, 4, 64) };
+    let dir = tmpdir("stats");
+    let path = dir.join("server_stats.json");
+    let scfg = ServerConfig {
+        stats_out: Some(path.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    with_server(&flat, scfg, |addr| {
+        let remote = RemoteIndex::connect(&addr.to_string()).unwrap();
+        let mut scratch = remote.make_scratch();
+        let mut out = Vec::new();
+        remote.search_ef_into_excluding(flat.ds.vec(0), 5, 0, EMPTY, &mut scratch, &mut out);
+        assert_eq!(out.len(), 5);
+    });
+    let text = std::fs::read_to_string(&path).unwrap();
+    Json::parse(&text).unwrap();
+    for key in ["server.accepted", "server.connections", "server.coalesced_batch_size"] {
+        assert!(text.contains(key), "stats snapshot missing {key}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
