@@ -16,7 +16,12 @@
 //! ones) — flat-vs-hierarchy at equal ef is the entry-quality story,
 //! and those curves are additionally dumped machine-readable to
 //! `BENCH_8.json` at the repo root (recall@10 / qps / hops /
-//! dist_evals / probe_mean per sweep point). A final *open-loop*
+//! dist_evals / probe_mean per sweep point). A product-quantized
+//! sweep (`--pq-m d/8`, per-query ADC lookup tables, exact f32
+//! rerank) joins the f32 and scalar-quant curves in `BENCH_10.json`,
+//! which also records each configuration's vector payload bytes, the
+//! `simd` feature state and per-kernel dispatch-vs-scalar
+//! micro-throughput. A final *open-loop*
 //! sweep probes the monolithic index's closed-loop capacity, then
 //! offers 60% and 150% of it on a seeded Poisson schedule — the
 //! underloaded point shows queue delays near zero, the overloaded one
@@ -36,7 +41,8 @@
 use gnnd::dataset::synth;
 use gnnd::gnnd::{GnndParams, NativeEngine};
 use gnnd::merge::outofcore::{
-    build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore,
+    build_out_of_core, pq_quantize_store, quantize_store, OutOfCoreConfig, ResidencyMode,
+    ShardCompression, ShardStore,
 };
 use gnnd::metrics::Report;
 use gnnd::search::serve::{self, ServeConfig};
@@ -98,6 +104,9 @@ fn main() {
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
     }
     let mut bench8 = vec![("mono-kmeans16", report)];
+    // BENCH_10.json rows: (tag, vector payload bytes, sweep points) for
+    // the precision story — f32 vs scalar-quant vs product-quantized
+    let mut bench10: Vec<(&str, usize, Json)> = Vec::new();
 
     // ---- monolithic hierarchy entries: the same graph seeded by a
     // coarse-to-fine descent instead of fixed k-means entries — equal-ef
@@ -141,6 +150,7 @@ fn main() {
         Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
     }
+    bench10.push(("f32-flat", n * ds.d * 4, bench8_points(&report)));
     bench8.push(("sharded-flat", report));
     drop(sharded);
 
@@ -213,7 +223,39 @@ fn main() {
         Err(e) => println!("{}\n[save failed: {e}]", report.render()),
     }
     println!("residency at quantized block budget 50%: {}", res.to_json());
+    bench10.push(("scalar-rerank4", n * ds.d, bench8_points(&report)));
     drop(quant);
+
+    // ---- product-quantized variant: same budget/granularity/rerank,
+    // but each row is m = d/8 PQ codes scored through a per-query ADC
+    // lookup table (m table gathers per distance) — 4x less payload
+    // than even the u8 codes, with the same f32 shards as the
+    // exact-rerank source. Recall vs the scalar curve above is the PQ
+    // story BENCH_10.json records ----
+    let t = Timer::start();
+    let pq_m = (ds.d / 8).max(1);
+    let pp = pq_quantize_store(&dir, pq_m).expect("pq-quantize shard store");
+    eprintln!("pq-quantized shard store (m={}) in {:.1}s", pp.m(), t.secs());
+    let pstore =
+        ShardStore::with_compression(&dir, budget, ResidencyMode::block(), ShardCompression::Pq)
+            .expect("pq store");
+    let pq_idx = ShardedIndex::from_store(pstore, cfg.params.clone().with_rerank(4), 2, 1)
+        .expect("pq index");
+    let cfg_pq = ServeConfig { params: cfg.params.clone().with_rerank(4), ..cfg.clone() };
+    let mut ds_pq = ds.clone();
+    ds_pq.name = format!("{} sharded pq50 rerank4", ds.name);
+    let report = serve::run_sweep_on(&pq_idx, &ds_pq, &cfg_pq).expect("pq sweep");
+    let res = pq_idx.residency();
+    match report.save_json("results") {
+        Ok(path) => println!("{}\n[saved {}]", report.render(), path.display()),
+        Err(e) => println!("{}\n[save failed: {e}]", report.render()),
+    }
+    println!("residency at pq block budget 50%: {}", res.to_json());
+    // payload: m code bytes per row plus one copy of the shared
+    // codebooks (256 centroids x d floats; every shard stores the
+    // same fitted code space)
+    bench10.push(("pq-rerank4", n * pq_m + 1024 * ds.d + 4 * pq_m, bench8_points(&report)));
+    drop(pq_idx);
 
     // ---- hierarchy entries + adaptive routing over the same shards:
     // per-shard `hier_<s>.bin` sidecars (built on this first open,
@@ -373,5 +415,96 @@ fn main() {
     match std::fs::write(path, out.to_string()) {
         Ok(()) => println!("[saved {path}]"),
         Err(e) => println!("[BENCH_8.json save failed: {e}]"),
+    }
+
+    // ---- kernel micro-throughput: the dispatch path (AVX2/NEON when
+    // built with --features simd and the CPU has them, scalar
+    // otherwise) vs the forced-scalar reference on serving-shaped
+    // buffers — the per-kernel speedup recorded next to the
+    // end-to-end precision sweeps ----
+    use std::hint::black_box;
+    let d = ds.d;
+    let av: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    let bv: Vec<f32> = (0..d).map(|i| (i as f32 * 0.53).cos()).collect();
+    let au: Vec<u8> = (0..d).map(|i| (i * 37 % 251) as u8).collect();
+    let bu: Vec<u8> = (0..d).map(|i| (i * 53 % 251) as u8).collect();
+    let lut: Vec<f32> = (0..pq_m * 256).map(|i| i as f32 * 1e-3).collect();
+    let codes: Vec<u8> = (0..pq_m).map(|i| (i * 97 % 256) as u8).collect();
+    let iters: usize = 2_000_000;
+    let mut time = |f: &mut dyn FnMut() -> f64| {
+        let t = Timer::start();
+        let mut acc = 0.0f64;
+        for _ in 0..iters {
+            acc += f();
+        }
+        black_box(acc);
+        iters as f64 / t.secs()
+    };
+    use gnnd::distance as dk;
+    type Kernel<'a> = Box<dyn FnMut() -> f64 + 'a>;
+    let mut cases: Vec<(&str, Kernel<'_>, Kernel<'_>)> = vec![
+        (
+            "l2_sq",
+            Box::new(|| dk::l2_sq(black_box(&av), black_box(&bv)) as f64),
+            Box::new(|| dk::l2_sq_scalar(black_box(&av), black_box(&bv)) as f64),
+        ),
+        (
+            "dot",
+            Box::new(|| dk::dot(black_box(&av), black_box(&bv)) as f64),
+            Box::new(|| dk::dot_scalar(black_box(&av), black_box(&bv)) as f64),
+        ),
+        (
+            "l2_sq_u8",
+            Box::new(|| dk::l2_sq_u8(black_box(&au), black_box(&bu)) as f64),
+            Box::new(|| dk::l2_sq_u8_scalar(black_box(&au), black_box(&bu)) as f64),
+        ),
+        (
+            "pq_lut_sum",
+            Box::new(|| dk::pq_lut_sum(black_box(&lut), black_box(&codes)) as f64),
+            Box::new(|| dk::pq_lut_sum_scalar(black_box(&lut), black_box(&codes)) as f64),
+        ),
+    ];
+    let mut kernels = Json::obj();
+    for (name, dispatch, scalar) in cases.iter_mut() {
+        let disp = time(dispatch.as_mut());
+        let scal = time(scalar.as_mut());
+        println!(
+            "kernel {name}: dispatch {:.1} Mops, scalar {:.1} Mops ({:.2}x)",
+            disp / 1e6,
+            scal / 1e6,
+            disp / scal
+        );
+        kernels = kernels.set(
+            *name,
+            Json::obj()
+                .set("dispatch_mops", disp / 1e6)
+                .set("scalar_mops", scal / 1e6)
+                .set("speedup", disp / scal),
+        );
+    }
+
+    // ---- BENCH_10.json: the precision sweeps (f32 / scalar-quant /
+    // product-quantized, each with its vector payload bytes) plus the
+    // kernel table — the PR 10 artifact a driver diffs to see the
+    // recall/qps/footprint trade and the simd win in one file ----
+    let mut sweeps10 = Json::obj();
+    for (tag, bytes, points) in bench10 {
+        sweeps10 = sweeps10
+            .set(tag, Json::obj().set("dataset_bytes", bytes).set("points", points));
+    }
+    let out = Json::obj()
+        .set("bench", "qps_search")
+        .set("scale", format!("{scale:?}"))
+        .set("n", n)
+        .set("d", ds.d)
+        .set("k", cfg.k)
+        .set("pq_m", pq_m)
+        .set("simd", cfg!(feature = "simd"))
+        .set("sweeps", sweeps10)
+        .set("kernels", kernels);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_10.json");
+    match std::fs::write(path, out.to_string()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => println!("[BENCH_10.json save failed: {e}]"),
     }
 }

@@ -64,6 +64,29 @@
 //! [`read_dsb_quantized`] additionally attaches a paged full-precision
 //! v2 sidecar for the exact rerank phase of two-phase search.
 //!
+//! **p1** (product-quantized; written by [`write_dsb_pq_with`] /
+//! `gnnd quantize --pq-m M`) — the v2 layout with m-byte PQ code rows
+//! and the [`PqParams`] codebooks between header and data:
+//!
+//! ```text
+//! offset         field
+//!      0         magic        0x4453_5031 ("DSP1")
+//!      4         d            vector dimensionality
+//!      8         n            number of rows
+//!     12         metric       same codes as v2
+//!     16         row_stride   bytes per row, = m (subquantizer count)
+//!     20         block_rows   writer's block-size hint
+//!     24         ksub         m u32 (fitted centroids per subquantizer)
+//!     24+4m      codebooks    256*d f32, subspace-contiguous (see
+//!                             [`PqParams`]; slots past ksub are zero)
+//!     24+4m+1024d data        n rows x m bytes
+//! ```
+//!
+//! Readers auto-detect the magic exactly like q1: [`read_dsb`] loads
+//! codes owned, [`read_dsb_paged`] pages them at m bytes per row
+//! (~4d/m× the rows per byte of budget vs. v2), and [`read_dsb_pq`]
+//! attaches the paged full-precision v2 sidecar for exact rerank.
+//!
 //! Both readers validate the header against the actual file length on
 //! open, so truncated or corrupt files fail with the path and expected
 //! vs. actual sizes instead of a `read_exact` EOF mid-load.
@@ -81,14 +104,23 @@ use anyhow::{bail, Context};
 use crate::config::Metric;
 
 use super::store::{
-    self, BlockCache, ExactRows, PagedRows, QuantCodes, QuantFitter, QuantParams, QuantStore,
-    VectorStore, DEFAULT_BLOCK_BYTES,
+    self, BlockCache, ExactRows, PagedRows, PqParams, PqStore, QuantCodes, QuantFitter,
+    QuantParams, QuantStore, VectorStore, DEFAULT_BLOCK_BYTES,
 };
 use super::Dataset;
 
 const DSB_MAGIC_V1: u32 = 0x4453_4231; // "DSB1"
 const DSB_MAGIC_V2: u32 = 0x4453_4232; // "DSB2"
 const DSB_MAGIC_Q1: u32 = 0x4453_5131; // "DSQ1"
+const DSB_MAGIC_P1: u32 = 0x4453_5031; // "DSP1"
+
+/// Training rows sampled when fitting PQ codebooks on a dataset's own
+/// rows (k-means bounds its own seeding sample anyway; past this the
+/// fit stops improving and the streaming passes stop being cheap).
+pub(crate) const PQ_TRAIN_MAX_ROWS: usize = 16 * 1024;
+
+/// Deterministic base seed of `gnnd quantize --pq-m` codebook fits.
+pub const PQ_FIT_SEED: u64 = 0x5051_F17;
 
 /// v2 header length in bytes (q1 shares it; its params sidecar starts
 /// right after).
@@ -288,8 +320,77 @@ pub fn write_dsb_quantized(ds: &Dataset, path: impl AsRef<Path>) -> crate::Resul
     write_dsb_quantized_with(ds, &fit.finish(), path)
 }
 
-/// Parsed `.dsb` header (any version; `version` is 1, 2, or 3 for
-/// q1), with the file length already validated against it.
+/// Fit [`PqParams`] on a stride-sample of `ds`'s rows (at most
+/// [`PQ_TRAIN_MAX_ROWS`], deterministic per `seed`).
+pub fn fit_pq_params(
+    ds: &Dataset,
+    m: usize,
+    seed: u64,
+    threads: usize,
+) -> crate::Result<PqParams> {
+    let n = ds.len();
+    anyhow::ensure!(n > 0, "pq fit needs a non-empty dataset");
+    let step = n.div_ceil(PQ_TRAIN_MAX_ROWS).max(1);
+    let mut sample = Vec::with_capacity(n.div_ceil(step) * ds.d);
+    let mut i = 0;
+    while i < n {
+        ds.with_vec(i, |row| sample.extend_from_slice(row));
+        i += step;
+    }
+    PqParams::fit(&sample, ds.d, m, seed, threads)
+}
+
+/// Write a dataset as a product-quantized `.dsb` p1 file, encoding
+/// every row with the given (already-fitted) `params`. A sharded store
+/// passes the same corpus-fitted codebooks for every shard so one
+/// per-query LUT scores candidates of every probed shard.
+pub fn write_dsb_pq_with(ds: &Dataset, params: &PqParams, path: impl AsRef<Path>) -> crate::Result<()> {
+    anyhow::ensure!(
+        params.d() == ds.d,
+        "pq params dimension {} != dataset dimension {}",
+        params.d(),
+        ds.d
+    );
+    let m = params.m();
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    let block_rows = (DEFAULT_BLOCK_BYTES / m).max(1) as u32;
+    w.write_all(&DSB_MAGIC_P1.to_le_bytes())?;
+    w.write_all(&(ds.d as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&metric_code(ds.metric).to_le_bytes())?;
+    w.write_all(&(m as u32).to_le_bytes())?; // row_stride = m: 1 byte/subspace
+    w.write_all(&block_rows.to_le_bytes())?;
+    let (ksub, centroids) = params.parts();
+    for &k in ksub {
+        w.write_all(&k.to_le_bytes())?;
+    }
+    write_f32s_bulk(&mut w, centroids)?;
+    const STAGE_BYTES: usize = 256 * 1024;
+    let mut codes = Vec::with_capacity(m);
+    let mut buf: Vec<u8> = Vec::with_capacity(STAGE_BYTES + m);
+    for i in 0..ds.len() {
+        ds.with_vec(i, |row| params.encode_into(row, &mut codes));
+        buf.extend_from_slice(&codes);
+        if buf.len() >= STAGE_BYTES {
+            w.write_all(&buf)?;
+            buf.clear();
+        }
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Fit PQ codebooks on `ds`'s own rows and write it as a `.dsb` p1 —
+/// the single-file form of `gnnd quantize --pq-m M`.
+pub fn write_dsb_pq(ds: &Dataset, m: usize, path: impl AsRef<Path>) -> crate::Result<()> {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let params = fit_pq_params(ds, m, PQ_FIT_SEED, threads)?;
+    write_dsb_pq_with(ds, &params, path)
+}
+
+/// Parsed `.dsb` header (any version; `version` is 1, 2, 3 for q1, or
+/// 4 for p1), with the file length already validated against it. For
+/// p1, `row_stride` doubles as the subquantizer count m.
 struct DsbHeader {
     version: u32,
     d: usize,
@@ -365,6 +466,30 @@ fn read_dsb_header(file: &mut File, path: &Path) -> crate::Result<DsbHeader> {
             )?;
             Ok(DsbHeader { version: 3, d, n, metric, data_off, row_stride })
         }
+        DSB_MAGIC_P1 => {
+            anyhow::ensure!(
+                head.len() as u64 >= DSB_V2_HEADER,
+                "truncated .dsb p1 header: {path:?}"
+            );
+            let (d, n) = (word(1) as usize, word(2) as usize);
+            let metric = metric_from_code(word(3))?;
+            let m = word(4) as usize; // row_stride = m
+            anyhow::ensure!(d > 0, "{path:?}: zero dimension");
+            anyhow::ensure!(
+                m >= 1 && m <= d,
+                "{path:?}: pq row stride {m} outside 1..=d ({d}) — unsupported layout"
+            );
+            // ksub words + codebooks sit between header and data
+            let data_off =
+                DSB_V2_HEADER + 4 * m as u64 + 4 * (crate::distance::PQ_KSUB * d) as u64;
+            check_file_len(
+                path,
+                actual,
+                expected_file_len(path, data_off, n, m)?,
+                &format!("p1, n={n} d={d} m={m}"),
+            )?;
+            Ok(DsbHeader { version: 4, d, n, metric, data_off, row_stride: m })
+        }
         _ => bail!("not a .dsb file: {path:?}"),
     }
 }
@@ -376,6 +501,21 @@ fn read_quant_params(file: &mut File, path: &Path, d: usize) -> crate::Result<Qu
     let scale = read_f32s(file, d).with_context(|| format!("read quant scales of {path:?}"))?;
     let offset = read_f32s(file, d).with_context(|| format!("read quant offsets of {path:?}"))?;
     Ok(QuantParams { scale, offset })
+}
+
+/// Read the p1 codebook sidecar (leaves the cursor at the start of the
+/// code rows). `m` comes from the header's row stride.
+fn read_pq_params(file: &mut File, path: &Path, d: usize, m: usize) -> crate::Result<PqParams> {
+    file.seek(SeekFrom::Start(DSB_V2_HEADER))?;
+    let mut ksub = Vec::with_capacity(m);
+    for _ in 0..m {
+        ksub.push(read_u32(file).with_context(|| format!("read pq ksub of {path:?}"))?);
+    }
+    // no BufReader: its readahead would leave the File cursor past the
+    // codebooks, and the owned-codes path reads from the cursor next
+    let centroids = read_f32s(file, crate::distance::PQ_KSUB * d)
+        .with_context(|| format!("read pq codebooks of {path:?}"))?;
+    PqParams::from_parts(d, m, ksub, centroids)
 }
 
 fn dsb_name(path: &Path) -> String {
@@ -393,6 +533,9 @@ pub fn read_dsb(path: impl AsRef<Path>) -> crate::Result<Dataset> {
     let h = read_dsb_header(&mut file, path)?;
     if h.version == 3 {
         return finish_q1(file, h, path, None, None);
+    }
+    if h.version == 4 {
+        return finish_pq(file, h, path, None, None);
     }
     // the header probe may have read past a short (v1) header
     file.seek(SeekFrom::Start(h.data_off))?;
@@ -448,6 +591,71 @@ fn finish_q1(
         metric: h.metric,
         data: VectorStore::Quantized(Box::new(QuantStore { d: h.d, params, codes, exact })),
     })
+}
+
+/// Assemble the `Pq` dataset from an opened p1 file: codebook sidecar,
+/// then m-byte code rows either paged through `cache` or read owned,
+/// and an optional exact-rows attachment.
+fn finish_pq(
+    mut file: File,
+    h: DsbHeader,
+    path: &Path,
+    cache: Option<&Arc<BlockCache>>,
+    exact: Option<ExactRows>,
+) -> crate::Result<Dataset> {
+    let m = h.row_stride;
+    let params = Arc::new(read_pq_params(&mut file, path, h.d, m)?);
+    let codes = match cache {
+        Some(cache) => QuantCodes::Paged(PagedRows::new(
+            file,
+            path.to_path_buf(),
+            h.data_off,
+            h.n,
+            m,
+            m,
+            cache,
+            store::decode_u8_block,
+        )),
+        None => {
+            // read_pq_params left the cursor at the code rows
+            let mut v = vec![0u8; h.n * m];
+            file.read_exact(&mut v)
+                .with_context(|| format!("read pq rows of {path:?}"))?;
+            QuantCodes::Owned(v)
+        }
+    };
+    // every open of a PQ store is (4d - m) bytes/row of payload the f32
+    // form would have cost
+    crate::telemetry::global()
+        .counter("pq.bytes_saved")
+        .add((h.n as u64) * (4 * h.d as u64 - m as u64));
+    Ok(Dataset {
+        name: dsb_name(path),
+        d: h.d,
+        metric: h.metric,
+        data: VectorStore::Pq(Box::new(PqStore { d: h.d, params, codes, exact })),
+    })
+}
+
+/// Open a product-quantized p1 `.dsb` for serving — the PQ mirror of
+/// [`read_dsb_quantized`]: codes paged through `cache` (`paged = true`)
+/// or fully owned, with `exact_path` optionally attaching the original
+/// full-precision v2 file as a *paged* rerank sidecar.
+pub fn read_dsb_pq(
+    pq_path: impl AsRef<Path>,
+    exact_path: Option<&Path>,
+    cache: &Arc<BlockCache>,
+    paged: bool,
+) -> crate::Result<Dataset> {
+    let path = pq_path.as_ref();
+    let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let h = read_dsb_header(&mut file, path)?;
+    anyhow::ensure!(h.version == 4, "not a product-quantized .dsb (expected p1 magic): {path:?}");
+    let exact = match exact_path {
+        Some(ep) => attach_exact(ep, &h, cache)?,
+        None => None,
+    };
+    finish_pq(file, h, path, paged.then_some(cache), exact)
 }
 
 /// Open a quantized q1 `.dsb` for serving: codes paged through `cache`
@@ -525,6 +733,9 @@ pub fn read_dsb_paged(path: impl AsRef<Path>, cache: &Arc<BlockCache>) -> crate:
     }
     if h.version == 3 {
         return finish_q1(file, h, path, Some(cache), None);
+    }
+    if h.version == 4 {
+        return finish_pq(file, h, path, Some(cache), None);
     }
     let rows = PagedRows::new(
         file,
@@ -850,6 +1061,71 @@ mod tests {
             err.contains("truncated") && err.contains("tq.dsb") && err.contains("bytes"),
             "unhelpful truncation error: {err}"
         );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn pq_dsb_roundtrip_owned_and_paged() {
+        let dir = tmpdir();
+        let ds = synth::clustered(300, 12, 4);
+        let p = dir.join("pq.dsb");
+        write_dsb_pq(&ds, 4, &p).unwrap();
+        // auto-detect: read_dsb yields a PQ backing, 4x smaller rows
+        let q = read_dsb(&p).unwrap();
+        assert!(q.is_pq());
+        assert_eq!((q.len(), q.d, q.metric), (ds.len(), ds.d, ds.metric));
+        // paged codes serve the same reconstructed rows bit-identically
+        let cache = BlockCache::new(0, 64);
+        let paged = read_dsb_paged(&p, &cache).unwrap();
+        assert!(paged.is_pq());
+        for i in 0..ds.len() {
+            assert_eq!(paged.vector(i), q.vector(i), "row {i}");
+        }
+        assert!(cache.stats().fetches > 1, "pq blocks must have paged in");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn pq_exact_sidecar_serves_f32_rerank_rows() {
+        let dir = tmpdir();
+        let ds = synth::uniform(64, 10, 2);
+        let f = dir.join("f.dsb");
+        let pp = dir.join("pq.dsb");
+        write_dsb(&ds, &f).unwrap();
+        write_dsb_pq(&ds, 5, &pp).unwrap();
+        let cache = BlockCache::new(0, 256);
+        let q = read_dsb_pq(&pp, Some(&f), &cache, true).unwrap();
+        let mut buf = Vec::new();
+        for i in 0..ds.len() {
+            // rerank matches the f32 kernel bit-exactly via the sidecar
+            let want = ds.dist_to(i, ds.vec(0));
+            assert_eq!(q.rerank_dist_to(i, ds.vec(0), &mut buf), want, "row {i}");
+        }
+        // geometry mismatch is an error, not silent wrong answers
+        let other = synth::uniform(10, 10, 7);
+        let bad = dir.join("bad.dsb");
+        write_dsb(&other, &bad).unwrap();
+        assert!(read_dsb_pq(&pp, Some(&bad), &cache, false).is_err());
+        // a v2 open is not a p1 open
+        assert!(read_dsb_pq(&f, None, &cache, false).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_pq_dsb_reports_sizes() {
+        let dir = tmpdir();
+        let ds = synth::uniform(30, 6, 5);
+        let p = dir.join("tp.dsb");
+        write_dsb_pq(&ds, 3, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 7]).unwrap();
+        let err = format!("{:#}", read_dsb(&p).unwrap_err());
+        assert!(
+            err.contains("truncated") && err.contains("tp.dsb") && err.contains("bytes"),
+            "unhelpful truncation error: {err}"
+        );
+        let cache = BlockCache::new(0, 128);
+        assert!(read_dsb_paged(&p, &cache).is_err(), "paged open must validate too");
         std::fs::remove_dir_all(dir).ok();
     }
 

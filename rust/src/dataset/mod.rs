@@ -4,9 +4,12 @@
 //! (`Owned`, every construction path), paged from a `.dsb` v2 file
 //! through a shared block cache (`Paged`, the serving path of
 //! [`crate::merge::outofcore::ShardStore`] in block-residency mode),
-//! or scalar-quantized u8 codes with a [`store::QuantParams`] sidecar
-//! (`Quantized`, the cheap beam-phase backing of two-phase serving —
-//! see [`Dataset::dist_to_quant`] / [`Dataset::rerank_dist_to`]).
+//! or compressed into code space: scalar-quantized u8 codes with a
+//! [`store::QuantParams`] sidecar (`Quantized`) or product-quantized
+//! m-byte codes with the [`store::PqParams`] codebooks (`Pq`) — the
+//! cheap beam-phase backings of two-phase serving (see
+//! [`Dataset::prepare_query`], [`Dataset::dist_to_quant`] and
+//! [`Dataset::rerank_dist_to`]).
 //! Accessors split accordingly: [`Dataset::vec`] / [`Dataset::raw`]
 //! borrow and exist only for owned data; [`Dataset::with_vec`],
 //! [`Dataset::vector`], [`Dataset::dist`] and [`Dataset::dist_to`]
@@ -56,6 +59,7 @@ impl Dataset {
             VectorStore::Owned(v) => v.len() / self.d,
             VectorStore::Paged(p) => p.rows(),
             VectorStore::Quantized(q) => q.rows(),
+            VectorStore::Pq(p) => p.rows(),
         }
     }
 
@@ -70,9 +74,22 @@ impl Dataset {
         matches!(self.data, VectorStore::Paged(_))
     }
 
-    /// True when rows are scalar-quantized u8 codes.
+    /// True when rows are scalar-quantized u8 codes (not
+    /// product-quantized — check [`Dataset::is_pq`] for that).
     pub fn is_quantized(&self) -> bool {
         matches!(self.data, VectorStore::Quantized(_))
+    }
+
+    /// True when rows are product-quantized m-byte codes.
+    pub fn is_pq(&self) -> bool {
+        matches!(self.data, VectorStore::Pq(_))
+    }
+
+    /// True when rows live in a lossy code space (scalar- or
+    /// product-quantized) — the backings whose beam phase runs on
+    /// [`Dataset::dist_to_quant`] and wants a rerank pass.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.data, VectorStore::Quantized(_) | VectorStore::Pq(_))
     }
 
     /// True when rows are a fully memory-resident f32 matrix — the
@@ -89,6 +106,7 @@ impl Dataset {
             VectorStore::Owned(_) => "owned",
             VectorStore::Paged(_) => "paged",
             VectorStore::Quantized(_) => "quantized",
+            VectorStore::Pq(_) => "pq",
         }
     }
 
@@ -101,6 +119,19 @@ impl Dataset {
             VectorStore::Owned(v) => v.len() * std::mem::size_of::<f32>(),
             VectorStore::Paged(_) => store::PAGED_HANDLE_BYTES,
             VectorStore::Quantized(q) => q.resident_bytes(),
+            VectorStore::Pq(p) => p.resident_bytes(),
+        }
+    }
+
+    /// Bytes of stored row payload touched per candidate in the beam
+    /// phase: 4 bytes/dim for f32 backings, 1 byte/dim scalar-quantized,
+    /// m bytes/row product-quantized. Used by byte-budget accounting
+    /// and `describe()`.
+    pub fn stored_row_bytes(&self) -> usize {
+        match &self.data {
+            VectorStore::Owned(_) | VectorStore::Paged(_) => self.d * std::mem::size_of::<f32>(),
+            VectorStore::Quantized(_) => self.d,
+            VectorStore::Pq(p) => p.params.m(),
         }
     }
 
@@ -129,6 +160,11 @@ impl Dataset {
             VectorStore::Quantized(q) => {
                 let mut buf = Vec::with_capacity(self.d);
                 q.decode_row_into(i, &mut buf);
+                f(&buf)
+            }
+            VectorStore::Pq(p) => {
+                let mut buf = Vec::with_capacity(self.d);
+                p.decode_row_into(i, &mut buf);
                 f(&buf)
             }
         }
@@ -169,6 +205,13 @@ impl Dataset {
                     out.extend_from_slice(&buf);
                 }
             }
+            VectorStore::Pq(p) => {
+                let mut buf = Vec::with_capacity(self.d);
+                for i in 0..p.rows() {
+                    p.decode_row_into(i, &mut buf);
+                    out.extend_from_slice(&buf);
+                }
+            }
         }
     }
 
@@ -181,14 +224,16 @@ impl Dataset {
             VectorStore::Owned(_) => None,
             VectorStore::Paged(p) => Some(p.store_id()),
             VectorStore::Quantized(q) => q.codes_store_id(),
+            VectorStore::Pq(p) => p.codes_store_id(),
         }
     }
 
-    /// Cache namespace of a quantized backing's paged exact rows, if
+    /// Cache namespace of a compressed backing's paged exact rows, if
     /// present — eviction must forget this namespace too.
     pub(crate) fn exact_block_store_id(&self) -> Option<u64> {
         match &self.data {
             VectorStore::Quantized(q) => q.exact_store_id(),
+            VectorStore::Pq(p) => p.exact_store_id(),
             _ => None,
         }
     }
@@ -223,7 +268,7 @@ impl Dataset {
     }
 
     /// Distance between row `i` and an external query vector. On a
-    /// quantized backing the row is dequantized first (metric-unit
+    /// compressed backing the row is reconstructed first (metric-unit
     /// result carrying quantization error); the beam hot path uses
     /// [`Dataset::dist_to_quant`] instead, which stays in code space.
     #[inline]
@@ -235,49 +280,66 @@ impl Dataset {
             VectorStore::Paged(p) => {
                 p.with_f32_row(i, |row| distance::distance(self.metric, row, q))
             }
-            VectorStore::Quantized(_) => self.with_vec(i, |row| {
-                distance::distance(self.metric, row, q)
-            }),
+            VectorStore::Quantized(_) | VectorStore::Pq(_) => {
+                self.with_vec(i, |row| distance::distance(self.metric, row, q))
+            }
         }
     }
 
-    /// Encode a query into this dataset's code space (into `out`,
-    /// cleared first). Returns `false` — leaving `out` empty — on a
-    /// non-quantized backing, where no code space exists.
-    pub fn encode_query(&self, q: &[f32], out: &mut Vec<u8>) -> bool {
+    /// Prepare a query for this backing's beam phase (both outputs are
+    /// cleared first). On a scalar-quantized backing, encodes `q` into
+    /// code space (`qcodes`); on a product-quantized backing, builds
+    /// the per-query ADC lookup table (`lut`, `m * 256` entries, timed
+    /// into the `query.lut_build_us` counter) so the beam inner loop
+    /// reduces to m table gathers per candidate. Returns `false` —
+    /// leaving both outputs empty — on an uncompressed backing.
+    pub fn prepare_query(&self, q: &[f32], qcodes: &mut Vec<u8>, lut: &mut Vec<f32>) -> bool {
         match &self.data {
             VectorStore::Quantized(qs) => {
-                qs.params.encode_into(q, out);
+                lut.clear();
+                qs.params.encode_into(q, qcodes);
+                true
+            }
+            VectorStore::Pq(ps) => {
+                qcodes.clear();
+                let t0 = std::time::Instant::now();
+                ps.params.build_lut(self.metric, q, lut);
+                crate::telemetry::global()
+                    .counter("query.lut_build_us")
+                    .add(t0.elapsed().as_micros() as u64);
                 true
             }
             _ => {
-                out.clear();
+                qcodes.clear();
+                lut.clear();
                 false
             }
         }
     }
 
     /// Beam-phase distance of row `i` to the query: the approximate
-    /// quantized kernel on a quantized backing (L2 in code space
-    /// against `qcodes` from [`Dataset::encode_query`]; inner product
-    /// over on-the-fly dequantized codes), the exact f32 path
-    /// otherwise (`qcodes` ignored).
+    /// code-space kernel on a compressed backing (scalar-quantized:
+    /// against `qcodes`; product-quantized: m gathers from `lut` —
+    /// both from [`Dataset::prepare_query`]), the exact f32 path
+    /// otherwise (`qcodes` / `lut` ignored).
     #[inline]
-    pub fn dist_to_quant(&self, i: usize, q: &[f32], qcodes: &[u8]) -> f32 {
+    pub fn dist_to_quant(&self, i: usize, q: &[f32], qcodes: &[u8], lut: &[f32]) -> f32 {
         match &self.data {
             VectorStore::Quantized(qs) => qs.dist_to(self.metric, i, q, qcodes),
+            VectorStore::Pq(ps) => ps.dist_to_lut(i, lut),
             _ => self.dist_to(i, q),
         }
     }
 
     /// Rerank-phase distance of row `i` to the query: full-precision
-    /// on a quantized backing (the exact-rows sidecar when attached,
-    /// else the dequantized row via `buf`), identical to
+    /// on a compressed backing (the exact-rows sidecar when attached,
+    /// else the reconstructed row via `buf`), identical to
     /// [`Dataset::dist_to`] otherwise.
     #[inline]
     pub fn rerank_dist_to(&self, i: usize, q: &[f32], buf: &mut Vec<f32>) -> f32 {
         match &self.data {
             VectorStore::Quantized(qs) => qs.rerank_dist_to(self.metric, i, q, buf),
+            VectorStore::Pq(ps) => ps.rerank_dist_to(self.metric, i, q, buf),
             _ => self.dist_to(i, q),
         }
     }

@@ -780,14 +780,297 @@ impl QuantStore {
     }
 }
 
+/// Lloyd rounds when fitting PQ codebooks — enough to converge the
+/// per-subspace quantizers on the bounded sample `kmeans::train` uses.
+const PQ_KMEANS_ITERS: usize = 12;
+
+/// Product-quantization parameters: `m` subquantizers, each a
+/// (≤)256-entry k-means codebook over its contiguous slice of the
+/// dimensions, so a row encodes to `m` bytes (one centroid id per
+/// subspace). Subspace `sub` covers `dsub = d / m` dimensions starting
+/// at `sub * dsub`; the last subspace absorbs the remainder — the same
+/// split as the IVF-PQ baseline ([`crate::baselines::ivfpq`]).
+///
+/// Queries never decode rows in the beam phase: [`Self::build_lut`]
+/// precomputes the m×256 asymmetric-distance table once per query, and
+/// each candidate costs `m` table lookups
+/// ([`crate::distance::pq_lut_sum`]). PQ distances are distances to the
+/// *reconstructed* row, so they are in metric units (unlike the
+/// code-space values of [`QuantParams`]) — but still approximate, which
+/// is what the exact rerank phase corrects.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PqParams {
+    d: usize,
+    m: usize,
+    dsub: usize,
+    /// Fitted centroid count per subquantizer (k-means clamps k to the
+    /// training-row count, so small fits yield < 256). Codes never
+    /// reference slots past it.
+    ksub: Vec<u32>,
+    /// `256 * d` floats, subspace-contiguous: subquantizer `sub` of
+    /// width `w` owns `256*lo(sub) .. 256*(lo(sub)+w)`, centroids
+    /// packed `[c][w]`; slots past `ksub[sub]` are zero padding.
+    centroids: Vec<f32>,
+}
+
+impl PqParams {
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Subquantizer count = encoded bytes per row.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// `(start dimension, width)` of subspace `sub`.
+    #[inline]
+    fn sub_bounds(&self, sub: usize) -> (usize, usize) {
+        let lo = sub * self.dsub;
+        let w = if sub + 1 == self.m { self.d - lo } else { self.dsub };
+        (lo, w)
+    }
+
+    /// Centroid `c` of subquantizer `sub`.
+    #[inline]
+    fn centroid(&self, sub: usize, c: usize) -> &[f32] {
+        let (lo, w) = self.sub_bounds(sub);
+        let base = crate::distance::PQ_KSUB * lo + c * w;
+        &self.centroids[base..base + w]
+    }
+
+    /// Fit `m` per-subspace codebooks on `data` (`n` rows × `d`,
+    /// row-major) with the k-means substrate the IVF-PQ baseline uses.
+    pub fn fit(data: &[f32], d: usize, m: usize, seed: u64, threads: usize) -> crate::Result<Self> {
+        anyhow::ensure!(d > 0 && m > 0 && m <= d, "pq needs 1 <= m <= d (m={m}, d={d})");
+        let n = data.len() / d;
+        anyhow::ensure!(n > 0, "pq fit needs at least one training row");
+        let dsub = d / m;
+        let mut centroids = vec![0f32; crate::distance::PQ_KSUB * d];
+        let mut ksub = Vec::with_capacity(m);
+        let mut sub_rows: Vec<f32> = Vec::new();
+        let mut params = PqParams { d, m, dsub, ksub: Vec::new(), centroids: Vec::new() };
+        for sub in 0..m {
+            let (lo, w) = params.sub_bounds(sub);
+            sub_rows.clear();
+            sub_rows.reserve(n * w);
+            for r in 0..n {
+                sub_rows.extend_from_slice(&data[r * d + lo..r * d + lo + w]);
+            }
+            let book = crate::baselines::kmeans::train(
+                &sub_rows,
+                w,
+                crate::distance::PQ_KSUB,
+                PQ_KMEANS_ITERS,
+                Metric::L2,
+                seed ^ (sub as u64 + 1),
+                threads,
+            );
+            for c in 0..book.k {
+                let base = crate::distance::PQ_KSUB * lo + c * w;
+                centroids[base..base + w].copy_from_slice(book.centroid(c));
+            }
+            ksub.push(book.k as u32);
+        }
+        params.ksub = ksub;
+        params.centroids = centroids;
+        Ok(params)
+    }
+
+    /// Reassemble from persisted parts (the `.dsb` PQ reader).
+    pub(crate) fn from_parts(
+        d: usize,
+        m: usize,
+        ksub: Vec<u32>,
+        centroids: Vec<f32>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(d > 0 && m > 0 && m <= d, "pq header: 1 <= m <= d violated (m={m}, d={d})");
+        anyhow::ensure!(ksub.len() == m, "pq header: {} ksub words, want {m}", ksub.len());
+        anyhow::ensure!(
+            ksub.iter().all(|&k| (1..=crate::distance::PQ_KSUB as u32).contains(&k)),
+            "pq header: ksub out of 1..=256"
+        );
+        anyhow::ensure!(
+            centroids.len() == crate::distance::PQ_KSUB * d,
+            "pq codebooks: {} floats, want {}",
+            centroids.len(),
+            crate::distance::PQ_KSUB * d
+        );
+        Ok(PqParams { d, m, dsub: d / m, ksub, centroids })
+    }
+
+    /// Persisted parts, mirroring [`Self::from_parts`].
+    pub(crate) fn parts(&self) -> (&[u32], &[f32]) {
+        (&self.ksub, &self.centroids)
+    }
+
+    /// Encode one f32 row into `out` (cleared first): nearest centroid
+    /// per subspace, squared-L2 assignment like
+    /// [`Codebook::assign`](crate::baselines::kmeans::Codebook::assign).
+    pub fn encode_into(&self, row: &[f32], out: &mut Vec<u8>) {
+        debug_assert_eq!(row.len(), self.d);
+        out.clear();
+        for sub in 0..self.m {
+            let (lo, w) = self.sub_bounds(sub);
+            let rv = &row[lo..lo + w];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..self.ksub[sub] as usize {
+                let dist = crate::distance::l2_sq(rv, self.centroid(sub, c));
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            out.push(best.1 as u8);
+        }
+    }
+
+    /// Reconstruct one code row into `out` (cleared first).
+    pub fn decode_into(&self, codes: &[u8], out: &mut Vec<f32>) {
+        debug_assert_eq!(codes.len(), self.m);
+        out.clear();
+        for (sub, &c) in codes.iter().enumerate() {
+            out.extend_from_slice(self.centroid(sub, c as usize));
+        }
+    }
+
+    /// Fill the query's m×256 asymmetric-distance table: entry
+    /// `[sub * 256 + c]` is the metric distance contribution of
+    /// subspace `sub` when the candidate's code there is `c`, so
+    /// [`crate::distance::pq_lut_sum`] over a code row equals the
+    /// metric distance to the reconstructed row. Slots past
+    /// `ksub[sub]` are +inf (never referenced by intact codes; a
+    /// corrupt code ranks last instead of winning with 0).
+    pub fn build_lut(&self, metric: Metric, q: &[f32], lut: &mut Vec<f32>) {
+        debug_assert_eq!(q.len(), self.d);
+        lut.clear();
+        lut.resize(self.m * crate::distance::PQ_KSUB, f32::INFINITY);
+        for sub in 0..self.m {
+            let (lo, w) = self.sub_bounds(sub);
+            let qsub = &q[lo..lo + w];
+            for c in 0..self.ksub[sub] as usize {
+                lut[sub * crate::distance::PQ_KSUB + c] =
+                    crate::distance::distance(metric, qsub, self.centroid(sub, c));
+            }
+        }
+    }
+
+    /// In-memory footprint of the codebook sidecar.
+    pub fn mem_bytes(&self) -> usize {
+        self.centroids.len() * std::mem::size_of::<f32>()
+            + self.ksub.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// A product-quantized vector backing: m-byte code rows plus the
+/// [`PqParams`] codebooks, with optional full-precision [`ExactRows`]
+/// for rerank. The beam phase scores candidates via the per-query LUT
+/// ([`crate::distance::pq_lut_sum`]) — m bytes of row traffic and m
+/// table gathers per candidate, against d bytes and a d-wide integer
+/// dot for scalar quantization.
+#[derive(Clone, Debug)]
+pub(crate) struct PqStore {
+    pub(crate) d: usize,
+    pub(crate) params: Arc<PqParams>,
+    /// m-byte rows (the [`QuantCodes`] container is code-width
+    /// agnostic: paged stores carry `elems_per_row = m`).
+    pub(crate) codes: QuantCodes,
+    pub(crate) exact: Option<ExactRows>,
+}
+
+impl PqStore {
+    pub(crate) fn rows(&self) -> usize {
+        match &self.codes {
+            QuantCodes::Owned(v) => v.len() / self.params.m(),
+            QuantCodes::Paged(p) => p.rows(),
+        }
+    }
+
+    /// Borrow row `i`'s m-byte codes for the duration of `f`.
+    pub(crate) fn with_codes<R>(&self, i: usize, f: impl FnOnce(&[u8]) -> R) -> R {
+        let m = self.params.m();
+        match &self.codes {
+            QuantCodes::Owned(v) => f(&v[i * m..(i + 1) * m]),
+            QuantCodes::Paged(p) => p.with_u8_row(i, f),
+        }
+    }
+
+    /// Reconstruct row `i` into `out` (cleared first).
+    pub(crate) fn decode_row_into(&self, i: usize, out: &mut Vec<f32>) {
+        let params = &self.params;
+        self.with_codes(i, |codes| params.decode_into(codes, out));
+    }
+
+    /// Approximate (beam-phase) distance of row `i` to the query whose
+    /// ADC table is `lut` (from [`PqParams::build_lut`]) — metric
+    /// units, distance to the reconstructed row.
+    pub(crate) fn dist_to_lut(&self, i: usize, lut: &[f32]) -> f32 {
+        self.with_codes(i, |codes| crate::distance::pq_lut_sum(lut, codes))
+    }
+
+    /// Full-precision distance of row `i` to the query, for the rerank
+    /// phase: exact rows when attached, else the reconstructed row
+    /// (still metric-unit, carrying the quantization error) via `buf`.
+    pub(crate) fn rerank_dist_to(
+        &self,
+        metric: Metric,
+        i: usize,
+        q: &[f32],
+        buf: &mut Vec<f32>,
+    ) -> f32 {
+        match &self.exact {
+            Some(ExactRows::Owned(v)) => {
+                crate::distance::distance(metric, &v[i * self.d..(i + 1) * self.d], q)
+            }
+            Some(ExactRows::Paged(p)) => {
+                p.with_f32_row(i, |row| crate::distance::distance(metric, row, q))
+            }
+            None => {
+                self.decode_row_into(i, buf);
+                crate::distance::distance(metric, buf, q)
+            }
+        }
+    }
+
+    /// In-memory footprint: codes (owned) or handle (paged), plus the
+    /// codebook sidecar and the exact-rows attachment.
+    pub(crate) fn resident_bytes(&self) -> usize {
+        let codes = match &self.codes {
+            QuantCodes::Owned(v) => v.len(),
+            QuantCodes::Paged(_) => PAGED_HANDLE_BYTES,
+        };
+        let exact = match &self.exact {
+            Some(ExactRows::Owned(v)) => v.len() * std::mem::size_of::<f32>(),
+            Some(ExactRows::Paged(_)) => PAGED_HANDLE_BYTES,
+            None => 0,
+        };
+        codes + self.params.mem_bytes() + exact
+    }
+
+    pub(crate) fn codes_store_id(&self) -> Option<u64> {
+        match &self.codes {
+            QuantCodes::Paged(p) => Some(p.store_id()),
+            QuantCodes::Owned(_) => None,
+        }
+    }
+
+    pub(crate) fn exact_store_id(&self) -> Option<u64> {
+        match &self.exact {
+            Some(ExactRows::Paged(p)) => Some(p.store_id()),
+            _ => None,
+        }
+    }
+}
+
 /// Where a data structure's rows live: fully in memory, paged from
-/// disk through a [`BlockCache`], or scalar-quantized u8 codes (owned
-/// or paged) with the [`QuantParams`] sidecar.
+/// disk through a [`BlockCache`], scalar-quantized u8 codes (owned or
+/// paged) with the [`QuantParams`] sidecar, or product-quantized
+/// m-byte codes with the [`PqParams`] codebooks.
 #[derive(Clone, Debug)]
 pub enum VectorStore {
     Owned(Vec<f32>),
     Paged(PagedRows),
     Quantized(Box<QuantStore>),
+    Pq(Box<PqStore>),
 }
 
 #[cfg(test)]
@@ -1043,6 +1326,105 @@ mod tests {
         // resident accounting: codes are 1 byte/dim + params + exact f32
         assert_eq!(qs.resident_bytes(), 4 * d + 2 * d * 4 + 4 * d * 4);
         assert_eq!(qs2.resident_bytes(), 4 * d + 2 * d * 4);
+    }
+
+    #[test]
+    fn pq_codes_reference_fitted_centroids_and_lut_matches_reconstruction() {
+        crate::util::prop::check("pq-lut-identity", 40, |rng: &mut crate::util::rng::Rng| {
+            let m = rng.below(4) + 1;
+            let d = m * (rng.below(3) + 1) + rng.below(m); // exercises remainder subspaces
+            let rows = rng.below(300) + 20;
+            let data: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32() * 3.0).collect();
+            let params = PqParams::fit(&data, d, m, 7 + m as u64, 1).unwrap();
+            let (mut codes, mut recon, mut lut) = (Vec::new(), Vec::new(), Vec::new());
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            for metric in [Metric::L2, Metric::Ip] {
+                params.build_lut(metric, &q, &mut lut);
+                for r in 0..rows.min(40) {
+                    let row = &data[r * d..(r + 1) * d];
+                    params.encode_into(row, &mut codes);
+                    let (ksub, _) = params.parts();
+                    for (sub, &c) in codes.iter().enumerate() {
+                        if (c as u32) >= ksub[sub] {
+                            return crate::util::prop::assert_prop(
+                                false,
+                                format!("code {c} >= ksub {}", ksub[sub]),
+                            );
+                        }
+                    }
+                    // the ADC identity: LUT sum == distance(q, reconstruction)
+                    params.decode_into(&codes, &mut recon);
+                    let want = crate::distance::distance(metric, &q, &recon);
+                    let got = crate::distance::pq_lut_sum(&lut, &codes);
+                    let tol = 1e-3 * want.abs().max(1.0);
+                    if (got - want).abs() > tol {
+                        return crate::util::prop::assert_prop(
+                            false,
+                            format!("m={m} d={d} {metric:?}: lut {got} vs recon {want}"),
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pq_small_training_set_clamps_codebooks() {
+        // 10 rows < 256: every subquantizer must clamp to k = 10 and
+        // codes must stay valid
+        let (rows, d, m) = (10usize, 8usize, 4usize);
+        let data: Vec<f32> = (0..rows * d).map(|x| (x as f32 * 0.73).cos()).collect();
+        let params = PqParams::fit(&data, d, m, 3, 1).unwrap();
+        let (ksub, _) = params.parts();
+        assert!(ksub.iter().all(|&k| k <= rows as u32), "ksub {ksub:?}");
+        let mut codes = Vec::new();
+        params.encode_into(&data[0..d], &mut codes);
+        assert_eq!(codes.len(), m);
+        // a fitted centroid round-trips exactly through encode/decode
+        let mut recon = Vec::new();
+        params.decode_into(&codes, &mut recon);
+        let mut codes2 = Vec::new();
+        params.encode_into(&recon, &mut codes2);
+        assert_eq!(codes, codes2);
+    }
+
+    #[test]
+    fn pq_store_owned_dist_and_rerank() {
+        let (rows, d, m) = (300usize, 16usize, 4usize);
+        let data: Vec<f32> = (0..rows * d).map(|x| (x as f32 * 0.37).sin() * 5.0).collect();
+        let params = Arc::new(PqParams::fit(&data, d, m, 11, 1).unwrap());
+        let mut codes = Vec::new();
+        let mut all = Vec::with_capacity(rows * m);
+        for r in 0..rows {
+            params.encode_into(&data[r * d..(r + 1) * d], &mut codes);
+            all.extend_from_slice(&codes);
+        }
+        let ps = PqStore {
+            d,
+            params: params.clone(),
+            codes: QuantCodes::Owned(all),
+            exact: Some(ExactRows::Owned(data.clone())),
+        };
+        assert_eq!(ps.rows(), rows);
+        let q = &data[0..d];
+        let mut lut = Vec::new();
+        params.build_lut(Metric::L2, q, &mut lut);
+        // beam distance == distance to the reconstruction
+        let (mut recon, mut buf) = (Vec::new(), Vec::new());
+        for i in [0usize, 1, rows / 2, rows - 1] {
+            ps.decode_row_into(i, &mut recon);
+            let want = crate::distance::distance(Metric::L2, q, &recon);
+            let got = ps.dist_to_lut(i, &lut);
+            assert!((got - want).abs() <= 1e-3 * want.max(1.0), "i={i} got={got} want={want}");
+            // rerank uses the exact sidecar: matches the f32 kernel bit-exactly
+            let exact = crate::distance::distance(Metric::L2, &data[i * d..(i + 1) * d], q);
+            assert_eq!(ps.rerank_dist_to(Metric::L2, i, q, &mut buf), exact);
+        }
+        // resident accounting: m bytes/row + codebooks + exact f32 rows
+        assert_eq!(ps.resident_bytes(), rows * m + params.mem_bytes() + rows * d * 4);
+        // codes are 4x smaller than scalar-quantized (d bytes/row)
+        assert!(rows * m * 4 == rows * d);
     }
 
     #[test]

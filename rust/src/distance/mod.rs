@@ -3,9 +3,13 @@
 //! Used by: graph init, the native cross-matching engine (oracle for the
 //! PJRT path), the classic NN-Descent baseline, and ground-truth
 //! computation. The inner loops are written as chunked slice folds the
-//! compiler auto-vectorizes.
+//! compiler auto-vectorizes; with the `simd` cargo feature the public
+//! entry points dispatch to explicit `std::arch` kernels (AVX2 on
+//! x86_64, NEON on aarch64) that are runtime-detected and bit-identical
+//! to the scalar folds (see [`simd`] and the equivalence property
+//! tests below).
 //!
-//! Two kernel families:
+//! Three kernel families:
 //!
 //! * **f32** ([`l2_sq`], [`dot`]) — 16-lane chunked folds over
 //!   full-precision rows; the exact kernels every build path and the
@@ -15,17 +19,100 @@
 //!   ([`crate::dataset::store::QuantParams`]). A u8 row is 4x smaller
 //!   than its f32 original, so these kernels move 4x fewer bytes per
 //!   candidate — the lever of quantized serving's beam phase.
+//! * **PQ ADC** ([`pq_lut_sum`]) — sums one lookup-table entry per
+//!   subquantizer given an m-byte PQ code row and a per-query m×256
+//!   asymmetric-distance table ([`crate::dataset::store::PqParams`]).
+//!   The beam inner loop of PQ serving is m gathers instead of a
+//!   d-wide dot.
 
 use crate::config::Metric;
+
+#[cfg(feature = "simd")]
+pub(crate) mod simd;
 
 /// Lane width of the chunked f32 folds: two 256-bit vectors (or one
 /// 512-bit) of independent accumulators, wide enough that the load is
 /// the bottleneck, not the reduction dependency chain.
-const LANES: usize = 16;
+pub(crate) const LANES: usize = 16;
+
+/// Lane width of the chunked PQ LUT fold — one 256-bit gather of 8
+/// table entries per step, mirrored exactly by the AVX2 path.
+pub(crate) const PQ_LANES: usize = 8;
+
+/// Entries per subquantizer in a PQ lookup table (codes are u8).
+pub(crate) const PQ_KSUB: usize = 256;
 
 /// Squared euclidean distance.
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        // SAFETY: enabled() verified the required CPU features.
+        return unsafe { simd::l2_sq(a, b) };
+    }
+    l2_sq_scalar(a, b)
+}
+
+/// Inner product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        // SAFETY: enabled() verified the required CPU features.
+        return unsafe { simd::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// Squared euclidean distance between two u8 code rows, accumulated in
+/// integers (no float rounding in the loop). The value is in *code
+/// space* — per-dimension differences are in quantization steps, not
+/// metric units — so it ranks candidates encoded with the same
+/// [`QuantParams`](crate::dataset::store::QuantParams) but is not
+/// comparable to an f32 [`l2_sq`]. Max per-dim term is 255² = 65 025;
+/// 16 u32 lane accumulators folded into a u64 keep the sum exact for
+/// any realistic dimensionality.
+#[inline]
+pub fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        // SAFETY: enabled() verified the required CPU features.
+        return unsafe { simd::l2_sq_u8(a, b) };
+    }
+    l2_sq_u8_scalar(a, b)
+}
+
+/// Integer inner product of two u8 code rows (code space, see
+/// [`l2_sq_u8`]).
+#[inline]
+pub fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        // SAFETY: enabled() verified the required CPU features.
+        return unsafe { simd::dot_u8(a, b) };
+    }
+    dot_u8_scalar(a, b)
+}
+
+/// Asymmetric PQ distance: sum `lut[sub * 256 + codes[sub]]` over the
+/// m subquantizers of one code row. `lut` is the query's precomputed
+/// m×256 table (`codes.len() * 256` entries); the result is in metric
+/// units (each table entry already is), so PQ distances are directly
+/// comparable to exact distances of *reconstructed* rows.
+#[inline]
+pub fn pq_lut_sum(lut: &[f32], codes: &[u8]) -> f32 {
+    #[cfg(feature = "simd")]
+    if simd::enabled() {
+        // SAFETY: enabled() verified the required CPU features.
+        return unsafe { simd::pq_lut_sum(lut, codes) };
+    }
+    pq_lut_sum_scalar(lut, codes)
+}
+
+/// Scalar body of [`l2_sq`] (public so the SIMD equivalence tests and
+/// the kernel-throughput bench can pin the baseline).
+#[inline]
+pub fn l2_sq_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     // Process in LANES-wide chunks with independent accumulators so
     // LLVM can vectorize; tail handled scalar.
@@ -47,9 +134,9 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
-/// Inner product.
+/// Scalar body of [`dot`].
 #[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0f32; LANES];
     let chunks = a.len() / LANES;
@@ -67,16 +154,9 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     sum
 }
 
-/// Squared euclidean distance between two u8 code rows, accumulated in
-/// integers (no float rounding in the loop). The value is in *code
-/// space* — per-dimension differences are in quantization steps, not
-/// metric units — so it ranks candidates encoded with the same
-/// [`QuantParams`](crate::dataset::store::QuantParams) but is not
-/// comparable to an f32 [`l2_sq`]. Max per-dim term is 255² = 65 025;
-/// 16 u32 lane accumulators folded into a u64 keep the sum exact for
-/// any realistic dimensionality.
+/// Scalar body of [`l2_sq_u8`].
 #[inline]
-pub fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
+pub fn l2_sq_u8_scalar(a: &[u8], b: &[u8]) -> u64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0u32; LANES];
     let chunks = a.len() / LANES;
@@ -96,10 +176,9 @@ pub fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
     sum
 }
 
-/// Integer inner product of two u8 code rows (code space, see
-/// [`l2_sq_u8`]).
+/// Scalar body of [`dot_u8`].
 #[inline]
-pub fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+pub fn dot_u8_scalar(a: &[u8], b: &[u8]) -> u64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0u32; LANES];
     let chunks = a.len() / LANES;
@@ -117,11 +196,34 @@ pub fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
     sum
 }
 
+/// Scalar body of [`pq_lut_sum`]. The 8-lane chunking mirrors the AVX2
+/// gather width lane for lane (same per-lane adds, same fold order), so
+/// the two paths produce bit-identical sums.
+#[inline]
+pub fn pq_lut_sum_scalar(lut: &[f32], codes: &[u8]) -> f32 {
+    debug_assert_eq!(lut.len(), codes.len() * PQ_KSUB);
+    let mut acc = [0f32; PQ_LANES];
+    let chunks = codes.len() / PQ_LANES;
+    for c in 0..chunks {
+        let co = &codes[c * PQ_LANES..c * PQ_LANES + PQ_LANES];
+        let base = c * PQ_LANES * PQ_KSUB;
+        for i in 0..PQ_LANES {
+            acc[i] += lut[base + i * PQ_KSUB + co[i] as usize];
+        }
+    }
+    let mut sum: f32 = acc.iter().sum();
+    for sub in chunks * PQ_LANES..codes.len() {
+        sum += lut[sub * PQ_KSUB + codes[sub] as usize];
+    }
+    sum
+}
+
 /// Inner product of an f32 query against a u8 code row dequantized on
 /// the fly (`offset[i] + scale[i] * code[i]`). Per-dimension scales
 /// cannot be factored out of an integer dot, so inner-product metrics
 /// pay an f32 multiply-add per element — but still move only 1 byte of
-/// row data per dimension, which is the serving win.
+/// row data per dimension, which is the serving win. (Stays scalar even
+/// under `simd`: the autovectorized fold is already load-bound.)
 #[inline]
 pub fn dot_dequant(codes: &[u8], q: &[f32], scale: &[f32], offset: &[f32]) -> f32 {
     debug_assert_eq!(codes.len(), q.len());
@@ -270,6 +372,26 @@ mod tests {
     }
 
     #[test]
+    fn pq_lut_sum_matches_naive_all_lengths() {
+        // covers m below, at, and straddling the 8-lane gather width
+        prop::check("pq-lut-vs-naive", 200, |rng: &mut Rng| {
+            let m = rng.below(40) + 1;
+            let lut: Vec<f32> = (0..m * PQ_KSUB).map(|_| rng.normal_f32()).collect();
+            let codes: Vec<u8> = (0..m).map(|_| rng.below(256) as u8).collect();
+            let want: f32 = codes
+                .iter()
+                .enumerate()
+                .map(|(sub, &c)| lut[sub * PQ_KSUB + c as usize])
+                .sum();
+            let got = pq_lut_sum(&lut, &codes);
+            prop::assert_prop(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                format!("m={m} got={got} want={want}"),
+            )
+        });
+    }
+
+    #[test]
     fn l2_identity_and_symmetry() {
         let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
         let b = [9.0f32, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
@@ -293,5 +415,54 @@ mod tests {
         let b = [1.0f32, 0.0];
         let d = distance(Metric::Cosine, &a, &b);
         assert!((d - (-0.6)).abs() < 1e-6);
+    }
+
+    // --- scalar-vs-SIMD equivalence (bit-exact, enforced whenever the
+    // feature is on; with SIMD unavailable at runtime the dispatchers
+    // fall back to the scalar bodies and the checks are trivially true).
+    #[cfg(feature = "simd")]
+    mod simd_equivalence {
+        use super::*;
+
+        #[test]
+        fn f32_kernels_bit_identical() {
+            prop::check("simd-f32-bits", 300, |rng: &mut Rng| {
+                let d = rng.below(300) + 1;
+                let a: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 4.0).collect();
+                let b: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 4.0).collect();
+                prop::assert_prop(
+                    l2_sq(&a, &b).to_bits() == l2_sq_scalar(&a, &b).to_bits()
+                        && dot(&a, &b).to_bits() == dot_scalar(&a, &b).to_bits(),
+                    format!("d={d} simd f32 kernel diverged from scalar"),
+                )
+            });
+        }
+
+        #[test]
+        fn u8_kernels_exactly_equal() {
+            prop::check("simd-u8-exact", 300, |rng: &mut Rng| {
+                let d = rng.below(300) + 1;
+                let a: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..d).map(|_| rng.below(256) as u8).collect();
+                prop::assert_prop(
+                    l2_sq_u8(&a, &b) == l2_sq_u8_scalar(&a, &b)
+                        && dot_u8(&a, &b) == dot_u8_scalar(&a, &b),
+                    format!("d={d} simd u8 kernel diverged from scalar"),
+                )
+            });
+        }
+
+        #[test]
+        fn pq_lut_kernel_bit_identical() {
+            prop::check("simd-pq-bits", 300, |rng: &mut Rng| {
+                let m = rng.below(48) + 1;
+                let lut: Vec<f32> = (0..m * PQ_KSUB).map(|_| rng.normal_f32()).collect();
+                let codes: Vec<u8> = (0..m).map(|_| rng.below(256) as u8).collect();
+                prop::assert_prop(
+                    pq_lut_sum(&lut, &codes).to_bits() == pq_lut_sum_scalar(&lut, &codes).to_bits(),
+                    format!("m={m} simd pq kernel diverged from scalar"),
+                )
+            });
+        }
     }
 }

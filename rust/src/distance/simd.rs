@@ -1,0 +1,343 @@
+//! Explicit `std::arch` distance kernels behind the `simd` cargo
+//! feature (see Cargo.toml).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bit-identical to the scalar folds.** Serving parity tests
+//!    compare results across machines and feature sets, so the SIMD
+//!    paths must not change a single ulp. The f32 kernels therefore
+//!    mirror the scalar lane structure exactly — same per-lane
+//!    multiply/add sequence (no FMA contraction; Rust never contracts,
+//!    and we never emit `_mm256_fmadd_ps`), same sequential fold of the
+//!    lane accumulators, same scalar tail. The integer kernels are
+//!    exact by construction. The PQ kernel's scalar twin
+//!    ([`super::pq_lut_sum_scalar`]) is written 8-lane chunked so the
+//!    AVX2 gather is a per-lane mirror of it.
+//! 2. **Runtime detection with scalar fallback.** [`enabled`] caches
+//!    one feature probe; on unsupported CPUs (or non-x86/ARM targets)
+//!    the dispatchers in [`super`] keep using the scalar bodies, so
+//!    building with `--features simd` is always safe.
+//!
+//! On aarch64 NEON is a baseline feature: the f32 kernels are
+//! implemented with `float32x4` arithmetic and the u8/PQ kernels fall
+//! through to the scalar bodies (which autovectorize well there).
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::*;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) use arm::*;
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) use fallback::*;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::{LANES, PQ_KSUB, PQ_LANES};
+    use std::arch::x86_64::*;
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    /// Cached AVX2 probe: 0 = unknown, 1 = available, 2 = unavailable.
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+
+    #[inline]
+    pub(crate) fn enabled() -> bool {
+        match AVX2.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let on = is_x86_feature_detected!("avx2");
+                AVX2.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+                on
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (via [`enabled`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // Two 8-lane accumulators = the scalar body's 16 lanes; the
+        // per-lane sub/mul/add order matches it exactly.
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * LANES);
+            let pb = b.as_ptr().add(c * LANES);
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa), _mm256_loadu_ps(pb));
+            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(8)), _mm256_loadu_ps(pb.add(8)));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d0, d0));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(d1, d1));
+        }
+        // Fold in the scalar body's order: acc[0] + acc[1] + ... + acc[15].
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+        let mut sum: f32 = lanes.iter().sum();
+        for i in chunks * LANES..a.len() {
+            let d = a[i] - b[i];
+            sum += d * d;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (via [`enabled`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * LANES);
+            let pb = b.as_ptr().add(c * LANES);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(pa), _mm256_loadu_ps(pb)));
+            acc1 = _mm256_add_ps(
+                acc1,
+                _mm256_mul_ps(_mm256_loadu_ps(pa.add(8)), _mm256_loadu_ps(pb.add(8))),
+            );
+        }
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+        let mut sum: f32 = lanes.iter().sum();
+        for i in chunks * LANES..a.len() {
+            sum += a[i] * b[i];
+        }
+        sum
+    }
+
+    /// Widen the eight i32 lanes of `v` to i64 and add them into the
+    /// two 4×i64 accumulators.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_i32x8_to_i64(v: __m256i, lo: &mut __m256i, hi: &mut __m256i) {
+        *lo = _mm256_add_epi64(*lo, _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v)));
+        *hi = _mm256_add_epi64(*hi, _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(v)));
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold_i64(lo: __m256i, hi: __m256i) -> u64 {
+        let mut lanes = [0i64; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, lo);
+        _mm256_storeu_si256(lanes.as_mut_ptr().add(4) as *mut __m256i, hi);
+        lanes.iter().map(|&x| x as u64).sum()
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (via [`enabled`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        // 16 bytes per step, zero-extended to i16; diff² pairs are
+        // summed by madd into i32 (max 2·255² < 2^31) and widened to
+        // i64 accumulators. Integer arithmetic — exact at any length.
+        let mut lo = _mm256_setzero_si256();
+        let mut hi = _mm256_setzero_si256();
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let va = _mm_loadu_si128(a.as_ptr().add(c * LANES) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(c * LANES) as *const __m128i);
+            let d = _mm256_sub_epi16(_mm256_cvtepu8_epi16(va), _mm256_cvtepu8_epi16(vb));
+            add_i32x8_to_i64(_mm256_madd_epi16(d, d), &mut lo, &mut hi);
+        }
+        let mut sum = fold_i64(lo, hi);
+        for i in chunks * LANES..a.len() {
+            let d = a[i] as i32 - b[i] as i32;
+            sum += (d * d) as u64;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (via [`enabled`]).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut lo = _mm256_setzero_si256();
+        let mut hi = _mm256_setzero_si256();
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let va = _mm_loadu_si128(a.as_ptr().add(c * LANES) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(c * LANES) as *const __m128i);
+            let prod = _mm256_madd_epi16(_mm256_cvtepu8_epi16(va), _mm256_cvtepu8_epi16(vb));
+            add_i32x8_to_i64(prod, &mut lo, &mut hi);
+        }
+        let mut sum = fold_i64(lo, hi);
+        for i in chunks * LANES..a.len() {
+            sum += a[i] as u64 * b[i] as u64;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (via [`enabled`]); `lut`
+    /// must hold `codes.len() * 256` entries.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn pq_lut_sum(lut: &[f32], codes: &[u8]) -> f32 {
+        debug_assert_eq!(lut.len(), codes.len() * PQ_KSUB);
+        // 8 codes per step: zero-extend to i32 lane indices, offset
+        // each lane into its own 256-entry table slice, one gather.
+        // Per-lane adds + sequential fold mirror pq_lut_sum_scalar.
+        let step = _mm256_setr_epi32(0, 256, 512, 768, 1024, 1280, 1536, 1792);
+        let mut acc = _mm256_setzero_ps();
+        let chunks = codes.len() / PQ_LANES;
+        for c in 0..chunks {
+            let raw = _mm_loadl_epi64(codes.as_ptr().add(c * PQ_LANES) as *const __m128i);
+            let idx = _mm256_add_epi32(
+                _mm256_add_epi32(_mm256_set1_epi32((c * PQ_LANES * PQ_KSUB) as i32), step),
+                _mm256_cvtepu8_epi32(raw),
+            );
+            acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(lut.as_ptr(), idx));
+        }
+        let mut lanes = [0f32; PQ_LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut sum: f32 = lanes.iter().sum();
+        for sub in chunks * PQ_LANES..codes.len() {
+            sum += lut[sub * PQ_KSUB + codes[sub] as usize];
+        }
+        sum
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::super::LANES;
+    use std::arch::aarch64::*;
+
+    /// NEON is an aarch64 baseline feature — always on.
+    #[inline]
+    pub(crate) fn enabled() -> bool {
+        true
+    }
+
+    /// # Safety
+    /// Always safe on aarch64 (NEON is baseline); unsafe only for the
+    /// intrinsic calls.
+    #[inline]
+    pub(crate) unsafe fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // Four 4-lane accumulators = the scalar body's 16 lanes; no
+        // vfmaq (fused) so results stay bit-identical to scalar.
+        let mut acc = [vdupq_n_f32(0.0); 4];
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * LANES);
+            let pb = b.as_ptr().add(c * LANES);
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let d = vsubq_f32(vld1q_f32(pa.add(4 * j)), vld1q_f32(pb.add(4 * j)));
+                *accj = vaddq_f32(*accj, vmulq_f32(d, d));
+            }
+        }
+        let mut lanes = [0f32; LANES];
+        for (j, accj) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * j), *accj);
+        }
+        let mut sum: f32 = lanes.iter().sum();
+        for i in chunks * LANES..a.len() {
+            let d = a[i] - b[i];
+            sum += d * d;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Always safe on aarch64 (NEON is baseline); unsafe only for the
+    /// intrinsic calls.
+    #[inline]
+    pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [vdupq_n_f32(0.0); 4];
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * LANES);
+            let pb = b.as_ptr().add(c * LANES);
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let prod = vmulq_f32(vld1q_f32(pa.add(4 * j)), vld1q_f32(pb.add(4 * j)));
+                *accj = vaddq_f32(*accj, prod);
+            }
+        }
+        let mut lanes = [0f32; LANES];
+        for (j, accj) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * j), *accj);
+        }
+        let mut sum: f32 = lanes.iter().sum();
+        for i in chunks * LANES..a.len() {
+            sum += a[i] * b[i];
+        }
+        sum
+    }
+
+    /// u8 kernels: the scalar integer folds autovectorize cleanly on
+    /// aarch64; keep them as the "SIMD" path rather than hand-rolling.
+    ///
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
+        super::super::l2_sq_u8_scalar(a, b)
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+        super::super::dot_u8_scalar(a, b)
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn pq_lut_sum(lut: &[f32], codes: &[u8]) -> f32 {
+        super::super::pq_lut_sum_scalar(lut, codes)
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod fallback {
+    /// No explicit kernels on this target — dispatchers stay scalar.
+    #[inline]
+    pub(crate) fn enabled() -> bool {
+        false
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code); unreachable anyway
+    /// since [`enabled`] is false.
+    #[inline]
+    pub(crate) unsafe fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        super::super::l2_sq_scalar(a, b)
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        super::super::dot_scalar(a, b)
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn l2_sq_u8(a: &[u8], b: &[u8]) -> u64 {
+        super::super::l2_sq_u8_scalar(a, b)
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+        super::super::dot_u8_scalar(a, b)
+    }
+
+    /// # Safety
+    /// Always safe (delegates to safe scalar code).
+    #[inline]
+    pub(crate) unsafe fn pq_lut_sum(lut: &[f32], codes: &[u8]) -> f32 {
+        super::super::pq_lut_sum_scalar(lut, codes)
+    }
+}

@@ -9,19 +9,19 @@
 //! gnnd build        --data data.dsb --out graph.knng [--config cfg] [--set k=v ...]
 //! gnnd merge        --data data.dsb --n1 N --g1 a.knng --g2 b.knng --out graph.knng
 //! gnnd ooc-build    --data data.dsb --dir shards/ --shards 8 --workers 2 --out graph.knng
-//!                   [--quantize true]
-//! gnnd quantize     <in.dsb out.dsb | shard-dir/>
+//!                   [--quantize f32|scalar|pq [--pq-m M]]
+//! gnnd quantize     <in.dsb out.dsb | shard-dir/> [--pq-m M]
 //! gnnd eval         --data data.dsb --graph graph.knng --truth gt.ivecs [--at 10]
 //! gnnd search       (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
 //!                   [--route-slack S] [--memory-budget MB] [--residency shard|block]
-//!                   [--block-size KiB] [--search-threads N] [--quantize true])
+//!                   [--block-size KiB] [--search-threads N] [--quantize f32|scalar|pq])
 //!                   (--query-id N | --queries q.dsb [--out res.ivecs])
 //!                   [--k 10] [--ef 64] [--rerank 1] [--entries 8]
 //!                   [--entry-strategy random|kmeans|hierarchy]
 //!                   [--beam-width 0] [--max-hops 0] [--search-seed S] [--threads 0]
 //! gnnd serve-bench  (--data data.dsb --graph graph.knng | --shards dir/ [--probe-shards P]
 //!                   [--route-slack S] [--memory-budget MB] [--residency shard|block]
-//!                   [--block-size KiB] [--search-threads N] [--quantize true]
+//!                   [--block-size KiB] [--search-threads N] [--quantize f32|scalar|pq]
 //!                   [--data data.dsb])
 //!                   [--k 10] [--ef 8,16,32,64,128] [--rerank 1]
 //!                   [--queries 2000] [--distinct 1000] [--threads 0]
@@ -88,13 +88,23 @@
 //! positionals: in, out) or an `ooc-build` shard directory (one
 //! positional; writes `quant_<i>.dsb` sidecars next to the f32 shards)
 //! to u8 scalar-quantized codes — ~4x less vector payload per byte of
-//! residency budget. `--quantize true` on `search`/`serve-bench
-//! --shards` serves from the quantized sidecars (the f32 shards stay
-//! on disk as the exact-rerank source), and `--rerank R` re-scores the
-//! best `R*k` beam survivors at full f32 precision so recall recovers
-//! to within points of the f32 index while the beam itself runs on
-//! cheap integer distances. `ooc-build --quantize true` fits and
-//! writes the sidecars immediately after the build.
+//! residency budget. With `--pq-m M` it instead product-quantizes to
+//! `M` bytes per row (`pq_<i>.dsb` sidecars in the shard-dir form):
+//! `M` subquantizers of 256 k-means centroids each, beam distances
+//! computed from a per-query ADC lookup table. `--quantize
+//! scalar|pq` on `search`/`serve-bench --shards` serves from the
+//! matching sidecars (the f32 shards stay on disk as the exact-rerank
+//! source; `true`/`false` still parse as scalar/f32), and `--rerank R`
+//! re-scores the best `R*k` beam survivors at full f32 precision so
+//! recall recovers to within points of the f32 index while the beam
+//! itself runs on cheap compressed distances. `ooc-build --quantize
+//! scalar|pq` fits and writes the sidecars immediately after the
+//! build, and every ooc-build now also pre-builds the per-shard
+//! `hier_<s>.bin` entry-hierarchy sidecars so the first
+//! `--entry-strategy hierarchy` open is a file read, not a rebuild.
+//! Distance kernels (f32, u8 and the PQ LUT gather loop) have
+//! explicit AVX2/NEON implementations behind the `simd` cargo
+//! feature — runtime-detected, bit-identical to the scalar paths.
 //!
 //! Entry & routing: `--entry-strategy hierarchy` seeds every beam from
 //! a GGNN-style coarse-to-fine descent instead of fixed entries — the
@@ -138,7 +148,8 @@ use gnnd::dataset::{groundtruth, io, synth};
 use gnnd::experiments::{self, Scale};
 use gnnd::graph::KnnGraph;
 use gnnd::merge::outofcore::{
-    build_out_of_core, quantize_store, OutOfCoreConfig, ResidencyMode, ShardStore, STATS_FILE,
+    build_out_of_core, pq_quantize_store, quantize_store, OutOfCoreConfig, ResidencyMode,
+    ShardCompression, ShardStore, STATS_FILE,
 };
 use gnnd::metrics::{recall_at, Report};
 use gnnd::search::server::{self, RemoteIndex, Server};
@@ -323,14 +334,28 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
             );
             println!("stats -> {}/{STATS_FILE}", args.req("dir")?);
             g.save(args.req("out")?)?;
-            if args.parse_or("quantize", false)? {
-                let qp = quantize_store(args.req("dir")?)?;
-                println!(
-                    "quantized {} shards (d={}) -> {}/quant_*.dsb",
-                    cfg.shards,
-                    qp.d(),
-                    args.req("dir")?
-                );
+            match args.parse_or("quantize", ShardCompression::F32)? {
+                ShardCompression::F32 => {}
+                ShardCompression::Scalar => {
+                    let qp = quantize_store(args.req("dir")?)?;
+                    println!(
+                        "quantized {} shards (d={}) -> {}/quant_*.dsb",
+                        cfg.shards,
+                        qp.d(),
+                        args.req("dir")?
+                    );
+                }
+                ShardCompression::Pq => {
+                    let m: usize = args.parse_or("pq-m", (ds.d / 8).max(1))?;
+                    let pp = pq_quantize_store(args.req("dir")?, m)?;
+                    println!(
+                        "pq-quantized {} shards (d={}, m={}) -> {}/pq_*.dsb",
+                        cfg.shards,
+                        pp.d(),
+                        pp.m(),
+                        args.req("dir")?
+                    );
+                }
             }
         }
         "quantize" => {
@@ -340,19 +365,38 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                 .map(|s| s.as_str())
                 .context("usage: gnnd quantize <in.dsb> <out.dsb>  |  gnnd quantize <shard-dir>")?;
             let t = Timer::start();
+            let pq_m: Option<usize> = match args.get("pq-m") {
+                None => None,
+                Some(v) => Some(v.parse().map_err(|e| anyhow::anyhow!("--pq-m {v:?}: {e}"))?),
+            };
             if std::path::Path::new(input).join("manifest.json").is_file() {
                 // an ooc-build shard directory: fit one shared code
-                // space over every shard, write quant_<i>.dsb sidecars
+                // space over every shard, write the per-shard sidecars
                 anyhow::ensure!(
                     args.positional.len() == 1,
                     "quantize <shard-dir> takes no output path (sidecars land in the directory)"
                 );
-                let qp = quantize_store(input)?;
-                println!(
-                    "quantized shard directory {input} (d={}) in {:.2}s -> {input}/quant_*.dsb",
-                    qp.d(),
-                    t.secs()
-                );
+                match pq_m {
+                    Some(m) => {
+                        let pp = pq_quantize_store(input, m)?;
+                        println!(
+                            "pq-quantized shard directory {input} (d={}, m={}) in {:.2}s \
+                             -> {input}/pq_*.dsb",
+                            pp.d(),
+                            pp.m(),
+                            t.secs()
+                        );
+                    }
+                    None => {
+                        let qp = quantize_store(input)?;
+                        println!(
+                            "quantized shard directory {input} (d={}) in {:.2}s \
+                             -> {input}/quant_*.dsb",
+                            qp.d(),
+                            t.secs()
+                        );
+                    }
+                }
             } else {
                 let out = args
                     .positional
@@ -361,16 +405,32 @@ fn run(mut argv: VecDeque<String>) -> anyhow::Result<()> {
                     .context("quantize <in.dsb> needs an output path (second positional)")?;
                 let ds = io::read_dsb(input)?;
                 anyhow::ensure!(
-                    !ds.is_quantized(),
-                    "{input} is already quantized (q1 format)"
+                    !ds.is_compressed(),
+                    "{input} is already quantized ({} backing)",
+                    ds.backing_kind()
                 );
-                io::write_dsb_quantized(&ds, out)?;
-                println!(
-                    "quantized {input} ({} x {}) in {:.2}s -> {out} (u8 codes, ~4x smaller)",
-                    ds.len(),
-                    ds.d,
-                    t.secs()
-                );
+                match pq_m {
+                    Some(m) => {
+                        io::write_dsb_pq(&ds, m, out)?;
+                        println!(
+                            "pq-quantized {input} ({} x {}, m={m}) in {:.2}s -> {out} \
+                             ({m} bytes/row + shared codebooks)",
+                            ds.len(),
+                            ds.d,
+                            t.secs()
+                        );
+                    }
+                    None => {
+                        io::write_dsb_quantized(&ds, out)?;
+                        println!(
+                            "quantized {input} ({} x {}) in {:.2}s -> {out} \
+                             (u8 codes, ~4x smaller)",
+                            ds.len(),
+                            ds.d,
+                            t.secs()
+                        );
+                    }
+                }
             }
         }
         "eval" => {
@@ -755,9 +815,11 @@ fn open_monolithic_index<'a>(
 /// shard|block` with `--block-size <KiB>` (block-granular paging of
 /// shard files under the same budget), `--search-threads <N>`
 /// (persistent scatter pool participants, 1 = sequential; 0 clamps to
-/// 1 with a warning) and `--quantize true` (serve from the
-/// `quant_<i>.dsb` u8 sidecars written by `gnnd quantize`, with the
-/// f32 shards as the exact-rerank source — pair with `--rerank`).
+/// 1 with a warning) and `--quantize scalar|pq` (serve from the
+/// `quant_<i>.dsb` u8 sidecars or `pq_<i>.dsb` product-quantized
+/// sidecars written by `gnnd quantize`, with the f32 shards as the
+/// exact-rerank source — pair with `--rerank`; `true`/`false` still
+/// parse as scalar/f32).
 fn open_sharded_index(
     args: &Args,
     dir: &str,
@@ -796,8 +858,8 @@ fn open_sharded_index(
              clamped to {threads} (sequential scatter)"
         );
     }
-    let quantized: bool = args.parse_or("quantize", false)?;
-    let store = ShardStore::with_options(dir, budget_bytes, mode, quantized)?;
+    let compression: ShardCompression = args.parse_or("quantize", ShardCompression::F32)?;
+    let store = ShardStore::with_compression(dir, budget_bytes, mode, compression)?;
     let manifest = store.load_manifest()?;
     let probe: usize = args.parse_or("probe-shards", 0usize)?;
     let (probe, clamped) = clamp_probe(probe, manifest.shards);

@@ -27,7 +27,9 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use anyhow::Context;
 
 use crate::config::{GnndParams, Metric};
-use crate::dataset::store::{BlockCache, Doorkeeper, QuantFitter, QuantParams, DEFAULT_BLOCK_BYTES};
+use crate::dataset::store::{
+    BlockCache, Doorkeeper, PqParams, QuantFitter, QuantParams, DEFAULT_BLOCK_BYTES,
+};
 use crate::dataset::{io, Dataset};
 use crate::gnnd::{self, engine::CrossmatchEngine};
 use crate::graph::{KnnGraph, Neighbor};
@@ -113,6 +115,55 @@ impl FromStr for ResidencyMode {
             "shard" => Ok(ResidencyMode::Shard),
             "block" => Ok(ResidencyMode::block()),
             _ => anyhow::bail!("unknown residency mode {s:?} (expected shard|block)"),
+        }
+    }
+}
+
+/// Which shard files [`ShardStore::get_shard`] serves vectors from —
+/// orthogonal to [`ResidencyMode`] (any compression serves under
+/// either residency granularity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardCompression {
+    /// The f32 `shard_<i>.dsb` files (the build output).
+    F32,
+    /// The scalar-quantized `quant_<i>.dsb` sidecars written by
+    /// [`quantize_store`]: 1 byte/dim resident, f32 rerank sidecar.
+    Scalar,
+    /// The product-quantized `pq_<i>.dsb` sidecars written by
+    /// [`pq_quantize_store`]: m bytes/row resident, per-query ADC
+    /// lookup tables in the beam phase, f32 rerank sidecar.
+    Pq,
+}
+
+impl ShardCompression {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardCompression::F32 => "f32",
+            ShardCompression::Scalar => "scalar",
+            ShardCompression::Pq => "pq",
+        }
+    }
+}
+
+impl std::fmt::Display for ShardCompression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for ShardCompression {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            // true/false are the historical values of the boolean
+            // --quantize flag; keep them parsing so existing invocations
+            // and scripts stay valid
+            "f32" | "false" => Ok(ShardCompression::F32),
+            "scalar" | "true" => Ok(ShardCompression::Scalar),
+            "pq" => Ok(ShardCompression::Pq),
+            _ => anyhow::bail!(
+                "unknown shard compression {s:?} (expected f32|scalar|pq, or true|false)"
+            ),
         }
     }
 }
@@ -311,12 +362,14 @@ pub struct ShardStore {
     budget_bytes: usize,
     /// Residency granularity: whole shards or fixed-size blocks.
     mode: ResidencyMode,
-    /// Serve the u8-quantized shard files (`quant_<i>.dsb`, written by
-    /// [`quantize_store`]) instead of the f32 `shard_<i>.dsb` ones.
-    /// The f32 files stay on disk as the exact-rerank sidecar: resident
-    /// memory holds 1-byte codes, the rerank phase pages exact rows in
-    /// block by block through the shared [`BlockCache`].
-    quantized: bool,
+    /// Which shard files [`ShardStore::get_shard`] serves vectors from:
+    /// the f32 `shard_<i>.dsb` build output, the scalar-quantized
+    /// `quant_<i>.dsb` sidecars, or the product-quantized `pq_<i>.dsb`
+    /// sidecars. Under either compression the f32 files stay on disk as
+    /// the exact-rerank sidecar: resident memory holds code rows and
+    /// the rerank phase pages exact rows in block by block through the
+    /// shared [`BlockCache`].
+    compression: ShardCompression,
     /// The shared block cache behind [`ResidencyMode::Block`] paged
     /// handles (constructed unbounded-and-unused in shard mode).
     blocks: Arc<BlockCache>,
@@ -357,11 +410,29 @@ impl ShardStore {
     /// [`quantize_store`]: resident rows are 1-byte codes (~4x more
     /// rows per byte of budget) and the f32 `shard_<i>.dsb` files are
     /// attached as a paged exact-rows sidecar for the rerank phase.
+    /// Kept boolean for compatibility — product-quantized serving goes
+    /// through [`ShardStore::with_compression`].
     pub fn with_options(
         dir: impl AsRef<Path>,
         budget_bytes: usize,
         mode: ResidencyMode,
         quantized: bool,
+    ) -> crate::Result<Self> {
+        let compression =
+            if quantized { ShardCompression::Scalar } else { ShardCompression::F32 };
+        Self::with_compression(dir, budget_bytes, mode, compression)
+    }
+
+    /// Open with an explicit [`ShardCompression`]: which shard files
+    /// vectors are served from (f32, scalar-quantized codes, or
+    /// product-quantized codes — the latter two need their sidecar
+    /// files written by [`quantize_store`] / [`pq_quantize_store`]
+    /// first).
+    pub fn with_compression(
+        dir: impl AsRef<Path>,
+        budget_bytes: usize,
+        mode: ResidencyMode,
+        compression: ShardCompression,
     ) -> crate::Result<Self> {
         std::fs::create_dir_all(dir.as_ref())?;
         let blocks = match mode {
@@ -375,7 +446,7 @@ impl ShardStore {
             dir: dir.as_ref().to_path_buf(),
             budget_bytes,
             mode,
-            quantized,
+            compression,
             blocks,
             cache: Mutex::new(ShardCache::default()),
             tele: ShardTele::new(),
@@ -395,10 +466,16 @@ impl ShardStore {
         self.mode
     }
 
-    /// Whether [`ShardStore::get_shard`] serves the quantized shard
-    /// files (see [`ShardStore::with_options`]).
+    /// Whether [`ShardStore::get_shard`] serves *compressed* (scalar-
+    /// or product-quantized) shard files — the gate for two-phase
+    /// rerank serving (see [`ShardStore::with_compression`]).
     pub fn quantized(&self) -> bool {
-        self.quantized
+        self.compression != ShardCompression::F32
+    }
+
+    /// Which shard files vectors are served from.
+    pub fn compression(&self) -> ShardCompression {
+        self.compression
     }
 
     /// The shared block cache (meaningful under [`ResidencyMode::Block`]).
@@ -416,6 +493,10 @@ impl ShardStore {
 
     fn quant_path(&self, i: usize) -> PathBuf {
         self.dir.join(format!("quant_{i}.dsb"))
+    }
+
+    fn pq_path(&self, i: usize) -> PathBuf {
+        self.dir.join(format!("pq_{i}.dsb"))
     }
 
     pub fn save_shard(&self, i: usize, ds: &Dataset) -> crate::Result<()> {
@@ -485,23 +566,39 @@ impl ShardStore {
                     break;
                 }
             }
-            let read: crate::Result<(Dataset, KnnGraph)> = if self.quantized {
-                (|| {
-                    // codes from quant_<i>.dsb (owned in shard mode,
-                    // paged in block mode); the f32 shard file — when
-                    // still present — rides along as the paged
-                    // exact-rows sidecar the rerank phase reads
+            let read: crate::Result<(Dataset, KnnGraph)> = match self.compression {
+                ShardCompression::Scalar | ShardCompression::Pq => (|| {
+                    // code rows from the compression sidecar (owned in
+                    // shard mode, paged in block mode); the f32 shard
+                    // file — when still present — rides along as the
+                    // paged exact-rows sidecar the rerank phase reads
                     let exact = self.shard_path(i);
                     let exact = exact.exists().then_some(exact);
-                    let ds = io::read_dsb_quantized(
-                        self.quant_path(i),
-                        exact.as_deref(),
-                        &self.blocks,
-                        matches!(self.mode, ResidencyMode::Block { .. }),
-                    )
-                    .with_context(|| {
-                        format!("shard {i}: no quantized shard file (run `gnnd quantize` first?)")
-                    })?;
+                    let paged = matches!(self.mode, ResidencyMode::Block { .. });
+                    let ds = match self.compression {
+                        ShardCompression::Scalar => io::read_dsb_quantized(
+                            self.quant_path(i),
+                            exact.as_deref(),
+                            &self.blocks,
+                            paged,
+                        )
+                        .with_context(|| {
+                            format!(
+                                "shard {i}: no quantized shard file (run `gnnd quantize` first?)"
+                            )
+                        })?,
+                        _ => io::read_dsb_pq(
+                            self.pq_path(i),
+                            exact.as_deref(),
+                            &self.blocks,
+                            paged,
+                        )
+                        .with_context(|| {
+                            format!(
+                                "shard {i}: no pq shard file (run `gnnd quantize --pq-m` first?)"
+                            )
+                        })?,
+                    };
                     let graph = match self.mode {
                         ResidencyMode::Shard => self.load_graph(i)?,
                         ResidencyMode::Block { .. } => {
@@ -509,9 +606,8 @@ impl ShardStore {
                         }
                     };
                     Ok((ds, graph))
-                })()
-            } else {
-                match self.mode {
+                })(),
+                ShardCompression::F32 => match self.mode {
                     ResidencyMode::Shard => (|| Ok((self.load_shard(i)?, self.load_graph(i)?)))(),
                     ResidencyMode::Block { .. } => (|| {
                         Ok((
@@ -519,7 +615,7 @@ impl ShardStore {
                             KnnGraph::load_paged(self.graph_path(i), &self.blocks)?,
                         ))
                     })(),
-                }
+                },
             };
             let mut c = self.cache.lock().unwrap();
             c.loading.remove(&i);
@@ -547,8 +643,9 @@ impl ShardStore {
             // codes (`block_store_id` is Some) are accounted block by
             // block by the cache as they fault in
             if !ds.is_paged() && ds.block_store_id().is_none() {
-                // u8 codes cost 1 byte/dim off disk, f32 rows 4
-                let row = if ds.is_quantized() { ds.d } else { ds.d * 4 };
+                // stored row width off disk: u8 codes 1 byte/dim, pq
+                // codes m bytes/row, f32 rows 4 bytes/dim
+                let row = ds.stored_row_bytes();
                 c.bytes_read += (ds.len() * row) as u64;
                 self.tele.bytes_read.add((ds.len() * row) as u64);
             }
@@ -763,11 +860,12 @@ impl ShardStore {
 pub fn quantize_store(dir: impl AsRef<Path>) -> crate::Result<QuantParams> {
     let store = ShardStore::new(&dir)?;
     let manifest = store.load_manifest()?;
+    let shards = manifest.shards;
     let mut fit = QuantFitter::new(manifest.d);
-    for s in 0..manifest.shards {
+    for s in 0..shards {
         let ds = store.load_shard(s)?;
         anyhow::ensure!(
-            !ds.is_quantized(),
+            !ds.is_compressed(),
             "shard {s} of {:?} is already quantized",
             store.dir()
         );
@@ -776,15 +874,73 @@ pub fn quantize_store(dir: impl AsRef<Path>) -> crate::Result<QuantParams> {
         }
     }
     let params = fit.finish();
-    for s in 0..manifest.shards {
+    for s in 0..shards {
         let ds = store.load_shard(s)?;
         io::write_dsb_quantized_with(&ds, &params, store.quant_path(s))
             .with_context(|| format!("quantizing shard {s}"))?;
     }
-    // opportunistic backfill: a pre-PR8 manifest (no route_centroids)
-    // passing through quantization is already streaming every shard,
-    // so fit the routing centroids now and upgrade the manifest in
-    // place — old stores gain adaptive routing without a rebuild
+    backfill_route_centroids(&store, manifest)?;
+    refresh_hier_sidecars(&store, shards)?;
+    Ok(params)
+}
+
+/// Write the product-quantized sidecar files (`pq_<i>.dsb`) of a built
+/// shard directory, so it can be opened with
+/// [`ShardStore::with_compression`]`(.., ShardCompression::Pq)`.
+///
+/// Codebooks (m subquantizers x 256 centroids) are fitted over a
+/// bounded sample drawn across *all* shards: every shard shares one
+/// code space, so ADC distances of candidates from different shards
+/// stay comparable at the gather phase — the same invariant
+/// [`quantize_store`] maintains for scalar codes. The f32
+/// `shard_<i>.dsb` files are left in place as the exact-rows rerank
+/// sidecar. Returns the fitted params.
+pub fn pq_quantize_store(dir: impl AsRef<Path>, m: usize) -> crate::Result<PqParams> {
+    let store = ShardStore::new(&dir)?;
+    let manifest = store.load_manifest()?;
+    let shards = manifest.shards;
+    anyhow::ensure!(
+        m >= 1 && m <= manifest.d,
+        "pq subquantizer count {m} out of range for dimension {}",
+        manifest.d
+    );
+    // bounded training sample, stride-sampled per shard so every shard
+    // contributes regardless of the store's size
+    let per_shard = io::PQ_TRAIN_MAX_ROWS.div_ceil(shards).max(1);
+    let mut sample = Vec::new();
+    for s in 0..shards {
+        let ds = store.load_shard(s)?;
+        anyhow::ensure!(
+            !ds.is_compressed(),
+            "shard {s} of {:?} is already compressed",
+            store.dir()
+        );
+        let take = ds.len().min(per_shard).max(1);
+        let stride = ds.len().div_ceil(take).max(1);
+        let mut i = 0;
+        while i < ds.len() {
+            ds.with_vec(i, |row| sample.extend_from_slice(row));
+            i += stride;
+        }
+    }
+    let threads = crate::util::num_threads();
+    let params = PqParams::fit(&sample, manifest.d, m, io::PQ_FIT_SEED, threads)?;
+    for s in 0..shards {
+        let ds = store.load_shard(s)?;
+        io::write_dsb_pq_with(&ds, &params, store.pq_path(s))
+            .with_context(|| format!("pq-quantizing shard {s}"))?;
+    }
+    backfill_route_centroids(&store, manifest)?;
+    refresh_hier_sidecars(&store, shards)?;
+    Ok(params)
+}
+
+/// Opportunistic backfill shared by the quantization passes: a pre-PR8
+/// manifest (no route_centroids) passing through quantization is
+/// already streaming every shard, so fit the routing centroids now and
+/// upgrade the manifest in place — old stores gain adaptive routing
+/// without a rebuild.
+fn backfill_route_centroids(store: &ShardStore, manifest: ShardManifest) -> crate::Result<()> {
     if manifest.route_centroids.iter().all(Vec::is_empty) {
         let mut m = manifest;
         m.route_centroids = (0..m.shards)
@@ -792,7 +948,30 @@ pub fn quantize_store(dir: impl AsRef<Path>) -> crate::Result<QuantParams> {
             .collect::<crate::Result<_>>()?;
         store.save_manifest(&m)?;
     }
-    Ok(params)
+    Ok(())
+}
+
+/// Build (or validate) every per-shard `hier_<s>.bin` entry-hierarchy
+/// sidecar of a store — the build-time half of hierarchy serving.
+/// `ooc-build` calls this so the first `--entry hierarchy` open pays a
+/// file read instead of the O(sample^2) build, and the quantization
+/// passes call it so a store whose shards were re-saved gets its stale
+/// sidecars refreshed alongside the code files. Sidecars are keyed to
+/// the default search seed (via
+/// [`crate::search::sharded::shard_hier_config`]); serving with a
+/// custom `--seed` rebuilds per shard at open, as before. Hierarchies
+/// are always built from the f32 shard rows — the `matches` gate does
+/// not key on backing, so the same sidecar serves f32, scalar and pq
+/// compression.
+pub(crate) fn refresh_hier_sidecars(store: &ShardStore, shards: usize) -> crate::Result<()> {
+    let base_seed = crate::search::SearchParams::default().seed;
+    for s in 0..shards {
+        let ds = store.load_shard(s)?;
+        let cfg = crate::search::sharded::shard_hier_config(base_seed, s);
+        let path = store.dir().join(format!("hier_{s}.bin"));
+        crate::search::hierarchy::load_or_build(&path, &ds, &cfg);
+    }
+    Ok(())
 }
 
 /// Geometry of a shard directory, persisted as `manifest.json` so a
@@ -1176,6 +1355,14 @@ pub fn build_out_of_core(
             Some(acc) => acc.stack(&g),
         });
     }
+
+    // ---- serving prep: pre-build the per-shard entry-hierarchy
+    //      sidecars so the first `--entry hierarchy` open pays one file
+    //      read per shard instead of the O(sample^2) build ----
+    let t = Timer::start();
+    refresh_hier_sidecars(&store, cfg.shards)?;
+    stats.io_secs += t.secs();
+
     store.save_stats(&stats)?;
     Ok((final_g.unwrap(), stats))
 }

@@ -290,6 +290,10 @@ pub struct SearchScratch {
     /// vector quantized once per query into the dataset's code space,
     /// then compared against u8 code rows by the integer kernels.
     pub(crate) qcodes: Vec<u8>,
+    /// Per-query ADC lookup table for product-quantized serving
+    /// (`m * 256` entries from [`crate::dataset::Dataset::prepare_query`]):
+    /// the beam inner loop sums m table gathers per candidate.
+    pub(crate) lut: Vec<f32>,
     /// f32 staging buffer for the rerank phase (dequantize fallback
     /// when a quantized store has no exact-rows sidecar).
     pub(crate) fbuf: Vec<f32>,
@@ -339,6 +343,7 @@ impl SearchScratch {
             shard_pins: Vec::new(),
             shard_probed: Vec::new(),
             qcodes: Vec::new(),
+            lut: Vec::new(),
             fbuf: Vec::new(),
             hier: None,
             entry_buf: Vec::new(),
@@ -397,9 +402,11 @@ pub struct QuerySpec<'q> {
 /// distance break by ascending id (tuple ordering), so results are
 /// deterministic for a fixed graph and entry set.
 ///
-/// On a quantized dataset the walk is **two-phase**: candidates are
+/// On a compressed dataset the walk is **two-phase**: candidates are
 /// scored with the cheap code-space kernels (the query encoded once
-/// into `scratch.qcodes`), and when `spec.rerank > 1` the best
+/// into `scratch.qcodes` on a scalar-quantized backing, or expanded
+/// once into the `scratch.lut` ADC table on a product-quantized
+/// backing), and when `spec.rerank > 1` the best
 /// `rerank * k` survivors are re-scored at full f32 precision (the
 /// exact-rows sidecar when the store has one) before the final top-`k`
 /// cut. Neighbor rows are staged through `scratch.nbuf` via
@@ -413,7 +420,7 @@ pub fn beam_search(
     scratch: &mut SearchScratch,
     out: &mut Vec<(f32, u32)>,
 ) {
-    let rerank = if ds.is_quantized() { spec.rerank.max(1) } else { 1 };
+    let rerank = if ds.is_compressed() { spec.rerank.max(1) } else { 1 };
     // the beam pool must hold every rerank candidate
     let ef = spec.ef.max(spec.k * rerank).max(1);
     let to_global = |local: u32| -> u32 {
@@ -428,15 +435,17 @@ pub fn beam_search(
     scratch.dist_evals = 0;
     scratch.hops = 0;
     scratch.rerank_evals = 0;
-    // encode the query into code space once per query (no-op clear on a
-    // non-quantized backing); taken out of the scratch so the borrow
-    // does not conflict with the heap/visited accesses below
+    // prepare the query's code-space form once per query (encoded codes
+    // or ADC table; no-op clear on an uncompressed backing); taken out
+    // of the scratch so the borrows do not conflict with the
+    // heap/visited accesses below
     let mut qcodes = std::mem::take(&mut scratch.qcodes);
-    ds.encode_query(spec.q, &mut qcodes);
+    let mut lut = std::mem::take(&mut scratch.lut);
+    ds.prepare_query(spec.q, &mut qcodes, &mut lut);
 
     for &e in spec.entries {
         if (e as usize) < graph.n() && scratch.visited.insert(e) {
-            let d = ds.dist_to_quant(to_global(e) as usize, spec.q, &qcodes);
+            let d = ds.dist_to_quant(to_global(e) as usize, spec.q, &qcodes, &lut);
             scratch.dist_evals += 1;
             scratch.frontier.push(Reverse((F32(d), e)));
             if to_global(e) != spec.exclude {
@@ -470,7 +479,7 @@ pub fn beam_search(
             if !scratch.visited.insert(e.id) {
                 continue;
             }
-            let dv = ds.dist_to_quant(to_global(e.id) as usize, spec.q, &qcodes);
+            let dv = ds.dist_to_quant(to_global(e.id) as usize, spec.q, &qcodes, &lut);
             scratch.dist_evals += 1;
             scratch.frontier.push(Reverse((F32(dv), e.id)));
             if to_global(e.id) != spec.exclude {
@@ -498,6 +507,7 @@ pub fn beam_search(
         }
     }
     scratch.qcodes = qcodes;
+    scratch.lut = lut;
 
     // Emit ascending by distance: the results max-heap pops worst-first.
     scratch.buf.clear();

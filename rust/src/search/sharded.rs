@@ -62,7 +62,7 @@ use crate::dataset::groundtruth::ordered::F32;
 use crate::dataset::Dataset;
 use crate::graph::KnnGraph;
 use crate::merge::outofcore::{
-    shard_centroid, ResidencyMode, ResidencyStats, ResidentShard, ShardStore,
+    shard_centroid, ResidencyMode, ResidencyStats, ResidentShard, ShardCompression, ShardStore,
 };
 
 use crate::telemetry::trace::ShardSpan;
@@ -123,6 +123,18 @@ fn pin_handle(
         .unwrap_or_else(|e| panic!("shard {s} unreadable mid-query (store corrupt?): {e:#}"));
     pins[s] = Some(Arc::clone(&h));
     h
+}
+
+/// The per-shard [`hierarchy::HierConfig`] serving expects: the
+/// store-wide base seed decorrelated by the shard id (the same salt
+/// expression [`ShardedIndex::from_store`] applies to entry
+/// selection). Shared with the out-of-core builder so pre-built and
+/// refreshed `hier_<s>.bin` sidecars pass the
+/// [`hierarchy::EntryHierarchy::matches`] gate at open instead of
+/// being rebuilt.
+pub(crate) fn shard_hier_config(base_seed: u64, s: usize) -> hierarchy::HierConfig {
+    let salt = (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    hierarchy::HierConfig { seed: base_seed ^ salt, ..Default::default() }
 }
 
 /// `--probe-shards` beyond the manifest shard count would silently
@@ -276,15 +288,18 @@ impl ShardCore {
         let t_pin = tracing.then(Timer::start);
         let home = self.resolve(&mut scratch.shard_pins, s);
         let wait_ms = t_pin.map_or(0.0, |t| t.ms());
-        // code-space scoring on a quantized store: encode the query
+        // code-space scoring on a compressed store: prepare the query
         // once per scratch — every shard shares the one code space
-        // `quantize_store` fitted, so the first shard's encode serves
-        // the whole scatter (and cross-shard scores stay comparable).
-        // On an f32 store this leaves `qcodes` empty and every
-        // `dist_to_quant` below falls through to the exact f32 path.
+        // `quantize_store` / `pq_quantize_store` fitted (scalar params
+        // or PQ codebooks), so the first shard's encode / LUT build
+        // serves the whole scatter (and cross-shard scores stay
+        // comparable). On an f32 store this leaves both buffers empty
+        // and every `dist_to_quant` below falls through to the exact
+        // f32 path.
         let mut qcodes = std::mem::take(&mut scratch.qcodes);
-        if qcodes.is_empty() {
-            home.ds.encode_query(q, &mut qcodes);
+        let mut lut = std::mem::take(&mut scratch.lut);
+        if qcodes.is_empty() && lut.is_empty() {
+            home.ds.prepare_query(q, &mut qcodes, &mut lut);
         }
         let m = &self.meta[s];
         let lo = m.offset as u32;
@@ -311,7 +326,7 @@ impl ShardCore {
         }
         for &e in &entry_buf {
             if scratch.visited.insert(e) {
-                let d = home.ds.dist_to_quant((e - lo) as usize, q, &qcodes);
+                let d = home.ds.dist_to_quant((e - lo) as usize, q, &qcodes, &lut);
                 scratch.dist_evals += 1;
                 scratch.frontier.push(Reverse((F32(d), e)));
                 if e != exclude {
@@ -349,7 +364,7 @@ impl ShardCore {
                     continue;
                 }
                 let dv = if (lo..hi).contains(&e.id) {
-                    home.ds.dist_to_quant((e.id - lo) as usize, q, &qcodes)
+                    home.ds.dist_to_quant((e.id - lo) as usize, q, &qcodes, &lut)
                 } else {
                     // cross-shard edge: scored against its owning shard
                     // iff that shard is probed — the scoring universe is
@@ -359,7 +374,7 @@ impl ShardCore {
                         continue;
                     }
                     let sh = self.resolve(&mut scratch.shard_pins, o);
-                    sh.ds.dist_to_quant(e.id as usize - self.meta[o].offset, q, &qcodes)
+                    sh.ds.dist_to_quant(e.id as usize - self.meta[o].offset, q, &qcodes, &lut)
                 };
                 scratch.dist_evals += 1;
                 if (lo..hi).contains(&e.id) {
@@ -389,6 +404,7 @@ impl ShardCore {
         }
         scratch.hops += hops;
         scratch.qcodes = qcodes;
+        scratch.lut = lut;
 
         // drain this shard's result pool (max-heap pops worst-first) and
         // keep its best k for the gather phase
@@ -424,6 +440,7 @@ impl ShardCore {
         s.hops = 0;
         s.rerank_evals = 0;
         s.qcodes.clear();
+        s.lut.clear();
         s
     }
 
@@ -446,6 +463,7 @@ impl ShardCore {
         scratch.hops = 0;
         scratch.rerank_evals = 0;
         scratch.qcodes.clear();
+        scratch.lut.clear();
         scratch.trace.enabled = job.traced;
         scratch.trace.clear();
         self.begin_pins(scratch);
@@ -604,7 +622,7 @@ impl ShardedIndex {
             // (or build + persist it on first open) — later opens pay
             // one file read, not the O(sample^2) build
             let hier = if sp.entry == EntryStrategy::Hierarchy {
-                let cfg = hierarchy::HierConfig { seed: sp.seed, ..Default::default() };
+                let cfg = shard_hier_config(params.seed, s);
                 let path = store.dir().join(format!("hier_{s}.bin"));
                 Some(Arc::new(hierarchy::load_or_build(&path, ds, &cfg)))
             } else {
@@ -804,10 +822,12 @@ impl AnnIndex for ShardedIndex {
             }
             ResidencyMode::Shard => "shard".to_string(),
         };
-        let backing = if self.core.store.quantized() {
-            format!("u8-quantized(rerank={})", self.core.params.rerank.max(1))
-        } else {
-            "f32".to_string()
+        let backing = match self.core.store.compression() {
+            ShardCompression::F32 => "f32".to_string(),
+            ShardCompression::Scalar => {
+                format!("u8-quantized(rerank={})", self.core.params.rerank.max(1))
+            }
+            ShardCompression::Pq => format!("pq(rerank={})", self.core.params.rerank.max(1)),
         };
         format!(
             "sharded(n={}, shards={}, probe={}, budget={}, residency={}, backing={}, \
@@ -851,6 +871,7 @@ impl AnnIndex for ShardedIndex {
         scratch.hops = 0;
         scratch.rerank_evals = 0;
         scratch.qcodes.clear();
+        scratch.lut.clear();
         let traced = scratch.trace.enabled;
         if traced {
             scratch.trace.clear();

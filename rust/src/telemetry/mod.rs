@@ -31,6 +31,8 @@
 //! | `query.hops` | histogram | beam-search hops per query |
 //! | `query.rerank_evals` | histogram | exact f32 re-scores per query (quantized two-phase) |
 //! | `quant.bytes_saved` | counter | bytes kept off the heap by u8 codes vs f32 rows |
+//! | `pq.bytes_saved` | counter | bytes kept off the heap by PQ codes vs f32 rows |
+//! | `query.lut_build_us` | counter | cumulative µs building per-query ADC lookup tables |
 //! | `query.service_us` | histogram | search wall time per query (µs) |
 //! | `query.queue_wait_us` | histogram | open-loop queue delay (µs) |
 //! | `scatter.jobs` | counter | scatter-gather jobs dispatched |

@@ -1,0 +1,275 @@
+//! Integration: product-quantized serving — the single-file DSP1
+//! round trip through the auto-detecting reader, rank correlation of
+//! per-query ADC lookup-table distances against exact f32, and the PQ
+//! serving grid (Shard-owned vs Block-paged bit-identity across
+//! probe x budget x rerank, `rerank=4` recall within 2 points of the
+//! f32 index, per-row footprint below scalar quantization).
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use gnnd::dataset::{groundtruth, io, synth, Dataset};
+use gnnd::gnnd::{GnndParams, NativeEngine};
+use gnnd::merge::outofcore::{
+    build_out_of_core, pq_quantize_store, OutOfCoreConfig, ResidencyMode, ShardCompression,
+    ShardStore,
+};
+use gnnd::search::sharded::ShardedIndex;
+use gnnd::search::{AnnIndex, SearchParams};
+use gnnd::telemetry;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gnnd-pq-{tag}-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn recall_with_f32_queries(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    qids: &[usize],
+    truth: &[Vec<u32>],
+    k: usize,
+) -> f64 {
+    let mut scratch = index.make_scratch();
+    let mut out = Vec::new();
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (row, &q) in truth.iter().zip(qids) {
+        index.search_ef_into_excluding(ds.vec(q), k, 0, q as u32, &mut scratch, &mut out);
+        let set: HashSet<u32> = out.iter().map(|&(_, id)| id).collect();
+        hit += row.iter().take(k).filter(|id| set.contains(id)).count();
+        total += row.len().min(k);
+    }
+    hit as f64 / total as f64
+}
+
+/// A `.dsb` written by `write_dsb_pq` comes back through the plain
+/// auto-detecting reader as a PQ-backed dataset whose ADC distances
+/// equal the exact distance to the reconstructed row, and whose
+/// stored row footprint undercuts both f32 and u8 scalar codes.
+#[test]
+fn pq_file_roundtrip_auto_detects_and_matches_reconstruction() {
+    let ds = synth::clustered(300, 8, 61);
+    let dir = tmpdir("roundtrip");
+    let path = dir.join("pq.dsb");
+    io::write_dsb_pq(&ds, 4, &path).unwrap();
+    let pq = io::read_dsb(&path).unwrap();
+    assert!(pq.is_pq() && pq.is_compressed());
+    assert_eq!(pq.backing_kind(), "pq");
+    assert_eq!((pq.len(), pq.d), (ds.len(), ds.d));
+
+    // m bytes/row beats the d bytes of scalar quant and 4d of f32
+    assert_eq!(pq.stored_row_bytes(), 4);
+    assert!(pq.stored_row_bytes() < ds.quantize().stored_row_bytes());
+    assert!(ds.quantize().stored_row_bytes() < ds.stored_row_bytes());
+
+    // the LUT is an exact decomposition: summing m table entries must
+    // reproduce the full-precision distance to the reconstruction
+    let mut qcodes = Vec::new();
+    let mut lut = Vec::new();
+    for q in (0..ds.len()).step_by(29) {
+        let qv = ds.vec(q).to_vec();
+        assert!(pq.prepare_query(&qv, &mut qcodes, &mut lut), "PQ backing must build a LUT");
+        assert!(qcodes.is_empty(), "PQ queries use the LUT, not u8 codes");
+        for i in (0..ds.len()).step_by(17) {
+            let adc = pq.dist_to_quant(i, &qv, &qcodes, &lut);
+            let recon = pq.dist_to(i, &qv); // decodes the row, exact distance
+            let tol = 1e-3 * recon.abs().max(1.0);
+            assert!(
+                (adc - recon).abs() <= tol,
+                "ADC {adc} != reconstruction distance {recon} (q={q} i={i})"
+            );
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// PQ code-space distances preserve the f32 neighbor ordering: over
+/// sampled candidate pairs whose exact distances differ by more than
+/// the quantization noise floor, the LUT distance agrees on the order
+/// — the rank correlation that lets a PQ beam plus exact rerank
+/// recover f32 recall.
+#[test]
+fn pq_rank_correlation_with_f32() {
+    let ds = synth::clustered(300, 8, 52);
+    let dir = tmpdir("rankcorr");
+    let path = dir.join("pq.dsb");
+    io::write_dsb_pq(&ds, 4, &path).unwrap();
+    let pq = io::read_dsb(&path).unwrap();
+    let mut qcodes = Vec::new();
+    let mut lut = Vec::new();
+    let (mut concordant, mut pairs) = (0usize, 0usize);
+    for q in (0..ds.len()).step_by(11) {
+        let qv = ds.vec(q).to_vec();
+        assert!(pq.prepare_query(&qv, &mut qcodes, &mut lut), "PQ backing must build a LUT");
+        for i in (0..ds.len()).step_by(7) {
+            let j = (i * 131 + 17) % ds.len();
+            let (di, dj) = (ds.dist_to(i, &qv), ds.dist_to(j, &qv));
+            if (di - dj).abs() <= 0.05 * di.abs().max(dj.abs()).max(1e-6) {
+                continue;
+            }
+            let qi = pq.dist_to_quant(i, &qv, &qcodes, &lut);
+            let qj = pq.dist_to_quant(j, &qv, &qcodes, &lut);
+            pairs += 1;
+            if (di < dj) == (qi < qj) {
+                concordant += 1;
+            }
+        }
+    }
+    assert!(pairs > 500, "tie filter ate the sample: only {pairs} pairs");
+    let frac = concordant as f64 / pairs as f64;
+    assert!(frac >= 0.9, "rank concordance {frac:.3} over {pairs} pairs too low");
+}
+
+/// The PQ serving grid, mirroring the scalar-quant one: Shard-owned
+/// and Block-paged residency are *bit-identical* across
+/// probe x budget x rerank (same codes, same shared LUT, same
+/// exact-rerank rows), `rerank=4` recovers to within 2 recall points
+/// of the f32 index over the same shard directory, and loading the PQ
+/// sidecars advances the `pq.bytes_saved` telemetry counter.
+#[test]
+fn pq_parity_grid_and_rerank_recall() {
+    let ds = synth::clustered(480, 8, 54);
+    let params = GnndParams::default().with_k(10).with_p(5).with_iters(6);
+    let cfg = OutOfCoreConfig { shards: 4, workers: 2, params };
+    let dir = tmpdir("grid");
+    build_out_of_core(&ds, &dir, &cfg, &NativeEngine).unwrap();
+    let pp = pq_quantize_store(&dir, 4).unwrap();
+    assert_eq!((pp.d(), pp.m()), (8, 4));
+    let manifest = ShardStore::new(&dir).unwrap().load_manifest().unwrap();
+    let half = manifest.estimated_resident_bytes() / 2;
+
+    let (qids, truth) = groundtruth::sampled_truth(&ds, 120, 10, 13);
+    let f32_recall = {
+        let idx = ShardedIndex::open(&dir, SearchParams::default().with_ef(48), 0).unwrap();
+        recall_with_f32_queries(&idx, &ds, &qids, &truth, 10)
+    };
+
+    let saved_before = telemetry::global().counter("pq.bytes_saved").get();
+    for rerank in [1usize, 4] {
+        let sp = SearchParams::default().with_ef(48).with_rerank(rerank);
+        for probe in [0usize, 2] {
+            for budget in [0usize, half] {
+                let owned = ShardedIndex::from_store(
+                    ShardStore::with_compression(
+                        &dir,
+                        budget,
+                        ResidencyMode::Shard,
+                        ShardCompression::Pq,
+                    )
+                    .unwrap(),
+                    sp.clone(),
+                    probe,
+                    1,
+                )
+                .unwrap();
+                let paged = ShardedIndex::from_store(
+                    ShardStore::with_compression(
+                        &dir,
+                        budget,
+                        ResidencyMode::block(),
+                        ShardCompression::Pq,
+                    )
+                    .unwrap(),
+                    sp.clone(),
+                    probe,
+                    1,
+                )
+                .unwrap();
+                assert!(
+                    owned.describe().contains("pq(rerank="),
+                    "describe must surface the backing: {}",
+                    owned.describe()
+                );
+                let mut s_own = owned.make_scratch();
+                let mut s_pg = paged.make_scratch();
+                let (mut o_own, mut o_pg) = (Vec::new(), Vec::new());
+                for q in (0..ds.len()).step_by(37) {
+                    owned.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_own,
+                        &mut o_own,
+                    );
+                    paged.search_ef_into_excluding(
+                        ds.vec(q),
+                        10,
+                        0,
+                        q as u32,
+                        &mut s_pg,
+                        &mut o_pg,
+                    );
+                    assert_eq!(
+                        o_own, o_pg,
+                        "PQ residency modes diverged (rerank={rerank} probe={probe} \
+                         budget={budget}) on query {q}"
+                    );
+                    assert_eq!(
+                        s_own.dist_evals, s_pg.dist_evals,
+                        "LUT eval counts diverged on query {q}"
+                    );
+                    assert_eq!(
+                        s_own.rerank_evals, s_pg.rerank_evals,
+                        "rerank eval counts diverged on query {q}"
+                    );
+                    if rerank == 1 {
+                        assert_eq!(s_own.rerank_evals, 0, "rerank=1 must skip the exact pass");
+                    } else {
+                        assert!(
+                            s_own.rerank_evals > 0 && s_own.rerank_evals <= 10 * rerank,
+                            "rerank pass must score at most rerank*k candidates: {}",
+                            s_own.rerank_evals
+                        );
+                    }
+                }
+            }
+        }
+        let idx = ShardedIndex::from_store(
+            ShardStore::with_compression(&dir, 0, ResidencyMode::Shard, ShardCompression::Pq)
+                .unwrap(),
+            SearchParams::default().with_ef(48).with_rerank(rerank),
+            0,
+            1,
+        )
+        .unwrap();
+        let r = recall_with_f32_queries(&idx, &ds, &qids, &truth, 10);
+        if rerank == 4 {
+            assert!(
+                r >= f32_recall - 0.02,
+                "PQ rerank=4 recall {r} more than 2 points below f32 {f32_recall}"
+            );
+        } else {
+            assert!(r > 0.5, "PQ rerank=1 recall collapsed outright: {r}");
+        }
+    }
+    // every PQ shard load saves n*(4d - m) bytes over f32; at least
+    // one full set of loads happened above
+    let saved = telemetry::global().counter("pq.bytes_saved").get() - saved_before;
+    assert!(
+        saved >= (ds.len() * (4 * ds.d - 4)) as u64,
+        "pq.bytes_saved advanced only {saved}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// `--quantize` parses the widened compression vocabulary and the
+/// legacy booleans identically.
+#[test]
+fn shard_compression_parses_legacy_and_new_spellings() {
+    assert_eq!("f32".parse::<ShardCompression>().unwrap(), ShardCompression::F32);
+    assert_eq!("false".parse::<ShardCompression>().unwrap(), ShardCompression::F32);
+    assert_eq!("scalar".parse::<ShardCompression>().unwrap(), ShardCompression::Scalar);
+    assert_eq!("true".parse::<ShardCompression>().unwrap(), ShardCompression::Scalar);
+    assert_eq!("pq".parse::<ShardCompression>().unwrap(), ShardCompression::Pq);
+    assert!("zstd".parse::<ShardCompression>().is_err());
+}

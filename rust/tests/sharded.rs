@@ -579,10 +579,14 @@ fn quant_rank_correlation_with_f32() {
     let ds = synth::clustered(300, 8, 52);
     let qds = ds.quantize();
     let mut qcodes = Vec::new();
+    let mut lut = Vec::new();
     let (mut concordant, mut pairs) = (0usize, 0usize);
     for q in (0..ds.len()).step_by(11) {
         let qv = ds.vec(q).to_vec();
-        assert!(qds.encode_query(&qv, &mut qcodes), "quantized dataset must own a code space");
+        assert!(
+            qds.prepare_query(&qv, &mut qcodes, &mut lut),
+            "quantized dataset must own a code space"
+        );
         for i in (0..ds.len()).step_by(7) {
             let j = (i * 131 + 17) % ds.len();
             let (di, dj) = (ds.dist_to(i, &qv), ds.dist_to(j, &qv));
@@ -591,8 +595,8 @@ fn quant_rank_correlation_with_f32() {
             if (di - dj).abs() <= 0.05 * di.abs().max(dj.abs()).max(1e-6) {
                 continue;
             }
-            let qi = qds.dist_to_quant(i, &qv, &qcodes);
-            let qj = qds.dist_to_quant(j, &qv, &qcodes);
+            let qi = qds.dist_to_quant(i, &qv, &qcodes, &lut);
+            let qj = qds.dist_to_quant(j, &qv, &qcodes, &lut);
             pairs += 1;
             if (di < dj) == (qi < qj) {
                 concordant += 1;
